@@ -1,0 +1,16 @@
+//! Fig 1: GPU-server-hours split (training vs startup) over a cluster day.
+//! Paper claim: >3.5% of GPU time wasted on startup alone.
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header("Fig 1 — cluster GPU-hours: training vs startup", ">3.5% of GPU time wasted on startup");
+    let mut b = Bench::new("fig01");
+    let mut out = None;
+    b.once("week_replay+fig01", || {
+        let r = figures::week_replay(1);
+        out = Some(figures::fig01(&r));
+    });
+    println!("\n{}", out.unwrap().render());
+    b.finish();
+}

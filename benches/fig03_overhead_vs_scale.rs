@@ -1,0 +1,16 @@
+//! Fig 3a/3b: job-level and node-level startup overhead vs job scale.
+//! Paper: >100-GPU jobs start in ~6-7 min; node-level ≈1 min lower.
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header("Fig 3a/3b — startup overhead vs job scale", ">100-GPU jobs ≈6-7 min job-level; node-level ~1 min lower");
+    let mut b = Bench::new("fig03");
+    let mut out = None;
+    b.once("week_replay+fig03", || {
+        let r = figures::week_replay(1);
+        out = Some(figures::fig03(&r));
+    });
+    println!("\n{}", out.unwrap().render());
+    b.finish();
+}

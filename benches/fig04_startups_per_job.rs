@@ -1,0 +1,16 @@
+//! Fig 4: number of startup events per job + job counts, by scale.
+//! Paper: small jobs ≈1 startup; large jobs 2-8, worst 20+.
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header("Fig 4 — startups per job vs scale", "small ≈1; large 2-8; tail 20+");
+    let mut b = Bench::new("fig04");
+    let mut out = None;
+    b.once("week_replay+fig04", || {
+        let r = figures::week_replay(1);
+        out = Some(figures::fig04(&r));
+    });
+    println!("\n{}", out.unwrap().render());
+    b.finish();
+}

@@ -1,0 +1,17 @@
+//! Fig 5: node-level startup broken down by stage.
+//! Paper bands: queuing ~100s, alloc seconds, image 20-40s, env 100-300s,
+//! model-init 100-200s.
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header("Fig 5 — per-stage node-level breakdown", "image 20-40s; env 100-300s (dominant); init 100-200s");
+    let mut b = Bench::new("fig05");
+    let mut out = None;
+    b.once("week_replay+fig05", || {
+        let r = figures::week_replay(1);
+        out = Some(figures::fig05(&r));
+    });
+    println!("\n{}", out.unwrap().render());
+    b.finish();
+}

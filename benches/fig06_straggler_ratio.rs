@@ -1,0 +1,16 @@
+//! Fig 6: install-script Max/Median ratio vs job scale.
+//! Paper: ~1.0 small → ~1.5 at 1,000+ GPUs, extremes 4x+.
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header("Fig 6 — straggler Max/Median vs scale", "~1.0 small → ~1.5 at 1000+ GPUs (tail 4x)");
+    let mut b = Bench::new("fig06");
+    let mut out = None;
+    b.once("scale_sweep(5 seeds x 6 scales)", || {
+        out = Some(bootseer::figures::fig06(5));
+    });
+    println!("\n{}", out.unwrap().render());
+    b.finish();
+    let _ = figures::default_trace_jobs();
+}

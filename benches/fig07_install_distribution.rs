@@ -1,0 +1,15 @@
+//! Fig 7: install-duration distribution across 1,440 nodes (11,520 GPUs).
+//! Paper: most nodes ≤60s, <1% up to ~92s; everyone waits for the slowest.
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header("Fig 7 — 11,520-GPU job install durations", "long tail: most ≤60s, <1% near 92s");
+    let mut b = Bench::new("fig07");
+    let mut out = None;
+    b.once("run_startup(1440 nodes)", || {
+        out = Some(figures::fig07(2));
+    });
+    println!("\n{}", out.unwrap().render());
+    b.finish();
+}

@@ -1,0 +1,15 @@
+//! Fig 12: end-to-end startup, baseline vs BootSeer, 16→128 GPUs.
+//! Paper: ~2x reduction at every scale (3-run average).
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header("Fig 12 — end-to-end startup vs scale", "BootSeer ≈2x faster at 16..128 GPUs");
+    let mut b = Bench::new("fig12");
+    let mut out = None;
+    b.once("scales x 3 reps x (baseline+bootseer)", || {
+        out = Some(figures::fig12(3));
+    });
+    println!("\n{}", out.unwrap().render());
+    b.finish();
+}

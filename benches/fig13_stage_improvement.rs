@@ -1,0 +1,15 @@
+//! Fig 13: per-stage breakdown of Fig 12's runs.
+//! Paper: image 4-10x (growing with scale), env 2x, model-init 1.6x.
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header("Fig 13 — per-stage improvement", "image 4-10x; env 2x; model-init 1.6x");
+    let mut b = Bench::new("fig13");
+    let mut out = None;
+    b.once("scales x 3 reps x stages", || {
+        out = Some(figures::fig12(3));
+    });
+    println!("\n{}", out.unwrap().render_stages());
+    b.finish();
+}

@@ -1,0 +1,15 @@
+//! Fig 14: install-duration distribution across the 128-GPU job's nodes,
+//! baseline vs BootSeer. Paper: BootSeer removes overhead AND spread.
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header("Fig 14 — env-cache straggler elimination (128 GPUs)", "BootSeer flattens the install-time distribution");
+    let mut b = Bench::new("fig14");
+    let mut out = None;
+    b.iter("baseline+bootseer 128-GPU startups", || {
+        out = Some(figures::fig14(3));
+    });
+    println!("\n{}", out.unwrap().render());
+    b.finish();
+}

@@ -1,0 +1,31 @@
+//! Hot-path microbench: content-addressed block store (sha256 + dedup) —
+//! the substrate behind flattened image layouts.
+use bootseer::image::blockstore::BlockStore;
+use bootseer::util::bench::Bench;
+use bootseer::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seeded(2);
+    let mb = 64;
+    let unique: Vec<u8> = (0..mb * 1_000_000).map(|_| rng.next_u64() as u8).collect();
+    let dup = vec![7u8; mb * 1_000_000];
+
+    let mut b = Bench::new("micro_blockstore");
+    b.iter(&format!("put_unique_{mb}MB_4MB_blocks"), || {
+        let mut s = BlockStore::new();
+        s.put_chunked(&unique, 4_000_000);
+        s.physical_bytes
+    });
+    b.iter(&format!("put_dup_{mb}MB_4MB_blocks"), || {
+        let mut s = BlockStore::new();
+        s.put_chunked(&dup, 4_000_000);
+        assert!(s.dedup_ratio() > 10.0);
+        s.physical_bytes
+    });
+    b.iter("roundtrip_16MB", || {
+        let mut s = BlockStore::new();
+        let ds = s.put_chunked(&unique[..16_000_000], 1_000_000);
+        s.get_chunked(&ds).unwrap().len()
+    });
+    b.finish();
+}

@@ -1,0 +1,34 @@
+//! Hot-path microbench: the fluid-flow engine (events/s) and full startup
+//! sims at several scales — the L3 §Perf target (1,440-node startup < 1 s).
+use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig};
+use bootseer::sim::{Capacity, FluidSim};
+use bootseer::startup::{run_startup, StartupKind, World};
+use bootseer::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("micro_simnet");
+
+    // Raw engine: 2,000 flows over 200 shared resources.
+    b.iter("fluid_2000flows_200res", || {
+        let mut sim = FluidSim::new();
+        let res: Vec<_> =
+            (0..200).map(|i| sim.add_resource(&format!("r{i}"), Capacity::Fixed(1e9))).collect();
+        for i in 0..2000u64 {
+            let r = res[(i % 200) as usize];
+            sim.flow(1e8, vec![r], &[], i);
+        }
+        sim.run();
+        sim.now()
+    });
+
+    for nodes in [16u32, 128, 512, 1440] {
+        let job = JobConfig::paper_moe(nodes * 8);
+        let cluster = ClusterConfig::default();
+        b.iter(&format!("startup_sim_{nodes}nodes"), || {
+            let mut w = World::new();
+            run_startup(1, 0, &cluster, &job, &BootseerConfig::baseline(), &mut w, StartupKind::Full, 1)
+                .worker_phase_s
+        });
+    }
+    b.finish();
+}

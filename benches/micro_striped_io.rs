@@ -1,0 +1,32 @@
+//! Hot-path microbench: real striped store, parallel vs sequential read
+//! (the §4.4 mechanism on an actual filesystem) across stripe widths.
+use bootseer::hdfs::local::LocalStore;
+use bootseer::util::bench::Bench;
+use bootseer::util::rng::Rng;
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("bootseer-bench-io-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = LocalStore::open(&dir).unwrap();
+    let mb = if std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1") { 64 } else { 256 };
+    let mut rng = Rng::seeded(1);
+    let data: Vec<u8> = (0..mb * 1_000_000).map(|_| rng.next_u64() as u8).collect();
+
+    let mut b = Bench::new("micro_striped_io");
+    for width in [1u32, 2, 4, 8] {
+        store.write_striped(&format!("ckpt_w{width}"), &data, 1_000_000, width).unwrap();
+    }
+    b.iter(&format!("write_striped_w4_{mb}MB"), || {
+        store.write_striped("ckpt_wr", &data, 1_000_000, 4).unwrap();
+    });
+    b.iter(&format!("read_sequential_{mb}MB"), || {
+        store.read_sequential("ckpt_w4").unwrap().len()
+    });
+    for width in [1u32, 2, 4, 8] {
+        b.iter(&format!("read_parallel_w{width}_{mb}MB"), || {
+            store.read_striped_parallel(&format!("ckpt_w{width}")).unwrap().len()
+        });
+    }
+    b.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,50 @@
+//! Cluster-week replay: synthesizes the paper's §3 production week
+//! (scaled), replays every startup of every job through the pipeline
+//! simulator + profiler, prints Figures 1/3/4/5 data, and runs the
+//! scheduler substrate over the same trace for queue-wait statistics.
+//!
+//!     cargo run --release --example cluster_week
+//!     BOOTSEER_TRACE_JOBS=2800 cargo run --release --example cluster_week
+
+use bootseer::figures;
+use bootseer::scheduler::{schedule, SchedJob};
+use bootseer::trace::gen_trace;
+use bootseer::util::{human, stats};
+
+fn main() {
+    let n_jobs = figures::default_trace_jobs();
+    println!("synthesizing a cluster week: {n_jobs} jobs (paper: 28,000+; scale with BOOTSEER_TRACE_JOBS)\n");
+
+    let r = figures::week_replay(1);
+    println!("-- Fig 1: GPU-hours split --\n{}", figures::fig01(&r).render());
+    println!("-- Fig 3a/3b: startup overhead vs scale --\n{}", figures::fig03(&r).render());
+    println!("-- Fig 4: startups per job --\n{}", figures::fig04(&r).render());
+    println!("-- Fig 5: stage breakdown --\n{}", figures::fig05(&r).render());
+
+    // Scheduler substrate: what queue waits would this load induce on a
+    // finite pool? (The pipeline sim samples queue waits from the §3.2
+    // distribution; this independently derives them from contention.)
+    let trace = gen_trace(1, n_jobs, 7.0 * 86400.0);
+    let jobs: Vec<SchedJob> = r
+        .jobs
+        .iter()
+        .zip(&trace)
+        .map(|(jr, tj)| SchedJob {
+            id: tj.id,
+            submit_s: tj.submit_s,
+            gpus: tj.gpus,
+            hold_s: tj.train_hours * 3600.0 + jr.startup_worker_s.iter().sum::<f64>(),
+            priority: tj.priority,
+        })
+        .collect();
+    let pool: u32 = 70_000; // the paper's week requested >700k GPUs across 28k jobs
+    let outcomes = schedule(pool, &jobs);
+    let waits: Vec<f64> = outcomes.iter().map(|o| o.queue_wait_s).collect();
+    println!("-- scheduler: queue waits on a {pool}-GPU pool --");
+    println!(
+        "median {}  p90 {}  max {}",
+        human::secs(stats::median(&waits)),
+        human::secs(stats::quantile(&waits, 0.9)),
+        human::secs(stats::max(&waits)),
+    );
+}

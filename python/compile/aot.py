@@ -1,0 +1,114 @@
+"""AOT lowering: JAX → HLO *text* artifacts the Rust runtime loads.
+
+Emits, for a chosen model preset:
+  artifacts/train_step.hlo.txt   (loss, *new_params) = f(*params, tok, tgt)
+  artifacts/init.hlo.txt         (*params,)          = f(seed)
+  artifacts/eval.hlo.txt         (loss,)             = f(*params, tok, tgt)
+  artifacts/meta.json            param names/shapes, config, input layout
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.model import ModelConfig, init_fn, param_order, train_step, eval_loss, n_params
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the text
+    parser on the Rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(cfg: ModelConfig, outdir: str, train_path: str | None = None):
+    os.makedirs(outdir, exist_ok=True)
+    order = param_order(cfg)
+    p_specs = tuple(
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in order
+    )
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+    # train_step(*params, tokens, targets) -> (loss, *params)
+    def ts(*args):
+        params = args[: len(order)]
+        tokens, targets = args[len(order)], args[len(order) + 1]
+        return train_step(cfg, params, tokens, targets)
+
+    lowered = jax.jit(ts).lower(*p_specs, tok, tok)
+    train_file = train_path or os.path.join(outdir, "train_step.hlo.txt")
+    with open(train_file, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # init(seed) -> (*params,)
+    def init(seed):
+        return init_fn(cfg, seed)
+
+    lowered_init = jax.jit(init).lower(jax.ShapeDtypeStruct((), jnp.int32))
+    with open(os.path.join(outdir, "init.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_init))
+
+    # eval(*params, tokens, targets) -> (loss,)
+    def ev(*args):
+        params = args[: len(order)]
+        return eval_loss(cfg, params, args[len(order)], args[len(order) + 1])
+
+    lowered_eval = jax.jit(ev).lower(*p_specs, tok, tok)
+    with open(os.path.join(outdir, "eval.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered_eval))
+
+    meta = {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "n_experts": cfg.n_experts,
+            "batch": cfg.batch,
+            "seq": cfg.seq,
+            "lr": cfg.lr,
+        },
+        "n_params": int(n_params(cfg)),
+        "params": [{"name": n, "shape": list(s)} for n, s in order],
+        "inputs": ["*params", "tokens:i32[batch,seq]", "targets:i32[batch,seq]"],
+        "train_outputs": ["loss:f32[]", "*params"],
+    }
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/train_step.hlo.txt",
+                    help="path of the train-step HLO artifact; siblings land next to it")
+    ap.add_argument("--preset", default="tiny",
+                    choices=["tiny", "small", "large", "paper"])
+    args = ap.parse_args()
+    cfg = ModelConfig().scaled(args.preset)
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    meta = lower_all(cfg, outdir, train_path=os.path.abspath(args.out))
+    print(
+        f"AOT: preset={args.preset} params={meta['n_params']:,} "
+        f"→ {outdir}/{{train_step,init,eval}}.hlo.txt + meta.json"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""L1: Pallas kernels for the MoE expert FFN — the compute hot-spot of the
+paper's experimental workload (an 8-layer, 128-expert MoE model, §5.1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's workload
+ran on H800s where expert FFNs are scatter + batched GEMMs over warps. On
+TPU we re-express the insight as a *dense, capacity-bucketed grouped
+matmul*: routing produces a static [E, C, D] expert-major layout so the
+HBM↔VMEM schedule is fully static; the Pallas grid iterates experts, each
+step staging one expert's token block and weight tiles into VMEM and
+driving MXU-shaped matmuls. `interpret=True` everywhere — the CPU PJRT
+client cannot execute Mosaic custom-calls; structure, not wallclock, is
+what the TPU story rests on (see EXPERIMENTS.md §Perf L1).
+
+Because `jax.grad` cannot differentiate through `pallas_call`, the FFN is
+wrapped in a `jax.custom_vjp` whose forward AND backward are Pallas
+kernels. The backward recomputes the hidden activations in-kernel
+(rematerialization: costs one extra matmul, saves [E, C, F] of VMEM/HBM
+residual traffic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls (see module doc).
+
+
+def _expert_specs(C, D, F):
+    """BlockSpecs staging one expert per grid step into VMEM."""
+    return dict(
+        xe=pl.BlockSpec((1, C, D), lambda e: (e, 0, 0)),
+        w1=pl.BlockSpec((1, D, F), lambda e: (e, 0, 0)),
+        w2=pl.BlockSpec((1, F, D), lambda e: (e, 0, 0)),
+    )
+
+
+def _fwd_call(xe, w1, w2):
+    E, C, D = xe.shape
+    F = w1.shape[2]
+    spec = _expert_specs(C, D, F)
+
+    def kernel(xe_ref, w1_ref, w2_ref, out_ref):
+        # Leading singleton expert dim from the BlockSpec.
+        x = xe_ref[0]
+        h = jnp.maximum(x @ w1_ref[0], 0.0)
+        out_ref[0] = (h @ w2_ref[0]).astype(out_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(E,),
+        in_specs=[spec["xe"], spec["w1"], spec["w2"]],
+        out_specs=pl.BlockSpec((1, C, D), lambda e: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, D), xe.dtype),
+        interpret=INTERPRET,
+    )(xe, w1, w2)
+
+
+def _bwd_call(xe, w1, w2, g):
+    E, C, D = xe.shape
+    F = w1.shape[2]
+    spec = _expert_specs(C, D, F)
+
+    def kernel(xe_ref, w1_ref, w2_ref, g_ref, dx_ref, dw1_ref, dw2_ref):
+        x = xe_ref[0]
+        w1b = w1_ref[0]
+        h = jnp.maximum(x @ w1b, 0.0)  # remat
+        gb = g_ref[0]
+        dh = (gb @ w2_ref[0].T) * (h > 0.0).astype(gb.dtype)
+        dx_ref[0] = (dh @ w1b.T).astype(dx_ref.dtype)
+        dw1_ref[0] = (x.T @ dh).astype(dw1_ref.dtype)
+        dw2_ref[0] = (h.T @ gb).astype(dw2_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(E,),
+        in_specs=[spec["xe"], spec["w1"], spec["w2"],
+                  pl.BlockSpec((1, C, D), lambda e: (e, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, C, D), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, D, F), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, F, D), lambda e: (e, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((E, C, D), xe.dtype),
+            jax.ShapeDtypeStruct((E, D, F), xe.dtype),
+            jax.ShapeDtypeStruct((E, F, D), xe.dtype),
+        ],
+        interpret=INTERPRET,
+    )(xe, w1, w2, g)
+
+
+@jax.custom_vjp
+def moe_ffn(xe, w1, w2):
+    """Grouped expert FFN: per expert e, relu(xe[e] @ w1[e]) @ w2[e].
+
+    xe: [E, C, D] capacity-bucketed expert inputs
+    w1: [E, D, F], w2: [E, F, D]
+    returns [E, C, D]
+    """
+    return _fwd_call(xe, w1, w2)
+
+
+def _moe_ffn_fwd(xe, w1, w2):
+    return _fwd_call(xe, w1, w2), (xe, w1, w2)
+
+
+def _moe_ffn_bwd(res, g):
+    xe, w1, w2 = res
+    return _bwd_call(xe, w1, w2, g)
+
+
+moe_ffn.defvjp(_moe_ffn_fwd, _moe_ffn_bwd)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_footprint_bytes(E, C, D, F, dtype_bytes=4):
+    """Estimated VMEM working set of one forward grid step (DESIGN.md §Perf):
+    xe block + w1 + w2 + h scratch + out block."""
+    return dtype_bytes * (C * D + D * F + F * D + C * F + C * D)
+
+
+def mxu_utilization_estimate(C, D, F, tile=128):
+    """Fraction of MXU lanes busy for the expert matmuls given padding to
+    `tile` (TPU systolic array is tile x tile)."""
+    def eff(m, k, n):
+        pad = lambda x: ((x + tile - 1) // tile) * tile
+        return (m * k * n) / (pad(m) * pad(k) * pad(n))
+
+    # Two matmuls: [C,D]@[D,F] and [C,F]@[F,D].
+    return 0.5 * (eff(C, D, F) + eff(C, F, D))

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Pallas MoE kernels — the correctness reference
+every kernel test compares against (build-time only, never shipped)."""
+
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(xe, w1, w2):
+    """Grouped expert FFN, pure einsum: relu(xe @ w1) @ w2 per expert."""
+    h = jnp.maximum(jnp.einsum("ecd,edf->ecf", xe, w1), 0.0)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def moe_ffn_ref_grads(xe, w1, w2, g):
+    """Hand-derived backward of `moe_ffn_ref` (for vjp tests)."""
+    h_pre = jnp.einsum("ecd,edf->ecf", xe, w1)
+    h = jnp.maximum(h_pre, 0.0)
+    dh = jnp.einsum("ecd,efd->ecf", g, w2) * (h_pre > 0.0).astype(g.dtype)
+    dx = jnp.einsum("ecf,edf->ecd", dh, w1)
+    dw1 = jnp.einsum("ecd,ecf->edf", xe, dh)
+    dw2 = jnp.einsum("ecf,ecd->efd", h, g)
+    return dx, dw1, dw2

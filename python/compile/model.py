@@ -1,0 +1,169 @@
+"""L2: the MoE transformer training step in JAX (build-time only).
+
+The paper's experimental workload is an 8-layer, 128-expert MoE model
+(§5.1). This module implements that architecture (scaled to the CPU test
+machine by default), with the expert FFN computed by the L1 Pallas kernel
+(`kernels.moe.moe_ffn`). `aot.py` lowers `init_fn` and `train_step` to HLO
+text; the Rust trainer executes them over PJRT — Python never runs on the
+training path.
+
+Parameters travel as a flat, ordered list of f32 arrays (`PARAM_ORDER`)
+so the Rust side can marshal literals and checkpoints without a pytree
+library.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.moe import moe_ffn
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256       # per-expert hidden
+    n_experts: int = 4
+    batch: int = 4
+    seq: int = 32
+    lr: float = 0.5
+
+    @property
+    def tokens(self):
+        return self.batch * self.seq
+
+    def scaled(self, name):
+        """Named presets: tiny (default), small (~13M), paper-shape
+        (8 layers x 128 experts, for AOT-structure checks only)."""
+        presets = {
+            "tiny": ModelConfig(),
+            "small": ModelConfig(vocab=2048, d_model=256, n_layers=4,
+                                 n_heads=8, d_ff=512, n_experts=8,
+                                 batch=8, seq=64),
+            "large": ModelConfig(vocab=8192, d_model=512, n_layers=8,
+                                 n_heads=8, d_ff=1024, n_experts=16,
+                                 batch=8, seq=128),
+            "paper": ModelConfig(vocab=8192, d_model=512, n_layers=8,
+                                 n_heads=8, d_ff=1024, n_experts=128,
+                                 batch=4, seq=64),
+        }
+        return presets[name]
+
+
+def param_order(cfg: ModelConfig):
+    """Names + shapes of every parameter, in wire order."""
+    out = [("embed", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        out += [
+            (f"l{l}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{l}.gate", (cfg.d_model, cfg.n_experts)),
+            (f"l{l}.w1", (cfg.n_experts, cfg.d_model, cfg.d_ff)),
+            (f"l{l}.w2", (cfg.n_experts, cfg.d_ff, cfg.d_model)),
+            (f"l{l}.ln1", (cfg.d_model,)),
+            (f"l{l}.ln2", (cfg.d_model,)),
+        ]
+    out.append(("head", (cfg.d_model, cfg.vocab)))
+    return out
+
+
+def n_params(cfg: ModelConfig):
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_order(cfg))
+
+
+def init_fn(cfg: ModelConfig, seed):
+    """Initialize parameters from an i32 seed. Returns the flat tuple."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_order(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(float(fan_in))
+            )
+    return tuple(params)
+
+
+def _rmsnorm(x, gain):
+    return x * gain / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _attention(cfg, x, wq, wk, wv, wo):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    q = (x @ wq).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logits = jnp.where(mask, logits, -1e30)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(B, S, D) @ wo
+
+
+def _moe_layer(cfg, x, gate_w, w1, w2):
+    """Top-1 (switch) routing with full capacity, dense dispatch, expert FFN
+    via the Pallas kernel."""
+    B, S, D = x.shape
+    T = B * S
+    E = cfg.n_experts
+    xt = x.reshape(T, D)
+    gate_logits = xt @ gate_w                       # [T, E]
+    gate_p = jax.nn.softmax(gate_logits, axis=-1)
+    top = jnp.argmax(gate_logits, axis=-1)          # [T]
+    dispatch = jax.nn.one_hot(top, E, dtype=xt.dtype)  # [T, E]
+    # Expert-major capacity layout: capacity C = T (no token dropping).
+    xe = jnp.einsum("te,td->etd", dispatch, xt)     # [E, T, D]
+    ye = moe_ffn(xe, w1, w2)                        # [E, T, D]  (L1 kernel)
+    # Combine, scaled by the router probability of the chosen expert.
+    chosen_p = jnp.sum(gate_p * dispatch, axis=-1, keepdims=True)  # [T, 1]
+    yt = jnp.einsum("etd,te->td", ye, dispatch) * chosen_p
+    return yt.reshape(B, S, D)
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """Logits for an i32 [B, S] token batch."""
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]  # [B, S, D]
+    for _ in range(cfg.n_layers):
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        gate, w1, w2 = next(it), next(it), next(it)
+        ln1, ln2 = next(it), next(it)
+        x = x + _attention(cfg, _rmsnorm(x, ln1), wq, wk, wv, wo)
+        x = x + _moe_layer(cfg, _rmsnorm(x, ln2), gate, w1, w2)
+    head = next(it)
+    return x @ head
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, params, tokens, targets):
+    """One SGD step. Returns (loss, *new_params) — a flat tuple so the HLO
+    output is a plain tuple the Rust runtime unpacks positionally."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, targets)
+    )(tuple(params))
+    new_params = tuple(p - cfg.lr * g for p, g in zip(params, grads))
+    return (loss,) + new_params
+
+
+def eval_loss(cfg: ModelConfig, params, tokens, targets):
+    """Loss only (for held-out evaluation from Rust)."""
+    return (loss_fn(cfg, params, tokens, targets),)

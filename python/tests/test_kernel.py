@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas MoE kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; fixed cases pin the paper-shaped
+configuration. These are the CORE correctness signal for the kernel that
+ends up inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.moe import moe_ffn, vmem_footprint_bytes, mxu_utilization_estimate
+from compile.kernels.ref import moe_ffn_ref, moe_ffn_ref_grads
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+def make_inputs(E, C, D, F, seed=0, dtype=jnp.float32):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    return (
+        rand(k1, (E, C, D), dtype),
+        rand(k2, (E, D, F), dtype) / np.sqrt(D),
+        rand(k3, (E, F, D), dtype) / np.sqrt(F),
+    )
+
+
+class TestForward:
+    def test_matches_ref_paper_shape(self):
+        xe, w1, w2 = make_inputs(8, 64, 32, 64)
+        np.testing.assert_allclose(
+            moe_ffn(xe, w1, w2), moe_ffn_ref(xe, w1, w2), rtol=1e-5, atol=1e-5
+        )
+
+    def test_single_expert(self):
+        xe, w1, w2 = make_inputs(1, 16, 8, 8)
+        np.testing.assert_allclose(
+            moe_ffn(xe, w1, w2), moe_ffn_ref(xe, w1, w2), rtol=1e-5, atol=1e-5
+        )
+
+    def test_zero_input_gives_zero(self):
+        xe, w1, w2 = make_inputs(4, 8, 8, 16)
+        out = moe_ffn(jnp.zeros_like(xe), w1, w2)
+        assert np.allclose(out, 0.0)
+
+    def test_relu_kills_negative_branch(self):
+        # With strongly negative w1 and positive x, h==0 → output 0.
+        xe = jnp.ones((2, 4, 4))
+        w1 = -jnp.ones((2, 4, 8))
+        w2 = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4))
+        assert np.allclose(moe_ffn(xe, w1, w2), 0.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        E=st.integers(1, 6),
+        C=st.integers(1, 24),
+        D=st.integers(1, 24),
+        F=st.integers(1, 24),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_hypothesis(self, E, C, D, F, seed):
+        xe, w1, w2 = make_inputs(E, C, D, F, seed)
+        np.testing.assert_allclose(
+            moe_ffn(xe, w1, w2), moe_ffn_ref(xe, w1, w2), rtol=2e-4, atol=2e-4
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        xe, w1, w2 = make_inputs(2, 8, 8, 8, dtype=dtype)
+        out = moe_ffn(xe, w1, w2)
+        ref = moe_ffn_ref(xe, w1, w2)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32), rtol=tol, atol=tol
+        )
+
+
+class TestBackward:
+    def test_vjp_matches_hand_derived(self):
+        xe, w1, w2 = make_inputs(3, 8, 6, 10, seed=7)
+        g = jax.random.normal(jax.random.PRNGKey(9), xe.shape)
+        _, vjp = jax.vjp(moe_ffn, xe, w1, w2)
+        dx, dw1, dw2 = vjp(g)
+        rx, rw1, rw2 = moe_ffn_ref_grads(xe, w1, w2, g)
+        np.testing.assert_allclose(dx, rx, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(dw1, rw1, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(dw2, rw2, rtol=1e-4, atol=1e-5)
+
+    def test_grad_matches_ref_autodiff(self):
+        xe, w1, w2 = make_inputs(2, 6, 4, 8, seed=3)
+
+        def loss_kernel(w1, w2):
+            return jnp.sum(moe_ffn(xe, w1, w2) ** 2)
+
+        def loss_ref(w1, w2):
+            return jnp.sum(moe_ffn_ref(xe, w1, w2) ** 2)
+
+        gk = jax.grad(loss_kernel, argnums=(0, 1))(w1, w2)
+        gr = jax.grad(loss_ref, argnums=(0, 1))(w1, w2)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        E=st.integers(1, 4),
+        C=st.integers(1, 12),
+        D=st.integers(1, 12),
+        F=st.integers(1, 12),
+        seed=st.integers(0, 2**16),
+    )
+    def test_vjp_hypothesis(self, E, C, D, F, seed):
+        xe, w1, w2 = make_inputs(E, C, D, F, seed)
+        g = jax.random.normal(jax.random.PRNGKey(seed + 1), xe.shape)
+        _, vjp = jax.vjp(moe_ffn, xe, w1, w2)
+        outs = vjp(g)
+        refs = moe_ffn_ref_grads(xe, w1, w2, g)
+        for a, b in zip(outs, refs):
+            np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+    def test_jittable(self):
+        xe, w1, w2 = make_inputs(2, 8, 8, 8)
+
+        @jax.jit
+        def f(xe, w1, w2):
+            return jnp.sum(moe_ffn(xe, w1, w2))
+
+        assert np.isfinite(float(f(xe, w1, w2)))
+
+
+class TestPerfModel:
+    def test_vmem_footprint_formula(self):
+        # xe + w1 + w2 + h + out, f32.
+        assert vmem_footprint_bytes(8, 64, 32, 64) == 4 * (
+            64 * 32 + 32 * 64 + 64 * 32 + 64 * 64 + 64 * 32
+        )
+
+    def test_vmem_fits_16mb_for_paper_tile(self):
+        # DESIGN.md §Perf target: one grid step ≤ 16 MB VMEM.
+        assert vmem_footprint_bytes(128, 512, 512, 1024) <= 16 * 2**20
+
+    def test_mxu_estimate_bounds(self):
+        u = mxu_utilization_estimate(512, 512, 1024)
+        assert u == 1.0  # perfectly tiled
+        u2 = mxu_utilization_estimate(100, 100, 100)
+        assert 0.0 < u2 < 1.0

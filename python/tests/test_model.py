@@ -1,0 +1,126 @@
+"""L2 correctness: model shapes, determinism, and trainability; plus the
+AOT lowering contract (HLO text parses, meta matches)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (
+    ModelConfig,
+    eval_loss,
+    forward,
+    init_fn,
+    loss_fn,
+    n_params,
+    param_order,
+    train_step,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig()  # tiny preset
+
+
+def data(cfg, seed=0):
+    k = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(k, (cfg.batch, cfg.seq), 0, cfg.vocab)
+    # Learnable synthetic structure: next token = (7t + 3) mod V.
+    targets = (tokens * 7 + 3) % cfg.vocab
+    return tokens, targets
+
+
+class TestModel:
+    def test_param_order_covers_n_params(self):
+        params = init_fn(CFG, 0)
+        assert len(params) == len(param_order(CFG))
+        total = sum(int(np.prod(p.shape)) for p in params)
+        assert total == n_params(CFG)
+
+    def test_init_deterministic(self):
+        a = init_fn(CFG, 42)
+        b = init_fn(CFG, 42)
+        c = init_fn(CFG, 43)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+        assert any(not np.array_equal(x, z) for x, z in zip(a, c))
+
+    def test_forward_shape(self):
+        params = init_fn(CFG, 0)
+        tokens, _ = data(CFG)
+        logits = forward(CFG, params, tokens)
+        assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+        assert np.all(np.isfinite(logits))
+
+    def test_loss_near_uniform_at_init(self):
+        params = init_fn(CFG, 0)
+        tokens, targets = data(CFG)
+        loss = float(loss_fn(CFG, params, tokens, targets))
+        uniform = np.log(CFG.vocab)
+        assert abs(loss - uniform) < 1.5, f"init loss {loss} vs uniform {uniform}"
+
+    def test_train_step_shapes_and_loss_output(self):
+        params = init_fn(CFG, 0)
+        tokens, targets = data(CFG)
+        out = train_step(CFG, params, tokens, targets)
+        assert len(out) == 1 + len(params)
+        assert out[0].shape == ()
+        for p, q in zip(params, out[1:]):
+            assert p.shape == q.shape
+
+    def test_loss_decreases_over_steps(self):
+        # The e2e training claim, in miniature: 30 steps on the synthetic
+        # next-token rule must cut the loss meaningfully.
+        params = init_fn(CFG, 0)
+        step = jax.jit(lambda ps, tok, tgt: train_step(CFG, ps, tok, tgt))
+        first = None
+        for i in range(30):
+            tokens, targets = data(CFG, seed=i)
+            out = step(tuple(params), tokens, targets)
+            loss, params = float(out[0]), out[1:]
+            if first is None:
+                first = loss
+        assert loss < first * 0.9, f"loss {first} → {loss}"
+
+    def test_eval_matches_loss(self):
+        params = init_fn(CFG, 0)
+        tokens, targets = data(CFG)
+        (ev,) = eval_loss(CFG, params, tokens, targets)
+        assert abs(float(ev) - float(loss_fn(CFG, params, tokens, targets))) < 1e-6
+
+    def test_presets_scale(self):
+        tiny = n_params(ModelConfig().scaled("tiny"))
+        small = n_params(ModelConfig().scaled("small"))
+        large = n_params(ModelConfig().scaled("large"))
+        assert tiny < small < large
+        assert large > 50_000_000, f"large preset {large} params"
+
+
+class TestAot:
+    def test_lower_all_emits_parseable_artifacts(self, tmp_path):
+        from compile.aot import lower_all
+
+        meta = lower_all(CFG, str(tmp_path))
+        for f in ["train_step.hlo.txt", "init.hlo.txt", "eval.hlo.txt", "meta.json"]:
+            p = tmp_path / f
+            assert p.exists() and p.stat().st_size > 0, f
+        text = (tmp_path / "train_step.hlo.txt").read_text()
+        assert text.startswith("HloModule"), text[:40]
+        # The MoE grouped matmuls must appear in the lowered module.
+        assert "dot(" in text
+        m = json.loads((tmp_path / "meta.json").read_text())
+        assert m["n_params"] == n_params(CFG)
+        assert len(m["params"]) == len(param_order(CFG))
+        assert meta["config"]["n_experts"] == CFG.n_experts
+
+    def test_artifact_executes_in_jax(self, tmp_path):
+        # Round-trip sanity: the lowered train step, when compiled by this
+        # process's own XLA from the same jitted fn, reproduces eager.
+        params = init_fn(CFG, 0)
+        tokens, targets = data(CFG)
+        eager = train_step(CFG, params, tokens, targets)
+        jitted = jax.jit(lambda *a: train_step(CFG, a[: len(params)], a[-2], a[-1]))
+        out = jitted(*params, tokens, targets)
+        np.testing.assert_allclose(float(out[0]), float(eager[0]), rtol=1e-5)

@@ -1,0 +1,241 @@
+//! Checkpoint format: a JSON manifest of tensors plus a raw little-endian
+//! f32 payload, stored through the striped local store.
+//!
+//! This is the real-bytes counterpart of the §4.4 resume path: the trainer
+//! saves model parameters here (striped write) and resumes by reading them
+//! back (striped parallel read), so the exact code path the simulator
+//! models is also exercised with real data in the e2e example.
+
+use crate::hdfs::local::LocalStore;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+
+/// Metadata of one tensor in the checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    /// Row-major dimensions.
+    pub shape: Vec<usize>,
+    /// Offset in f32 elements into the payload.
+    pub offset: usize,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An in-memory checkpoint: tensor directory + flat f32 payload.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub tensors: Vec<TensorMeta>,
+    pub payload: Vec<f32>,
+    /// Training step the checkpoint was taken at.
+    pub step: u64,
+}
+
+impl Checkpoint {
+    pub fn new(step: u64) -> Checkpoint {
+        Checkpoint { tensors: Vec::new(), payload: Vec::new(), step }
+    }
+
+    /// Append a tensor; returns its index.
+    pub fn push(&mut self, name: &str, shape: Vec<usize>, data: &[f32]) -> usize {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        let offset = self.payload.len();
+        self.payload.extend_from_slice(data);
+        self.tensors.push(TensorMeta { name: name.to_string(), shape, offset });
+        self.tensors.len() - 1
+    }
+
+    pub fn get(&self, name: &str) -> Option<(&TensorMeta, &[f32])> {
+        let t = self.tensors.iter().find(|t| t.name == name)?;
+        Some((t, &self.payload[t.offset..t.offset + t.numel()]))
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        (self.payload.len() * 4) as u64
+    }
+
+    fn manifest(&self) -> Json {
+        let mut m = Json::obj();
+        m.set("step", self.step);
+        m.set("n_elems", self.payload.len());
+        let tensors: Vec<Json> = self
+            .tensors
+            .iter()
+            .map(|t| {
+                let mut o = Json::obj();
+                o.set("name", t.name.as_str())
+                    .set("shape", t.shape.iter().map(|&x| x as u64).collect::<Vec<u64>>())
+                    .set("offset", t.offset);
+                o
+            })
+            .collect();
+        m.set("tensors", Json::Arr(tensors));
+        m
+    }
+
+    /// Serialize: manifest length (u64 LE) + manifest JSON + f32 LE payload.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let manifest = self.manifest().to_string();
+        let mut out = Vec::with_capacity(16 + manifest.len() + self.payload.len() * 4);
+        out.extend_from_slice(b"BSCKPT01");
+        out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+        out.extend_from_slice(manifest.as_bytes());
+        for x in &self.payload {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
+        if data.len() < 16 || &data[..8] != b"BSCKPT01" {
+            bail!("bad checkpoint magic");
+        }
+        let mlen = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+        if 16 + mlen > data.len() {
+            bail!("truncated checkpoint manifest");
+        }
+        let manifest = std::str::from_utf8(&data[16..16 + mlen])?;
+        let m = json::parse(manifest).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let step = m.get("step").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let n_elems =
+            m.get("n_elems").and_then(|v| v.as_usize()).context("manifest n_elems")?;
+        let body = &data[16 + mlen..];
+        if body.len() != n_elems * 4 {
+            bail!("payload size mismatch: {} != {}", body.len(), n_elems * 4);
+        }
+        let payload: Vec<f32> = body
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        let tensors = m
+            .get("tensors")
+            .and_then(|v| v.as_arr())
+            .context("manifest tensors")?
+            .iter()
+            .map(|t| -> Result<TensorMeta> {
+                Ok(TensorMeta {
+                    name: t.get("name").and_then(|v| v.as_str()).context("name")?.to_string(),
+                    shape: t
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .context("shape")?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: t.get("offset").and_then(|v| v.as_usize()).context("offset")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // Validate tensor extents.
+        for t in &tensors {
+            if t.offset + t.numel() > payload.len() {
+                bail!("tensor {} overruns payload", t.name);
+            }
+        }
+        Ok(Checkpoint { tensors, payload, step })
+    }
+
+    /// Save through the striped store (the BootSeer write path).
+    pub fn save(&self, store: &LocalStore, name: &str, chunk_bytes: u64, width: u32) -> Result<()> {
+        store.write_striped(name, &self.to_bytes(), chunk_bytes, width)?;
+        Ok(())
+    }
+
+    /// Resume via striped parallel read (BootSeer) or the sequential
+    /// baseline path.
+    pub fn load(store: &LocalStore, name: &str, striped: bool) -> Result<Checkpoint> {
+        let bytes = if striped {
+            store.read_striped_parallel(name)?
+        } else {
+            store.read_sequential(name)?
+        };
+        Checkpoint::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_ckpt() -> Checkpoint {
+        let mut c = Checkpoint::new(1234);
+        let mut rng = Rng::seeded(1);
+        let w: Vec<f32> = (0..64 * 32).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+        c.push("layer0.w", vec![64, 32], &w);
+        c.push("layer0.b", vec![32], &b);
+        c
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let c = sample_ckpt();
+        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.step, 1234);
+    }
+
+    #[test]
+    fn get_by_name() {
+        let c = sample_ckpt();
+        let (meta, data) = c.get("layer0.b").unwrap();
+        assert_eq!(meta.shape, vec![32]);
+        assert_eq!(data.len(), 32);
+        assert!(c.get("nope").is_none());
+    }
+
+    #[test]
+    fn save_load_striped_and_sequential() {
+        let dir = std::env::temp_dir().join(format!("bootseer-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = LocalStore::open(&dir).unwrap();
+        let c = sample_ckpt();
+        c.save(&store, "model", 1024, 4).unwrap();
+        assert_eq!(Checkpoint::load(&store, "model", true).unwrap(), c);
+        assert_eq!(Checkpoint::load(&store, "model", false).unwrap(), c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(Checkpoint::from_bytes(b"garbage").is_err());
+        let c = sample_ckpt();
+        let mut bytes = c.to_bytes();
+        bytes.truncate(bytes.len() - 4); // drop one f32
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_overrunning_tensor() {
+        let c = sample_ckpt();
+        let mut bytes = c.to_bytes();
+        // Corrupt the manifest offset field by rewriting manifest.
+        let mlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let manifest = String::from_utf8(bytes[16..16 + mlen].to_vec()).unwrap();
+        // layer0.b sits at offset 2048; push it out of bounds (same width).
+        let bad = manifest.replace("\"offset\":2048", "\"offset\":9999");
+        assert_eq!(manifest.len(), bad.len(), "test setup: same length edit");
+        bytes[16..16 + mlen].copy_from_slice(bad.as_bytes());
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn shape_data_mismatch_panics() {
+        let mut c = Checkpoint::new(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.push("x", vec![3, 3], &[1.0; 8]);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn total_bytes() {
+        let c = sample_ckpt();
+        assert_eq!(c.total_bytes(), (64 * 32 + 32) * 4);
+    }
+}

@@ -1,0 +1,8 @@
+//! Checkpoint subsystem: the on-disk format + save/resume over the striped
+//! store (real bytes), and the Model Initialization stage planner (sim).
+
+pub mod format;
+pub mod resume;
+
+pub use format::{Checkpoint, TensorMeta};
+pub use resume::{plan_model_init, resume_bytes_per_node, ModelInitPlan};

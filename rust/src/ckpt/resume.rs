@@ -1,0 +1,100 @@
+//! Model Initialization stage planner (§2.2, §4.4).
+//!
+//! Model init = launching ranks, building parallel groups, RDMA connection
+//! setup (a base cost that grows mildly with scale), plus checkpoint
+//! resumption — the only part that touches remote storage, and the part
+//! BootSeer's striped HDFS-FUSE accelerates.
+
+use crate::config::defaults as d;
+use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
+use crate::hdfs::fuse::{plan_read, ReadEngine};
+use crate::sim::{ClusterSim, TaskId};
+
+/// Planned Model Initialization stage.
+pub struct ModelInitPlan {
+    /// Per-node stage completion.
+    pub node_done: Vec<TaskId>,
+    /// Bytes each node reads from HDFS during resume.
+    pub read_bytes_per_node: u64,
+}
+
+/// Checkpoint bytes each node must read: every DP replica loads a full
+/// model copy, spread over the `pp*tp/gpus_per_node` nodes that host it.
+pub fn resume_bytes_per_node(job: &JobConfig, cluster: &ClusterConfig) -> u64 {
+    let nodes_per_replica =
+        ((job.pp * job.tp + cluster.gpus_per_node - 1) / cluster.gpus_per_node).max(1);
+    job.ckpt_bytes / nodes_per_replica as u64
+}
+
+/// Plan Model Initialization for every node.
+pub fn plan_model_init(
+    cs: &mut ClusterSim,
+    job: &JobConfig,
+    cfg: &BootseerConfig,
+    deps: &[Vec<TaskId>],
+    tag: u64,
+) -> ModelInitPlan {
+    let n = cs.nodes();
+    assert!(deps.is_empty() || deps.len() == n);
+    let engine = if cfg.ckpt_striped { ReadEngine::Striped } else { ReadEngine::Sequential };
+    let per_node = resume_bytes_per_node(job, &cs.cfg);
+    let mut node_done = Vec::with_capacity(n);
+    for i in 0..n {
+        let gate: &[TaskId] = if deps.is_empty() { &[] } else { &deps[i] };
+        // Rank launch + parallel-group construction + RDMA setup.
+        let base = cs.cpu_time(i, d::MODEL_INIT_BASE_S) + d::model_init_sync_s(n);
+        let launched = cs.sim.delay(base, gate, 0);
+        // Checkpoint resumption through HDFS-FUSE.
+        let resumed = plan_read(cs, i, per_node, engine, &[launched], 0);
+        node_done.push(cs.sim.barrier(&[resumed], tag));
+    }
+    ModelInitPlan { node_done, read_bytes_per_node: per_node }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn run_stage(gpus: u32, cfg: &BootseerConfig) -> f64 {
+        let job = JobConfig::paper_moe(gpus);
+        let cluster = ClusterConfig::with_nodes(job.nodes(&ClusterConfig::default()));
+        let mut cs = ClusterSim::build(&cluster, 42);
+        let plan = plan_model_init(&mut cs, &job, cfg, &[], 1);
+        cs.sim.run();
+        plan.node_done.iter().map(|&t| cs.sim.finished_at(t)).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn per_node_read_bytes() {
+        let job = JobConfig::paper_moe(128);
+        let cluster = ClusterConfig::default();
+        // PP=2 × TP=8 = 16 GPUs per replica = 2 nodes → 206.5 GB each.
+        assert_eq!(resume_bytes_per_node(&job, &cluster), 206_500_000_000);
+    }
+
+    #[test]
+    fn baseline_in_paper_band() {
+        // §3.2: Model Initialization takes 100–200 s in the baseline.
+        let t = run_stage(128, &BootseerConfig::baseline());
+        assert!((100.0..220.0).contains(&t), "baseline model init {t}");
+    }
+
+    #[test]
+    fn bootseer_improves_about_1_6x() {
+        let base = run_stage(128, &BootseerConfig::baseline());
+        let boot = run_stage(128, &BootseerConfig::bootseer());
+        let ratio = base / boot;
+        assert!((1.3..2.5).contains(&ratio), "model-init improvement {ratio}");
+    }
+
+    #[test]
+    fn stable_across_scales() {
+        // §5.3: duration does not grow much with job scale.
+        for cfg in [BootseerConfig::baseline(), BootseerConfig::bootseer()] {
+            let t16 = run_stage(16, &cfg);
+            let t128 = run_stage(128, &cfg);
+            assert!(t128 < t16 * 1.4, "{}: {t16} → {t128}", cfg.image_mode.name());
+        }
+    }
+}

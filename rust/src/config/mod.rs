@@ -1,0 +1,410 @@
+//! Typed configuration for the cluster model, the training job, and the
+//! BootSeer feature set, loadable from a TOML-subset file (`toml.rs`) and
+//! defaulting to the paper-calibrated constants (`defaults.rs`).
+
+pub mod defaults;
+pub mod toml;
+
+use defaults as d;
+use toml::Doc;
+
+/// Which image-loading engine a run uses (paper §4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ImageMode {
+    /// Traditional OCI pull: download every byte before container start.
+    OciFull,
+    /// Block-level lazy loading (the paper's *baseline*).
+    Lazy,
+    /// BootSeer: record-and-prefetch hot blocks + background cold streaming.
+    RecordPrefetch,
+}
+
+impl ImageMode {
+    pub fn parse(s: &str) -> Option<ImageMode> {
+        match s {
+            "oci" | "oci_full" => Some(ImageMode::OciFull),
+            "lazy" => Some(ImageMode::Lazy),
+            "record_prefetch" | "bootseer" => Some(ImageMode::RecordPrefetch),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ImageMode::OciFull => "oci_full",
+            ImageMode::Lazy => "lazy",
+            ImageMode::RecordPrefetch => "record_prefetch",
+        }
+    }
+}
+
+/// Physical cluster + shared-service model.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub nodes: u32,
+    pub gpus_per_node: u32,
+    /// Per-node frontend NIC bandwidth, bytes/s.
+    pub node_nic_bps: f64,
+    pub node_disk_write_bps: f64,
+    pub node_disk_read_bps: f64,
+    pub registry_egress_bps: f64,
+    pub cluster_cache_egress_bps: f64,
+    pub scm_egress_bps: f64,
+    pub scm_throttle_concurrency: u32,
+    pub scm_throttle_penalty: f64,
+    pub scm_reject_prob: f64,
+    pub scm_backoff_s: f64,
+    pub hdfs_datanodes: u32,
+    pub hdfs_datanode_egress_bps: f64,
+    pub hdfs_block_bytes: u64,
+    pub hdfs_replication: u32,
+    pub hdfs_nn_op_s: f64,
+    /// Node-slowdown straggler model.
+    pub straggler_tail_prob: f64,
+    pub straggler_body_std: f64,
+    pub straggler_tail_alpha: f64,
+    pub straggler_cap: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 16,
+            gpus_per_node: d::GPUS_PER_NODE,
+            node_nic_bps: d::NODE_NIC_BPS,
+            node_disk_write_bps: d::NODE_DISK_WRITE_BPS,
+            node_disk_read_bps: d::NODE_DISK_READ_BPS,
+            registry_egress_bps: d::REGISTRY_EGRESS_BPS,
+            cluster_cache_egress_bps: d::CLUSTER_CACHE_EGRESS_BPS,
+            scm_egress_bps: d::SCM_EGRESS_BPS,
+            scm_throttle_concurrency: d::SCM_THROTTLE_CONCURRENCY,
+            scm_throttle_penalty: d::SCM_THROTTLE_PENALTY,
+            scm_reject_prob: d::SCM_REJECT_PROB,
+            scm_backoff_s: d::SCM_BACKOFF_S,
+            hdfs_datanodes: d::HDFS_DATANODES,
+            hdfs_datanode_egress_bps: d::HDFS_DATANODE_EGRESS_BPS,
+            hdfs_block_bytes: d::HDFS_BLOCK_BYTES,
+            hdfs_replication: d::HDFS_REPLICATION,
+            hdfs_nn_op_s: d::HDFS_NN_OP_S,
+            straggler_tail_prob: 0.01,
+            straggler_body_std: 0.05,
+            straggler_tail_alpha: 1.2,
+            straggler_cap: 4.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Total GPU count.
+    pub fn gpus(&self) -> u32 {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Build a cluster of `nodes` nodes with otherwise default services.
+    pub fn with_nodes(nodes: u32) -> ClusterConfig {
+        ClusterConfig { nodes, ..ClusterConfig::default() }
+    }
+
+    pub fn from_doc(doc: &Doc) -> ClusterConfig {
+        let base = ClusterConfig::default();
+        ClusterConfig {
+            nodes: doc.i64_or("cluster.nodes", base.nodes as i64) as u32,
+            gpus_per_node: doc.i64_or("cluster.gpus_per_node", base.gpus_per_node as i64) as u32,
+            node_nic_bps: doc.f64_or("cluster.node_nic_bps", base.node_nic_bps),
+            node_disk_write_bps: doc.f64_or("cluster.node_disk_write_bps", base.node_disk_write_bps),
+            node_disk_read_bps: doc.f64_or("cluster.node_disk_read_bps", base.node_disk_read_bps),
+            registry_egress_bps: doc.f64_or("cluster.registry_egress_bps", base.registry_egress_bps),
+            cluster_cache_egress_bps: doc
+                .f64_or("cluster.cluster_cache_egress_bps", base.cluster_cache_egress_bps),
+            scm_egress_bps: doc.f64_or("cluster.scm_egress_bps", base.scm_egress_bps),
+            scm_throttle_concurrency: doc
+                .i64_or("cluster.scm_throttle_concurrency", base.scm_throttle_concurrency as i64)
+                as u32,
+            scm_throttle_penalty: doc.f64_or("cluster.scm_throttle_penalty", base.scm_throttle_penalty),
+            scm_reject_prob: doc.f64_or("cluster.scm_reject_prob", base.scm_reject_prob),
+            scm_backoff_s: doc.f64_or("cluster.scm_backoff_s", base.scm_backoff_s),
+            hdfs_datanodes: doc.i64_or("cluster.hdfs_datanodes", base.hdfs_datanodes as i64) as u32,
+            hdfs_datanode_egress_bps: doc
+                .f64_or("cluster.hdfs_datanode_egress_bps", base.hdfs_datanode_egress_bps),
+            hdfs_block_bytes: doc.i64_or("cluster.hdfs_block_bytes", base.hdfs_block_bytes as i64)
+                as u64,
+            hdfs_replication: doc.i64_or("cluster.hdfs_replication", base.hdfs_replication as i64)
+                as u32,
+            hdfs_nn_op_s: doc.f64_or("cluster.hdfs_nn_op_s", base.hdfs_nn_op_s),
+            straggler_tail_prob: doc.f64_or("cluster.straggler_tail_prob", base.straggler_tail_prob),
+            straggler_body_std: doc.f64_or("cluster.straggler_body_std", base.straggler_body_std),
+            straggler_tail_alpha: doc.f64_or("cluster.straggler_tail_alpha", base.straggler_tail_alpha),
+            straggler_cap: doc.f64_or("cluster.straggler_cap", base.straggler_cap),
+        }
+    }
+}
+
+/// One training job's startup-relevant parameters (paper §5.1 workload).
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub name: String,
+    /// GPUs requested; nodes = gpus / gpus_per_node.
+    pub gpus: u32,
+    pub image_bytes: u64,
+    pub image_hot_fraction: f64,
+    pub image_block_bytes: u64,
+    /// Runtime-installed dependency count.
+    pub env_packages: u32,
+    pub env_pkg_mean_bytes: u64,
+    pub env_pkg_sigma: f64,
+    pub env_install_cpu_mean_s: f64,
+    pub env_cache_bytes: u64,
+    pub ckpt_bytes: u64,
+    /// Pipeline-parallel degree (checkpoint partitioning).
+    pub pp: u32,
+    /// Data-parallel degree (checkpoint replication factor on resume).
+    pub dp: u32,
+    /// Tensor-parallel degree within a node.
+    pub tp: u32,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            name: "moe-8l-128e".to_string(),
+            gpus: 128,
+            image_bytes: d::PAPER_IMAGE_BYTES,
+            image_hot_fraction: d::IMAGE_HOT_FRACTION,
+            image_block_bytes: d::IMAGE_BLOCK_BYTES,
+            env_packages: d::ENV_PACKAGES,
+            env_pkg_mean_bytes: d::ENV_PKG_MEAN_BYTES,
+            env_pkg_sigma: d::ENV_PKG_SIGMA,
+            env_install_cpu_mean_s: d::ENV_INSTALL_CPU_MEAN_S,
+            env_cache_bytes: d::PAPER_ENV_CACHE_BYTES,
+            ckpt_bytes: d::PAPER_CKPT_BYTES,
+            pp: 2,
+            dp: 8,
+            tp: 8,
+        }
+    }
+}
+
+impl JobConfig {
+    /// The paper's §5.1 MoE workload at a given GPU scale. PP is fixed at 2,
+    /// TP at 8 (one node per TP group), DP = gpus / (pp * tp).
+    pub fn paper_moe(gpus: u32) -> JobConfig {
+        let pp = 2;
+        let tp = 8;
+        JobConfig {
+            gpus,
+            pp,
+            tp,
+            dp: (gpus / (pp * tp)).max(1),
+            ..JobConfig::default()
+        }
+    }
+
+    pub fn nodes(&self, cluster: &ClusterConfig) -> u32 {
+        (self.gpus + cluster.gpus_per_node - 1) / cluster.gpus_per_node
+    }
+
+    pub fn from_doc(doc: &Doc) -> JobConfig {
+        let base = JobConfig::default();
+        JobConfig {
+            name: doc.str_or("job.name", &base.name),
+            gpus: doc.i64_or("job.gpus", base.gpus as i64) as u32,
+            image_bytes: doc.i64_or("job.image_bytes", base.image_bytes as i64) as u64,
+            image_hot_fraction: doc.f64_or("job.image_hot_fraction", base.image_hot_fraction),
+            image_block_bytes: doc.i64_or("job.image_block_bytes", base.image_block_bytes as i64)
+                as u64,
+            env_packages: doc.i64_or("job.env_packages", base.env_packages as i64) as u32,
+            env_pkg_mean_bytes: doc.i64_or("job.env_pkg_mean_bytes", base.env_pkg_mean_bytes as i64)
+                as u64,
+            env_pkg_sigma: doc.f64_or("job.env_pkg_sigma", base.env_pkg_sigma),
+            env_install_cpu_mean_s: doc
+                .f64_or("job.env_install_cpu_mean_s", base.env_install_cpu_mean_s),
+            env_cache_bytes: doc.i64_or("job.env_cache_bytes", base.env_cache_bytes as i64) as u64,
+            ckpt_bytes: doc.i64_or("job.ckpt_bytes", base.ckpt_bytes as i64) as u64,
+            pp: doc.i64_or("job.pp", base.pp as i64) as u32,
+            dp: doc.i64_or("job.dp", base.dp as i64) as u32,
+            tp: doc.i64_or("job.tp", base.tp as i64) as u32,
+        }
+    }
+}
+
+/// BootSeer feature toggles (what §5 ablates between "baseline" and
+/// "Bootseer").
+#[derive(Clone, Debug)]
+pub struct BootseerConfig {
+    pub image_mode: ImageMode,
+    /// Peer-to-peer block sharing (on in BOTH paper configurations).
+    pub p2p: bool,
+    pub env_cache: bool,
+    pub ckpt_striped: bool,
+    pub record_window_s: f64,
+    pub prefetch_threads: u32,
+    pub stripe_chunk_bytes: u64,
+    pub stripe_width: u32,
+}
+
+impl BootseerConfig {
+    /// The paper's baseline: lazy image loading with P2P, on-the-fly pip
+    /// installs, plain HDFS download-and-resume.
+    pub fn baseline() -> BootseerConfig {
+        BootseerConfig {
+            image_mode: ImageMode::Lazy,
+            p2p: true,
+            env_cache: false,
+            ckpt_striped: false,
+            record_window_s: d::PAPER_RECORD_WINDOW_S,
+            prefetch_threads: d::PAPER_PREFETCH_THREADS,
+            stripe_chunk_bytes: d::STRIPE_CHUNK_BYTES,
+            stripe_width: d::STRIPE_WIDTH,
+        }
+    }
+
+    /// Full BootSeer: record-and-prefetch, env cache, striped HDFS-FUSE.
+    pub fn bootseer() -> BootseerConfig {
+        BootseerConfig {
+            image_mode: ImageMode::RecordPrefetch,
+            env_cache: true,
+            ckpt_striped: true,
+            ..BootseerConfig::baseline()
+        }
+    }
+
+    /// Pre-lazy-loading strawman (for the 10x OCI claim in §4.2).
+    pub fn oci_strawman() -> BootseerConfig {
+        BootseerConfig { image_mode: ImageMode::OciFull, p2p: false, ..BootseerConfig::baseline() }
+    }
+
+    pub fn from_doc(doc: &Doc) -> BootseerConfig {
+        let base = if doc.bool_or("bootseer.enabled", true) {
+            BootseerConfig::bootseer()
+        } else {
+            BootseerConfig::baseline()
+        };
+        BootseerConfig {
+            image_mode: doc
+                .get("bootseer.image_mode")
+                .and_then(|v| v.as_str())
+                .and_then(ImageMode::parse)
+                .unwrap_or(base.image_mode),
+            p2p: doc.bool_or("bootseer.p2p", base.p2p),
+            env_cache: doc.bool_or("bootseer.env_cache", base.env_cache),
+            ckpt_striped: doc.bool_or("bootseer.ckpt_striped", base.ckpt_striped),
+            record_window_s: doc.f64_or("bootseer.record_window_s", base.record_window_s),
+            prefetch_threads: doc.i64_or("bootseer.prefetch_threads", base.prefetch_threads as i64)
+                as u32,
+            stripe_chunk_bytes: doc
+                .i64_or("bootseer.stripe_chunk_bytes", base.stripe_chunk_bytes as i64)
+                as u64,
+            stripe_width: doc.i64_or("bootseer.stripe_width", base.stripe_width as i64) as u32,
+        }
+    }
+}
+
+/// Fully resolved run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub cluster: ClusterConfig,
+    pub job: JobConfig,
+    pub bootseer: BootseerConfig,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            cluster: ClusterConfig::default(),
+            job: JobConfig::default(),
+            bootseer: BootseerConfig::baseline(),
+            seed: 0xB007_5EE3,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_file(path: &str) -> Result<RunConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = Doc::parse(&text)?;
+        Ok(RunConfig {
+            cluster: ClusterConfig::from_doc(&doc),
+            job: JobConfig::from_doc(&doc),
+            bootseer: BootseerConfig::from_doc(&doc),
+            seed: doc.i64_or("seed", 0xB007_5EE3) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_workload() {
+        let job = JobConfig::default();
+        assert_eq!(job.image_bytes, 28_620_000_000);
+        assert_eq!(job.ckpt_bytes, 413_000_000_000);
+        assert_eq!(job.env_cache_bytes, 270_000_000);
+        assert_eq!(job.pp, 2);
+    }
+
+    #[test]
+    fn paper_moe_scales_dp() {
+        // §5.1: 16..128 GPUs ↔ DP 1,2,3,4,8.
+        assert_eq!(JobConfig::paper_moe(16).dp, 1);
+        assert_eq!(JobConfig::paper_moe(32).dp, 2);
+        assert_eq!(JobConfig::paper_moe(48).dp, 3);
+        assert_eq!(JobConfig::paper_moe(64).dp, 4);
+        assert_eq!(JobConfig::paper_moe(128).dp, 8);
+    }
+
+    #[test]
+    fn nodes_round_up() {
+        let cluster = ClusterConfig::default();
+        assert_eq!(JobConfig::paper_moe(16).nodes(&cluster), 2);
+        assert_eq!(JobConfig::paper_moe(48).nodes(&cluster), 6);
+        let odd = JobConfig { gpus: 9, ..JobConfig::default() };
+        assert_eq!(odd.nodes(&cluster), 2);
+    }
+
+    #[test]
+    fn bootseer_vs_baseline_flags() {
+        let base = BootseerConfig::baseline();
+        let boot = BootseerConfig::bootseer();
+        assert_eq!(base.image_mode, ImageMode::Lazy);
+        assert_eq!(boot.image_mode, ImageMode::RecordPrefetch);
+        assert!(!base.env_cache && boot.env_cache);
+        assert!(!base.ckpt_striped && boot.ckpt_striped);
+        assert!(base.p2p && boot.p2p); // p2p on in both per §5.2
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = Doc::parse(
+            r#"
+            seed = 7
+            [cluster]
+            nodes = 32
+            [job]
+            gpus = 64
+            [bootseer]
+            enabled = false
+            image_mode = "oci"
+            "#,
+        )
+        .unwrap();
+        let cluster = ClusterConfig::from_doc(&doc);
+        let job = JobConfig::from_doc(&doc);
+        let boot = BootseerConfig::from_doc(&doc);
+        assert_eq!(cluster.nodes, 32);
+        assert_eq!(job.gpus, 64);
+        assert_eq!(boot.image_mode, ImageMode::OciFull);
+        // Untouched values keep defaults.
+        assert_eq!(job.image_bytes, 28_620_000_000);
+    }
+
+    #[test]
+    fn image_mode_parse() {
+        assert_eq!(ImageMode::parse("lazy"), Some(ImageMode::Lazy));
+        assert_eq!(ImageMode::parse("bootseer"), Some(ImageMode::RecordPrefetch));
+        assert_eq!(ImageMode::parse("nope"), None);
+        assert_eq!(ImageMode::Lazy.name(), "lazy");
+    }
+}

@@ -1,0 +1,305 @@
+//! TOML-subset parser for config files (no serde/toml crates offline).
+//!
+//! Supported grammar — the subset real configs in this repo use:
+//!   - `[section]` and `[section.sub]` headers
+//!   - `key = value` with value ∈ {integer, float, bool, "string", array}
+//!   - `#` comments, blank lines
+//!   - arrays of homogeneous scalars: `[1, 2, 3]`, `["a", "b"]`
+//!
+//! Values are stored flattened as `section.sub.key` → `Value`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(x) => Some(x),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(x) => write!(f, "{x}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(x) => write!(f, "{x}"),
+            Value::Str(x) => write!(f, "\"{x}\""),
+            Value::Arr(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A parsed config document: flattened dotted keys.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if entries.insert(full.clone(), val).is_some() {
+                return Err(format!("line {}: duplicate key {full}", lineno + 1));
+            }
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Keys not consumed by any accessor — used to flag typos in configs.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".to_string());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let items: Result<Vec<Value>, String> = split_top_level(inner)
+            .into_iter()
+            .map(|part| parse_value(part.trim()))
+            .collect();
+        return Ok(Value::Arr(items?));
+    }
+    // Numbers: underscores permitted as separators.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        cleaned
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| format!("bad value: {s}"))
+    } else {
+        cleaned
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|_| format!("bad value: {s}"))
+    }
+}
+
+/// Split on commas not inside quotes (arrays are flat, no nesting needed).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            top = 1
+            [cluster]
+            nodes = 16          # trailing comment
+            nic_gbps = 25.0
+            name = "h800-pool"
+            enabled = true
+            [cluster.hdfs]
+            block_mb = 512
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.i64_or("top", 0), 1);
+        assert_eq!(doc.i64_or("cluster.nodes", 0), 16);
+        assert_eq!(doc.f64_or("cluster.nic_gbps", 0.0), 25.0);
+        assert_eq!(doc.str_or("cluster.name", ""), "h800-pool");
+        assert!(doc.bool_or("cluster.enabled", false));
+        assert_eq!(doc.i64_or("cluster.hdfs.block_mb", 0), 512);
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = Doc::parse(r#"xs = [1, 2, 3]
+names = ["a", "b,c"]"#).unwrap();
+        match doc.get("xs").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+        match doc.get("names").unwrap() {
+            Value::Arr(v) => {
+                assert_eq!(v[1].as_str().unwrap(), "b,c");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = Doc::parse("n = 28_620_000_000").unwrap();
+        assert_eq!(doc.i64_or("n", 0), 28_620_000_000);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = Doc::parse("a = 3\nb = 3.5\nc = 1e3").unwrap();
+        assert_eq!(doc.get("a").unwrap(), &Value::Int(3));
+        assert_eq!(doc.get("b").unwrap(), &Value::Float(3.5));
+        assert_eq!(doc.get("c").unwrap(), &Value::Float(1000.0));
+        // Int readable as f64.
+        assert_eq!(doc.f64_or("a", 0.0), 3.0);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("k = ").is_err());
+        assert!(Doc::parse("k = \"open").is_err());
+        assert!(Doc::parse("k = 1\nk = 2").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = Doc::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let v = Value::Arr(vec![Value::Int(1), Value::Str("x".into())]);
+        assert_eq!(v.to_string(), "[1, \"x\"]");
+    }
+}

@@ -1,0 +1,271 @@
+//! Environment Setup stage planner (§4.3).
+//!
+//! Baseline: every node runs the install script — for each package, an
+//! admission round-trip against the SCM backend (rate-limited under
+//! concurrency), the download, and CPU-bound unpack/build. Then daemons and
+//! health checks start, with a cluster-wide synchronization component.
+//!
+//! BootSeer: on a cache hit, the node downloads the job's environment cache
+//! archive from HDFS, unpacks it, and skips every install command. On the
+//! first run (miss), everyone installs normally and node 0 additionally
+//! captures + uploads the cache for next time.
+
+use crate::config::defaults as d;
+use crate::config::{BootseerConfig, JobConfig};
+use crate::env::cache::EnvCacheRegistry;
+use crate::env::packages::PackageSet;
+use crate::sim::{ClusterSim, TaskId};
+
+/// Planned Environment Setup stage.
+pub struct EnvSetupPlan {
+    /// Per-node: stage fully done (installs/restore + daemons).
+    pub node_done: Vec<TaskId>,
+    /// Per-node: (install-script start, install-script end) markers — the
+    /// paper's straggler proxy (§3.3) measures exactly this span.
+    pub install_span: Vec<(TaskId, TaskId)>,
+    /// Whether this plan restored from the environment cache.
+    pub cache_hit: bool,
+    /// Task that finishes the cache capture+upload (first run only).
+    pub cache_capture_done: Option<TaskId>,
+}
+
+impl EnvSetupPlan {
+    /// Install-script durations per node after the sim has run.
+    pub fn install_durations(&self, cs: &ClusterSim) -> Vec<f64> {
+        self.install_span
+            .iter()
+            .map(|&(s, e)| cs.sim.finished_at(e) - cs.sim.finished_at(s))
+            .collect()
+    }
+}
+
+/// Plan the Environment Setup stage for every node.
+pub fn plan_env_setup(
+    cs: &mut ClusterSim,
+    pkgs: &PackageSet,
+    job: &JobConfig,
+    cfg: &BootseerConfig,
+    cache_reg: &mut EnvCacheRegistry,
+    deps: &[Vec<TaskId>],
+    tag: u64,
+) -> EnvSetupPlan {
+    let n = cs.nodes();
+    assert!(deps.is_empty() || deps.len() == n);
+    let sig = pkgs.signature();
+    let hit = cfg.env_cache && cache_reg.lookup(sig).is_some();
+
+    let mut node_done = Vec::with_capacity(n);
+    let mut install_span = Vec::with_capacity(n);
+    let mut cache_capture_done = None;
+
+    // Admission latency model: request-rate limiting at the SCM backend.
+    let over = (n as f64 / cs.cfg.scm_throttle_concurrency as f64 - 1.0).max(0.0);
+    let admit_s = d::SCM_ADMIT_BASE_S
+        * (1.0 + d::SCM_ADMIT_PENALTY * (n as f64 - cs.cfg.scm_throttle_concurrency as f64).max(0.0));
+    let reject_p = (cs.cfg.scm_reject_prob * over * cs.cfg.scm_throttle_concurrency as f64)
+        .clamp(0.0, 0.15);
+
+    let mut rng = cs.rng.fork(0xE27);
+
+    for i in 0..n {
+        let gate: &[TaskId] = if deps.is_empty() { &[] } else { &deps[i] };
+        let start = cs.sim.barrier(gate, 0);
+
+        let installed_end = if hit {
+            // Restore: fetch archive from HDFS (round-robin group), unpack.
+            let entry = cache_reg.lookup(sig).unwrap();
+            let group = cs.hdfs_groups[i % cs.hdfs_groups.len()];
+            let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s, &[start], 0);
+            let dl = cs.sim.flow(
+                entry.compressed_bytes as f64,
+                vec![group, cs.node_nic[i]],
+                &[nn],
+                0,
+            );
+            let unpack_s =
+                cs.cpu_time(i, entry.compressed_bytes as f64 / d::ENV_CACHE_UNPACK_BPS);
+            cs.sim.delay(unpack_s, &[dl], 0)
+        } else {
+            // Install script: sequential per-package admission → download →
+            // CPU install, with rare rejection+backoff under overload.
+            let mut prev = start;
+            for p in &pkgs.packages {
+                if reject_p > 0.0 && rng.chance(reject_p) {
+                    let backoff = cs.cfg.scm_backoff_s * (1.0 + 2.0 * rng.f64());
+                    prev = cs.sim.delay(backoff, &[prev], 0);
+                }
+                let admit = cs.sim.delay(cs.cpu_time(i, admit_s), &[prev], 0);
+                let dl =
+                    cs.sim.flow(p.bytes as f64, vec![cs.scm, cs.node_nic[i]], &[admit], 0);
+                prev = cs.sim.delay(cs.cpu_time(i, p.install_cpu_s), &[dl], 0);
+            }
+            prev
+        };
+        install_span.push((start, installed_end));
+
+        // First run with env-cache enabled: node 0 captures + uploads the
+        // cache (dir diff → compress → HDFS put) in the background; it
+        // must be finished before the job can claim a reusable cache but
+        // does not gate this node's own stage completion.
+        if cfg.env_cache && !hit && i == 0 {
+            let pack_s =
+                cs.cpu_time(0, job.env_cache_bytes as f64 / d::ENV_CACHE_PACK_BPS);
+            let packed = cs.sim.delay(pack_s, &[installed_end], 0);
+            let group = cs.hdfs_groups[0];
+            let up = cs.sim.flow(
+                job.env_cache_bytes as f64,
+                vec![cs.node_nic[0], group],
+                &[packed],
+                0,
+            );
+            cache_capture_done = Some(up);
+        }
+
+        // Daemons + health checks; the synchronization component grows with
+        // job scale (§5.3's 64→128 GPU bump), the base part runs at node
+        // speed.
+        let daemon_s = cs.cpu_time(i, d::ENV_DAEMON_BASE_S) + d::env_daemon_sync_s(n);
+        node_done.push(cs.sim.delay(daemon_s, &[installed_end], tag));
+    }
+
+    // Register the cache as available for subsequent runs.
+    if cfg.env_cache && !hit {
+        cache_reg.store(sig, job.env_cache_bytes);
+    }
+
+    EnvSetupPlan { node_done, install_span, cache_hit: hit, cache_capture_done }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BootseerConfig, ClusterConfig};
+    use crate::util::stats;
+
+    fn setup(nodes: u32) -> (ClusterSim, PackageSet, JobConfig) {
+        let cs = ClusterSim::build(&ClusterConfig::with_nodes(nodes), 42);
+        let job = JobConfig::paper_moe(nodes * 8);
+        let pkgs = PackageSet::synth(&job, 42);
+        (cs, pkgs, job)
+    }
+
+    fn run_env(
+        nodes: u32,
+        cfg: &BootseerConfig,
+        reg: &mut EnvCacheRegistry,
+    ) -> (f64, Vec<f64>, bool) {
+        let (mut cs, pkgs, job) = setup(nodes);
+        let plan = plan_env_setup(&mut cs, &pkgs, &job, cfg, reg, &[], 1);
+        cs.sim.run();
+        let stage_end = plan
+            .node_done
+            .iter()
+            .map(|&t| cs.sim.finished_at(t))
+            .fold(0.0, f64::max);
+        (stage_end, plan.install_durations(&cs), plan.cache_hit)
+    }
+
+    #[test]
+    fn baseline_env_in_paper_band() {
+        let mut reg = EnvCacheRegistry::new();
+        let (t, _, hit) = run_env(16, &BootseerConfig::baseline(), &mut reg);
+        assert!(!hit);
+        assert!((100.0..300.0).contains(&t), "baseline env stage {t}");
+    }
+
+    #[test]
+    fn cache_hit_halves_stage() {
+        let mut reg = EnvCacheRegistry::new();
+        let cfg = BootseerConfig::bootseer();
+        // First run: miss (creates cache).
+        let (t_first, _, hit_first) = run_env(16, &cfg, &mut reg);
+        assert!(!hit_first);
+        // Second run: hit.
+        let (t_hit, durs, hit) = run_env(16, &cfg, &mut reg);
+        assert!(hit);
+        let (t_base, _, _) = run_env(16, &BootseerConfig::baseline(), &mut EnvCacheRegistry::new());
+        let ratio = t_base / t_hit;
+        assert!((1.6..4.0).contains(&ratio), "env improvement {ratio} ({t_base} vs {t_hit})");
+        assert!(t_first >= t_base * 0.9, "first run not faster than baseline");
+        // Restore is seconds, not minutes.
+        assert!(stats::max(&durs) < 15.0, "restore durations {durs:?}");
+    }
+
+    #[test]
+    fn cache_capture_only_on_first_run() {
+        let (mut cs, pkgs, job) = setup(4);
+        let cfg = BootseerConfig::bootseer();
+        let mut reg = EnvCacheRegistry::new();
+        let plan = plan_env_setup(&mut cs, &pkgs, &job, &cfg, &mut reg, &[], 1);
+        assert!(plan.cache_capture_done.is_some());
+        cs.sim.run();
+        let (mut cs2, pkgs2, job2) = setup(4);
+        let plan2 = plan_env_setup(&mut cs2, &pkgs2, &job2, &cfg, &mut reg, &[], 1);
+        assert!(plan2.cache_capture_done.is_none());
+        assert!(plan2.cache_hit);
+    }
+
+    #[test]
+    fn signature_change_misses_cache() {
+        let (mut cs, pkgs, job) = setup(4);
+        let cfg = BootseerConfig::bootseer();
+        let mut reg = EnvCacheRegistry::new();
+        let _ = plan_env_setup(&mut cs, &pkgs, &job, &cfg, &mut reg, &[], 1);
+        // Bump a version → new signature → miss.
+        let bumped = pkgs.with_bumped_version(0);
+        let (mut cs2, _, job2) = setup(4);
+        let plan = plan_env_setup(&mut cs2, &bumped, &job2, &cfg, &mut reg, &[], 1);
+        assert!(!plan.cache_hit);
+    }
+
+    #[test]
+    fn install_durations_have_straggler_tail_at_scale() {
+        // 1,440 nodes (the paper's 11,520-GPU job): Max/Median well above 1,
+        // and far above the small-job ratio.
+        let mut reg = EnvCacheRegistry::new();
+        let (_, durs_small, _) = run_env(4, &BootseerConfig::baseline(), &mut reg);
+        let (_, durs_big, _) = run_env(180, &BootseerConfig::baseline(), &mut reg);
+        let r_small = stats::max_median_ratio(&durs_small);
+        let r_big = stats::max_median_ratio(&durs_big);
+        assert!(r_big > r_small, "straggler ratio should grow: {r_small} vs {r_big}");
+        assert!(r_big > 1.2, "big-job ratio {r_big}");
+    }
+
+    #[test]
+    fn cache_eliminates_stragglers() {
+        let cfg = BootseerConfig::bootseer();
+        let mut reg = EnvCacheRegistry::new();
+        let _ = run_env(16, &cfg, &mut reg); // create cache
+        let (_, durs_hit, hit) = run_env(16, &cfg, &mut reg);
+        assert!(hit);
+        let (_, durs_base, _) =
+            run_env(16, &BootseerConfig::baseline(), &mut EnvCacheRegistry::new());
+        // Fig 14: BootSeer's distribution is dramatically tighter.
+        let spread_hit = stats::max(&durs_hit) - stats::min(&durs_hit);
+        let spread_base = stats::max(&durs_base) - stats::min(&durs_base);
+        assert!(
+            spread_hit < spread_base / 3.0,
+            "spread hit {spread_hit} vs base {spread_base}"
+        );
+    }
+
+    #[test]
+    fn deps_gate_start() {
+        let (mut cs, pkgs, job) = setup(2);
+        let gate = cs.sim.delay(50.0, &[], 0);
+        let deps = vec![vec![gate]; 2];
+        let plan = plan_env_setup(
+            &mut cs,
+            &pkgs,
+            &job,
+            &BootseerConfig::baseline(),
+            &mut EnvCacheRegistry::new(),
+            &deps,
+            1,
+        );
+        cs.sim.run();
+        for &t in &plan.node_done {
+            assert!(cs.sim.finished_at(t) > 50.0);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Environment Setup subsystem (§4.3): runtime dependency model, the
+//! install-script simulator with SCM throttling, and the job-level
+//! environment cache (real snapshot/pack/restore engine + registry).
+
+pub mod cache;
+pub mod installer;
+pub mod packages;
+
+pub use cache::{CacheCapture, EnvCacheRegistry};
+pub use installer::{plan_env_setup, EnvSetupPlan};
+pub use packages::{Package, PackageSet};

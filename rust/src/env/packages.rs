@@ -1,0 +1,178 @@
+//! Runtime-installed dependency model (§4.3).
+//!
+//! Training jobs install part of their environment at startup rather than
+//! baking it into the image, because (1) the right package version is only
+//! known at runtime (GPU type, OS, region) and (2) some packages change too
+//! often to justify image rebuilds. A `PackageSet` is the per-job list the
+//! install script walks; its `signature` keys the environment cache and
+//! invalidates it when job parameters change.
+
+use crate::config::JobConfig;
+use crate::util::rng::Rng;
+
+/// One runtime dependency.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Package {
+    pub name: String,
+    pub version: String,
+    /// Download size from the SCM backend.
+    pub bytes: u64,
+    /// CPU seconds to unpack/build/install at nominal node speed.
+    pub install_cpu_s: f64,
+}
+
+/// The ordered package list a job's install script processes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackageSet {
+    pub packages: Vec<Package>,
+    /// Environment parameters that affect resolution (GPU type, OS, ...).
+    pub runtime_params: Vec<(String, String)>,
+}
+
+impl PackageSet {
+    /// Deterministically synthesize the package set for a job. Sizes are
+    /// lognormal with mean `env_pkg_mean_bytes` (an NCCL-sized multi-hundred
+    /// MB outlier appears naturally in the tail).
+    pub fn synth(job: &JobConfig, seed: u64) -> PackageSet {
+        let mut rng = Rng::seeded(seed ^ 0xDE95_EED0 ^ job.env_packages as u64);
+        let sigma = job.env_pkg_sigma;
+        // lognormal(mu, sigma) has mean exp(mu + sigma^2/2); solve mu.
+        let mu = (job.env_pkg_mean_bytes as f64).ln() - sigma * sigma / 2.0;
+        let packages = (0..job.env_packages)
+            .map(|i| {
+                let bytes = rng.lognormal(mu, sigma).max(50_000.0) as u64;
+                // Install CPU time loosely correlates with size.
+                let size_factor = (bytes as f64 / job.env_pkg_mean_bytes as f64).powf(0.35);
+                let install_cpu_s =
+                    (job.env_install_cpu_mean_s * size_factor * rng.lognormal(0.0, 0.35))
+                        .clamp(0.3, 120.0);
+                Package {
+                    name: format!("pkg-{i:03}"),
+                    version: format!("{}.{}.{}", rng.below(4), rng.below(20), rng.below(40)),
+                    bytes,
+                    install_cpu_s,
+                }
+            })
+            .collect();
+        PackageSet {
+            packages,
+            runtime_params: vec![
+                ("gpu".to_string(), "H800".to_string()),
+                ("os".to_string(), "ubuntu22".to_string()),
+            ],
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.packages.iter().map(|p| p.bytes).sum()
+    }
+
+    pub fn total_install_cpu_s(&self) -> f64 {
+        self.packages.iter().map(|p| p.install_cpu_s).sum()
+    }
+
+    /// Cache key: hashes every (name, version) pair and every runtime
+    /// parameter. Any change — a bumped package version, a different GPU
+    /// type — yields a new signature, which expires the environment cache
+    /// (§4.3 "if the job parameters change, the cache is marked expired").
+    pub fn signature(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |s: &str| {
+            for b in s.as_bytes() {
+                h ^= *b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h ^= 0xff;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for p in &self.packages {
+            mix(&p.name);
+            mix(&p.version);
+        }
+        for (k, v) in &self.runtime_params {
+            mix(k);
+            mix(v);
+        }
+        h
+    }
+
+    /// A copy with one package's version bumped (for invalidation tests).
+    pub fn with_bumped_version(&self, idx: usize) -> PackageSet {
+        let mut c = self.clone();
+        c.packages[idx].version.push_str(".post1");
+        c
+    }
+
+    /// A copy resolved for a different runtime environment.
+    pub fn with_param(&self, key: &str, value: &str) -> PackageSet {
+        let mut c = self.clone();
+        match c.runtime_params.iter_mut().find(|(k, _)| k == key) {
+            Some(kv) => kv.1 = value.to_string(),
+            None => c.runtime_params.push((key.to_string(), value.to_string())),
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn base() -> PackageSet {
+        PackageSet::synth(&JobConfig::default(), 7)
+    }
+
+    #[test]
+    fn synth_deterministic() {
+        assert_eq!(base(), PackageSet::synth(&JobConfig::default(), 7));
+        assert_ne!(base().signature(), PackageSet::synth(&JobConfig::default(), 8).signature());
+    }
+
+    #[test]
+    fn count_and_mean_size() {
+        let ps = base();
+        assert_eq!(ps.packages.len(), 24);
+        let mean = ps.total_bytes() as f64 / 24.0;
+        // Lognormal sample mean is noisy with n=24; just sanity-band it.
+        assert!((10e6..400e6).contains(&mean), "mean pkg size {mean}");
+    }
+
+    #[test]
+    fn signature_changes_on_version_bump() {
+        let ps = base();
+        assert_ne!(ps.signature(), ps.with_bumped_version(3).signature());
+    }
+
+    #[test]
+    fn signature_changes_on_runtime_param() {
+        let ps = base();
+        assert_ne!(ps.signature(), ps.with_param("gpu", "A100").signature());
+        // Same change twice = same signature (it's a pure function).
+        assert_eq!(
+            ps.with_param("gpu", "A100").signature(),
+            ps.with_param("gpu", "A100").signature()
+        );
+    }
+
+    #[test]
+    fn install_cpu_total_in_band() {
+        // Baseline env setup must be able to reach the paper's 100–300 s.
+        let t = base().total_install_cpu_s();
+        assert!((40.0..300.0).contains(&t), "total install cpu {t}");
+    }
+
+    #[test]
+    fn prop_signature_collision_free_ish() {
+        prop_check(48, |g| {
+            let job = JobConfig::default();
+            let a = PackageSet::synth(&job, g.rng.next_u64());
+            let b = PackageSet::synth(&job, g.rng.next_u64());
+            if a != b {
+                prop_assert!(a.signature() != b.signature());
+            }
+            Ok(())
+        });
+    }
+}

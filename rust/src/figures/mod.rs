@@ -1,0 +1,704 @@
+//! Figure generators: one function per data figure in the paper, each
+//! producing the measured series (plus a rendered table and JSON export).
+//! Benches and the CLI are thin wrappers over these.
+
+use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
+use crate::profiler::Stage;
+use crate::startup::{run_startup, StartupKind, StartupOutcome, World};
+use crate::trace::{bucket_of, gen_trace, replay, ReplayResult, SCALE_BUCKETS};
+use crate::util::human;
+use crate::util::json::Json;
+use crate::util::stats::{self, BoxSummary, Histogram};
+
+/// Jobs in the default synthetic week (the paper's week saw 28k; we default
+/// lower and scale — override with BOOTSEER_TRACE_JOBS).
+pub fn default_trace_jobs() -> usize {
+    std::env::var("BOOTSEER_TRACE_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1") {
+            120
+        } else {
+            400
+        })
+}
+
+/// Run (or reuse) the week replay all §3 figures share.
+pub fn week_replay(seed: u64) -> ReplayResult {
+    let trace = gen_trace(seed, default_trace_jobs(), 7.0 * 86400.0);
+    replay(&trace, &ClusterConfig::default(), &BootseerConfig::baseline(), seed)
+}
+
+// ---------------------------------------------------------------- Fig 1 --
+
+pub struct Fig01 {
+    pub train_gpu_hours: f64,
+    pub startup_gpu_hours: f64,
+}
+
+impl Fig01 {
+    pub fn fraction(&self) -> f64 {
+        self.startup_gpu_hours / (self.startup_gpu_hours + self.train_gpu_hours)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "cluster day: training {:.0} GPU-h, startup {:.0} GPU-h → startup fraction {:.2}%\n\
+             paper: \"more than 3.5% of GPU time is wasted due to startup overhead\"\n",
+            self.train_gpu_hours,
+            self.startup_gpu_hours,
+            100.0 * self.fraction()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("train_gpu_hours", self.train_gpu_hours)
+            .set("startup_gpu_hours", self.startup_gpu_hours)
+            .set("startup_fraction", self.fraction());
+        j
+    }
+}
+
+pub fn fig01(r: &ReplayResult) -> Fig01 {
+    Fig01 { train_gpu_hours: r.train_gpu_hours, startup_gpu_hours: r.startup_gpu_hours }
+}
+
+// ------------------------------------------------------------- Fig 3a/3b --
+
+pub struct Fig03 {
+    /// Per bucket: (label, job-level box, node-level box).
+    pub rows: Vec<(String, Option<BoxSummary>, Option<BoxSummary>)>,
+}
+
+pub fn fig03(r: &ReplayResult) -> Fig03 {
+    let mut job_level: Vec<Vec<f64>> = vec![Vec::new(); SCALE_BUCKETS.len()];
+    let mut node_level: Vec<Vec<f64>> = vec![Vec::new(); SCALE_BUCKETS.len()];
+    for jr in &r.jobs {
+        let b = bucket_of(jr.job.gpus);
+        for attempt in r.svc.db.attempts(jr.job.id) {
+            // Job-level overhead = submission → training begin = end of the
+            // ModelInit span for this attempt.
+            if let Some((_, end)) =
+                r.svc.db.attempt_stage_span(jr.job.id, attempt, Stage::ModelInit)
+            {
+                job_level[b].push(end);
+            }
+            for node in r.svc.db.job_nodes(jr.job.id) {
+                if let Some(x) = r.svc.db.node_startup_overhead(jr.job.id, attempt, node) {
+                    node_level[b].push(x);
+                }
+            }
+        }
+    }
+    Fig03 {
+        rows: SCALE_BUCKETS
+            .iter()
+            .enumerate()
+            .map(|(i, &(_, _, label))| {
+                (
+                    label.to_string(),
+                    (!job_level[i].is_empty()).then(|| BoxSummary::of(&job_level[i])),
+                    (!node_level[i].is_empty()).then(|| BoxSummary::of(&node_level[i])),
+                )
+            })
+            .collect(),
+    }
+}
+
+impl Fig03 {
+    pub fn render(&self) -> String {
+        let mut rows = vec![vec![
+            "scale".to_string(),
+            "job-level med".to_string(),
+            "job q1..q3".to_string(),
+            "node-level med".to_string(),
+            "node q1..q3".to_string(),
+        ]];
+        for (label, j, n) in &self.rows {
+            let fmt = |b: &Option<BoxSummary>| match b {
+                Some(b) => (
+                    human::secs(b.median),
+                    format!("{}..{}", human::secs(b.q1), human::secs(b.q3)),
+                ),
+                None => ("-".to_string(), "-".to_string()),
+            };
+            let (jm, jq) = fmt(j);
+            let (nm, nq) = fmt(n);
+            rows.push(vec![label.clone(), jm, jq, nm, nq]);
+        }
+        format!(
+            "{}paper: >100-GPU jobs take ~6-7 min job-level; node-level ≈1 min lower\n",
+            human::table(&rows)
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(label, j, n)| {
+                let mut o = Json::obj();
+                o.set("bucket", label.as_str());
+                if let Some(b) = j {
+                    o.set("job_median", b.median).set("job_q1", b.q1).set("job_q3", b.q3);
+                }
+                if let Some(b) = n {
+                    o.set("node_median", b.median).set("node_q1", b.q1).set("node_q3", b.q3);
+                }
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("buckets", Json::Arr(arr));
+        j
+    }
+}
+
+// --------------------------------------------------------------- Fig 4 --
+
+pub struct Fig04 {
+    pub rows: Vec<(String, Option<BoxSummary>, usize)>,
+}
+
+pub fn fig04(r: &ReplayResult) -> Fig04 {
+    let mut per_bucket: Vec<Vec<f64>> = vec![Vec::new(); SCALE_BUCKETS.len()];
+    let mut counts = vec![0usize; SCALE_BUCKETS.len()];
+    for jr in &r.jobs {
+        let b = bucket_of(jr.job.gpus);
+        per_bucket[b].push((jr.job.full_startups + jr.job.hot_updates) as f64);
+        counts[b] += 1;
+    }
+    Fig04 {
+        rows: SCALE_BUCKETS
+            .iter()
+            .enumerate()
+            .map(|(i, &(_, _, label))| {
+                (
+                    label.to_string(),
+                    (!per_bucket[i].is_empty()).then(|| BoxSummary::of(&per_bucket[i])),
+                    counts[i],
+                )
+            })
+            .collect(),
+    }
+}
+
+impl Fig04 {
+    pub fn render(&self) -> String {
+        let mut rows = vec![vec![
+            "scale".to_string(),
+            "startups med".to_string(),
+            "q1..q3".to_string(),
+            "max".to_string(),
+            "#jobs".to_string(),
+        ]];
+        for (label, b, n) in &self.rows {
+            match b {
+                Some(b) => rows.push(vec![
+                    label.clone(),
+                    format!("{:.0}", b.median),
+                    format!("{:.0}..{:.0}", b.q1, b.q3),
+                    format!("{:.0}", b.max),
+                    n.to_string(),
+                ]),
+                None => rows.push(vec![label.clone(), "-".into(), "-".into(), "-".into(), n.to_string()]),
+            }
+        }
+        format!(
+            "{}paper: <100-GPU jobs ≈1 startup; larger jobs 2-8, worst cases 20+\n",
+            human::table(&rows)
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(label, b, n)| {
+                let mut o = Json::obj();
+                o.set("bucket", label.as_str()).set("n_jobs", *n);
+                if let Some(b) = b {
+                    o.set("median", b.median).set("q3", b.q3).set("max", b.max);
+                }
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("buckets", Json::Arr(arr));
+        j
+    }
+}
+
+// --------------------------------------------------------------- Fig 5 --
+
+pub struct Fig05 {
+    pub rows: Vec<(Stage, BoxSummary)>,
+}
+
+pub fn fig05(r: &ReplayResult) -> Fig05 {
+    let mut rows = Vec::new();
+    // Pre-worker stages: job-level spans.
+    for stage in [Stage::Queuing, Stage::Allocation] {
+        let durs: Vec<f64> = r
+            .svc
+            .db
+            .rows
+            .iter()
+            .filter(|row| row.stage == stage)
+            .map(|row| row.duration())
+            .collect();
+        if !durs.is_empty() {
+            rows.push((stage, BoxSummary::of(&durs)));
+        }
+    }
+    for stage in Stage::WORKER_PHASE {
+        let durs = r.svc.db.node_durations(stage);
+        if !durs.is_empty() {
+            rows.push((stage, BoxSummary::of(&durs)));
+        }
+    }
+    Fig05 { rows }
+}
+
+impl Fig05 {
+    pub fn render(&self) -> String {
+        let mut rows = vec![vec![
+            "stage".to_string(),
+            "median".to_string(),
+            "q1..q3".to_string(),
+            "whisker hi".to_string(),
+        ]];
+        for (stage, b) in &self.rows {
+            rows.push(vec![
+                stage.name().to_string(),
+                human::secs(b.median),
+                format!("{}..{}", human::secs(b.q1), human::secs(b.q3)),
+                human::secs(b.whisker_hi),
+            ]);
+        }
+        format!(
+            "{}paper bands: queuing ~100s; alloc ~s; image 20-40s; env 100-300s; model-init 100-200s\n",
+            human::table(&rows)
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(s, b)| {
+                let mut o = Json::obj();
+                o.set("stage", s.name()).set("median", b.median).set("q1", b.q1).set("q3", b.q3);
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("stages", Json::Arr(arr));
+        j
+    }
+}
+
+// --------------------------------------------------------------- Fig 6 --
+
+pub struct Fig06 {
+    /// (gpus, Max/Median samples across repeated jobs).
+    pub rows: Vec<(u32, BoxSummary)>,
+}
+
+/// Dedicated scale sweep: install-script Max/Median ratio vs job scale.
+pub fn fig06(seeds: u32) -> Fig06 {
+    let scales = [16u32, 64, 256, 1024, 4096, 11520];
+    let cluster = ClusterConfig::default();
+    let rows = scales
+        .iter()
+        .map(|&gpus| {
+            let job = JobConfig::paper_moe(gpus);
+            let ratios: Vec<f64> = (0..seeds)
+                .map(|s| {
+                    let mut w = World::new();
+                    let o = run_startup(
+                        gpus as u64,
+                        s,
+                        &cluster,
+                        &job,
+                        &BootseerConfig::baseline(),
+                        &mut w,
+                        StartupKind::Full,
+                        1000 + s as u64,
+                    );
+                    stats::max_median_ratio(&o.install_durations)
+                })
+                .collect();
+            (gpus, BoxSummary::of(&ratios))
+        })
+        .collect();
+    Fig06 { rows }
+}
+
+impl Fig06 {
+    pub fn render(&self) -> String {
+        let mut rows = vec![vec![
+            "gpus".to_string(),
+            "max/median med".to_string(),
+            "q1..q3".to_string(),
+            "worst".to_string(),
+        ]];
+        for (gpus, b) in &self.rows {
+            rows.push(vec![
+                gpus.to_string(),
+                format!("{:.2}", b.median),
+                format!("{:.2}..{:.2}", b.q1, b.q3),
+                format!("{:.2}", b.max),
+            ]);
+        }
+        format!(
+            "{}paper: ~1.0 small → ~1.5 at 1,000+ GPUs, extremes 4x+\n",
+            human::table(&rows)
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(g, b)| {
+                let mut o = Json::obj();
+                o.set("gpus", *g as u64).set("median", b.median).set("max", b.max);
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("scales", Json::Arr(arr));
+        j
+    }
+}
+
+// --------------------------------------------------------------- Fig 7 --
+
+pub struct Fig07 {
+    pub durations: Vec<f64>,
+    pub hist: Histogram,
+}
+
+/// The 11,520-GPU (1,440-node) job's install-duration distribution.
+pub fn fig07(seed: u64) -> Fig07 {
+    let job = JobConfig::paper_moe(11_520);
+    // The §3.4 job's install script was lighter than the §5 MoE job's.
+    let job = JobConfig { env_packages: 8, env_install_cpu_mean_s: 2.5, ..job };
+    let mut w = World::new();
+    let o = run_startup(
+        11_520,
+        0,
+        &ClusterConfig::default(),
+        &job,
+        &BootseerConfig::baseline(),
+        &mut w,
+        StartupKind::Full,
+        seed,
+    );
+    let hi = stats::max(&o.install_durations) * 1.02;
+    let hist = Histogram::build(&o.install_durations, 0.0, hi.max(1.0), 24);
+    Fig07 { durations: o.install_durations, hist }
+}
+
+impl Fig07 {
+    pub fn render(&self) -> String {
+        let med = stats::median(&self.durations);
+        let frac60 = stats::fraction_le(&self.durations, med * 1.4);
+        format!(
+            "{}\nnodes={} median={} p99={} max={} (≤1.4x-median fraction: {:.1}%)\n\
+             paper: most nodes ≤60s; <1% up to ~92s; all 1,440 servers wait for the slowest\n",
+            self.hist.render(48),
+            self.durations.len(),
+            human::secs(med),
+            human::secs(stats::quantile(&self.durations, 0.99)),
+            human::secs(stats::max(&self.durations)),
+            100.0 * frac60,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("n_nodes", self.durations.len())
+            .set("median", stats::median(&self.durations))
+            .set("p99", stats::quantile(&self.durations, 0.99))
+            .set("max", stats::max(&self.durations));
+        j
+    }
+}
+
+// ---------------------------------------------------------- Fig 12 / 13 --
+
+pub struct ScalePoint {
+    pub gpus: u32,
+    pub baseline: StartupOutcome,
+    pub bootseer: StartupOutcome,
+}
+
+pub struct Fig12 {
+    pub points: Vec<ScalePoint>,
+}
+
+/// End-to-end startup, baseline vs warm BootSeer, at the §5.1 scales,
+/// averaged over `reps` runs (paper: 3 independent runs).
+pub fn fig12(reps: u32) -> Fig12 {
+    let scales = [16u32, 32, 48, 64, 128];
+    let cluster = ClusterConfig::default();
+    let points = scales
+        .iter()
+        .map(|&gpus| {
+            let job = JobConfig::paper_moe(gpus);
+            // Representative run = median rep by worker_phase.
+            let mut base_runs: Vec<StartupOutcome> = (0..reps)
+                .map(|r| {
+                    let mut w = World::new();
+                    run_startup(
+                        gpus as u64,
+                        r,
+                        &cluster,
+                        &job,
+                        &BootseerConfig::baseline(),
+                        &mut w,
+                        StartupKind::Full,
+                        77 + r as u64,
+                    )
+                })
+                .collect();
+            let mut boot_runs: Vec<StartupOutcome> = (0..reps)
+                .map(|r| {
+                    let mut w = World::new();
+                    // Warm-up: record + cache.
+                    run_startup(gpus as u64, 0, &cluster, &job, &BootseerConfig::bootseer(), &mut w, StartupKind::Full, 7 + r as u64);
+                    run_startup(
+                        gpus as u64,
+                        1,
+                        &cluster,
+                        &job,
+                        &BootseerConfig::bootseer(),
+                        &mut w,
+                        StartupKind::Full,
+                        77 + r as u64,
+                    )
+                })
+                .collect();
+            let med = |v: &mut Vec<StartupOutcome>| {
+                v.sort_by(|a, b| a.worker_phase_s.partial_cmp(&b.worker_phase_s).unwrap());
+                v.remove(v.len() / 2)
+            };
+            ScalePoint { gpus, baseline: med(&mut base_runs), bootseer: med(&mut boot_runs) }
+        })
+        .collect();
+    Fig12 { points }
+}
+
+impl Fig12 {
+    pub fn render(&self) -> String {
+        let mut rows = vec![vec![
+            "gpus".to_string(),
+            "baseline".to_string(),
+            "bootseer".to_string(),
+            "speedup".to_string(),
+        ]];
+        for p in &self.points {
+            rows.push(vec![
+                p.gpus.to_string(),
+                human::secs(p.baseline.worker_phase_s),
+                human::secs(p.bootseer.worker_phase_s),
+                human::ratio(p.baseline.worker_phase_s / p.bootseer.worker_phase_s),
+            ]);
+        }
+        format!("{}paper: ~2x reduction at every scale, growing toward 128 GPUs\n", human::table(&rows))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("gpus", p.gpus as u64)
+                    .set("baseline_s", p.baseline.worker_phase_s)
+                    .set("bootseer_s", p.bootseer.worker_phase_s);
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("points", Json::Arr(arr));
+        j
+    }
+
+    /// Fig 13 is the per-stage breakdown of the same runs.
+    pub fn render_stages(&self) -> String {
+        let mut rows = vec![vec![
+            "gpus".to_string(),
+            "image b/B".to_string(),
+            "env b/B".to_string(),
+            "init b/B".to_string(),
+        ]];
+        for p in &self.points {
+            let cell = |s: Stage| {
+                format!(
+                    "{} / {} ({})",
+                    human::secs(p.baseline.stage_duration(s)),
+                    human::secs(p.bootseer.stage_duration(s)),
+                    human::ratio(p.baseline.stage_duration(s) / p.bootseer.stage_duration(s).max(1e-9))
+                )
+            };
+            rows.push(vec![
+                p.gpus.to_string(),
+                cell(Stage::ImageLoading),
+                cell(Stage::EnvSetup),
+                cell(Stage::ModelInit),
+            ]);
+        }
+        format!(
+            "{}paper: image 4-10x (growing with scale), env ~2x, model-init ~1.6x\n",
+            human::table(&rows)
+        )
+    }
+
+    pub fn stages_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("gpus", p.gpus as u64);
+                for (key, s) in [
+                    ("image", Stage::ImageLoading),
+                    ("env", Stage::EnvSetup),
+                    ("init", Stage::ModelInit),
+                ] {
+                    o.set(&format!("{key}_baseline_s"), p.baseline.stage_duration(s))
+                        .set(&format!("{key}_bootseer_s"), p.bootseer.stage_duration(s));
+                }
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("points", Json::Arr(arr));
+        j
+    }
+}
+
+// -------------------------------------------------------------- Fig 14 --
+
+pub struct Fig14 {
+    pub baseline: Vec<f64>,
+    pub bootseer: Vec<f64>,
+}
+
+/// Install-duration distributions across the 128-GPU job's nodes.
+pub fn fig14(seed: u64) -> Fig14 {
+    let job = JobConfig::paper_moe(128);
+    let cluster = ClusterConfig::default();
+    let mut w0 = World::new();
+    let base = run_startup(1, 0, &cluster, &job, &BootseerConfig::baseline(), &mut w0, StartupKind::Full, seed);
+    let mut wb = World::new();
+    run_startup(1, 0, &cluster, &job, &BootseerConfig::bootseer(), &mut wb, StartupKind::Full, seed);
+    let boot = run_startup(1, 1, &cluster, &job, &BootseerConfig::bootseer(), &mut wb, StartupKind::Full, seed + 1);
+    Fig14 { baseline: base.install_durations, bootseer: boot.install_durations }
+}
+
+impl Fig14 {
+    pub fn render(&self) -> String {
+        let b = BoxSummary::of(&self.baseline);
+        let o = BoxSummary::of(&self.bootseer);
+        format!(
+            "baseline  {}\nbootseer  {}\npaper: BootSeer removes both the overhead and the spread (whiskers → min/max)\n",
+            b.line(),
+            o.line()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let b = BoxSummary::of(&self.baseline);
+        let o = BoxSummary::of(&self.bootseer);
+        let mut j = Json::obj();
+        j.set("baseline_median", b.median)
+            .set("baseline_max", b.max)
+            .set("bootseer_median", o.median)
+            .set("bootseer_max", o.max);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_replay() -> ReplayResult {
+        let trace = gen_trace(5, 40, 86400.0);
+        replay(&trace, &ClusterConfig::default(), &BootseerConfig::baseline(), 5)
+    }
+
+    #[test]
+    fn fig01_in_band() {
+        let r = tiny_replay();
+        let f = fig01(&r);
+        assert!((0.002..0.2).contains(&f.fraction()), "{}", f.fraction());
+        assert!(f.render().contains("startup fraction"));
+    }
+
+    #[test]
+    fn fig03_monotone_with_scale() {
+        let r = tiny_replay();
+        let f = fig03(&r);
+        assert_eq!(f.rows.len(), SCALE_BUCKETS.len());
+        // Node-level ≤ job-level wherever both exist.
+        for (_, j, n) in &f.rows {
+            if let (Some(j), Some(n)) = (j, n) {
+                assert!(n.median <= j.median + 1e-6);
+            }
+        }
+        assert!(!f.render().is_empty());
+    }
+
+    #[test]
+    fn fig04_small_jobs_one_startup() {
+        let r = tiny_replay();
+        let f = fig04(&r);
+        let (_, first_box, n) = &f.rows[0];
+        assert!(*n > 0);
+        assert!(first_box.as_ref().unwrap().median <= 2.0);
+    }
+
+    #[test]
+    fn fig05_has_worker_stages() {
+        let r = tiny_replay();
+        let f = fig05(&r);
+        let stages: Vec<Stage> = f.rows.iter().map(|(s, _)| *s).collect();
+        for s in Stage::WORKER_PHASE {
+            assert!(stages.contains(&s), "{s:?} missing");
+        }
+    }
+
+    #[test]
+    fn fig06_ratio_grows() {
+        let f = fig06(3);
+        let small = f.rows[0].1.median;
+        let large = f.rows[4].1.median; // 4096 GPUs
+        assert!(large > small, "straggler ratio should grow: {small} vs {large}");
+        assert!(large > 1.15, "large-scale ratio {large}");
+    }
+
+    #[test]
+    fn fig12_speedup_band() {
+        let f = fig12(1);
+        for p in &f.points {
+            let r = p.baseline.worker_phase_s / p.bootseer.worker_phase_s;
+            assert!((1.4..4.0).contains(&r), "gpus={} ratio={r}", p.gpus);
+        }
+        assert!(!f.render_stages().is_empty());
+    }
+
+    #[test]
+    fn fig14_spread_collapses() {
+        let f = fig14(3);
+        let b = BoxSummary::of(&f.baseline);
+        let o = BoxSummary::of(&f.bootseer);
+        assert!(o.max - o.min < (b.max - b.min) / 3.0);
+        assert!(o.median < b.median / 3.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! HDFS-FUSE read/write planners over the cluster sim (§4.4).
+//!
+//! Baseline (`Sequential`): the training program downloads the checkpoint
+//! through a single DFSInputStream — one TCP stream to one DataNode group
+//! at a time, capped by `HDFS_STREAM_BPS` — staging it to local disk and
+//! then loading it ("download-and-resume").
+//!
+//! BootSeer (`Striped`): the striped layout lets the FUSE client keep
+//! `STRIPE_PARALLEL_STREAMS` chunk fetches in flight across many DataNode
+//! groups at once, streaming straight into the training process and
+//! overlapping local I/O with the HDFS transfer.
+
+use crate::config::defaults as d;
+use crate::hdfs::layout::StripeLayout;
+use crate::sim::engine::Capacity;
+use crate::sim::{ClusterSim, TaskId};
+
+/// How a node reads a (checkpoint) file out of HDFS.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadEngine {
+    /// Single-stream download to local disk, then load.
+    Sequential,
+    /// Striped parallel read, streamed directly.
+    Striped,
+}
+
+/// Plan one node's read of `bytes` from HDFS. Returns the completion task.
+pub fn plan_read(
+    cs: &mut ClusterSim,
+    node: usize,
+    bytes: u64,
+    engine: ReadEngine,
+    deps: &[TaskId],
+    tag: u64,
+) -> TaskId {
+    match engine {
+        ReadEngine::Sequential => plan_read_sequential(cs, node, bytes, deps, tag),
+        ReadEngine::Striped => plan_read_striped(cs, node, bytes, deps, tag),
+    }
+}
+
+fn plan_read_sequential(
+    cs: &mut ClusterSim,
+    node: usize,
+    bytes: u64,
+    deps: &[TaskId],
+    tag: u64,
+) -> TaskId {
+    // NameNode lookup, then a single stream capped by HDFS_STREAM_BPS.
+    // The stream walks blocks across groups sequentially; because only one
+    // group is active at a time, we model it as one flow through a
+    // per-read stream-cap resource plus a representative group.
+    let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s, deps, 0);
+    let stream =
+        cs.sim.add_resource(&format!("hdfs.stream.n{node}"), Capacity::Fixed(d::HDFS_STREAM_BPS));
+    let group = cs.hdfs_groups[node % cs.hdfs_groups.len()];
+    // Download to local disk...
+    let dl = cs.sim.flow(
+        bytes as f64,
+        vec![stream, group, cs.node_nic[node], cs.node_disk[node]],
+        &[nn],
+        0,
+    );
+    // ...then load from disk into the training process.
+    let load = bytes as f64 / cs.cfg.node_disk_read_bps;
+    cs.sim.delay(cs.cpu_time(node, load), &[dl], tag)
+}
+
+fn plan_read_striped(
+    cs: &mut ClusterSim,
+    node: usize,
+    bytes: u64,
+    deps: &[TaskId],
+    tag: u64,
+) -> TaskId {
+    let layout = StripeLayout::new(
+        bytes,
+        d::STRIPE_CHUNK_BYTES,
+        d::STRIPE_WIDTH,
+        cs.cfg.hdfs_block_bytes,
+    );
+    // The FUSE client keeps P streams in flight; each stream is capped at
+    // HDFS_STREAM_BPS and the set of streams spreads over the groups the
+    // striped placement touches. One NameNode op per physical file.
+    let n_streams = d::STRIPE_PARALLEL_STREAMS.min(layout.n_chunks().max(1) as u32);
+    let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s * layout.width as f64, deps, 0);
+    let n_groups = cs.hdfs_groups.len();
+    let touched = layout.groups_touched(n_groups as u32, (node % n_groups) as u32);
+    let per_stream = bytes as f64 / n_streams as f64;
+    let mut parts = Vec::with_capacity(n_streams as usize);
+    for s in 0..n_streams {
+        let stream = cs.sim.add_resource(
+            &format!("hdfs.stripe.n{node}.s{s}"),
+            Capacity::Fixed(d::HDFS_STREAM_BPS),
+        );
+        // Stride group assignment by node so concurrent readers spread over
+        // the whole DataNode fleet instead of piling on the same groups.
+        let gi = (node * n_streams as usize + s as usize) % touched.len();
+        let group = cs.hdfs_groups[touched[gi] as usize];
+        // Streamed directly into the process (no local-disk staging pass).
+        parts.push(cs.sim.flow(
+            per_stream,
+            vec![stream, group, cs.node_nic[node]],
+            &[nn],
+            0,
+        ));
+    }
+    cs.sim.barrier(&parts, tag)
+}
+
+/// Plan one node's write of `bytes` into HDFS (checkpoint save, env-cache
+/// upload). Striping helps writes the same way (parallel pipelines).
+pub fn plan_write(
+    cs: &mut ClusterSim,
+    node: usize,
+    bytes: u64,
+    engine: ReadEngine,
+    deps: &[TaskId],
+    tag: u64,
+) -> TaskId {
+    let n_streams = match engine {
+        ReadEngine::Sequential => 1,
+        ReadEngine::Striped => d::STRIPE_WIDTH,
+    };
+    let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s * n_streams as f64, deps, 0);
+    let per = bytes as f64 / n_streams as f64;
+    let n_groups = cs.hdfs_groups.len();
+    let mut parts = Vec::with_capacity(n_streams as usize);
+    for s in 0..n_streams {
+        let stream = cs.sim.add_resource(
+            &format!("hdfs.wstream.n{node}.s{s}"),
+            Capacity::Fixed(d::HDFS_STREAM_BPS),
+        );
+        let group = cs.hdfs_groups[(node + s as usize) % n_groups];
+        parts.push(cs.sim.flow(per, vec![cs.node_nic[node], stream, group], &[nn], 0));
+    }
+    cs.sim.barrier(&parts, tag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn read_time(nodes: u32, per_node_bytes: u64, engine: ReadEngine) -> f64 {
+        let mut cs = ClusterSim::build(&ClusterConfig::with_nodes(nodes), 42);
+        let dones: Vec<TaskId> = (0..nodes as usize)
+            .map(|i| plan_read(&mut cs, i, per_node_bytes, engine, &[], 1))
+            .collect();
+        cs.sim.run();
+        dones.iter().map(|&t| cs.sim.finished_at(t)).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn striped_beats_sequential() {
+        // Per-node share of the paper's 413 GB checkpoint (PP=2 → 206.5 GB).
+        let bytes = 206_500_000_000;
+        let seq = read_time(2, bytes, ReadEngine::Sequential);
+        let par = read_time(2, bytes, ReadEngine::Striped);
+        let ratio = seq / par;
+        assert!((1.5..6.0).contains(&ratio), "seq {seq} vs striped {par} = {ratio}x");
+    }
+
+    #[test]
+    fn sequential_is_stream_capped() {
+        // 16 GB at 1.6 GB/s ≈ 10 s + disk load.
+        let t = read_time(1, 16_000_000_000, ReadEngine::Sequential);
+        assert!((10.0..16.0).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn striped_is_nic_capped() {
+        // 31.25 GB at NIC 3.125 GB/s ≈ 10 s (16 streams not the limit).
+        let t = read_time(1, 31_250_000_000, ReadEngine::Striped);
+        assert!((10.0..12.5).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn scale_stability() {
+        // §5.3: model-init duration stays stable with scale (HDFS not yet
+        // the bottleneck at 16 nodes).
+        let b = 206_500_000_000;
+        let t2 = read_time(2, b, ReadEngine::Striped);
+        let t16 = read_time(16, b, ReadEngine::Striped);
+        assert!(t16 < t2 * 1.6, "striped degraded: {t2} → {t16}");
+        let s2 = read_time(2, b, ReadEngine::Sequential);
+        let s16 = read_time(16, b, ReadEngine::Sequential);
+        assert!(s16 < s2 * 1.3, "sequential should also be stable: {s2} → {s16}");
+    }
+
+    #[test]
+    fn write_striped_faster() {
+        let mut cs = ClusterSim::build(&ClusterConfig::with_nodes(1), 1);
+        let w1 = plan_write(&mut cs, 0, 20_000_000_000, ReadEngine::Sequential, &[], 1);
+        cs.sim.run();
+        let t_seq = cs.sim.finished_at(w1);
+        let mut cs2 = ClusterSim::build(&ClusterConfig::with_nodes(1), 1);
+        let w2 = plan_write(&mut cs2, 0, 20_000_000_000, ReadEngine::Striped, &[], 1);
+        cs2.sim.run();
+        let t_par = cs2.sim.finished_at(w2);
+        assert!(t_seq / t_par > 1.5, "seq {t_seq} striped {t_par}");
+    }
+
+    #[test]
+    fn deps_gate_read() {
+        let mut cs = ClusterSim::build(&ClusterConfig::with_nodes(1), 1);
+        let gate = cs.sim.delay(30.0, &[], 0);
+        let r = plan_read(&mut cs, 0, 1_000_000, ReadEngine::Striped, &[gate], 1);
+        cs.sim.run();
+        assert!(cs.sim.finished_at(r) > 30.0);
+    }
+}

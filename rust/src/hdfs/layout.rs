@@ -1,0 +1,200 @@
+//! Striped HDFS layout math (§4.4, Figure 11).
+//!
+//! The logical checkpoint file is split into 1 MB *chunks*; chunks are
+//! distributed round-robin across `width` *physical files* (so a 4-wide
+//! stripe interleaves chunks 0,1,2,3 across files 0,1,2,3, chunk 4 back on
+//! file 0, ...). Each physical file is stored in HDFS as a sequence of
+//! 512 MB HDFS blocks, and blocks land on DataNode replication groups
+//! round-robin. A striped read therefore touches `width` physical files —
+//! i.e. `width`+ independent DataNode groups — in parallel, where the
+//! original layout streams one block at a time from one group.
+
+/// Placement of one logical chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkLoc {
+    /// Which physical stripe file holds it.
+    pub file: u32,
+    /// Chunk index within that physical file.
+    pub index_in_file: u64,
+    /// HDFS block (within the physical file) containing it.
+    pub hdfs_block: u64,
+}
+
+/// The striped layout of one logical file.
+#[derive(Clone, Copy, Debug)]
+pub struct StripeLayout {
+    pub logical_bytes: u64,
+    pub chunk_bytes: u64,
+    pub width: u32,
+    pub hdfs_block_bytes: u64,
+}
+
+impl StripeLayout {
+    pub fn new(logical_bytes: u64, chunk_bytes: u64, width: u32, hdfs_block_bytes: u64) -> Self {
+        assert!(chunk_bytes > 0 && width > 0 && hdfs_block_bytes >= chunk_bytes);
+        StripeLayout { logical_bytes, chunk_bytes, width, hdfs_block_bytes }
+    }
+
+    /// Number of logical chunks (last may be partial).
+    pub fn n_chunks(&self) -> u64 {
+        (self.logical_bytes + self.chunk_bytes - 1) / self.chunk_bytes
+    }
+
+    /// Byte length of logical chunk `c`.
+    pub fn chunk_len(&self, c: u64) -> u64 {
+        debug_assert!(c < self.n_chunks());
+        if c + 1 == self.n_chunks() && self.logical_bytes % self.chunk_bytes != 0 {
+            self.logical_bytes % self.chunk_bytes
+        } else {
+            self.chunk_bytes
+        }
+    }
+
+    /// Placement of logical chunk `c`.
+    pub fn locate(&self, c: u64) -> ChunkLoc {
+        debug_assert!(c < self.n_chunks());
+        let file = (c % self.width as u64) as u32;
+        let index_in_file = c / self.width as u64;
+        let chunks_per_block = self.hdfs_block_bytes / self.chunk_bytes;
+        ChunkLoc { file, index_in_file, hdfs_block: index_in_file / chunks_per_block }
+    }
+
+    /// Bytes stored in physical file `f`.
+    pub fn file_bytes(&self, f: u32) -> u64 {
+        (0..self.n_chunks())
+            .filter(|&c| (c % self.width as u64) as u32 == f)
+            .map(|c| self.chunk_len(c))
+            .sum()
+    }
+
+    /// Number of HDFS blocks of physical file `f`.
+    pub fn file_hdfs_blocks(&self, f: u32) -> u64 {
+        let b = self.file_bytes(f);
+        (b + self.hdfs_block_bytes - 1) / self.hdfs_block_bytes
+    }
+
+    /// Total HDFS blocks across all physical files.
+    pub fn total_hdfs_blocks(&self) -> u64 {
+        (0..self.width).map(|f| self.file_hdfs_blocks(f)).sum()
+    }
+
+    /// DataNode groups touched by a full-file read, given round-robin block
+    /// placement over `n_groups` groups starting at `first_group`. This is
+    /// the read-parallelism the striped layout unlocks.
+    pub fn groups_touched(&self, n_groups: u32, first_group: u32) -> Vec<u32> {
+        let mut touched = std::collections::BTreeSet::new();
+        let mut g = first_group % n_groups;
+        for f in 0..self.width {
+            for _ in 0..self.file_hdfs_blocks(f) {
+                touched.insert(g);
+                g = (g + 1) % n_groups;
+            }
+        }
+        touched.into_iter().collect()
+    }
+
+    /// The *unstriped* original layout: one physical file, whole 512 MB
+    /// blocks in sequence. Reads stream block-by-block → parallelism 1.
+    pub fn unstriped(logical_bytes: u64, hdfs_block_bytes: u64) -> StripeLayout {
+        StripeLayout {
+            logical_bytes,
+            chunk_bytes: hdfs_block_bytes,
+            width: 1,
+            hdfs_block_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::{HDFS_BLOCK_BYTES, STRIPE_CHUNK_BYTES, STRIPE_WIDTH};
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn paper_layout(bytes: u64) -> StripeLayout {
+        StripeLayout::new(bytes, STRIPE_CHUNK_BYTES, STRIPE_WIDTH, HDFS_BLOCK_BYTES)
+    }
+
+    #[test]
+    fn round_robin_placement() {
+        let l = paper_layout(10 * 1_000_000);
+        assert_eq!(l.n_chunks(), 10);
+        assert_eq!(l.locate(0), ChunkLoc { file: 0, index_in_file: 0, hdfs_block: 0 });
+        assert_eq!(l.locate(1).file, 1);
+        assert_eq!(l.locate(4), ChunkLoc { file: 0, index_in_file: 1, hdfs_block: 0 });
+        assert_eq!(l.locate(9).file, 1);
+    }
+
+    #[test]
+    fn chunk_lengths_sum_to_logical() {
+        let l = paper_layout(10_500_000);
+        let total: u64 = (0..l.n_chunks()).map(|c| l.chunk_len(c)).sum();
+        assert_eq!(total, 10_500_000);
+        assert_eq!(l.chunk_len(l.n_chunks() - 1), 500_000);
+    }
+
+    #[test]
+    fn file_bytes_partition_logical() {
+        let l = paper_layout(413_000_000_000);
+        let total: u64 = (0..l.width).map(|f| l.file_bytes(f)).sum();
+        assert_eq!(total, 413_000_000_000);
+        // 4-way stripe of 413 GB → ~103 GB per physical file.
+        for f in 0..l.width {
+            let fb = l.file_bytes(f) as f64;
+            assert!((fb - 103.25e9).abs() < 0.1e9, "file {f}: {fb}");
+        }
+    }
+
+    #[test]
+    fn hdfs_block_counts() {
+        let l = paper_layout(413_000_000_000);
+        // 103.25 GB / 512 MB ≈ 202 blocks per physical file.
+        for f in 0..l.width {
+            assert_eq!(l.file_hdfs_blocks(f), 202);
+        }
+        assert_eq!(l.total_hdfs_blocks(), 808);
+    }
+
+    #[test]
+    fn striped_touches_more_groups_than_unstriped() {
+        let striped = paper_layout(8 * HDFS_BLOCK_BYTES);
+        let flat = StripeLayout::unstriped(8 * HDFS_BLOCK_BYTES, HDFS_BLOCK_BYTES);
+        let gs = striped.groups_touched(21, 0);
+        let gf = flat.groups_touched(21, 0);
+        assert!(gs.len() >= gf.len());
+        assert_eq!(gf.len(), 8.min(21)); // flat: 8 sequential blocks → 8 groups
+    }
+
+    #[test]
+    fn chunks_within_block_boundary() {
+        let l = paper_layout(3 * HDFS_BLOCK_BYTES * 4);
+        let chunks_per_block = HDFS_BLOCK_BYTES / STRIPE_CHUNK_BYTES;
+        // Chunk on file 0 with index_in_file = chunks_per_block lands in
+        // hdfs_block 1.
+        let c = l.locate(chunks_per_block * l.width as u64);
+        assert_eq!(c.file, 0);
+        assert_eq!(c.hdfs_block, 1);
+    }
+
+    #[test]
+    fn prop_locate_bijective() {
+        prop_check(24, |g| {
+            let bytes = g.u64_in(1, 50_000_000);
+            let chunk = g.u64_in(1000, 2_000_000);
+            let width = g.u64_in(1, 8) as u32;
+            let block = chunk * g.u64_in(1, 600);
+            let l = StripeLayout::new(bytes, chunk, width, block);
+            let mut seen = std::collections::HashSet::new();
+            for c in 0..l.n_chunks() {
+                let loc = l.locate(c);
+                prop_assert!(loc.file < width);
+                prop_assert!(seen.insert((loc.file, loc.index_in_file)), "collision at {c}");
+            }
+            // Reconstruct: chunk count per file matches file_bytes.
+            let total: u64 = (0..width).map(|f| l.file_bytes(f)).sum();
+            prop_assert!(total == bytes, "{total} != {bytes}");
+            Ok(())
+        });
+    }
+}

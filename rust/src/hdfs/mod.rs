@@ -1,0 +1,11 @@
+//! HDFS + striped HDFS-FUSE subsystem (§4.4): stripe layout math, the
+//! cluster-sim read/write planners (sequential vs striped), and the real
+//! on-disk striped store used by checkpoint save/resume.
+
+pub mod fuse;
+pub mod layout;
+pub mod local;
+
+pub use fuse::{plan_read, plan_write, ReadEngine};
+pub use layout::{ChunkLoc, StripeLayout};
+pub use local::LocalStore;

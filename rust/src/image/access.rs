@@ -1,0 +1,174 @@
+//! Record phase of record-and-prefetch (§4.2).
+//!
+//! During the first run of an image, the container runtime on each worker
+//! node records `(path, block offset, timestamp)` for every block it
+//! faults in. The trace is uploaded to a central registry service; later
+//! runs of the same image ask the registry for the image's *hot set* —
+//! the union of blocks observed within the record window — and prefetch
+//! exactly those before container start.
+
+use std::collections::{BTreeSet, HashMap};
+
+/// One recorded block access.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccessEvent {
+    pub block: u32,
+    /// Seconds since container start.
+    pub t: f64,
+}
+
+/// Per-node access recorder (runs inside the container runtime).
+#[derive(Clone, Debug, Default)]
+pub struct AccessRecorder {
+    pub events: Vec<AccessEvent>,
+}
+
+impl AccessRecorder {
+    pub fn new() -> AccessRecorder {
+        AccessRecorder::default()
+    }
+
+    pub fn record(&mut self, block: u32, t: f64) {
+        self.events.push(AccessEvent { block, t });
+    }
+
+    /// Blocks first accessed within `window_s` of container start.
+    pub fn hot_blocks(&self, window_s: f64) -> Vec<u32> {
+        let mut seen = BTreeSet::new();
+        for e in &self.events {
+            if e.t <= window_s {
+                seen.insert(e.block);
+            }
+        }
+        seen.into_iter().collect()
+    }
+}
+
+/// A hot-set record stored by the central service, merged across recorders.
+#[derive(Clone, Debug, Default)]
+pub struct HotSetRecord {
+    /// Union of hot blocks across all reporting nodes.
+    pub blocks: BTreeSet<u32>,
+    /// Number of recorder reports merged in.
+    pub reports: u32,
+}
+
+/// Central record registry: image digest → hot-set record (§4.2's "remote
+/// service" the container runtime uploads traces to and fetches records
+/// from).
+#[derive(Clone, Debug, Default)]
+pub struct HotSetRegistry {
+    records: HashMap<u64, HotSetRecord>,
+    pub window_s: f64,
+}
+
+impl HotSetRegistry {
+    pub fn new(window_s: f64) -> HotSetRegistry {
+        HotSetRegistry { records: HashMap::new(), window_s }
+    }
+
+    /// Upload one node's trace for `image_digest`.
+    pub fn upload(&mut self, image_digest: u64, recorder: &AccessRecorder) {
+        let rec = self.records.entry(image_digest).or_default();
+        for b in recorder.hot_blocks(self.window_s) {
+            rec.blocks.insert(b);
+        }
+        rec.reports += 1;
+    }
+
+    /// Fetch the hot set for an image; None on first-ever use (the record
+    /// run must fall back to lazy loading).
+    pub fn lookup(&self, image_digest: u64) -> Option<Vec<u32>> {
+        self.records.get(&image_digest).map(|r| r.blocks.iter().copied().collect())
+    }
+
+    /// Drop the record (e.g., image rebuilt under the same tag).
+    pub fn invalidate(&mut self, image_digest: u64) {
+        self.records.remove(&image_digest);
+    }
+
+    pub fn has_record(&self, image_digest: u64) -> bool {
+        self.records.contains_key(&image_digest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn recorder_windows_accesses() {
+        let mut r = AccessRecorder::new();
+        r.record(10, 1.0);
+        r.record(20, 50.0);
+        r.record(30, 130.0); // outside a 120 s window
+        r.record(10, 200.0); // re-access outside window; already hot
+        assert_eq!(r.hot_blocks(120.0), vec![10, 20]);
+        assert_eq!(r.hot_blocks(1000.0), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn registry_merges_reports() {
+        let mut reg = HotSetRegistry::new(120.0);
+        let mut a = AccessRecorder::new();
+        a.record(1, 0.5);
+        a.record(2, 1.0);
+        let mut b = AccessRecorder::new();
+        b.record(2, 0.2);
+        b.record(3, 2.0);
+        reg.upload(99, &a);
+        reg.upload(99, &b);
+        assert_eq!(reg.lookup(99), Some(vec![1, 2, 3]));
+        assert_eq!(reg.records.get(&99).unwrap().reports, 2);
+    }
+
+    #[test]
+    fn lookup_miss_on_first_use() {
+        let reg = HotSetRegistry::new(120.0);
+        assert_eq!(reg.lookup(42), None);
+        assert!(!reg.has_record(42));
+    }
+
+    #[test]
+    fn invalidate_forces_rerecord() {
+        let mut reg = HotSetRegistry::new(120.0);
+        let mut r = AccessRecorder::new();
+        r.record(5, 1.0);
+        reg.upload(7, &r);
+        assert!(reg.has_record(7));
+        reg.invalidate(7);
+        assert_eq!(reg.lookup(7), None);
+    }
+
+    #[test]
+    fn images_do_not_cross_pollinate() {
+        let mut reg = HotSetRegistry::new(120.0);
+        let mut r = AccessRecorder::new();
+        r.record(5, 1.0);
+        reg.upload(1, &r);
+        assert_eq!(reg.lookup(2), None);
+    }
+
+    #[test]
+    fn prop_hot_set_is_subset_and_sorted() {
+        prop_check(32, |g| {
+            let mut r = AccessRecorder::new();
+            let n = g.usize_in(0, 200);
+            for _ in 0..n {
+                r.record(g.u64_in(0, 500) as u32, g.f64_in(0.0, 300.0));
+            }
+            let w = g.f64_in(0.0, 300.0);
+            let hot = r.hot_blocks(w);
+            prop_assert!(hot.windows(2).all(|p| p[0] < p[1]), "sorted+unique");
+            let all: std::collections::BTreeSet<u32> =
+                r.events.iter().map(|e| e.block).collect();
+            prop_assert!(hot.iter().all(|b| all.contains(b)));
+            // Monotone in window size.
+            let hot_big = r.hot_blocks(w + 10.0);
+            prop_assert!(hot.iter().all(|b| hot_big.contains(b)));
+            Ok(())
+        });
+    }
+}

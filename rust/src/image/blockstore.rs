@@ -1,0 +1,172 @@
+//! Content-addressed block store.
+//!
+//! The flattened image layout manages contents at block granularity with
+//! content addressing, which gives both dedup (identical blocks stored
+//! once) and lazy loading (fetch by digest). This module implements the
+//! store over *real bytes* — used by the real-byte integration tests, the
+//! env-cache packer, and `micro_blockstore` — plus the dedup accounting the
+//! simulator reads.
+
+use sha2::{Digest, Sha256};
+use std::collections::HashMap;
+
+/// 256-bit content digest.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockDigest(pub [u8; 32]);
+
+impl std::fmt::Debug for BlockDigest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for b in &self.0[..6] {
+            write!(f, "{b:02x}")?;
+        }
+        write!(f, "…")
+    }
+}
+
+pub fn digest_of(data: &[u8]) -> BlockDigest {
+    let mut h = Sha256::new();
+    h.update(data);
+    BlockDigest(h.finalize().into())
+}
+
+/// In-memory content-addressed store with refcounts and dedup statistics.
+#[derive(Default)]
+pub struct BlockStore {
+    blocks: HashMap<BlockDigest, (Vec<u8>, u64)>,
+    /// Logical bytes put (before dedup).
+    pub logical_bytes: u64,
+    /// Physical bytes stored (after dedup).
+    pub physical_bytes: u64,
+}
+
+impl BlockStore {
+    pub fn new() -> BlockStore {
+        BlockStore::default()
+    }
+
+    /// Insert a block; returns its digest. Duplicate content costs nothing.
+    pub fn put(&mut self, data: &[u8]) -> BlockDigest {
+        let d = digest_of(data);
+        self.logical_bytes += data.len() as u64;
+        match self.blocks.get_mut(&d) {
+            Some((_, rc)) => *rc += 1,
+            None => {
+                self.physical_bytes += data.len() as u64;
+                self.blocks.insert(d, (data.to_vec(), 1));
+            }
+        }
+        d
+    }
+
+    pub fn get(&self, d: &BlockDigest) -> Option<&[u8]> {
+        self.blocks.get(d).map(|(v, _)| v.as_slice())
+    }
+
+    pub fn contains(&self, d: &BlockDigest) -> bool {
+        self.blocks.contains_key(d)
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// logical/physical — 1.0 means no dedup, 2.0 means half the bytes.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.physical_bytes == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / self.physical_bytes as f64
+        }
+    }
+
+    /// Split `data` into `block_bytes` chunks, store each, return digests.
+    pub fn put_chunked(&mut self, data: &[u8], block_bytes: usize) -> Vec<BlockDigest> {
+        assert!(block_bytes > 0);
+        data.chunks(block_bytes).map(|c| self.put(c)).collect()
+    }
+
+    /// Reassemble chunked content; None if any block is missing.
+    pub fn get_chunked(&self, digests: &[BlockDigest]) -> Option<Vec<u8>> {
+        let mut out = Vec::new();
+        for d in digests {
+            out.extend_from_slice(self.get(d)?);
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut s = BlockStore::new();
+        let d = s.put(b"hello world");
+        assert_eq!(s.get(&d), Some(b"hello world".as_slice()));
+        assert!(s.contains(&d));
+        assert_eq!(s.n_blocks(), 1);
+    }
+
+    #[test]
+    fn dedup_identical_blocks() {
+        let mut s = BlockStore::new();
+        let a = s.put(b"same-content");
+        let b = s.put(b"same-content");
+        assert_eq!(a, b);
+        assert_eq!(s.n_blocks(), 1);
+        assert_eq!(s.physical_bytes, 12);
+        assert_eq!(s.logical_bytes, 24);
+        assert!((s.dedup_ratio() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn digest_differs_on_content() {
+        assert_ne!(digest_of(b"a"), digest_of(b"b"));
+        assert_eq!(digest_of(b"a"), digest_of(b"a"));
+    }
+
+    #[test]
+    fn chunked_roundtrip() {
+        let mut s = BlockStore::new();
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let ds = s.put_chunked(&data, 1024);
+        assert_eq!(ds.len(), 10); // ceil(10000/1024)
+        assert_eq!(s.get_chunked(&ds).unwrap(), data);
+    }
+
+    #[test]
+    fn chunked_dedups_repeats() {
+        let mut s = BlockStore::new();
+        // 8 identical 1 KiB chunks.
+        let data = vec![7u8; 8 * 1024];
+        let ds = s.put_chunked(&data, 1024);
+        assert_eq!(ds.len(), 8);
+        assert_eq!(s.n_blocks(), 1);
+        assert!(s.dedup_ratio() > 7.9);
+    }
+
+    #[test]
+    fn missing_block_is_none() {
+        let s = BlockStore::new();
+        assert_eq!(s.get(&digest_of(b"nope")), None);
+        assert!(s.get_chunked(&[digest_of(b"nope")]).is_none());
+    }
+
+    #[test]
+    fn prop_chunk_roundtrip_any_size() {
+        prop_check(32, |g| {
+            let n = g.usize_in(0, 5000);
+            let data = g.bytes(n);
+            let block = g.usize_in(1, 600);
+            let mut s = BlockStore::new();
+            let ds = s.put_chunked(&data, block);
+            let back = s.get_chunked(&ds).unwrap();
+            prop_assert!(back == data);
+            prop_assert!(s.physical_bytes <= s.logical_bytes);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,339 @@
+//! Image-loading stage planners: given a cluster sim and an image, lay down
+//! the task DAG for one of three engines (§4.2):
+//!
+//! * `OciFull` — the pre-lazy-loading strawman: every node downloads every
+//!   byte from the registry before the container starts.
+//! * `Lazy` — the paper's baseline: container starts against a block-level
+//!   lazy mount; startup faults in the hot set on demand. Each miss pays a
+//!   FUSE+RPC latency that grows with the number of concurrently-faulting
+//!   nodes (shared block-service IOPS), which is why this engine degrades
+//!   with scale.
+//! * `RecordPrefetch` — BootSeer: the hot set (from the central
+//!   `HotSetRegistry`) is bulk-prefetched peer-to-peer before container
+//!   start; cold blocks stream in the background without gating the stage.
+//!
+//! Planners return one completion `TaskId` per node (stage end), plus the
+//! background-streaming ids so tests can assert they don't gate the stage.
+
+use crate::config::defaults as d;
+use crate::config::{BootseerConfig, ImageMode};
+use crate::image::access::HotSetRegistry;
+use crate::image::p2p::Swarm;
+use crate::image::spec::ImageSpec;
+use crate::sim::{ClusterSim, TaskId};
+
+/// Result of planning the image-loading stage.
+pub struct ImageLoadPlan {
+    /// Per-node: task that marks "image stage done, container running".
+    pub node_done: Vec<TaskId>,
+    /// Background cold-block streaming tasks (BootSeer only) — run after
+    /// stage completion and must not gate it.
+    pub background: Vec<TaskId>,
+    /// Bytes each node pulled before container start (for reporting).
+    pub foreground_bytes_per_node: u64,
+}
+
+/// Plan the image loading stage for every node of a job.
+///
+/// `deps[n]` (if provided) gates node n's first task (e.g. allocation done).
+/// `tag` is attached to every node-done task.
+pub fn plan_image_load(
+    cs: &mut ClusterSim,
+    img: &ImageSpec,
+    cfg: &BootseerConfig,
+    registry: &HotSetRegistry,
+    deps: &[Vec<TaskId>],
+    tag: u64,
+) -> ImageLoadPlan {
+    assert!(deps.is_empty() || deps.len() == cs.nodes());
+    match cfg.image_mode {
+        ImageMode::OciFull => plan_oci_full(cs, img, cfg, deps, tag),
+        ImageMode::Lazy => plan_lazy(cs, img, deps, tag),
+        ImageMode::RecordPrefetch => {
+            // First-ever use of the image: no hot-set record exists yet, so
+            // BootSeer falls back to lazy loading (the record run).
+            if registry.has_record(img.digest) {
+                plan_prefetch(cs, img, cfg, registry, deps, tag)
+            } else {
+                plan_lazy(cs, img, deps, tag)
+            }
+        }
+    }
+}
+
+/// Node `i`'s gating dependencies (empty `deps` means no gates).
+fn dep_of<'a>(deps: &'a [Vec<TaskId>], i: usize) -> &'a [TaskId] {
+    if deps.is_empty() {
+        &[]
+    } else {
+        &deps[i]
+    }
+}
+
+fn plan_oci_full(
+    cs: &mut ClusterSim,
+    img: &ImageSpec,
+    cfg: &BootseerConfig,
+    deps: &[Vec<TaskId>],
+    tag: u64,
+) -> ImageLoadPlan {
+    let n = cs.nodes();
+    let bytes = img.total_bytes as f64;
+    let mut node_done = Vec::with_capacity(n);
+    let swarm = if cfg.p2p {
+        Some(Swarm::build(
+            &mut cs.sim,
+            "img.swarm",
+            cs.cfg.registry_egress_bps,
+            n as u32,
+            cs.cfg.node_nic_bps,
+        ))
+    } else {
+        None
+    };
+    for i in 0..n {
+        let gate = dep_of(deps, i);
+        let dl = match &swarm {
+            Some(sw) => sw.download(&mut cs.sim, bytes, cs.node_nic[i], gate, 0),
+            None => {
+                let path = vec![cs.registry, cs.node_nic[i], cs.node_disk[i]];
+                cs.sim.flow(bytes, path, gate, 0)
+            }
+        };
+        // Layered-OCI decompress + unpack: CPU-bound, ~180 MB/s per node.
+        let unpack =
+            cs.sim.delay(cs.cpu_time(i, bytes / d::OCI_UNPACK_BPS), &[dl], 0);
+        let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), &[unpack], tag);
+        node_done.push(start);
+    }
+    ImageLoadPlan { node_done, background: Vec::new(), foreground_bytes_per_node: img.total_bytes }
+}
+
+fn plan_lazy(
+    cs: &mut ClusterSim,
+    img: &ImageSpec,
+    deps: &[Vec<TaskId>],
+    tag: u64,
+) -> ImageLoadPlan {
+    let n = cs.nodes();
+    let hot_blocks = img.startup_access.len() as u32;
+    let hot_bytes = img.hot_bytes() as f64;
+    let batches = ((hot_blocks + d::LAZY_MISS_BATCH_BLOCKS - 1) / d::LAZY_MISS_BATCH_BLOCKS).max(1);
+    let blocks_per_batch = hot_blocks as f64 / batches as f64;
+    let bytes_per_batch = hot_bytes / batches as f64;
+    // Shared block-service IOPS queueing: per-miss latency grows with the
+    // number of concurrently-faulting nodes, saturating once the (scaled-
+    // out) block cache's instance count catches up.
+    let contention = 1.0 + d::LAZY_CONTENTION_PENALTY * ((n as f64 - 1.0).min(31.0));
+    let mut node_done = Vec::with_capacity(n);
+    for i in 0..n {
+        // Container starts immediately against the lazy mount...
+        let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), dep_of(deps, i), 0);
+        // ...then faults in the hot set: `batches` sequential miss bursts.
+        let mut prev = start;
+        for _ in 0..batches {
+            let miss_lat =
+                cs.cpu_time(i, d::LAZY_MISS_LATENCY_S) * blocks_per_batch * contention;
+            let lat = cs.sim.delay(miss_lat, &[prev], 0);
+            let path = vec![cs.cache, cs.node_nic[i]];
+            prev = cs.sim.flow(bytes_per_batch, path, &[lat], 0);
+        }
+        // Stage ends when startup reads are all served.
+        node_done.push(cs.sim.barrier(&[prev], tag));
+    }
+    ImageLoadPlan {
+        node_done,
+        background: Vec::new(),
+        foreground_bytes_per_node: img.hot_bytes(),
+    }
+}
+
+fn plan_prefetch(
+    cs: &mut ClusterSim,
+    img: &ImageSpec,
+    cfg: &BootseerConfig,
+    registry: &HotSetRegistry,
+    deps: &[Vec<TaskId>],
+    tag: u64,
+) -> ImageLoadPlan {
+    let n = cs.nodes();
+    let hot: Vec<u32> = registry.lookup(img.digest).expect("record exists");
+    let hot_bytes: u64 = hot.iter().map(|&b| img.block_len(b)).sum();
+    let cold_bytes = img.total_bytes - hot_bytes;
+    // Hot set is distributed peer-to-peer (or straight from the cache).
+    let swarm = if cfg.p2p {
+        Some(Swarm::build(
+            &mut cs.sim,
+            "img.prefetch.swarm",
+            cs.cfg.cluster_cache_egress_bps,
+            n as u32,
+            cs.cfg.node_nic_bps,
+        ))
+    } else {
+        None
+    };
+    let mut node_done = Vec::with_capacity(n);
+    let mut background = Vec::with_capacity(n);
+    for i in 0..n {
+        let gate = dep_of(deps, i);
+        let prefetch = match &swarm {
+            Some(sw) => sw.download(&mut cs.sim, hot_bytes as f64, cs.node_nic[i], gate, 0),
+            None => {
+                let path = vec![cs.cache, cs.node_nic[i]];
+                cs.sim.flow(hot_bytes as f64, path, gate, 0)
+            }
+        };
+        let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), &[prefetch], tag);
+        node_done.push(start);
+        // Cold blocks stream in the background after container start. The
+        // thread count bounds per-node background rate: 8 threads ≈ 8
+        // concurrent range-reads; we model the aggregate as one flow whose
+        // rate the fair-share engine bounds via pool + NIC. It must NOT
+        // gate `node_done`.
+        if cold_bytes > 0 {
+            let bg = match &swarm {
+                Some(sw) => {
+                    sw.download(&mut cs.sim, cold_bytes as f64, cs.node_nic[i], &[start], 0)
+                }
+                None => {
+                    let path = vec![cs.cache, cs.node_nic[i]];
+                    cs.sim.flow(cold_bytes as f64, path, &[start], 0)
+                }
+            };
+            background.push(bg);
+        }
+    }
+    ImageLoadPlan { node_done, background, foreground_bytes_per_node: hot_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BootseerConfig, ClusterConfig};
+    use crate::image::access::AccessRecorder;
+
+    fn setup(nodes: u32) -> (ClusterSim, ImageSpec, HotSetRegistry) {
+        let cs = ClusterSim::build(&ClusterConfig::with_nodes(nodes), 42);
+        let img = ImageSpec::synth(1, d::PAPER_IMAGE_BYTES, d::IMAGE_BLOCK_BYTES, 0.07);
+        let mut reg = HotSetRegistry::new(d::PAPER_RECORD_WINDOW_S);
+        // Pretend a prior run recorded the true startup access set.
+        let mut rec = AccessRecorder::new();
+        for (k, &b) in img.startup_access.iter().enumerate() {
+            rec.record(b, k as f64 * 0.05);
+        }
+        reg.upload(img.digest, &rec);
+        (cs, img, reg)
+    }
+
+    /// Run a plan to completion; return (stage_end_max, per-node times).
+    fn run_stage(cs: &mut ClusterSim, plan: &ImageLoadPlan) -> (f64, Vec<f64>) {
+        cs.sim.run();
+        let times: Vec<f64> =
+            plan.node_done.iter().map(|&t| cs.sim.finished_at(t)).collect();
+        (times.iter().copied().fold(0.0, f64::max), times)
+    }
+
+    #[test]
+    fn lazy_baseline_in_paper_band_at_16_gpus() {
+        // 16 GPUs = 2 nodes: paper says lazy image stage is 20–40 s.
+        let (mut cs, img, reg) = setup(2);
+        let plan =
+            plan_image_load(&mut cs, &img, &BootseerConfig::baseline(), &reg, &[], 1);
+        let (t, _) = run_stage(&mut cs, &plan);
+        assert!((15.0..60.0).contains(&t), "lazy stage at 2 nodes: {t}");
+    }
+
+    #[test]
+    fn prefetch_beats_lazy_4x_to_10x() {
+        for nodes in [2u32, 16] {
+            let (mut cs, img, reg) = setup(nodes);
+            let plan =
+                plan_image_load(&mut cs, &img, &BootseerConfig::baseline(), &reg, &[], 1);
+            let (lazy_t, _) = run_stage(&mut cs, &plan);
+
+            let (mut cs2, img2, reg2) = setup(nodes);
+            let plan2 =
+                plan_image_load(&mut cs2, &img2, &BootseerConfig::bootseer(), &reg2, &[], 1);
+            let (boot_t, _) = run_stage(&mut cs2, &plan2);
+            let ratio = lazy_t / boot_t;
+            assert!(
+                (2.0..20.0).contains(&ratio),
+                "nodes={nodes} lazy={lazy_t} boot={boot_t} ratio={ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn lazy_degrades_with_scale_prefetch_flat() {
+        let lazy_at = |nodes: u32| {
+            let (mut cs, img, reg) = setup(nodes);
+            let plan =
+                plan_image_load(&mut cs, &img, &BootseerConfig::baseline(), &reg, &[], 1);
+            run_stage(&mut cs, &plan).0
+        };
+        let boot_at = |nodes: u32| {
+            let (mut cs, img, reg) = setup(nodes);
+            let plan =
+                plan_image_load(&mut cs, &img, &BootseerConfig::bootseer(), &reg, &[], 1);
+            run_stage(&mut cs, &plan).0
+        };
+        assert!(lazy_at(16) > lazy_at(2) * 1.5, "lazy should degrade with scale");
+        let (b2, b16) = (boot_at(2), boot_at(16));
+        assert!(b16 < b2 * 1.6, "bootseer should stay ~flat: {b2} vs {b16}");
+    }
+
+    #[test]
+    fn first_use_falls_back_to_lazy() {
+        let (mut cs, img, _) = setup(2);
+        let empty_reg = HotSetRegistry::new(d::PAPER_RECORD_WINDOW_S);
+        let plan =
+            plan_image_load(&mut cs, &img, &BootseerConfig::bootseer(), &empty_reg, &[], 1);
+        // Fallback means no background streaming tasks.
+        assert!(plan.background.is_empty());
+        assert_eq!(plan.foreground_bytes_per_node, img.hot_bytes());
+    }
+
+    #[test]
+    fn background_does_not_gate_stage() {
+        let (mut cs, img, reg) = setup(4);
+        let plan =
+            plan_image_load(&mut cs, &img, &BootseerConfig::bootseer(), &reg, &[], 1);
+        assert_eq!(plan.background.len(), 4);
+        let (stage_end, _) = run_stage(&mut cs, &plan);
+        for &bg in &plan.background {
+            assert!(cs.sim.finished_at(bg) >= stage_end);
+        }
+        // Whole image eventually lands on every node.
+        let total_fg_bg = plan.foreground_bytes_per_node
+            + (img.total_bytes - plan.foreground_bytes_per_node);
+        assert_eq!(total_fg_bg, img.total_bytes);
+    }
+
+    #[test]
+    fn oci_full_much_slower_than_lazy() {
+        let (mut cs, img, reg) = setup(4);
+        let plan =
+            plan_image_load(&mut cs, &img, &BootseerConfig::oci_strawman(), &reg, &[], 1);
+        let (oci_t, _) = run_stage(&mut cs, &plan);
+        let (mut cs2, img2, reg2) = setup(4);
+        let plan2 =
+            plan_image_load(&mut cs2, &img2, &BootseerConfig::baseline(), &reg2, &[], 1);
+        let (lazy_t, _) = run_stage(&mut cs2, &plan2);
+        // §4.2: block-level lazy loading achieves "up to 10x" over OCI.
+        assert!(oci_t > lazy_t * 3.0, "oci {oci_t} vs lazy {lazy_t}");
+        assert!(oci_t < lazy_t * 20.0, "oci {oci_t} vs lazy {lazy_t}");
+        assert_eq!(plan.foreground_bytes_per_node, img.total_bytes);
+    }
+
+    #[test]
+    fn deps_gate_stage_start() {
+        let (mut cs, img, reg) = setup(2);
+        let gate = cs.sim.delay(100.0, &[], 0);
+        let deps = vec![vec![gate], vec![gate]];
+        let plan =
+            plan_image_load(&mut cs, &img, &BootseerConfig::bootseer(), &reg, &deps, 1);
+        let (t, times) = run_stage(&mut cs, &plan);
+        assert!(t > 100.0);
+        assert!(times.iter().all(|&t| t > 100.0));
+    }
+}

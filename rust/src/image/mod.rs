@@ -1,0 +1,15 @@
+//! Container image subsystem (§4.2): flattened block-addressed images,
+//! content-addressed storage, access-trace recording, hot-set prefetch,
+//! and the three loading engines the evaluation compares.
+
+pub mod access;
+pub mod blockstore;
+pub mod loader;
+pub mod p2p;
+pub mod spec;
+
+pub use access::{AccessRecorder, HotSetRegistry};
+pub use blockstore::{digest_of, BlockDigest, BlockStore};
+pub use loader::{plan_image_load, ImageLoadPlan};
+pub use p2p::Swarm;
+pub use spec::ImageSpec;

@@ -1,0 +1,125 @@
+//! Peer-to-peer block distribution model (§4.2).
+//!
+//! When N nodes pull the same bytes concurrently, BootSeer serves blocks
+//! peer-to-peer so the origin (registry / cluster cache) ships roughly one
+//! copy and peers exchange the rest. We model the swarm fluidly: a shared
+//! *pool* resource whose capacity is the steady-state aggregate service
+//! rate of a swarm —
+//!
+//! `pool = origin_egress + N * nic_up / 2`
+//!
+//! (each peer can dedicate ~half its NIC to uploads while downloading), and
+//! each node's download flows through `[pool, own NIC]`. This reproduces
+//! the two regimes that matter: small swarms are origin-bound, large swarms
+//! are NIC-bound — i.e. per-node time stays ~flat as the job scales, which
+//! is exactly the behaviour §5.3 reports for BootSeer's image stage.
+
+use crate::sim::engine::{Capacity, FluidSim, ResourceId, TaskId};
+
+/// A P2P distribution group for one content set (image hot set, env cache).
+pub struct Swarm {
+    pub pool: ResourceId,
+    pub n_peers: u32,
+    pub origin_bps: f64,
+    pub nic_bps: f64,
+}
+
+impl Swarm {
+    /// Register the swarm pool resource on `sim`.
+    pub fn build(
+        sim: &mut FluidSim,
+        name: &str,
+        origin_bps: f64,
+        n_peers: u32,
+        nic_bps: f64,
+    ) -> Swarm {
+        let cap = origin_bps + n_peers as f64 * nic_bps / 2.0;
+        let pool = sim.add_resource(name, Capacity::Fixed(cap));
+        Swarm { pool, n_peers, origin_bps, nic_bps }
+    }
+
+    /// One node's download of `bytes` through the swarm.
+    pub fn download(
+        &self,
+        sim: &mut FluidSim,
+        bytes: f64,
+        node_nic: ResourceId,
+        deps: &[TaskId],
+        tag: u64,
+    ) -> TaskId {
+        sim.flow(bytes, vec![self.pool, node_nic], deps, tag)
+    }
+
+    /// Analytic lower bound on swarm completion (for tests): every node
+    /// needs `bytes`, aggregate capacity is the pool, per-node cap is NIC.
+    pub fn lower_bound_s(&self, bytes: f64) -> f64 {
+        let aggregate = self.origin_bps + self.n_peers as f64 * self.nic_bps / 2.0;
+        (bytes / self.nic_bps).max(self.n_peers as f64 * bytes / aggregate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sim::engine::Capacity;
+    use crate::util::prop::{close, prop_check};
+
+    /// Build a sim with n nodes of `nic` bps and run a swarm download.
+    fn run_swarm(n: u32, nic: f64, origin: f64, bytes: f64) -> f64 {
+        let mut sim = FluidSim::new();
+        let nics: Vec<ResourceId> =
+            (0..n).map(|i| sim.add_resource(&format!("nic{i}"), Capacity::Fixed(nic))).collect();
+        let swarm = Swarm::build(&mut sim, "swarm", origin, n, nic);
+        for (i, &nr) in nics.iter().enumerate() {
+            swarm.download(&mut sim, bytes, nr, &[], i as u64);
+        }
+        sim.run();
+        sim.now()
+    }
+
+    #[test]
+    fn small_swarm_origin_bound() {
+        // 2 peers, slow origin: pool = 10 + 2*100/2 = 110, NICs 100 each →
+        // each gets 55 B/s (pool-bound).
+        let t = run_swarm(2, 100.0, 10.0, 550.0);
+        assert!(close(t, 10.0, 1e-9), "t={t}");
+    }
+
+    #[test]
+    fn large_swarm_nic_bound() {
+        // Many peers: per-node rate ≈ nic/2: pool = 10 + 64*100/2 = 3210
+        // over 64 flows = 50.156 B/s each (NIC no longer the constraint).
+        let t = run_swarm(64, 100.0, 10.0, 502.0);
+        assert!(close(t, 502.0 / (3210.0 / 64.0), 1e-9), "t={t}");
+    }
+
+    #[test]
+    fn scaling_is_flat() {
+        // The BootSeer property: per-node download time roughly constant in
+        // swarm size (within 2x across 4 → 256 peers).
+        let t4 = run_swarm(4, 100.0, 1000.0, 1000.0);
+        let t256 = run_swarm(256, 100.0, 1000.0, 1000.0);
+        assert!(t256 < t4 * 2.0, "t4={t4} t256={t256}");
+    }
+
+    #[test]
+    fn lower_bound_holds() {
+        prop_check(20, |g| {
+            let n = g.usize_in(1, 64) as u32;
+            let nic = g.f64_in(10.0, 1000.0);
+            let origin = g.f64_in(10.0, 1000.0);
+            let bytes = g.f64_in(100.0, 10_000.0);
+            let t = run_swarm(n, nic, origin, bytes);
+            let mut sim = FluidSim::new();
+            let sw = Swarm::build(&mut sim, "x", origin, n, nic);
+            prop_assert!(
+                t >= sw.lower_bound_s(bytes) - 1e-6,
+                "t={} lb={}",
+                t,
+                sw.lower_bound_s(bytes)
+            );
+            Ok(())
+        });
+    }
+}

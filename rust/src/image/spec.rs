@@ -1,0 +1,225 @@
+//! Container image model.
+//!
+//! Our platform (like the paper's, §4.2) abandons layered OCI images for a
+//! *flattened, block-addressed* layout: all layers are squashed, contents
+//! are split into fixed-size blocks, and blocks are content-addressed so
+//! identical blocks dedupe across images. An `ImageSpec` is the metadata
+//! view the simulator and the loaders work against; real block bytes only
+//! exist in unit tests and the blockstore micro-bench.
+
+use crate::util::rng::Rng;
+
+/// A file inside the flattened image.
+#[derive(Clone, Debug)]
+pub struct FileEntry {
+    pub path: String,
+    pub bytes: u64,
+    /// Index of the file's first block in the image block array.
+    pub first_block: u32,
+    /// Number of blocks (last one may be partial).
+    pub n_blocks: u32,
+}
+
+/// Block-level metadata of a flattened image.
+#[derive(Clone, Debug)]
+pub struct ImageSpec {
+    /// Digest identifying the image (content hash of the block digest list).
+    pub digest: u64,
+    pub block_bytes: u64,
+    pub total_bytes: u64,
+    pub files: Vec<FileEntry>,
+    /// Content digest per block — equal digests dedupe.
+    pub block_digests: Vec<u64>,
+    /// Blocks touched during container startup, in access order. This is
+    /// what the record phase captures and the prefetch phase replays.
+    pub startup_access: Vec<u32>,
+}
+
+impl ImageSpec {
+    pub fn n_blocks(&self) -> u32 {
+        self.block_digests.len() as u32
+    }
+
+    /// Bytes of the startup-hot set.
+    pub fn hot_bytes(&self) -> u64 {
+        // The final block of the image may be partial; treat all accessed
+        // blocks as full blocks except a possible tail block.
+        let mut total = 0u64;
+        for &b in &self.startup_access {
+            total += self.block_len(b);
+        }
+        total
+    }
+
+    /// Length of block `b` (the image's last block may be partial).
+    pub fn block_len(&self, b: u32) -> u64 {
+        let full_blocks = self.total_bytes / self.block_bytes;
+        if (b as u64) < full_blocks {
+            self.block_bytes
+        } else {
+            self.total_bytes - full_blocks * self.block_bytes
+        }
+    }
+
+    pub fn cold_bytes(&self) -> u64 {
+        self.total_bytes - self.hot_bytes()
+    }
+
+    /// Generate a synthetic training image:
+    /// * `total_bytes` split into lognormally-sized files (a few huge
+    ///   framework/CUDA-like blobs and a long tail of small files),
+    /// * a startup-hot set of ~`hot_fraction` of blocks, biased toward a
+    ///   contiguous "runtime + interpreter + shared libs" region plus
+    ///   scattered config files — matching Slacker's observation [15] that
+    ///   startup touches a small, stable subset.
+    pub fn synth(seed: u64, total_bytes: u64, block_bytes: u64, hot_fraction: f64) -> ImageSpec {
+        let mut rng = Rng::seeded(seed ^ 0x1111_2222_3333_4444);
+        let n_blocks = ((total_bytes + block_bytes - 1) / block_bytes) as u32;
+
+        // Files: draw sizes until the image is full.
+        let mut files = Vec::new();
+        let mut covered = 0u64;
+        let mut next_block = 0u32;
+        let mut fid = 0u32;
+        while covered < total_bytes {
+            // Lognormal sizes, mean ~ tens of MB, heavy tail for the
+            // multi-GB framework blobs.
+            let raw = rng.lognormal(16.0, 2.0) as u64; // median ≈ 8.9 MB
+            let bytes = raw.clamp(4 * 1024, 8 * 1_000_000_000).min(total_bytes - covered);
+            let nb = ((bytes + block_bytes - 1) / block_bytes).max(1) as u32;
+            files.push(FileEntry {
+                path: format!("/opt/image/file{fid:06}"),
+                bytes,
+                first_block: next_block,
+                n_blocks: nb,
+            });
+            covered += bytes;
+            // Files are packed block-aligned in the flattened layout.
+            next_block = (next_block + nb).min(n_blocks.saturating_sub(1).max(1));
+            fid += 1;
+        }
+
+        // Block digests: unique per (seed, index) except a shared base-layer
+        // region (first 20% of blocks) that uses seed-independent digests so
+        // different images built on the same base dedupe.
+        let base_region = (n_blocks as f64 * 0.20) as u32;
+        let block_digests: Vec<u64> = (0..n_blocks)
+            .map(|i| {
+                if i < base_region {
+                    0xBA5E_0000_0000_0000 ^ (i as u64)
+                } else {
+                    let mut h = Rng::seeded(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                    h.next_u64()
+                }
+            })
+            .collect();
+
+        // Startup-hot set: contiguous runtime region + scattered extras.
+        let n_hot = ((n_blocks as f64 * hot_fraction) as u32).max(1).min(n_blocks);
+        let contiguous = (n_hot as f64 * 0.7) as u32;
+        let runtime_start = base_region.min(n_blocks.saturating_sub(contiguous.max(1)));
+        let mut startup_access: Vec<u32> = Vec::with_capacity(n_hot as usize);
+        for i in 0..contiguous {
+            startup_access.push(runtime_start + i);
+        }
+        while (startup_access.len() as u32) < n_hot {
+            let b = rng.below(n_blocks as u64) as u32;
+            if !startup_access.contains(&b) {
+                startup_access.push(b);
+            }
+        }
+
+        // Digest of the image = mix of block digests.
+        let digest = block_digests
+            .iter()
+            .fold(0xCAFE_F00Du64, |acc, &d| acc.rotate_left(5) ^ d.wrapping_mul(0x100000001B3));
+
+        ImageSpec { digest, block_bytes, total_bytes, files, block_digests, startup_access }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::{IMAGE_BLOCK_BYTES, PAPER_IMAGE_BYTES};
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn paper_image() -> ImageSpec {
+        ImageSpec::synth(1, PAPER_IMAGE_BYTES, IMAGE_BLOCK_BYTES, 0.07)
+    }
+
+    #[test]
+    fn synth_covers_total_bytes() {
+        let img = paper_image();
+        assert_eq!(img.total_bytes, PAPER_IMAGE_BYTES);
+        let file_bytes: u64 = img.files.iter().map(|f| f.bytes).sum();
+        assert_eq!(file_bytes, PAPER_IMAGE_BYTES);
+        assert_eq!(img.n_blocks() as u64, (PAPER_IMAGE_BYTES + IMAGE_BLOCK_BYTES - 1) / IMAGE_BLOCK_BYTES);
+    }
+
+    #[test]
+    fn hot_set_close_to_fraction() {
+        let img = paper_image();
+        let frac = img.hot_bytes() as f64 / img.total_bytes as f64;
+        assert!((0.05..0.09).contains(&frac), "hot fraction {frac}");
+        assert_eq!(img.hot_bytes() + img.cold_bytes(), img.total_bytes);
+    }
+
+    #[test]
+    fn hot_set_unique_blocks() {
+        let img = paper_image();
+        let mut seen = std::collections::HashSet::new();
+        for &b in &img.startup_access {
+            assert!(b < img.n_blocks());
+            assert!(seen.insert(b), "duplicate hot block {b}");
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = ImageSpec::synth(5, 1_000_000_000, 4_000_000, 0.07);
+        let b = ImageSpec::synth(5, 1_000_000_000, 4_000_000, 0.07);
+        let c = ImageSpec::synth(6, 1_000_000_000, 4_000_000, 0.07);
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.startup_access, b.startup_access);
+        assert_ne!(a.digest, c.digest);
+    }
+
+    #[test]
+    fn base_layer_dedupes_across_images() {
+        let a = ImageSpec::synth(7, 1_000_000_000, 4_000_000, 0.07);
+        let b = ImageSpec::synth(8, 1_000_000_000, 4_000_000, 0.07);
+        let shared = a
+            .block_digests
+            .iter()
+            .filter(|d| b.block_digests.contains(d))
+            .count();
+        // The 20% base region is shared.
+        assert!(shared as f64 >= 0.19 * a.n_blocks() as f64, "shared {shared}");
+    }
+
+    #[test]
+    fn partial_tail_block() {
+        let img = ImageSpec::synth(9, 10_500_000, 4_000_000, 0.5);
+        assert_eq!(img.n_blocks(), 3);
+        assert_eq!(img.block_len(0), 4_000_000);
+        assert_eq!(img.block_len(2), 2_500_000);
+    }
+
+    #[test]
+    fn prop_synth_invariants() {
+        prop_check(24, |g| {
+            let total = g.u64_in(10_000_000, 2_000_000_000);
+            let block = 4_000_000;
+            let frac = g.f64_in(0.01, 0.5);
+            let img = ImageSpec::synth(g.rng.next_u64(), total, block, frac);
+            prop_assert!(img.hot_bytes() <= img.total_bytes);
+            prop_assert!(img.startup_access.len() as u32 <= img.n_blocks());
+            prop_assert!(!img.startup_access.is_empty());
+            let sum: u64 = (0..img.n_blocks()).map(|b| img.block_len(b)).sum();
+            prop_assert!(sum == img.total_bytes, "block lens {sum} != {}", img.total_bytes);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! # BootSeer — startup-bottleneck analysis & mitigation for LLM training
+//!
+//! Reproduction of *"BootSeer: Analyzing and Mitigating Initialization
+//! Bottlenecks in Large-Scale LLM Training"* (ByteDance Seed, 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system: a cluster startup pipeline
+//!   with BootSeer's three optimizations (hot-block record-and-prefetch
+//!   image loading, job-level environment caching, striped HDFS-FUSE
+//!   checkpoint resumption), a stage profiler, and the discrete-event
+//!   cluster substrate everything is evaluated on.
+//! * **L2/L1 (python/, build-time only)** — the MoE training workload
+//!   (JAX fwd/bwd + Pallas expert kernel) AOT-lowered to HLO text.
+//! * **runtime** — loads the HLO artifacts over PJRT and runs real training
+//!   steps after startup completes.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results on every figure.
+
+pub mod ckpt;
+pub mod config;
+pub mod env;
+pub mod figures;
+pub mod hdfs;
+pub mod image;
+pub mod profiler;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod startup;
+pub mod trace;
+pub mod trainer;
+pub mod util;
+
+/// Crate version (from Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,197 @@
+//! `bootseer` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   figures [--out DIR]          regenerate every paper figure's data
+//!   startup --gpus N [...]       simulate one job startup, print stages
+//!   trace [--jobs N]             synthesize + summarize a cluster week
+//!   train [--steps N] [...]      run real training over the AOT artifacts
+//!   version
+
+use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig};
+use bootseer::figures;
+use bootseer::startup::{run_startup, StartupKind, World};
+use bootseer::trace::gen_trace;
+use bootseer::trainer::{SyntheticCorpus, Trainer};
+use bootseer::util::human;
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let code = match cmd {
+        "figures" => cmd_figures(rest),
+        "startup" => cmd_startup(rest),
+        "trace" => cmd_trace(rest),
+        "train" => cmd_train(rest),
+        "version" => {
+            println!("bootseer {}", bootseer::version());
+            0
+        }
+        _ => {
+            eprintln!(
+                "usage: bootseer <figures|startup|trace|train|version> [options]\n\
+                 \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14)\
+                 \n  startup --gpus N [--bootseer] [--hot-update] [--seed S]\
+                 \n  trace   [--jobs N] [--seed S]\
+                 \n  train   [--steps N] [--artifacts DIR] [--seed S]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag(rest: &[String], name: &str) -> bool {
+    rest.iter().any(|a| a == name)
+}
+
+fn opt(rest: &[String], name: &str) -> Option<String> {
+    rest.iter().position(|a| a == name).and_then(|i| rest.get(i + 1).cloned())
+}
+
+fn cmd_figures(rest: &[String]) -> i32 {
+    let out = opt(rest, "--out").map(PathBuf::from);
+    if let Some(d) = &out {
+        if let Err(e) = std::fs::create_dir_all(d) {
+            eprintln!("cannot create {d:?}: {e}");
+            return 1;
+        }
+    }
+    let save = |name: &str, json: bootseer::util::json::Json| {
+        if let Some(d) = &out {
+            let p = d.join(format!("{name}.json"));
+            if let Err(e) = std::fs::write(&p, json.to_pretty()) {
+                eprintln!("write {p:?}: {e}");
+            }
+        }
+    };
+    println!("== week trace replay (figs 1, 3, 4, 5) ==");
+    let r = figures::week_replay(1);
+    let f1 = figures::fig01(&r);
+    println!("-- Fig 1 --\n{}", f1.render());
+    save("fig01", f1.to_json());
+    let f3 = figures::fig03(&r);
+    println!("-- Fig 3a/3b --\n{}", f3.render());
+    save("fig03", f3.to_json());
+    let f4 = figures::fig04(&r);
+    println!("-- Fig 4 --\n{}", f4.render());
+    save("fig04", f4.to_json());
+    let f5 = figures::fig05(&r);
+    println!("-- Fig 5 --\n{}", f5.render());
+    save("fig05", f5.to_json());
+    let f6 = figures::fig06(5);
+    println!("-- Fig 6 --\n{}", f6.render());
+    save("fig06", f6.to_json());
+    let f7 = figures::fig07(2);
+    println!("-- Fig 7 --\n{}", f7.render());
+    save("fig07", f7.to_json());
+    let f12 = figures::fig12(3);
+    println!("-- Fig 12 --\n{}", f12.render());
+    save("fig12", f12.to_json());
+    println!("-- Fig 13 --\n{}", f12.render_stages());
+    save("fig13", f12.stages_json());
+    let f14 = figures::fig14(3);
+    println!("-- Fig 14 --\n{}", f14.render());
+    save("fig14", f14.to_json());
+    0
+}
+
+fn cmd_startup(rest: &[String]) -> i32 {
+    let gpus: u32 = opt(rest, "--gpus").and_then(|s| s.parse().ok()).unwrap_or(128);
+    let seed: u64 = opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let boot = flag(rest, "--bootseer");
+    let kind = if flag(rest, "--hot-update") { StartupKind::HotUpdate } else { StartupKind::Full };
+    let cfg = if boot { BootseerConfig::bootseer() } else { BootseerConfig::baseline() };
+    let job = JobConfig::paper_moe(gpus);
+    let cluster = ClusterConfig::default();
+    let mut world = World::new();
+    if boot {
+        // Warm run to record hot set + create env cache.
+        run_startup(1, 0, &cluster, &job, &cfg, &mut world, StartupKind::Full, seed);
+    }
+    let o = run_startup(1, 1, &cluster, &job, &cfg, &mut world, kind, seed + 1);
+    println!(
+        "job: {} gpus ({} nodes), {}, image {}, ckpt {}",
+        gpus,
+        o.nodes,
+        if boot { "BOOTSEER" } else { "baseline" },
+        human::bytes(job.image_bytes),
+        human::bytes(job.ckpt_bytes)
+    );
+    let mut rows =
+        vec![vec!["stage".to_string(), "begin".to_string(), "end".to_string(), "duration".to_string()]];
+    for (s, b, e) in &o.stage_spans {
+        rows.push(vec![s.name().to_string(), human::secs(*b), human::secs(*e), human::secs(e - b)]);
+    }
+    println!("{}", human::table(&rows));
+    println!(
+        "total (submit→training): {} | worker phase: {} | GPU-seconds wasted: {:.0}",
+        human::secs(o.total_s),
+        human::secs(o.worker_phase_s),
+        o.gpu_seconds_wasted()
+    );
+    0
+}
+
+fn cmd_trace(rest: &[String]) -> i32 {
+    let jobs: usize = opt(rest, "--jobs").and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let seed: u64 = opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let t = gen_trace(seed, jobs, 7.0 * 86400.0);
+    let gpus: u64 = t.iter().map(|j| j.gpus as u64).sum();
+    let startups: u64 = t.iter().map(|j| (j.full_startups + j.hot_updates) as u64).sum();
+    println!(
+        "trace: {} jobs, {} GPUs requested in total, {} startups over one week",
+        t.len(),
+        gpus,
+        startups
+    );
+    for &(lo, hi, label) in &bootseer::trace::SCALE_BUCKETS {
+        let n = t.iter().filter(|j| j.gpus >= lo && j.gpus <= hi).count();
+        println!("  {label:>9}: {n} jobs");
+    }
+    0
+}
+
+fn cmd_train(rest: &[String]) -> i32 {
+    let steps: u64 = opt(rest, "--steps").and_then(|s| s.parse().ok()).unwrap_or(100);
+    let seed: i32 = opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let dir = PathBuf::from(opt(rest, "--artifacts").unwrap_or_else(|| "artifacts".to_string()));
+    if !dir.join("meta.json").exists() {
+        eprintln!("no artifacts at {dir:?}; run `make artifacts` first");
+        return 1;
+    }
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("PJRT: {e:?}");
+            return 1;
+        }
+    };
+    let mut t = match Trainer::new(&client, &dir, seed) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trainer: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "model: {} params, vocab {}, {} layers, {} experts, batch {}x{}",
+        t.meta.n_params, t.meta.vocab, t.meta.n_layers, t.meta.n_experts, t.meta.batch, t.meta.seq
+    );
+    let mut corpus = SyntheticCorpus::new(t.meta.vocab, 0.05, 7);
+    let t0 = std::time::Instant::now();
+    for s in 1..=steps {
+        let (tok, tgt) = corpus.batch(t.meta.batch, t.meta.seq);
+        let loss = t.train_step(&tok, &tgt).expect("train step");
+        if s % 10 == 0 || s == 1 || s == steps {
+            println!("step {s:>5}  loss {loss:.4}");
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{} steps in {} ({:.1} steps/s)", steps, human::secs(dt), steps as f64 / dt);
+    let first = t.loss_log.first().map(|&(_, l)| l).unwrap_or(0.0);
+    let last = t.loss_log.last().map(|&(_, l)| l).unwrap_or(0.0);
+    println!("loss: {first:.4} → {last:.4}");
+    0
+}

@@ -1,0 +1,311 @@
+//! The central Stage Analysis Service (§4.1): ingests stage events from all
+//! nodes, pairs begin/end, and maintains the duration database the figures
+//! query.
+
+use crate::profiler::events::{EventKind, Stage, StageEvent, JOB_LEVEL};
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// One computed stage duration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DurationRow {
+    pub job: u64,
+    pub attempt: u32,
+    pub node: u32,
+    pub stage: Stage,
+    pub begin: f64,
+    pub end: f64,
+}
+
+impl DurationRow {
+    pub fn duration(&self) -> f64 {
+        self.end - self.begin
+    }
+}
+
+/// The duration database.
+#[derive(Clone, Debug, Default)]
+pub struct DurationDb {
+    pub rows: Vec<DurationRow>,
+    /// GPUs requested per job (attached metadata for per-scale queries).
+    pub job_gpus: HashMap<u64, u32>,
+}
+
+impl DurationDb {
+    /// All durations of `stage`, node-level (excludes job-level rows).
+    pub fn node_durations(&self, stage: Stage) -> Vec<f64> {
+        self.rows
+            .iter()
+            .filter(|r| r.stage == stage && r.node != JOB_LEVEL)
+            .map(|r| r.duration())
+            .collect()
+    }
+
+    /// Durations of `stage` for one job.
+    pub fn job_stage_durations(&self, job: u64, stage: Stage) -> Vec<f64> {
+        self.rows
+            .iter()
+            .filter(|r| r.job == job && r.stage == stage && r.node != JOB_LEVEL)
+            .map(|r| r.duration())
+            .collect()
+    }
+
+    /// Attempts recorded for a job.
+    pub fn attempts(&self, job: u64) -> Vec<u32> {
+        let mut v: Vec<u32> =
+            self.rows.iter().filter(|r| r.job == job).map(|r| r.attempt).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Job-level stage span within one attempt: min(begin) → max(end)
+    /// across nodes (or the job-level row for pre-worker stages).
+    pub fn attempt_stage_span(&self, job: u64, attempt: u32, stage: Stage) -> Option<(f64, f64)> {
+        let rows: Vec<&DurationRow> = self
+            .rows
+            .iter()
+            .filter(|r| r.job == job && r.attempt == attempt && r.stage == stage)
+            .collect();
+        if rows.is_empty() {
+            return None;
+        }
+        let b = rows.iter().map(|r| r.begin).fold(f64::INFINITY, f64::min);
+        let e = rows.iter().map(|r| r.end).fold(f64::NEG_INFINITY, f64::max);
+        Some((b, e))
+    }
+
+    /// Job-level stage span: min(begin) → max(end) across nodes (or the
+    /// job-level row for pre-worker stages).
+    pub fn job_stage_span(&self, job: u64, stage: Stage) -> Option<(f64, f64)> {
+        let rows: Vec<&DurationRow> =
+            self.rows.iter().filter(|r| r.job == job && r.stage == stage).collect();
+        if rows.is_empty() {
+            return None;
+        }
+        let b = rows.iter().map(|r| r.begin).fold(f64::INFINITY, f64::min);
+        let e = rows.iter().map(|r| r.end).fold(f64::NEG_INFINITY, f64::max);
+        Some((b, e))
+    }
+
+    /// Job-level startup overhead (§3.1): submission → training begins.
+    pub fn job_startup_overhead(&self, job: u64) -> Option<f64> {
+        self.job_stage_span(job, Stage::Training).map(|(b, _)| b)
+    }
+
+    /// Node-level startup overhead (§3.1) for one attempt: sum of the
+    /// node's own stage durations (excluding waiting on other nodes), plus
+    /// the attempt's queuing+allocation spans (node names are assigned at
+    /// submission time, before resources exist).
+    pub fn node_startup_overhead(&self, job: u64, attempt: u32, node: u32) -> Option<f64> {
+        let own: f64 = self
+            .rows
+            .iter()
+            .filter(|r| {
+                r.job == job
+                    && r.attempt == attempt
+                    && r.node == node
+                    && Stage::WORKER_PHASE.contains(&r.stage)
+            })
+            .map(|r| r.duration())
+            .sum();
+        let pre: f64 = [Stage::Queuing, Stage::Allocation]
+            .iter()
+            .filter_map(|&s| self.attempt_stage_span(job, attempt, s))
+            .map(|(b, e)| e - b)
+            .sum();
+        if own == 0.0 {
+            None
+        } else {
+            Some(own + pre)
+        }
+    }
+
+    /// All node ids seen for a job (excluding job-level).
+    pub fn job_nodes(&self, job: u64) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .rows
+            .iter()
+            .filter(|r| r.job == job && r.node != JOB_LEVEL)
+            .map(|r| r.node)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn jobs(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.rows.iter().map(|r| r.job).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Export all rows as JSON (for offline plotting).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("job", r.job)
+                    .set("attempt", r.attempt as u64)
+                    .set("node", r.node as u64)
+                    .set("stage", r.stage.name())
+                    .set("begin", r.begin)
+                    .set("end", r.end);
+                o
+            })
+            .collect();
+        let mut out = Json::obj();
+        out.set("rows", Json::Arr(rows));
+        out
+    }
+}
+
+/// Pairs begin/end events into duration rows.
+#[derive(Debug, Default)]
+pub struct StageAnalysisService {
+    open: HashMap<(u64, u32, u32, Stage), f64>,
+    pub db: DurationDb,
+    /// Events that ended without a begin (or doubled begins) — surfaced so
+    /// bugs in instrumentation are visible, as in the real service.
+    pub anomalies: Vec<StageEvent>,
+}
+
+impl StageAnalysisService {
+    pub fn new() -> StageAnalysisService {
+        StageAnalysisService::default()
+    }
+
+    /// Record job metadata (gpus requested).
+    pub fn register_job(&mut self, job: u64, gpus: u32) {
+        self.db.job_gpus.insert(job, gpus);
+    }
+
+    pub fn ingest(&mut self, ev: StageEvent) {
+        let key = (ev.job, ev.attempt, ev.node, ev.stage);
+        match ev.kind {
+            EventKind::Begin => {
+                if self.open.insert(key, ev.ts).is_some() {
+                    self.anomalies.push(ev);
+                }
+            }
+            EventKind::End => match self.open.remove(&key) {
+                Some(begin) if ev.ts >= begin => self.db.rows.push(DurationRow {
+                    job: ev.job,
+                    attempt: ev.attempt,
+                    node: ev.node,
+                    stage: ev.stage,
+                    begin,
+                    end: ev.ts,
+                }),
+                _ => self.anomalies.push(ev),
+            },
+        }
+    }
+
+    pub fn ingest_all(&mut self, evs: impl IntoIterator<Item = StageEvent>) {
+        for e in evs {
+            self.ingest(e);
+        }
+    }
+
+    /// Stages still open (never ended) — startup hangs show up here.
+    pub fn open_stages(&self) -> usize {
+        self.open.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::events::JOB_LEVEL;
+    use crate::profiler::parser::LogParser;
+
+    fn ev(job: u64, node: u32, stage: Stage, kind: EventKind, ts: f64) -> StageEvent {
+        StageEvent { job, attempt: 0, node, stage, kind, ts }
+    }
+
+    #[test]
+    fn pairs_begin_end() {
+        let mut svc = StageAnalysisService::new();
+        svc.ingest(ev(1, 0, Stage::EnvSetup, EventKind::Begin, 10.0));
+        svc.ingest(ev(1, 0, Stage::EnvSetup, EventKind::End, 25.0));
+        assert_eq!(svc.db.rows.len(), 1);
+        assert_eq!(svc.db.rows[0].duration(), 15.0);
+        assert_eq!(svc.open_stages(), 0);
+        assert!(svc.anomalies.is_empty());
+    }
+
+    #[test]
+    fn flags_end_without_begin() {
+        let mut svc = StageAnalysisService::new();
+        svc.ingest(ev(1, 0, Stage::EnvSetup, EventKind::End, 25.0));
+        assert!(svc.db.rows.is_empty());
+        assert_eq!(svc.anomalies.len(), 1);
+    }
+
+    #[test]
+    fn flags_negative_duration() {
+        let mut svc = StageAnalysisService::new();
+        svc.ingest(ev(1, 0, Stage::EnvSetup, EventKind::Begin, 30.0));
+        svc.ingest(ev(1, 0, Stage::EnvSetup, EventKind::End, 25.0));
+        assert!(svc.db.rows.is_empty());
+        assert_eq!(svc.anomalies.len(), 1);
+    }
+
+    #[test]
+    fn job_level_and_node_level_split() {
+        let mut svc = StageAnalysisService::new();
+        svc.ingest(ev(1, JOB_LEVEL, Stage::Queuing, EventKind::Begin, 0.0));
+        svc.ingest(ev(1, JOB_LEVEL, Stage::Queuing, EventKind::End, 100.0));
+        svc.ingest(ev(1, 0, Stage::ImageLoading, EventKind::Begin, 102.0));
+        svc.ingest(ev(1, 0, Stage::ImageLoading, EventKind::End, 130.0));
+        svc.ingest(ev(1, 0, Stage::EnvSetup, EventKind::Begin, 130.0));
+        svc.ingest(ev(1, 0, Stage::EnvSetup, EventKind::End, 150.0));
+        svc.ingest(ev(1, 0, Stage::ModelInit, EventKind::Begin, 150.0));
+        svc.ingest(ev(1, 0, Stage::ModelInit, EventKind::End, 170.0));
+        let node = svc.db.node_startup_overhead(1, 0, 0).unwrap();
+        // 100 (queuing) + 28 + 20 + 20 (worker stages), allocation absent.
+        assert!((node - 168.0).abs() < 1e-9, "node overhead {node}");
+        assert_eq!(svc.db.node_durations(Stage::Queuing), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn job_startup_overhead_is_training_begin() {
+        let mut svc = StageAnalysisService::new();
+        svc.ingest(ev(3, 0, Stage::Training, EventKind::Begin, 412.0));
+        svc.ingest(ev(3, 0, Stage::Training, EventKind::End, 1000.0));
+        assert_eq!(svc.db.job_startup_overhead(3), Some(412.0));
+    }
+
+    #[test]
+    fn full_loop_through_log_lines() {
+        // The §4.1 pipeline: events → log text → parser → service → db.
+        let events = vec![
+            ev(9, 0, Stage::InstallScript, EventKind::Begin, 5.0),
+            ev(9, 1, Stage::InstallScript, EventKind::Begin, 5.5),
+            ev(9, 0, Stage::InstallScript, EventKind::End, 45.0),
+            ev(9, 1, Stage::InstallScript, EventKind::End, 95.5),
+        ];
+        let log: String =
+            events.iter().map(|e| e.log_line() + "\n").collect::<String>() + "noise\n";
+        let mut svc = StageAnalysisService::new();
+        svc.ingest_all(LogParser::parse_stream(&log));
+        let durs = svc.db.job_stage_durations(9, Stage::InstallScript);
+        assert_eq!(durs, vec![40.0, 90.0]);
+        assert_eq!(svc.db.job_nodes(9), vec![0, 1]);
+        assert_eq!(svc.db.jobs(), vec![9]);
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let mut svc = StageAnalysisService::new();
+        svc.ingest(ev(1, 0, Stage::EnvSetup, EventKind::Begin, 1.0));
+        svc.ingest(ev(1, 0, Stage::EnvSetup, EventKind::End, 2.0));
+        let j = svc.db.to_json();
+        let text = j.to_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,130 @@
+//! Stage-transition events and their log-line representation.
+
+use std::fmt;
+
+/// Startup stages (paper Figure 2). `InstallScript` is the sub-stage of
+/// EnvSetup whose duration is the §3.3 straggler proxy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    Queuing,
+    Allocation,
+    ImageLoading,
+    EnvSetup,
+    InstallScript,
+    ModelInit,
+    Training,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 7] = [
+        Stage::Queuing,
+        Stage::Allocation,
+        Stage::ImageLoading,
+        Stage::EnvSetup,
+        Stage::InstallScript,
+        Stage::ModelInit,
+        Stage::Training,
+    ];
+
+    /// The GPU-consuming Worker Phase stages (§2.3) — the ones that waste
+    /// GPU resources and that BootSeer optimizes.
+    pub const WORKER_PHASE: [Stage; 3] =
+        [Stage::ImageLoading, Stage::EnvSetup, Stage::ModelInit];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Queuing => "queuing",
+            Stage::Allocation => "allocation",
+            Stage::ImageLoading => "image_loading",
+            Stage::EnvSetup => "env_setup",
+            Stage::InstallScript => "install_script",
+            Stage::ModelInit => "model_init",
+            Stage::Training => "training",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Stage> {
+        Stage::ALL.iter().copied().find(|st| st.name() == s)
+    }
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Begin,
+    End,
+}
+
+/// One stage transition on one node of one job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageEvent {
+    pub job: u64,
+    /// Startup attempt number (restarts of one job are separate attempts).
+    pub attempt: u32,
+    /// Node index within the job; `u32::MAX` marks a job-level event
+    /// (queuing/allocation happen before nodes exist).
+    pub node: u32,
+    pub stage: Stage,
+    pub kind: EventKind,
+    /// Timestamp, seconds since job submission.
+    pub ts: f64,
+}
+
+/// Job-level pseudo-node id.
+pub const JOB_LEVEL: u32 = u32::MAX;
+
+impl StageEvent {
+    /// Render as the log line the worker emits ('print'/'echo' style §4.1).
+    pub fn log_line(&self) -> String {
+        let kind = match self.kind {
+            EventKind::Begin => "begin",
+            EventKind::End => "end",
+        };
+        format!(
+            "[bootseer] ts={:.6} job={} attempt={} node={} stage={} event={}",
+            self.ts, self.job, self.attempt, self.node, self.stage, kind
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_name_roundtrip() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::parse(s.name()), Some(s));
+        }
+        assert_eq!(Stage::parse("bogus"), None);
+    }
+
+    #[test]
+    fn log_line_format() {
+        let e = StageEvent {
+            job: 7,
+            attempt: 2,
+            node: 3,
+            stage: Stage::EnvSetup,
+            kind: EventKind::Begin,
+            ts: 12.5,
+        };
+        assert_eq!(
+            e.log_line(),
+            "[bootseer] ts=12.500000 job=7 attempt=2 node=3 stage=env_setup event=begin"
+        );
+    }
+
+    #[test]
+    fn worker_phase_subset() {
+        for s in Stage::WORKER_PHASE {
+            assert!(Stage::ALL.contains(&s));
+        }
+        assert!(!Stage::WORKER_PHASE.contains(&Stage::Queuing));
+    }
+}

@@ -1,0 +1,16 @@
+//! BootSeer's profiling system (§4.1, Figure 8).
+//!
+//! Worker nodes log stage transitions as plain text lines; a per-node Log
+//! Parser extracts `StageEvent`s; the central Stage Analysis Service groups
+//! begin/end pairs into durations and stores them in a queryable duration
+//! DB. Every §3 figure in this repo is produced from this pipeline — the
+//! startup simulator *prints log lines* and the analysis service computes
+//! everything downstream, exactly like the production deployment.
+
+pub mod analysis;
+pub mod events;
+pub mod parser;
+
+pub use analysis::{DurationDb, StageAnalysisService};
+pub use events::{EventKind, Stage, StageEvent};
+pub use parser::LogParser;

@@ -1,0 +1,88 @@
+//! The per-node Log Parser (§4.1): extracts `StageEvent`s from raw worker
+//! log streams, tolerating interleaved non-bootseer lines.
+
+use crate::profiler::events::{EventKind, Stage, StageEvent};
+use once_cell::sync::Lazy;
+use regex::Regex;
+
+static LINE_RE: Lazy<Regex> = Lazy::new(|| {
+    Regex::new(
+        r"^\[bootseer\] ts=([0-9]+(?:\.[0-9]+)?) job=([0-9]+) attempt=([0-9]+) node=([0-9]+) stage=([a-z_]+) event=(begin|end)$",
+    )
+    .expect("static regex")
+});
+
+/// Stateless log parser.
+pub struct LogParser;
+
+impl LogParser {
+    /// Parse one line; `None` if it is not a bootseer stage line.
+    pub fn parse_line(line: &str) -> Option<StageEvent> {
+        let caps = LINE_RE.captures(line.trim())?;
+        Some(StageEvent {
+            ts: caps[1].parse().ok()?,
+            job: caps[2].parse().ok()?,
+            attempt: caps[3].parse().ok()?,
+            node: caps[4].parse().ok()?,
+            stage: Stage::parse(&caps[5])?,
+            kind: if &caps[6] == "begin" { EventKind::Begin } else { EventKind::End },
+        })
+    }
+
+    /// Parse a whole log stream, skipping foreign lines.
+    pub fn parse_stream(text: &str) -> Vec<StageEvent> {
+        text.lines().filter_map(Self::parse_line).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_log_line() {
+        let e = StageEvent {
+            job: 42,
+            attempt: 1,
+            node: 7,
+            stage: Stage::ImageLoading,
+            kind: EventKind::End,
+            ts: 98.25,
+        };
+        assert_eq!(LogParser::parse_line(&e.log_line()), Some(e));
+    }
+
+    #[test]
+    fn skips_foreign_lines() {
+        let text = "\
+random stderr noise
+[bootseer] ts=1.000000 job=1 attempt=0 node=0 stage=env_setup event=begin
+pip install torch... done
+[bootseer] ts=9.000000 job=1 attempt=0 node=0 stage=env_setup event=end
+";
+        let evs = LogParser::parse_stream(text);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, EventKind::Begin);
+        assert_eq!(evs[1].ts, 9.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(LogParser::parse_line("[bootseer] ts=x job=1 attempt=0 node=0 stage=env_setup event=begin").is_none());
+        assert!(LogParser::parse_line("[bootseer] ts=1 job=1 attempt=0 node=0 stage=nope event=begin").is_none());
+        assert!(LogParser::parse_line("").is_none());
+    }
+
+    #[test]
+    fn tolerates_whitespace() {
+        let e = StageEvent {
+            job: 1,
+            attempt: 0,
+            node: 2,
+            stage: Stage::ModelInit,
+            kind: EventKind::Begin,
+            ts: 3.0,
+        };
+        assert_eq!(LogParser::parse_line(&format!("  {}  ", e.log_line())), Some(e));
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs on this path — the artifacts are self-contained.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Parsed `artifacts/meta.json`: the wire contract between aot.py and the
+/// trainer (parameter order/shapes, batch geometry).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub lr: f64,
+    pub n_params: usize,
+    /// (name, shape) in wire order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelMeta {
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let cfg = j.get("config").context("meta config")?;
+        let geti = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(Json::as_usize).with_context(|| format!("config.{k}"))
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .context("meta params")?
+            .iter()
+            .map(|p| -> Result<(String, Vec<usize>)> {
+                Ok((
+                    p.get("name").and_then(Json::as_str).context("param name")?.to_string(),
+                    p.get("shape")
+                        .and_then(Json::as_arr)
+                        .context("param shape")?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelMeta {
+            vocab: geti("vocab")?,
+            d_model: geti("d_model")?,
+            n_layers: geti("n_layers")?,
+            n_experts: geti("n_experts")?,
+            batch: geti("batch")?,
+            seq: geti("seq")?,
+            lr: cfg.get("lr").and_then(Json::as_f64).unwrap_or(0.5),
+            n_params: j.get("n_params").and_then(Json::as_usize).context("n_params")?,
+            params,
+        })
+    }
+
+    /// Total parameter element count (must equal `n_params`).
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// A compiled HLO artifact, ready to execute.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Engine {
+    /// Load HLO text, compile on `client`.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Engine> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("load {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Engine {
+            exe,
+            name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("?").to_string(),
+        })
+    }
+
+    /// Execute with the given inputs; the artifact returns a tuple
+    /// (aot.py lowers with `return_tuple=True`), which is decomposed.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {shape:?} != len {}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {shape:?} != len {}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Extract an f32 vec from a literal.
+pub fn literal_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Extract the scalar f32 (loss) from a literal.
+pub fn literal_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("meta.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn meta_parses() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let meta = ModelMeta::load(&dir.join("meta.json")).unwrap();
+        assert_eq!(meta.param_elems(), meta.n_params);
+        assert!(meta.params.iter().any(|(n, _)| n == "embed"));
+        assert_eq!(meta.params.last().unwrap().0, "head");
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(literal_f32s(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let i = i32_literal(&[5, 6], &[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![5, 6]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0], &[2, 2]).is_err());
+        assert!(i32_literal(&[1, 2, 3], &[2]).is_err());
+    }
+
+    #[test]
+    fn init_artifact_executes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let client = xla::PjRtClient::cpu().unwrap();
+        let engine = Engine::load(&client, &dir.join("init.hlo.txt")).unwrap();
+        let meta = ModelMeta::load(&dir.join("meta.json")).unwrap();
+        let out = engine.execute(&[xla::Literal::scalar(42i32)]).unwrap();
+        assert_eq!(out.len(), meta.params.len());
+        // Shapes match the meta contract.
+        for (lit, (name, shape)) in out.iter().zip(&meta.params) {
+            let n: usize = shape.iter().product();
+            assert_eq!(lit.element_count(), n, "param {name}");
+        }
+    }
+}

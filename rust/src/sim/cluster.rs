@@ -1,0 +1,185 @@
+//! Cluster resource layout over the fluid engine.
+//!
+//! Instantiates the star topology the paper's startup traffic flows over:
+//! every worker node has a frontend NIC and a local disk; shared services
+//! (container registry, cluster block cache, SCM/package backend, HDFS
+//! DataNode groups) have aggregate egress capacities. Per-node heterogeneity
+//! (the straggler source) is a sampled slowdown multiplier applied to CPU
+//! work on that node.
+
+use crate::config::ClusterConfig;
+use crate::sim::engine::{Capacity, FluidSim, ResourceId};
+use crate::util::rng::{Rng, TailedSlowdown};
+
+/// Identifies a worker node within a job's allocation.
+pub type NodeIdx = usize;
+
+/// The simulated cluster: a FluidSim plus the resource ids of every pipe.
+pub struct ClusterSim {
+    pub sim: FluidSim,
+    pub cfg: ClusterConfig,
+    /// Per-node NIC (shared by ingress + egress; startup traffic is
+    /// overwhelmingly ingress so a single pipe is adequate).
+    pub node_nic: Vec<ResourceId>,
+    /// Per-node local disk (block staging, cache restore, ckpt materialize).
+    pub node_disk: Vec<ResourceId>,
+    /// Container registry aggregate egress.
+    pub registry: ResourceId,
+    /// Cluster-level block cache egress.
+    pub cache: ResourceId,
+    /// SCM / package backend (throttled).
+    pub scm: ResourceId,
+    /// HDFS DataNode group egress pipes.
+    pub hdfs_groups: Vec<ResourceId>,
+    /// Per-node CPU slowdown multipliers (>= 0.7; heavy right tail).
+    pub slowdown: Vec<f64>,
+    /// RNG stream for pipeline-level randomness (retries, placement).
+    pub rng: Rng,
+}
+
+impl ClusterSim {
+    /// Build a cluster of `cfg.nodes` nodes; `seed` fixes all sampled
+    /// heterogeneity.
+    pub fn build(cfg: &ClusterConfig, seed: u64) -> ClusterSim {
+        let mut sim = FluidSim::new();
+        let mut rng = Rng::seeded(seed);
+        let slow_model = TailedSlowdown {
+            tail_prob: cfg.straggler_tail_prob,
+            body_std: cfg.straggler_body_std,
+            tail_scale: 1.5,
+            tail_alpha: cfg.straggler_tail_alpha,
+            cap: cfg.straggler_cap,
+        };
+        let mut node_nic = Vec::with_capacity(cfg.nodes as usize);
+        let mut node_disk = Vec::with_capacity(cfg.nodes as usize);
+        let mut slowdown = Vec::with_capacity(cfg.nodes as usize);
+        for i in 0..cfg.nodes {
+            node_nic.push(
+                sim.add_resource(&format!("node{i}.nic"), Capacity::Fixed(cfg.node_nic_bps)),
+            );
+            node_disk.push(sim.add_resource(
+                &format!("node{i}.disk"),
+                Capacity::Fixed(cfg.node_disk_write_bps),
+            ));
+            slowdown.push(slow_model.sample(&mut rng));
+        }
+        let registry =
+            sim.add_resource("registry", Capacity::Fixed(cfg.registry_egress_bps));
+        let cache = sim.add_resource("cache", Capacity::Fixed(cfg.cluster_cache_egress_bps));
+        let scm = sim.add_resource(
+            "scm",
+            Capacity::Throttled {
+                base: cfg.scm_egress_bps,
+                threshold: cfg.scm_throttle_concurrency,
+                penalty: cfg.scm_throttle_penalty,
+            },
+        );
+        // DataNodes are grouped by replication group; a striped read fans
+        // out over many groups, a classic contiguous read hits few.
+        let n_groups = (cfg.hdfs_datanodes / cfg.hdfs_replication).max(1);
+        let hdfs_groups = (0..n_groups)
+            .map(|g| {
+                sim.add_resource(
+                    &format!("hdfs.group{g}"),
+                    Capacity::Fixed(
+                        cfg.hdfs_datanode_egress_bps * cfg.hdfs_replication as f64,
+                    ),
+                )
+            })
+            .collect();
+        ClusterSim {
+            sim,
+            cfg: cfg.clone(),
+            node_nic,
+            node_disk,
+            registry,
+            cache,
+            scm,
+            hdfs_groups,
+            slowdown,
+            rng,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.node_nic.len()
+    }
+
+    /// CPU time for `nominal` seconds of work on `node` (slowdown applied).
+    pub fn cpu_time(&self, node: NodeIdx, nominal: f64) -> f64 {
+        nominal * self.slowdown[node]
+    }
+
+    /// Aggregate HDFS egress capacity (all groups).
+    pub fn hdfs_total_bps(&self) -> f64 {
+        self.hdfs_groups.len() as f64
+            * self.cfg.hdfs_datanode_egress_bps
+            * self.cfg.hdfs_replication as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn build_creates_all_resources() {
+        let cfg = ClusterConfig::with_nodes(4);
+        let c = ClusterSim::build(&cfg, 1);
+        assert_eq!(c.nodes(), 4);
+        assert_eq!(c.node_nic.len(), 4);
+        assert_eq!(c.node_disk.len(), 4);
+        assert_eq!(c.slowdown.len(), 4);
+        assert!(!c.hdfs_groups.is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = ClusterConfig::with_nodes(64);
+        let a = ClusterSim::build(&cfg, 42);
+        let b = ClusterSim::build(&cfg, 42);
+        assert_eq!(a.slowdown, b.slowdown);
+        let c = ClusterSim::build(&cfg, 43);
+        assert_ne!(a.slowdown, c.slowdown);
+    }
+
+    #[test]
+    fn slowdowns_mostly_near_one() {
+        let cfg = ClusterConfig::with_nodes(1000);
+        let c = ClusterSim::build(&cfg, 7);
+        let near = c.slowdown.iter().filter(|&&s| (0.8..1.3).contains(&s)).count();
+        assert!(near as f64 / 1000.0 > 0.95);
+        assert!(c.slowdown.iter().all(|&s| s >= 0.7));
+    }
+
+    #[test]
+    fn cpu_time_scales_with_slowdown() {
+        let cfg = ClusterConfig::with_nodes(2);
+        let c = ClusterSim::build(&cfg, 11);
+        assert!((c.cpu_time(0, 10.0) - 10.0 * c.slowdown[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hdfs_groups_partition_datanodes() {
+        let cfg = ClusterConfig::with_nodes(2);
+        let c = ClusterSim::build(&cfg, 1);
+        assert_eq!(
+            c.hdfs_groups.len(),
+            (cfg.hdfs_datanodes / cfg.hdfs_replication) as usize
+        );
+    }
+
+    #[test]
+    fn prop_large_clusters_build_fast_and_sane() {
+        prop_check(10, |g| {
+            let nodes = g.usize_in(1, 1500) as u32;
+            let cfg = ClusterConfig::with_nodes(nodes);
+            let c = ClusterSim::build(&cfg, g.rng.next_u64());
+            prop_assert!(c.nodes() == nodes as usize);
+            prop_assert!(c.slowdown.iter().all(|&s| s > 0.0 && s <= cfg.straggler_cap));
+            Ok(())
+        });
+    }
+}

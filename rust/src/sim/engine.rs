@@ -1,0 +1,698 @@
+//! Fluid-flow discrete-event simulator.
+//!
+//! This is the substrate every cluster-scale experiment runs on. The model:
+//!
+//! * **Resources** are capacity-constrained pipes (a node NIC, the registry's
+//!   aggregate egress, the SCM backend, an HDFS DataNode group, a local
+//!   disk). Capacity can be *fixed* or *throttled* (effective capacity
+//!   degrades once concurrency exceeds a threshold — the §3.4 SCM rate-limit
+//!   collapse).
+//! * **Tasks** are either `Delay` (pure time: CPU work, health checks,
+//!   container start) or `Flow` (move N bytes across a set of resources; the
+//!   flow's rate is its max-min fair share across every resource it
+//!   touches).
+//! * Tasks declare dependencies; the engine runs the resulting DAG, sharing
+//!   bandwidth among concurrently-active flows by progressive filling
+//!   (water-filling max-min fairness), recomputing allocations whenever the
+//!   active set changes.
+//!
+//! The engine yields one completion at a time so callers can inject new
+//! tasks mid-simulation (lazy-loading misses, SCM retries, barrier fan-out).
+//! Everything is deterministic: ties are broken by task id.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// f64 ordered for the delay heap (delays are always finite).
+#[derive(PartialEq, PartialOrd)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// Index of a resource registered with the simulator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceId(pub usize);
+
+/// Index of a task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub usize);
+
+/// Capacity policy of a resource.
+#[derive(Clone, Debug)]
+pub enum Capacity {
+    /// Fixed aggregate capacity in bytes/s.
+    Fixed(f64),
+    /// Rate-limited service: full capacity up to `threshold` concurrent
+    /// flows, past which effective capacity shrinks as
+    /// `base / (1 + penalty * (n - threshold))` — the throughput *collapse*
+    /// (not just saturation) seen when >1,000 nodes hammer an SCM backend.
+    Throttled { base: f64, threshold: u32, penalty: f64 },
+}
+
+impl Capacity {
+    fn effective(&self, n_flows: usize) -> f64 {
+        match *self {
+            Capacity::Fixed(c) => c,
+            Capacity::Throttled { base, threshold, penalty } => {
+                if n_flows as u32 <= threshold {
+                    base
+                } else {
+                    base / (1.0 + penalty * (n_flows as u32 - threshold) as f64)
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Resource {
+    cap: Capacity,
+    /// Active flows currently crossing this resource.
+    active: Vec<TaskId>,
+    #[allow(dead_code)]
+    name: String,
+}
+
+/// What a task does once its dependencies are satisfied.
+#[derive(Clone, Debug)]
+pub enum Work {
+    /// Fixed wall-clock duration in seconds (CPU, disk seek, barrier glue).
+    Delay(f64),
+    /// Transfer `bytes` across all of `path`; rate = max-min fair share.
+    Flow { bytes: f64, path: Vec<ResourceId> },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TaskState {
+    /// Waiting on `deps_left` dependencies.
+    Blocked,
+    /// Running (delay ticking or flow transferring).
+    Active,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct Task {
+    work: Work,
+    state: TaskState,
+    deps_left: usize,
+    /// Tasks to notify on completion.
+    dependents: Vec<TaskId>,
+    /// For Delay: absolute completion time. For Flow: bytes remaining.
+    remaining: f64,
+    /// Current fair-share rate (flows only).
+    rate: f64,
+    /// Opaque caller tag for dispatch on completion.
+    pub tag: u64,
+    /// Completion timestamp (set when done).
+    finished_at: f64,
+}
+
+/// A completion event handed back to the caller.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub task: TaskId,
+    pub time: f64,
+    pub tag: u64,
+}
+
+/// The simulator.
+pub struct FluidSim {
+    now: f64,
+    resources: Vec<Resource>,
+    tasks: Vec<Task>,
+    /// Active flow task ids (subset of tasks).
+    active_flows: Vec<TaskId>,
+    /// Pending delay completions (min-heap by absolute time; entries are
+    /// never invalidated — delays cannot be cancelled).
+    delay_heap: BinaryHeap<Reverse<(OrdF64, TaskId)>>,
+    rates_dirty: bool,
+    /// Statistics: total bytes moved per resource.
+    bytes_through: Vec<f64>,
+    // Reusable scratch for recompute_rates (perf: avoid per-event allocs).
+    scr_rem_cap: Vec<f64>,
+    scr_unset_on: Vec<u32>,
+    scr_touched: Vec<usize>,
+}
+
+impl FluidSim {
+    pub fn new() -> FluidSim {
+        FluidSim {
+            now: 0.0,
+            resources: Vec::new(),
+            tasks: Vec::new(),
+            active_flows: Vec::new(),
+            delay_heap: BinaryHeap::new(),
+            rates_dirty: false,
+            bytes_through: Vec::new(),
+            scr_rem_cap: Vec::new(),
+            scr_unset_on: Vec::new(),
+            scr_touched: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Register a resource; returns its id.
+    pub fn add_resource(&mut self, name: &str, cap: Capacity) -> ResourceId {
+        self.resources.push(Resource { cap, active: Vec::new(), name: name.to_string() });
+        self.bytes_through.push(0.0);
+        ResourceId(self.resources.len() - 1)
+    }
+
+    /// Number of flows currently crossing `r` (pipelines use this to model
+    /// admission-time rejection under overload).
+    pub fn concurrency(&self, r: ResourceId) -> usize {
+        self.resources[r.0].active.len()
+    }
+
+    /// Total bytes that have crossed `r` so far.
+    pub fn bytes_through(&self, r: ResourceId) -> f64 {
+        self.bytes_through[r.0]
+    }
+
+    /// Add a task with dependencies. `tag` is returned in its Completion.
+    pub fn add_task(&mut self, work: Work, deps: &[TaskId], tag: u64) -> TaskId {
+        let id = TaskId(self.tasks.len());
+        let mut deps_left = 0;
+        for &d in deps {
+            debug_assert!(d.0 < self.tasks.len(), "dependency on unknown task");
+            if self.tasks[d.0].state != TaskState::Done {
+                self.tasks[d.0].dependents.push(id);
+                deps_left += 1;
+            }
+        }
+        let remaining = match &work {
+            Work::Delay(d) => {
+                assert!(*d >= 0.0 && d.is_finite(), "bad delay {d}");
+                *d
+            }
+            Work::Flow { bytes, path } => {
+                assert!(*bytes >= 0.0 && bytes.is_finite(), "bad flow bytes {bytes}");
+                assert!(!path.is_empty(), "flow with empty path");
+                *bytes
+            }
+        };
+        self.tasks.push(Task {
+            work,
+            state: TaskState::Blocked,
+            deps_left,
+            dependents: Vec::new(),
+            remaining,
+            rate: 0.0,
+            tag,
+            finished_at: f64::NAN,
+        });
+        if deps_left == 0 {
+            self.activate(id);
+        }
+        id
+    }
+
+    /// Convenience: delay task.
+    pub fn delay(&mut self, seconds: f64, deps: &[TaskId], tag: u64) -> TaskId {
+        self.add_task(Work::Delay(seconds), deps, tag)
+    }
+
+    /// Convenience: flow task.
+    pub fn flow(&mut self, bytes: f64, path: Vec<ResourceId>, deps: &[TaskId], tag: u64) -> TaskId {
+        self.add_task(Work::Flow { bytes, path }, deps, tag)
+    }
+
+    /// Barrier: completes when all deps complete (zero-duration delay).
+    pub fn barrier(&mut self, deps: &[TaskId], tag: u64) -> TaskId {
+        self.add_task(Work::Delay(0.0), deps, tag)
+    }
+
+    fn activate(&mut self, id: TaskId) {
+        let task = &mut self.tasks[id.0];
+        debug_assert_eq!(task.state, TaskState::Blocked);
+        task.state = TaskState::Active;
+        match &task.work {
+            Work::Delay(_) => {
+                // remaining already holds the duration; convert to absolute.
+                task.remaining += self.now;
+                let t = task.remaining;
+                self.delay_heap.push(Reverse((OrdF64(t), id)));
+            }
+            Work::Flow { path, .. } => {
+                let path = path.clone();
+                for r in path {
+                    self.resources[r.0].active.push(id);
+                }
+                self.active_flows.push(id);
+                self.rates_dirty = true;
+            }
+        }
+    }
+
+    /// Max-min fair-share allocation by progressive filling.
+    ///
+    /// Hot path (§Perf): dense per-resource scratch vectors reused across
+    /// calls — no hashing, no per-round allocation. Complexity is
+    /// O(rounds x touched_resources + total path length).
+    fn recompute_rates(&mut self) {
+        self.rates_dirty = false;
+        let nf = self.active_flows.len();
+        if nf == 0 {
+            return;
+        }
+        let nr = self.resources.len();
+        // Scratch: grow on demand, reset only touched entries at the end.
+        self.scr_rem_cap.resize(nr, 0.0);
+        self.scr_unset_on.resize(nr, 0);
+        self.scr_touched.clear();
+        for (ri, r) in self.resources.iter().enumerate() {
+            if !r.active.is_empty() {
+                self.scr_rem_cap[ri] = r.cap.effective(r.active.len());
+                self.scr_unset_on[ri] = r.active.len() as u32;
+                self.scr_touched.push(ri);
+            }
+        }
+        // Mark all active flows unset (rate = NAN sentinel).
+        for &t in &self.active_flows {
+            self.tasks[t.0].rate = f64::NAN;
+        }
+        let mut unset = nf;
+        while unset > 0 {
+            // Bottleneck = min fair share among touched resources that
+            // still carry unset flows (ties: lowest id, for determinism).
+            let mut best: Option<(usize, f64)> = None;
+            for &ri in &self.scr_touched {
+                let n = self.scr_unset_on[ri];
+                if n == 0 {
+                    continue;
+                }
+                let fair = self.scr_rem_cap[ri] / n as f64;
+                match best {
+                    Some((bri, bfair)) => {
+                        if fair < bfair || (fair == bfair && ri < bri) {
+                            best = Some((ri, fair));
+                        }
+                    }
+                    None => best = Some((ri, fair)),
+                }
+            }
+            let Some((bottleneck, fair)) = best else { break };
+            // Fix every unset flow crossing the bottleneck at `fair`.
+            let mut fi = 0;
+            while fi < self.resources[bottleneck].active.len() {
+                let t = self.resources[bottleneck].active[fi];
+                fi += 1;
+                if !self.tasks[t.0].rate.is_nan() {
+                    continue;
+                }
+                self.tasks[t.0].rate = fair;
+                unset -= 1;
+                // Subtract this flow's rate from every resource it crosses.
+                let task_ptr = t.0;
+                if let Work::Flow { path, .. } = &self.tasks[task_ptr].work {
+                    for r in path {
+                        let ri = r.0;
+                        self.scr_rem_cap[ri] = (self.scr_rem_cap[ri] - fair).max(0.0);
+                        self.scr_unset_on[ri] -= 1;
+                    }
+                }
+            }
+            self.scr_unset_on[bottleneck] = 0;
+        }
+        // Clear scratch for the touched entries (cheap partial reset) and
+        // zero any still-unset flows (starved).
+        for &ri in &self.scr_touched {
+            self.scr_rem_cap[ri] = 0.0;
+            self.scr_unset_on[ri] = 0;
+        }
+        for &t in &self.active_flows {
+            if self.tasks[t.0].rate.is_nan() {
+                self.tasks[t.0].rate = 0.0;
+            }
+        }
+    }
+
+    /// Advance to the next completion and return it, or `None` when idle.
+    pub fn step(&mut self) -> Option<Completion> {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        // Earliest completion among delays and flows.
+        let mut best: Option<(f64, TaskId)> =
+            self.delay_heap.peek().map(|Reverse((t, id))| (t.0, *id));
+        for &id in &self.active_flows {
+            let task = &self.tasks[id.0];
+            let t = if task.rate > 0.0 {
+                self.now + task.remaining / task.rate
+            } else if task.remaining <= 0.0 {
+                self.now
+            } else {
+                f64::INFINITY // starved flow; cannot finish until rates change
+            };
+            if best.map_or(true, |(bt, bid)| t < bt || (t == bt && id < bid)) {
+                best = Some((t, id));
+            }
+        }
+        let (time, id) = best?;
+        assert!(
+            time.is_finite(),
+            "deadlock: active flow starved with no other progress possible"
+        );
+        let dt = time - self.now;
+        debug_assert!(dt >= -1e-9, "time went backwards: {dt}");
+        let dt = dt.max(0.0);
+        // Progress all active flows by dt.
+        if dt > 0.0 {
+            for &fid in &self.active_flows {
+                let rate = self.tasks[fid.0].rate;
+                let moved = rate * dt;
+                self.tasks[fid.0].remaining = (self.tasks[fid.0].remaining - moved).max(0.0);
+                if let Work::Flow { path, .. } = &self.tasks[fid.0].work {
+                    for r in path.clone() {
+                        self.bytes_through[r.0] += moved;
+                    }
+                }
+            }
+        }
+        self.now = time;
+        self.complete(id);
+        Some(Completion { task: id, time: self.now, tag: self.tasks[id.0].tag })
+    }
+
+    fn complete(&mut self, id: TaskId) {
+        let is_flow = matches!(self.tasks[id.0].work, Work::Flow { .. });
+        self.tasks[id.0].state = TaskState::Done;
+        self.tasks[id.0].finished_at = self.now;
+        if is_flow {
+            self.active_flows.retain(|&t| t != id);
+            if let Work::Flow { path, .. } = self.tasks[id.0].work.clone() {
+                for r in path {
+                    self.resources[r.0].active.retain(|&t| t != id);
+                }
+            }
+            self.rates_dirty = true;
+        } else {
+            // Must be the heap top (completions come out in time order).
+            let popped = self.delay_heap.pop().expect("delay heap empty");
+            debug_assert_eq!(popped.0 .1, id);
+        }
+        let dependents = std::mem::take(&mut self.tasks[id.0].dependents);
+        for dep in dependents {
+            let t = &mut self.tasks[dep.0];
+            t.deps_left -= 1;
+            if t.deps_left == 0 && t.state == TaskState::Blocked {
+                self.activate(dep);
+            }
+        }
+    }
+
+    /// Run everything to quiescence; returns all completions in order.
+    pub fn run(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        while let Some(c) = self.step() {
+            out.push(c);
+        }
+        out
+    }
+
+    /// Completion time of a finished task.
+    pub fn finished_at(&self, id: TaskId) -> f64 {
+        let t = &self.tasks[id.0];
+        assert_eq!(t.state, TaskState::Done, "task not finished");
+        t.finished_at
+    }
+
+    /// True if the task has completed.
+    pub fn is_done(&self, id: TaskId) -> bool {
+        self.tasks[id.0].state == TaskState::Done
+    }
+
+    /// Number of tasks registered (for capacity planning in benches).
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+impl Default for FluidSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{close, prop_check};
+
+    #[test]
+    fn single_flow_bandwidth_limited() {
+        let mut sim = FluidSim::new();
+        let nic = sim.add_resource("nic", Capacity::Fixed(100.0));
+        let f = sim.flow(1000.0, vec![nic], &[], 0);
+        sim.run();
+        assert!(close(sim.finished_at(f), 10.0, 1e-9));
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let mut sim = FluidSim::new();
+        let link = sim.add_resource("link", Capacity::Fixed(100.0));
+        let a = sim.flow(500.0, vec![link], &[], 1);
+        let b = sim.flow(500.0, vec![link], &[], 2);
+        sim.run();
+        // Equal shares: both finish at t=10 (50 B/s each).
+        assert!(close(sim.finished_at(a), 10.0, 1e-9));
+        assert!(close(sim.finished_at(b), 10.0, 1e-9));
+    }
+
+    #[test]
+    fn short_flow_releases_bandwidth() {
+        let mut sim = FluidSim::new();
+        let link = sim.add_resource("link", Capacity::Fixed(100.0));
+        let a = sim.flow(100.0, vec![link], &[], 1); // finishes at t=2 (50 B/s)
+        let b = sim.flow(900.0, vec![link], &[], 2);
+        sim.run();
+        assert!(close(sim.finished_at(a), 2.0, 1e-9));
+        // b: 100 bytes by t=2, then 800 at 100 B/s → t=10.
+        assert!(close(sim.finished_at(b), 10.0, 1e-9));
+    }
+
+    #[test]
+    fn bottleneck_is_min_across_path() {
+        let mut sim = FluidSim::new();
+        let fast = sim.add_resource("fast", Capacity::Fixed(1000.0));
+        let slow = sim.add_resource("slow", Capacity::Fixed(10.0));
+        let f = sim.flow(100.0, vec![fast, slow], &[], 0);
+        sim.run();
+        assert!(close(sim.finished_at(f), 10.0, 1e-9));
+    }
+
+    #[test]
+    fn max_min_not_just_equal_split() {
+        // Two flows share a 100 B/s service; one is also limited by a
+        // 20 B/s NIC. Max-min: constrained flow gets 20, other gets 80.
+        let mut sim = FluidSim::new();
+        let svc = sim.add_resource("svc", Capacity::Fixed(100.0));
+        let nic = sim.add_resource("nic", Capacity::Fixed(20.0));
+        let slow = sim.flow(20.0, vec![svc, nic], &[], 1); // 1s at rate 20
+        let fast = sim.flow(80.0, vec![svc], &[], 2); // 1s at rate 80
+        sim.run();
+        assert!(close(sim.finished_at(slow), 1.0, 1e-9));
+        assert!(close(sim.finished_at(fast), 1.0, 1e-9));
+    }
+
+    #[test]
+    fn delays_and_deps() {
+        let mut sim = FluidSim::new();
+        let a = sim.delay(5.0, &[], 1);
+        let b = sim.delay(3.0, &[a], 2);
+        let link = sim.add_resource("l", Capacity::Fixed(10.0));
+        let c = sim.flow(20.0, vec![link], &[b], 3);
+        sim.run();
+        assert!(close(sim.finished_at(a), 5.0, 1e-9));
+        assert!(close(sim.finished_at(b), 8.0, 1e-9));
+        assert!(close(sim.finished_at(c), 10.0, 1e-9));
+    }
+
+    #[test]
+    fn barrier_waits_for_all() {
+        let mut sim = FluidSim::new();
+        let a = sim.delay(1.0, &[], 0);
+        let b = sim.delay(7.0, &[], 0);
+        let c = sim.delay(3.0, &[], 0);
+        let bar = sim.barrier(&[a, b, c], 9);
+        sim.run();
+        assert!(close(sim.finished_at(bar), 7.0, 1e-9));
+    }
+
+    #[test]
+    fn dep_on_done_task_is_satisfied() {
+        let mut sim = FluidSim::new();
+        let a = sim.delay(1.0, &[], 0);
+        sim.run();
+        let b = sim.delay(1.0, &[a], 0);
+        sim.run();
+        assert!(close(sim.finished_at(b), 2.0, 1e-9));
+    }
+
+    #[test]
+    fn throttled_capacity_collapses() {
+        let cap = Capacity::Throttled { base: 100.0, threshold: 4, penalty: 0.5 };
+        assert_eq!(cap.effective(4), 100.0);
+        assert!(cap.effective(8) < 100.0 / 2.0); // 100/(1+0.5*4)=33.3
+        assert!(close(cap.effective(8), 100.0 / 3.0, 1e-9));
+    }
+
+    #[test]
+    fn throttled_service_slower_in_aggregate() {
+        // 10 flows of 100 bytes through a throttled service (threshold 4):
+        // finishing takes longer than untrottled 100 B/s would predict.
+        let mut run = |cap: Capacity| {
+            let mut sim = FluidSim::new();
+            let svc = sim.add_resource("svc", cap);
+            for i in 0..10 {
+                sim.flow(100.0, vec![svc], &[], i);
+            }
+            sim.run();
+            sim.now()
+        };
+        let fixed = run(Capacity::Fixed(100.0));
+        let throttled =
+            run(Capacity::Throttled { base: 100.0, threshold: 4, penalty: 0.5 });
+        assert!(close(fixed, 10.0, 1e-9));
+        assert!(throttled > 15.0, "throttled {throttled}");
+    }
+
+    #[test]
+    fn injection_mid_run() {
+        let mut sim = FluidSim::new();
+        let link = sim.add_resource("l", Capacity::Fixed(10.0));
+        sim.flow(100.0, vec![link], &[], 1);
+        let c = sim.step().unwrap();
+        assert_eq!(c.tag, 1);
+        // Inject a new flow after the first finished.
+        let f2 = sim.flow(50.0, vec![link], &[], 2);
+        sim.run();
+        assert!(close(sim.finished_at(f2), 15.0, 1e-9));
+    }
+
+    #[test]
+    fn zero_byte_flow_completes_immediately() {
+        let mut sim = FluidSim::new();
+        let link = sim.add_resource("l", Capacity::Fixed(10.0));
+        let f = sim.flow(0.0, vec![link], &[], 0);
+        sim.run();
+        assert!(close(sim.finished_at(f), 0.0, 1e-12));
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut sim = FluidSim::new();
+        let link = sim.add_resource("l", Capacity::Fixed(10.0));
+        sim.flow(30.0, vec![link], &[], 0);
+        sim.flow(70.0, vec![link], &[], 1);
+        sim.run();
+        assert!(close(sim.bytes_through(link), 100.0, 1e-6));
+    }
+
+    // ---- property tests ----
+
+    #[test]
+    fn prop_conservation_and_capacity() {
+        prop_check(60, |g| {
+            let mut sim = FluidSim::new();
+            let cap = g.f64_in(10.0, 1000.0);
+            let link = sim.add_resource("l", Capacity::Fixed(cap));
+            let n = g.usize_in(1, 20);
+            let mut total = 0.0;
+            for i in 0..n {
+                let bytes = g.f64_in(1.0, 5000.0);
+                total += bytes;
+                sim.flow(bytes, vec![link], &[], i as u64);
+            }
+            sim.run();
+            // Conservation: all bytes crossed the link.
+            prop_assert!(close(sim.bytes_through(link), total, 1e-6));
+            // Capacity: makespan >= total/cap (can't beat the pipe).
+            prop_assert!(
+                sim.now() >= total / cap - 1e-6,
+                "makespan {} < {}",
+                sim.now(),
+                total / cap
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_equal_flows_finish_together() {
+        prop_check(40, |g| {
+            let mut sim = FluidSim::new();
+            let link = sim.add_resource("l", Capacity::Fixed(g.f64_in(10.0, 100.0)));
+            let n = g.usize_in(2, 16);
+            let bytes = g.f64_in(10.0, 1000.0);
+            let ids: Vec<TaskId> =
+                (0..n).map(|i| sim.flow(bytes, vec![link], &[], i as u64)).collect();
+            sim.run();
+            let t0 = sim.finished_at(ids[0]);
+            for &id in &ids[1..] {
+                prop_assert!(close(sim.finished_at(id), t0, 1e-9));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dag_ordering_respected() {
+        prop_check(40, |g| {
+            let mut sim = FluidSim::new();
+            let link = sim.add_resource("l", Capacity::Fixed(100.0));
+            // Random chain of tasks; each must finish no earlier than its dep.
+            let n = g.usize_in(2, 24);
+            let mut prev: Option<TaskId> = None;
+            let mut ids = Vec::new();
+            for i in 0..n {
+                let deps: Vec<TaskId> = prev.into_iter().collect();
+                let id = if g.bool() {
+                    sim.delay(g.f64_in(0.0, 5.0), &deps, i as u64)
+                } else {
+                    sim.flow(g.f64_in(1.0, 200.0), vec![link], &deps, i as u64)
+                };
+                ids.push(id);
+                prev = Some(id);
+            }
+            sim.run();
+            for w in ids.windows(2) {
+                prop_assert!(sim.finished_at(w[1]) >= sim.finished_at(w[0]) - 1e-9);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_more_bandwidth_never_slower() {
+        prop_check(30, |g| {
+            let n = g.usize_in(2, 12);
+            let sizes: Vec<f64> = (0..n).map(|_| g.f64_in(10.0, 1000.0)).collect();
+            let cap = g.f64_in(10.0, 100.0);
+            let mk = |c: f64, sizes: &[f64]| {
+                let mut sim = FluidSim::new();
+                let link = sim.add_resource("l", Capacity::Fixed(c));
+                for (i, &b) in sizes.iter().enumerate() {
+                    sim.flow(b, vec![link], &[], i as u64);
+                }
+                sim.run();
+                sim.now()
+            };
+            let slow = mk(cap, &sizes);
+            let fast = mk(cap * 2.0, &sizes);
+            prop_assert!(fast <= slow + 1e-9, "fast {fast} slow {slow}");
+            Ok(())
+        });
+    }
+}

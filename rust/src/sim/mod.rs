@@ -1,0 +1,8 @@
+//! Discrete-event simulation substrate: the fluid-flow engine
+//! (`engine`) and the cluster resource layout built on it (`cluster`).
+
+pub mod cluster;
+pub mod engine;
+
+pub use cluster::ClusterSim;
+pub use engine::{Capacity, Completion, FluidSim, ResourceId, TaskId, Work};

@@ -1,0 +1,7 @@
+//! Startup pipeline (paper Figure 2): stage orchestration with global sync
+//! barriers, full-startup vs hot-update, and the cluster-persistent World
+//! (hot-set records, env caches) that BootSeer exploits across restarts.
+
+pub mod pipeline;
+
+pub use pipeline::{run_startup, StartupKind, StartupOutcome, World};

@@ -1,0 +1,344 @@
+//! The startup pipeline (paper Figure 2): Queuing → Allocation → Image
+//! Loading → Environment Setup → Model Initialization → Training, with the
+//! global synchronization barriers the paper marks "(Sync)". This is where
+//! the subsystem planners compose into one job startup, and where profiler
+//! events are emitted.
+
+use crate::ckpt::resume::plan_model_init;
+use crate::config::defaults as d;
+use crate::config::{BootseerConfig, ClusterConfig, ImageMode, JobConfig};
+use crate::env::cache::EnvCacheRegistry;
+use crate::env::installer::plan_env_setup;
+use crate::env::packages::PackageSet;
+use crate::image::access::{AccessRecorder, HotSetRegistry};
+use crate::image::loader::plan_image_load;
+use crate::image::spec::ImageSpec;
+use crate::profiler::events::{EventKind, Stage, StageEvent, JOB_LEVEL};
+use crate::sim::{ClusterSim, TaskId};
+use crate::util::rng::Rng;
+
+/// Full startup vs Hot Update (partial: env setup + model setup only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StartupKind {
+    Full,
+    HotUpdate,
+}
+
+/// Cluster-persistent state that carries across startups: the image
+/// hot-set records and the job-level environment caches.
+#[derive(Debug)]
+pub struct World {
+    pub hotset: HotSetRegistry,
+    pub envcache: EnvCacheRegistry,
+}
+
+impl World {
+    pub fn new() -> World {
+        World {
+            hotset: HotSetRegistry::new(d::PAPER_RECORD_WINDOW_S),
+            envcache: EnvCacheRegistry::new(),
+        }
+    }
+}
+
+impl Default for World {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Everything a single startup run produced.
+#[derive(Clone, Debug)]
+pub struct StartupOutcome {
+    pub job_id: u64,
+    pub gpus: u32,
+    pub nodes: u32,
+    /// Profiler events (ts = seconds since submission).
+    pub events: Vec<StageEvent>,
+    /// Install-script durations per node (§3.3 straggler proxy).
+    pub install_durations: Vec<f64>,
+    /// Job-level span of each stage.
+    pub stage_spans: Vec<(Stage, f64, f64)>,
+    /// Submission → training-begin (job-level startup overhead, §3.1).
+    pub total_s: f64,
+    /// Worker-phase-only startup (image+env+init; the §5 metric which
+    /// excludes queuing/allocation variability).
+    pub worker_phase_s: f64,
+}
+
+impl StartupOutcome {
+    pub fn span(&self, stage: Stage) -> Option<(f64, f64)> {
+        self.stage_spans.iter().find(|(s, _, _)| *s == stage).map(|&(_, b, e)| (b, e))
+    }
+
+    pub fn stage_duration(&self, stage: Stage) -> f64 {
+        self.span(stage).map(|(b, e)| e - b).unwrap_or(0.0)
+    }
+
+    /// GPU-seconds consumed by the worker-phase startup.
+    pub fn gpu_seconds_wasted(&self) -> f64 {
+        self.worker_phase_s * self.gpus as f64
+    }
+}
+
+/// Run one startup of `job` on a fresh allocation, mutating `world`
+/// (hot-set records, env caches). Deterministic for a given seed.
+pub fn run_startup(
+    job_id: u64,
+    attempt: u32,
+    cluster_cfg: &ClusterConfig,
+    job: &JobConfig,
+    cfg: &BootseerConfig,
+    world: &mut World,
+    kind: StartupKind,
+    seed: u64,
+) -> StartupOutcome {
+    let nodes = job.nodes(cluster_cfg);
+    let cluster = ClusterConfig { nodes, ..cluster_cfg.clone() };
+    let mut cs = ClusterSim::build(&cluster, seed ^ job_id.wrapping_mul(0x9E37_79B9));
+    let mut rng = Rng::seeded(seed ^ 0x57A2_7009 ^ job_id);
+
+    let img = ImageSpec::synth(
+        job_id ^ 0x1AA6E, // image identity is per-job (same across restarts)
+        job.image_bytes,
+        job.image_block_bytes,
+        job.image_hot_fraction,
+    );
+    let pkgs = PackageSet::synth(job, job_id ^ 0x9AC5);
+
+    let mut events = Vec::new();
+    let n = nodes as usize;
+
+    // ---- Scheduler phase (job-level; GPUs not yet allocated) ----
+    let (queue_s, alloc_s) = if kind == StartupKind::Full {
+        (
+            rng.lognormal(d::QUEUE_WAIT_MU, d::QUEUE_WAIT_SIGMA),
+            d::ALLOC_BASE_S + 0.02 * nodes as f64,
+        )
+    } else {
+        (0.0, 0.0) // hot update keeps its allocation
+    };
+    events.push(StageEvent { job: job_id, attempt, node: JOB_LEVEL, stage: Stage::Queuing, kind: EventKind::Begin, ts: 0.0 });
+    events.push(StageEvent { job: job_id, attempt, node: JOB_LEVEL, stage: Stage::Queuing, kind: EventKind::End, ts: queue_s });
+    events.push(StageEvent { job: job_id, attempt, node: JOB_LEVEL, stage: Stage::Allocation, kind: EventKind::Begin, ts: queue_s });
+    events.push(StageEvent { job: job_id, attempt, node: JOB_LEVEL, stage: Stage::Allocation, kind: EventKind::End, ts: queue_s + alloc_s });
+
+    let worker_t0 = queue_s + alloc_s;
+    let gate0 = cs.sim.delay(worker_t0, &[], 0);
+
+    // ---- Image Loading (skipped on hot update: container already runs) ----
+    let (img_done, image_begin): (Vec<TaskId>, f64) = if kind == StartupKind::Full {
+        let deps: Vec<Vec<TaskId>> = vec![vec![gate0]; n];
+        let plan = plan_image_load(&mut cs, &img, cfg, &world.hotset, &deps, 1);
+        (plan.node_done, worker_t0)
+    } else {
+        (vec![gate0; n], worker_t0)
+    };
+    // Global sync: every node waits for the slowest image pull (§2.2).
+    let img_barrier = cs.sim.barrier(&img_done, 0);
+
+    // ---- Environment Setup ----
+    let env_deps: Vec<Vec<TaskId>> = vec![vec![img_barrier]; n];
+    let env_plan =
+        plan_env_setup(&mut cs, &pkgs, job, cfg, &mut world.envcache, &env_deps, 2);
+    let env_barrier = cs.sim.barrier(&env_plan.node_done, 0);
+
+    // ---- Model Initialization ----
+    let init_deps: Vec<Vec<TaskId>> = vec![vec![env_barrier]; n];
+    let init_plan = plan_model_init(&mut cs, job, cfg, &init_deps, 3);
+    let init_barrier = cs.sim.barrier(&init_plan.node_done, 0);
+
+    // ---- Run the simulation ----
+    cs.sim.run();
+
+    // ---- Record phase upload (§4.2): first BootSeer run records the
+    // startup access trace and uploads it for subsequent runs. ----
+    if kind == StartupKind::Full
+        && cfg.image_mode == ImageMode::RecordPrefetch
+        && !world.hotset.has_record(img.digest)
+    {
+        let mut rec = AccessRecorder::new();
+        for (k, &b) in img.startup_access.iter().enumerate() {
+            rec.record(b, (k as f64 * 0.05).min(d::PAPER_RECORD_WINDOW_S - 1.0));
+        }
+        world.hotset.upload(img.digest, &rec);
+    }
+
+    // ---- Emit per-node events ----
+    for i in 0..n {
+        if kind == StartupKind::Full {
+            events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: Stage::ImageLoading, kind: EventKind::Begin, ts: image_begin });
+            events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: Stage::ImageLoading, kind: EventKind::End, ts: cs.sim.finished_at(img_done[i]) });
+        }
+        let env_begin = cs.sim.finished_at(img_barrier);
+        events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: Stage::EnvSetup, kind: EventKind::Begin, ts: env_begin });
+        events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: Stage::EnvSetup, kind: EventKind::End, ts: cs.sim.finished_at(env_plan.node_done[i]) });
+        let (s0, s1) = env_plan.install_span[i];
+        events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: Stage::InstallScript, kind: EventKind::Begin, ts: cs.sim.finished_at(s0) });
+        events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: Stage::InstallScript, kind: EventKind::End, ts: cs.sim.finished_at(s1) });
+        let init_begin = cs.sim.finished_at(env_barrier);
+        events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: Stage::ModelInit, kind: EventKind::Begin, ts: init_begin });
+        events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: Stage::ModelInit, kind: EventKind::End, ts: cs.sim.finished_at(init_plan.node_done[i]) });
+    }
+    let training_begin = cs.sim.finished_at(init_barrier);
+    events.push(StageEvent { job: job_id, attempt, node: 0, stage: Stage::Training, kind: EventKind::Begin, ts: training_begin });
+
+    // ---- Stage spans ----
+    let mut stage_spans = vec![
+        (Stage::Queuing, 0.0, queue_s),
+        (Stage::Allocation, queue_s, worker_t0),
+    ];
+    if kind == StartupKind::Full {
+        stage_spans.push((Stage::ImageLoading, worker_t0, cs.sim.finished_at(img_barrier)));
+    }
+    stage_spans.push((
+        Stage::EnvSetup,
+        cs.sim.finished_at(img_barrier),
+        cs.sim.finished_at(env_barrier),
+    ));
+    stage_spans.push((
+        Stage::ModelInit,
+        cs.sim.finished_at(env_barrier),
+        training_begin,
+    ));
+
+    StartupOutcome {
+        job_id,
+        gpus: job.gpus,
+        nodes,
+        install_durations: env_plan.install_durations(&cs),
+        events,
+        stage_spans,
+        total_s: training_begin,
+        worker_phase_s: training_begin - worker_t0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::{LogParser, StageAnalysisService};
+    use crate::util::stats;
+
+    fn run(
+        gpus: u32,
+        cfg: &BootseerConfig,
+        world: &mut World,
+        kind: StartupKind,
+    ) -> StartupOutcome {
+        let job = JobConfig::paper_moe(gpus);
+        run_startup(1, 0, &ClusterConfig::default(), &job, cfg, world, kind, 42)
+    }
+
+    #[test]
+    fn stages_are_ordered_and_synced() {
+        let mut w = World::new();
+        let o = run(32, &BootseerConfig::baseline(), &mut w, StartupKind::Full);
+        let img = o.span(Stage::ImageLoading).unwrap();
+        let env = o.span(Stage::EnvSetup).unwrap();
+        let init = o.span(Stage::ModelInit).unwrap();
+        assert!(img.1 <= env.0 + 1e-9);
+        assert!(env.1 <= init.0 + 1e-9);
+        assert!((init.1 - o.total_s).abs() < 1e-9);
+        assert!(o.worker_phase_s < o.total_s);
+    }
+
+    #[test]
+    fn bootseer_halves_worker_phase_after_warm_run() {
+        let mut wb = World::new();
+        // Warm-up run: records hot set + creates env cache.
+        let _ = run(128, &BootseerConfig::bootseer(), &mut wb, StartupKind::Full);
+        let boot = run(128, &BootseerConfig::bootseer(), &mut wb, StartupKind::Full);
+        let mut w0 = World::new();
+        let base = run(128, &BootseerConfig::baseline(), &mut w0, StartupKind::Full);
+        let ratio = base.worker_phase_s / boot.worker_phase_s;
+        // §5.2: ~2x end-to-end.
+        assert!((1.6..3.2).contains(&ratio), "e2e improvement {ratio}");
+    }
+
+    #[test]
+    fn first_bootseer_run_records_then_benefits() {
+        let mut w = World::new();
+        let first = run(32, &BootseerConfig::bootseer(), &mut w, StartupKind::Full);
+        let second = run(32, &BootseerConfig::bootseer(), &mut w, StartupKind::Full);
+        assert!(
+            second.stage_duration(Stage::ImageLoading)
+                < first.stage_duration(Stage::ImageLoading) / 2.0,
+            "second run should prefetch: {} vs {}",
+            first.stage_duration(Stage::ImageLoading),
+            second.stage_duration(Stage::ImageLoading)
+        );
+    }
+
+    #[test]
+    fn hot_update_skips_image_and_queue() {
+        let mut w = World::new();
+        let o = run(32, &BootseerConfig::baseline(), &mut w, StartupKind::HotUpdate);
+        assert!(o.span(Stage::ImageLoading).is_none());
+        assert_eq!(o.stage_duration(Stage::Queuing), 0.0);
+        let mut w2 = World::new();
+        let full = run(32, &BootseerConfig::baseline(), &mut w2, StartupKind::Full);
+        assert!(o.total_s < full.total_s);
+    }
+
+    #[test]
+    fn events_feed_the_profiler() {
+        let mut w = World::new();
+        let o = run(16, &BootseerConfig::baseline(), &mut w, StartupKind::Full);
+        let log: String = o.events.iter().map(|e| e.log_line() + "\n").collect();
+        let mut svc = StageAnalysisService::new();
+        svc.ingest_all(LogParser::parse_stream(&log));
+        assert_eq!(svc.anomalies.len(), 0);
+        // Training has begin but no end → one open stage.
+        assert_eq!(svc.open_stages(), 1);
+        let node_overhead = svc.db.node_startup_overhead(1, 0, 0).unwrap();
+        assert!(node_overhead > 0.0);
+        // Node-level ≤ job-level (§3.1: job-level includes barrier waits).
+        assert!(node_overhead <= o.total_s + 1e-6);
+        let installs = svc.db.job_stage_durations(1, Stage::InstallScript);
+        assert_eq!(installs.len(), 2); // 16 GPUs = 2 nodes
+    }
+
+    #[test]
+    fn install_durations_match_events() {
+        let mut w = World::new();
+        let o = run(32, &BootseerConfig::baseline(), &mut w, StartupKind::Full);
+        assert_eq!(o.install_durations.len(), 4);
+        assert!(stats::min(&o.install_durations) > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let job = JobConfig::paper_moe(32);
+        let mk = || {
+            let mut w = World::new();
+            run_startup(
+                5,
+                0,
+                &ClusterConfig::default(),
+                &job,
+                &BootseerConfig::baseline(),
+                &mut w,
+                StartupKind::Full,
+                7,
+            )
+            .total_s
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn larger_jobs_start_slower() {
+        // §3.1: job-level startup overhead increases with job size.
+        let mut a = World::new();
+        let small = run(16, &BootseerConfig::baseline(), &mut a, StartupKind::Full);
+        let mut b = World::new();
+        let large = run(128, &BootseerConfig::baseline(), &mut b, StartupKind::Full);
+        assert!(
+            large.worker_phase_s > small.worker_phase_s,
+            "{} vs {}",
+            small.worker_phase_s,
+            large.worker_phase_s
+        );
+    }
+}

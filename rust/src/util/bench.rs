@@ -1,0 +1,175 @@
+//! Tiny benchmark harness (criterion is not in the offline crate set).
+//!
+//! Every file under `benches/` is a `harness = false` binary built on this:
+//! `Bench::new("name")` then `b.iter("case", || work())` measures warmed-up
+//! wall time, reporting mean ± std over the sample and ops/s. Figure benches
+//! additionally print paper-vs-measured series tables; the harness keeps the
+//! timing discipline consistent across all of them.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub name: String,
+    /// Minimum measurement time per case.
+    pub min_time: Duration,
+    /// Minimum number of measured iterations per case.
+    pub min_iters: u32,
+    results: Vec<CaseResult>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub case: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        // Honor BOOTSEER_BENCH_FAST=1 for quick smoke runs.
+        let fast = std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1");
+        Bench {
+            name: name.to_string(),
+            min_time: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
+            min_iters: if fast { 2 } else { 5 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, discarding one warmup run, until both `min_time` and
+    /// `min_iters` are satisfied. Returns the mean seconds per iteration.
+    pub fn iter<R>(&mut self, case: &str, mut f: impl FnMut() -> R) -> f64 {
+        // Warmup (also primes caches / lazy inits).
+        let _ = f();
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            let r = f();
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(&r);
+            samples.push(dt);
+            if samples.len() as u32 >= self.min_iters && start.elapsed() >= self.min_time {
+                break;
+            }
+            // Safety valve: a single iteration longer than 30s is enough.
+            if samples.len() >= 1 && start.elapsed() > Duration::from_secs(30) {
+                break;
+            }
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let res = CaseResult {
+            case: case.to_string(),
+            iters: samples.len() as u32,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        };
+        println!(
+            "bench {} / {:<40} {:>12} ± {:>10}  ({} iters)",
+            self.name,
+            res.case,
+            fmt_time(res.mean_s),
+            fmt_time(res.std_s),
+            res.iters
+        );
+        self.results.push(res);
+        mean
+    }
+
+    /// Measure one un-warmed end-to-end run (for expensive whole-cluster
+    /// simulations where a single deterministic run IS the experiment).
+    pub fn once<R>(&mut self, case: &str, mut f: impl FnMut() -> R) -> f64 {
+        let t0 = Instant::now();
+        let r = f();
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&r);
+        let res = CaseResult {
+            case: case.to_string(),
+            iters: 1,
+            mean_s: dt,
+            std_s: 0.0,
+            min_s: dt,
+            max_s: dt,
+        };
+        println!(
+            "bench {} / {:<40} {:>12}  (1 iter)",
+            self.name,
+            res.case,
+            fmt_time(res.mean_s)
+        );
+        self.results.push(res);
+        dt
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+
+    /// Print a closing summary block.
+    pub fn finish(&self) {
+        println!("\n== {} summary ==", self.name);
+        for r in &self.results {
+            println!(
+                "  {:<40} mean {:>12}  min {:>12}  max {:>12}",
+                r.case,
+                fmt_time(r.mean_s),
+                fmt_time(r.min_s),
+                fmt_time(r.max_s)
+            );
+        }
+    }
+}
+
+/// Format a seconds value with an adaptive unit.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Standard header every figure bench prints: identifies the figure, the
+/// paper's claim, and the workload.
+pub fn figure_header(fig: &str, claim: &str) {
+    println!("==========================================================");
+    println!("{fig}");
+    println!("paper: {claim}");
+    println!("==========================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iter_returns_positive_mean() {
+        let mut b = Bench::new("test");
+        b.min_time = Duration::from_millis(1);
+        b.min_iters = 3;
+        let mean = b.iter("noop", || 1 + 1);
+        assert!(mean >= 0.0);
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].iters >= 3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(3e-9).ends_with("ns"));
+        assert!(fmt_time(3e-6).ends_with("µs"));
+        assert!(fmt_time(3e-3).ends_with("ms"));
+        assert!(fmt_time(3.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,114 @@
+//! Human-readable formatting of byte sizes and durations for logs, tables,
+//! and bench output.
+
+/// Format a byte count, e.g. `28.62 GB` (decimal units, matching the paper).
+pub fn bytes(n: u64) -> String {
+    const UNITS: [(&str, f64); 5] = [
+        ("TB", 1e12),
+        ("GB", 1e9),
+        ("MB", 1e6),
+        ("KB", 1e3),
+        ("B", 1.0),
+    ];
+    for &(unit, scale) in &UNITS {
+        if n as f64 >= scale || unit == "B" {
+            let v = n as f64 / scale;
+            return if v >= 100.0 || unit == "B" {
+                format!("{v:.0} {unit}")
+            } else {
+                format!("{v:.2} {unit}")
+            };
+        }
+    }
+    unreachable!()
+}
+
+/// Format a duration given in seconds, e.g. `2m 13s`, `45.2s`, `380ms`.
+pub fn secs(s: f64) -> String {
+    if s < 0.0 {
+        return format!("-{}", secs(-s));
+    }
+    if s < 1.0 {
+        format!("{:.0}ms", s * 1e3)
+    } else if s < 60.0 {
+        format!("{s:.1}s")
+    } else if s < 3600.0 {
+        format!("{}m {:02.0}s", (s / 60.0) as u64, s % 60.0)
+    } else {
+        format!("{}h {:02}m", (s / 3600.0) as u64, ((s % 3600.0) / 60.0) as u64)
+    }
+}
+
+/// Render a ratio like `2.1x`.
+pub fn ratio(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+/// Fixed-width table rendering: rows of cells, first row is the header.
+pub fn table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    for (ri, row) in rows.iter().enumerate() {
+        for (i, cell) in row.iter().enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(&format!("{:<width$}", cell, width = widths[i]));
+        }
+        out.push('\n');
+        if ri == 0 {
+            for (i, w) in widths.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&"-".repeat(*w));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(0), "0 B");
+        assert_eq!(bytes(999), "999 B");
+        assert_eq!(bytes(28_620_000_000), "28.62 GB");
+        assert_eq!(bytes(413_000_000_000), "413 GB");
+        assert_eq!(bytes(1_500), "1.50 KB");
+    }
+
+    #[test]
+    fn secs_scales() {
+        assert_eq!(secs(0.38), "380ms");
+        assert_eq!(secs(45.23), "45.2s");
+        assert_eq!(secs(133.0), "2m 13s");
+        assert_eq!(secs(7260.0), "2h 01m");
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(&[
+            vec!["a".into(), "long-header".into()],
+            vec!["xx".into(), "1".into()],
+        ]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with('-'));
+        // All data lines have same prefix width for col 0.
+        assert_eq!(lines[0].find("long-header"), lines[2].find('1'));
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrate: deterministic RNG + distributions, statistics,
+//! JSON, humanized formatting, the bench harness, and the mini
+//! property-testing framework. None of this is BootSeer-specific; it exists
+//! because the offline crate universe lacks rand/serde/criterion/proptest.
+
+pub mod bench;
+pub mod human;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

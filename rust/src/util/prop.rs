@@ -1,0 +1,157 @@
+//! Miniature property-based testing framework (proptest is not in the
+//! offline crate set).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(256, |g| {
+//!     let xs = g.vec(1..100, |g| g.f64_in(0.0, 1e6));
+//!     let b = BoxSummary::of(&xs);
+//!     prop_assert!(b.q1 <= b.median);
+//!     Ok(())
+//! });
+//! ```
+//! Each case gets a fresh deterministic generator; on failure the case seed
+//! is printed so the exact input can be replayed with
+//! `BOOTSEER_PROP_SEED=<seed>`.
+
+use super::rng::Rng;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector of random length in `len` with elements from `f`.
+    pub fn vec<T>(&mut self, len: std::ops::Range<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(len.start, len.end.saturating_sub(1).max(len.start));
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Random bytes of length n.
+    pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+        (0..n).map(|_| self.rng.next_u64() as u8).collect()
+    }
+
+    /// Random ASCII identifier.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let n = self.usize_in(1, max_len.max(2));
+        (0..n)
+            .map(|_| {
+                let c = b"abcdefghijklmnopqrstuvwxyz0123456789_"
+                    [self.rng.below(37) as usize];
+                c as char
+            })
+            .collect()
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the failing seed on error.
+pub fn prop_check(cases: u32, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    // Replay mode: run only the given seed.
+    if let Ok(s) = std::env::var("BOOTSEER_PROP_SEED") {
+        let seed: u64 = s.parse().expect("BOOTSEER_PROP_SEED must be u64");
+        let mut g = Gen { rng: Rng::seeded(seed), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    let base = 0xB007_5EE3u64;
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::seeded(seed), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed on case {i} (replay with BOOTSEER_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert inside a property, producing an Err instead of panicking so the
+/// harness can attach the seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}: {}", stringify!($cond), format!($($fmt)+)));
+        }
+    };
+}
+
+/// Approximate float equality helper for properties.
+pub fn close(a: f64, b: f64, rel: f64) -> bool {
+    let scale = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() / scale <= rel
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check(64, |g| {
+            let x = g.f64_in(0.0, 10.0);
+            prop_assert!((0.0..=10.0).contains(&x));
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failing_seed() {
+        prop_check(64, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert!(x < 90, "x was {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vec_length_in_range() {
+        prop_check(64, |g| {
+            let v = g.vec(2..10, |g| g.bool());
+            prop_assert!(v.len() >= 2 && v.len() < 10, "len {}", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ident_is_ascii() {
+        prop_check(64, |g| {
+            let s = g.ident(16);
+            prop_assert!(!s.is_empty() && s.is_ascii());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_tolerates() {
+        assert!(close(1.0, 1.0000001, 1e-5));
+        assert!(!close(1.0, 1.1, 1e-5));
+    }
+}

@@ -1,0 +1,244 @@
+//! Summary statistics used throughout the figure generators: quantiles,
+//! box-plot summaries (the paper's plots are boxplots with whiskers at two
+//! standard deviations), and the paper's Max/Median straggler ratio (§3.3).
+
+/// Five-number-plus summary of a sample, matching the paper's plotting
+/// convention: whiskers extend to two standard deviations around the mean
+/// (clamped to the observed min/max), "in order to exclude outliers".
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoxSummary {
+    pub n: usize,
+    pub min: f64,
+    pub whisker_lo: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub whisker_hi: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Linear-interpolation quantile (type 7, numpy default) of an unsorted slice.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty sample");
+    assert!((0.0..=1.0).contains(&q));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile of an already-sorted slice.
+pub fn quantile_sorted(v: &[f64], q: f64) -> f64 {
+    assert!(!v.is_empty());
+    if v.len() == 1 {
+        return v[0];
+    }
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// The paper's straggler metric (§3.3): slowest node / median node.
+pub fn max_median_ratio(xs: &[f64]) -> f64 {
+    let med = median(xs);
+    assert!(med > 0.0, "max/median ratio needs positive median");
+    max(xs) / med
+}
+
+impl BoxSummary {
+    pub fn of(xs: &[f64]) -> BoxSummary {
+        assert!(!xs.is_empty());
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = mean(&v);
+        let s = std_dev(&v);
+        let lo = v[0];
+        let hi = v[v.len() - 1];
+        BoxSummary {
+            n: v.len(),
+            min: lo,
+            whisker_lo: (m - 2.0 * s).max(lo),
+            q1: quantile_sorted(&v, 0.25),
+            median: quantile_sorted(&v, 0.5),
+            q3: quantile_sorted(&v, 0.75),
+            whisker_hi: (m + 2.0 * s).min(hi),
+            max: hi,
+            mean: m,
+            std: s,
+        }
+    }
+
+    /// Compact single-line rendering for bench output.
+    pub fn line(&self) -> String {
+        format!(
+            "n={:<6} min={:8.1} q1={:8.1} med={:8.1} q3={:8.1} max={:8.1} mean={:8.1} std={:7.1}",
+            self.n, self.min, self.q1, self.median, self.q3, self.max, self.mean, self.std
+        )
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets; values outside
+/// the range are clamped into the edge buckets (used for Fig 7 / Fig 14
+/// distribution plots).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn build(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(bins > 0 && hi > lo);
+        let mut counts = vec![0u64; bins];
+        let w = (hi - lo) / bins as f64;
+        for &x in xs {
+            let idx = (((x - lo) / w).floor() as i64).clamp(0, bins as i64 - 1) as usize;
+            counts[idx] += 1;
+        }
+        Histogram { lo, hi, counts }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// ASCII rendering, one bucket per line, bars scaled to `width` chars.
+    pub fn render(&self, width: usize) -> String {
+        let maxc = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar_len = ((c as f64 / maxc as f64) * width as f64).round() as usize;
+            let lo = self.lo + i as f64 * w;
+            out.push_str(&format!(
+                "[{:8.1},{:8.1}) {:>7} |{}\n",
+                lo,
+                lo + w,
+                c,
+                "#".repeat(bar_len)
+            ));
+        }
+        out
+    }
+}
+
+/// Cumulative fraction of samples <= x (for long-tail reporting).
+pub fn fraction_le(xs: &[f64], x: f64) -> f64 {
+    xs.iter().filter(|&&v| v <= x).count() as f64 / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_simple() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((quantile(&xs, 0.75) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_unsorted_input() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+    }
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_median() {
+        let xs = [10.0, 10.0, 10.0, 10.0, 40.0];
+        assert!((max_median_ratio(&xs) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_summary_ordering() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let b = BoxSummary::of(&xs);
+        assert!(b.min <= b.whisker_lo);
+        assert!(b.whisker_lo <= b.q1);
+        assert!(b.q1 <= b.median);
+        assert!(b.median <= b.q3);
+        assert!(b.q3 <= b.whisker_hi);
+        assert!(b.whisker_hi <= b.max);
+        assert_eq!(b.n, 100);
+    }
+
+    #[test]
+    fn box_summary_whiskers_clamped() {
+        let xs = [5.0, 5.0, 5.0];
+        let b = BoxSummary::of(&xs);
+        assert_eq!(b.whisker_lo, 5.0);
+        assert_eq!(b.whisker_hi, 5.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.5, 1.5, 1.6, 9.9, -3.0, 100.0];
+        let h = Histogram::build(&xs, 0.0, 10.0, 10);
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.counts[0], 2); // 0.5 and clamped -3.0
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 2); // 9.9 and clamped 100.0
+    }
+
+    #[test]
+    fn fraction_le_works() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((fraction_le(&xs, 2.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_render_nonempty() {
+        let xs = [1.0, 1.0, 2.0];
+        let h = Histogram::build(&xs, 0.0, 4.0, 4);
+        let r = h.render(20);
+        assert!(r.contains('#'));
+        assert_eq!(r.lines().count(), 4);
+    }
+}

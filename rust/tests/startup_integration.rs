@@ -1,0 +1,125 @@
+//! Cross-module integration: full startup simulations feeding the profiler,
+//! BootSeer vs baseline at the paper's scales, and real-bytes env-cache +
+//! checkpoint paths composing with the sim (no artifacts required).
+
+use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig};
+use bootseer::env::cache::{pack, snapshot_dir, unpack, CacheCapture};
+use bootseer::profiler::{LogParser, Stage, StageAnalysisService};
+use bootseer::startup::{run_startup, StartupKind, World};
+use bootseer::util::stats;
+
+/// Fig 12 shape: BootSeer beats baseline ~2x at every paper scale.
+#[test]
+fn bootseer_vs_baseline_all_paper_scales() {
+    for gpus in [16u32, 32, 48, 64, 128] {
+        let job = JobConfig::paper_moe(gpus);
+        let cluster = ClusterConfig::default();
+        let mut wb = World::new();
+        // Warm run records hot set + creates env cache.
+        run_startup(1, 0, &cluster, &job, &BootseerConfig::bootseer(), &mut wb, StartupKind::Full, 3);
+        let boot = run_startup(1, 1, &cluster, &job, &BootseerConfig::bootseer(), &mut wb, StartupKind::Full, 4);
+        let mut w0 = World::new();
+        let base = run_startup(1, 0, &cluster, &job, &BootseerConfig::baseline(), &mut w0, StartupKind::Full, 4);
+        let ratio = base.worker_phase_s / boot.worker_phase_s;
+        assert!(
+            (1.4..4.0).contains(&ratio),
+            "gpus={gpus}: base {:.1}s boot {:.1}s ratio {ratio:.2}",
+            base.worker_phase_s,
+            boot.worker_phase_s
+        );
+    }
+}
+
+/// The profiler round-trip at scale: log text -> parse -> durations match
+/// the outcome's own accounting.
+#[test]
+fn profiler_roundtrip_matches_outcome() {
+    let job = JobConfig::paper_moe(64);
+    let mut w = World::new();
+    let o = run_startup(
+        9, 0, &ClusterConfig::default(), &job, &BootseerConfig::baseline(), &mut w,
+        StartupKind::Full, 11,
+    );
+    let log: String = o.events.iter().map(|e| e.log_line() + "\n").collect();
+    let mut svc = StageAnalysisService::new();
+    svc.ingest_all(LogParser::parse_stream(&log));
+    assert!(svc.anomalies.is_empty());
+    let (b, e) = svc.db.job_stage_span(9, Stage::EnvSetup).unwrap();
+    let span = o.span(Stage::EnvSetup).unwrap();
+    assert!((b - span.0).abs() < 1e-6 && (e - span.1).abs() < 1e-6);
+    // Install durations from the DB equal the outcome's.
+    let mut from_db = svc.db.job_stage_durations(9, Stage::InstallScript);
+    let mut from_outcome = o.install_durations.clone();
+    from_db.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    from_outcome.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (a, b) in from_db.iter().zip(&from_outcome) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}
+
+/// Straggler elimination (Fig 14 shape) at the 128-GPU scale.
+#[test]
+fn env_cache_flattens_install_distribution() {
+    let job = JobConfig::paper_moe(128);
+    let cluster = ClusterConfig::default();
+    let mut w = World::new();
+    run_startup(1, 0, &cluster, &job, &BootseerConfig::bootseer(), &mut w, StartupKind::Full, 5);
+    let hit = run_startup(1, 1, &cluster, &job, &BootseerConfig::bootseer(), &mut w, StartupKind::Full, 6);
+    let mut w0 = World::new();
+    let base = run_startup(1, 0, &cluster, &job, &BootseerConfig::baseline(), &mut w0, StartupKind::Full, 6);
+    let spread_hit = stats::max(&hit.install_durations) - stats::min(&hit.install_durations);
+    let spread_base = stats::max(&base.install_durations) - stats::min(&base.install_durations);
+    assert!(spread_hit < spread_base / 3.0, "hit {spread_hit} base {spread_base}");
+}
+
+/// Real-bytes path: a fake site-packages dir, captured and restored on a
+/// "replacement node", byte-identical.
+#[test]
+fn env_cache_real_bytes_roundtrip() {
+    let root = std::env::temp_dir().join(format!("bs-int-env-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(root.join("site-packages")).unwrap();
+    std::fs::write(root.join("site-packages/base.py"), b"# preinstalled").unwrap();
+
+    let cap = CacheCapture::begin(&root).unwrap();
+    // "pip install" effects:
+    std::fs::create_dir_all(root.join("site-packages/nccl")).unwrap();
+    std::fs::write(root.join("site-packages/nccl/__init__.py"), vec![b'x'; 50_000]).unwrap();
+    std::fs::write(root.join("site-packages/base.py"), b"# patched").unwrap();
+    let archive = cap.finish(3).unwrap();
+
+    let replacement = std::env::temp_dir().join(format!("bs-int-env2-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&replacement);
+    std::fs::create_dir_all(replacement.join("site-packages")).unwrap();
+    std::fs::write(replacement.join("site-packages/base.py"), b"# preinstalled").unwrap();
+    let restored = unpack(&archive, &replacement).unwrap();
+    assert_eq!(restored.len(), 2);
+    let a = snapshot_dir(&root).unwrap();
+    let b = snapshot_dir(&replacement).unwrap();
+    assert_eq!(a, b, "replacement node environment identical to node 0");
+    std::fs::remove_dir_all(&root).unwrap();
+    std::fs::remove_dir_all(&replacement).unwrap();
+}
+
+/// pack/unpack handles many small files (site-packages shape).
+#[test]
+fn env_cache_many_files() {
+    let root = std::env::temp_dir().join(format!("bs-int-many-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut files = Vec::new();
+    for i in 0..200 {
+        let rel = std::path::PathBuf::from(format!("pkg{:02}/m{i}.py", i % 10));
+        let abs = root.join(&rel);
+        std::fs::create_dir_all(abs.parent().unwrap()).unwrap();
+        std::fs::write(&abs, format!("# module {i}\n").repeat(i % 7 + 1)).unwrap();
+        files.push(rel);
+    }
+    let archive = pack(&root, &files, 3).unwrap();
+    let dest = std::env::temp_dir().join(format!("bs-int-many2-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dest);
+    let restored = unpack(&archive, &dest).unwrap();
+    assert_eq!(restored.len(), 200);
+    assert_eq!(snapshot_dir(&root).unwrap(), snapshot_dir(&dest).unwrap());
+    std::fs::remove_dir_all(&root).unwrap();
+    std::fs::remove_dir_all(&dest).unwrap();
+}
