@@ -1,0 +1,56 @@
+//! Parallel cluster-replay microbench: the two-phase contention-aware
+//! replay (scheduler + parallel startup simulation) at 1 thread vs all
+//! cores, verifying the speedup is real and the result identical.
+//!
+//!     cargo bench --bench micro_replay_parallel
+//!     BOOTSEER_BENCH_FAST=1 cargo bench --bench micro_replay_parallel
+
+use bootseer::config::{BootseerConfig, ClusterConfig};
+use bootseer::trace::{gen_trace, replay_cluster, ReplayOptions};
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header(
+        "micro — parallel cluster replay",
+        "phase 2 scales across cores; results byte-identical at any thread count",
+    );
+    let fast = std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1");
+    let n_jobs = if fast { 60 } else { 300 };
+    let trace = gen_trace(1, n_jobs, 7.0 * 86400.0);
+    let cluster = ClusterConfig::default();
+    let cfg = BootseerConfig::baseline();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let mut b = Bench::new("micro_replay_parallel");
+    let mut hours_seq = 0.0;
+    b.iter(&format!("replay_{n_jobs}jobs_1thread"), || {
+        let r = replay_cluster(
+            &trace,
+            &cluster,
+            &cfg,
+            1,
+            &ReplayOptions { pool_gpus: None, threads: 1 },
+        );
+        hours_seq = r.startup_gpu_hours;
+        r.startup_gpu_hours
+    });
+    let mut hours_par = 0.0;
+    b.iter(&format!("replay_{n_jobs}jobs_{cores}threads"), || {
+        let r = replay_cluster(
+            &trace,
+            &cluster,
+            &cfg,
+            1,
+            &ReplayOptions { pool_gpus: None, threads: 0 },
+        );
+        hours_par = r.startup_gpu_hours;
+        r.startup_gpu_hours
+    });
+    assert_eq!(
+        hours_seq.to_bits(),
+        hours_par.to_bits(),
+        "parallel replay must be byte-identical to sequential"
+    );
+    println!("\ndeterminism check passed: {hours_seq} GPU-hours on both paths");
+    b.finish();
+}

@@ -4,7 +4,7 @@
 //! 1. Simulate the cluster startup of a 16-GPU MoE job (baseline vs warm
 //!    BootSeer) — the L3 coordinator path.
 //! 2. Run the REAL startup code paths that have real-byte engines:
-//!    environment-cache capture/restore (tar+zstd over an actual dir) and
+//!    environment-cache capture/restore (archive+RLE over an actual dir) and
 //!    striped checkpoint write/read (LocalStore, parallel reader pool).
 //! 3. Train the MoE transformer (L2 JAX + L1 Pallas, AOT→HLO→PJRT) for a
 //!    few hundred steps from Rust, logging the loss curve; checkpoint
@@ -21,10 +21,10 @@ use bootseer::trainer::{SyntheticCorpus, Trainer};
 use bootseer::util::{human, json::Json};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bootseer::util::error::Result<()> {
     let steps: u64 = std::env::var("BOOTSEER_E2E_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
     let artifacts = std::path::PathBuf::from("artifacts");
-    anyhow::ensure!(
+    bootseer::ensure!(
         artifacts.join("meta.json").exists(),
         "run `make artifacts` first (python AOT pass)"
     );
@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 3. real training over PJRT ----
     println!("== phase 3: train MoE transformer via AOT HLO on PJRT ==");
-    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let client = xla::PjRtClient::cpu().map_err(|e| bootseer::anyhow!("{e:?}"))?;
     let mut t = Trainer::new(&client, &artifacts, 42)?;
     println!(
         "model: {} params, {} layers, {} experts (L1 pallas kernel inside), batch {}x{}",

@@ -8,7 +8,8 @@
 
 use crate::hdfs::local::LocalStore;
 use crate::util::json::{self, Json};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// Metadata of one tensor in the checkpoint.
 #[derive(Clone, Debug, PartialEq)]
@@ -99,7 +100,7 @@ impl Checkpoint {
             bail!("truncated checkpoint manifest");
         }
         let manifest = std::str::from_utf8(&data[16..16 + mlen])?;
-        let m = json::parse(manifest).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let m = json::parse(manifest).map_err(|e| crate::anyhow!("manifest: {e}"))?;
         let step = m.get("step").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
         let n_elems =
             m.get("n_elems").and_then(|v| v.as_usize()).context("manifest n_elems")?;

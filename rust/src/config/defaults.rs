@@ -135,7 +135,7 @@ pub fn model_init_sync_s(n: usize) -> f64 {
     let n = n as f64;
     MODEL_INIT_PER_NODE_S * n.min(64.0) + 12.0 * (1.0 + n / 64.0).ln()
 }
-/// Env-cache restore unpack throughput (bytes/s, zstd decompress to disk).
+/// Env-cache restore unpack throughput (bytes/s, archive decompress to disk).
 pub const ENV_CACHE_UNPACK_BPS: f64 = 500.0e6;
 /// Env-cache creation: compress+snapshot throughput on node 0 (bytes/s).
 pub const ENV_CACHE_PACK_BPS: f64 = 100.0e6;
@@ -178,12 +178,34 @@ pub const OCI_UNPACK_BPS: f64 = 180.0e6;
 
 // ---- Scheduler model (§3.2: queuing ~100 s median, tail to hours) ----
 
-/// Lognormal mu of queue wait seconds.
+/// Lognormal mu of queue wait seconds. Used only by the *standalone*
+/// single-job startup path (`startup::run_startup`); the cluster replay
+/// derives queue waits from `scheduler::schedule_chains` over a finite pool.
 pub const QUEUE_WAIT_MU: f64 = 4.4; // median ≈ 81 s
-/// Lognormal sigma of queue wait.
+/// Lognormal sigma of queue wait (standalone path only; see above).
 pub const QUEUE_WAIT_SIGMA: f64 = 1.4;
 /// Resource allocation cost (seconds): "trivial, a few seconds".
 pub const ALLOC_BASE_S: f64 = 2.0;
+
+/// Scheduling-round cadence (seconds): the quota scheduler batches
+/// allocation decisions into periodic passes, so even an uncontended job
+/// waits ~U[0, round] — the structural source of the §3.2 "~100 s median"
+/// queue wait. Contention (a busy pool, head-of-line blocking) produces the
+/// hour-long tail on top.
+pub const SCHED_ROUND_S: f64 = 200.0;
+
+/// Target pool utilization when the cluster replay auto-sizes its GPU pool
+/// from trace demand (production clusters run hot; below saturation but
+/// close enough that bursts queue).
+pub const POOL_TARGET_UTILIZATION: f64 = 0.70;
+
+/// Fleet shared-service capacity, expressed in "node entitlements": the
+/// registry / cluster cache / HDFS tier is provisioned to serve this many
+/// concurrently-starting nodes at full per-node rate. When the set of
+/// concurrently starting jobs exceeds it, every starter's share of the
+/// shared services degrades proportionally (the §3 scale effect the
+/// per-job-isolated replay could not express).
+pub const FLEET_SERVICE_NODES: u32 = 256;
 
 #[cfg(test)]
 mod tests {

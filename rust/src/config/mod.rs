@@ -64,6 +64,11 @@ pub struct ClusterConfig {
     pub straggler_body_std: f64,
     pub straggler_tail_alpha: f64,
     pub straggler_cap: f64,
+    /// Fleet shared-service capacity in node entitlements (see
+    /// `defaults::FLEET_SERVICE_NODES`); the cluster replay divides
+    /// registry/cache/HDFS bandwidth among concurrently starting jobs once
+    /// their aggregate node count exceeds this.
+    pub fleet_service_nodes: u32,
 }
 
 impl Default for ClusterConfig {
@@ -90,6 +95,7 @@ impl Default for ClusterConfig {
             straggler_body_std: 0.05,
             straggler_tail_alpha: 1.2,
             straggler_cap: 4.0,
+            fleet_service_nodes: d::FLEET_SERVICE_NODES,
         }
     }
 }
@@ -135,6 +141,9 @@ impl ClusterConfig {
             straggler_body_std: doc.f64_or("cluster.straggler_body_std", base.straggler_body_std),
             straggler_tail_alpha: doc.f64_or("cluster.straggler_tail_alpha", base.straggler_tail_alpha),
             straggler_cap: doc.f64_or("cluster.straggler_cap", base.straggler_cap),
+            fleet_service_nodes: doc
+                .i64_or("cluster.fleet_service_nodes", base.fleet_service_nodes as i64)
+                as u32,
         }
     }
 }
@@ -161,6 +170,14 @@ pub struct JobConfig {
     pub dp: u32,
     /// Tensor-parallel degree within a node.
     pub tp: u32,
+    /// Identity seed of the container image this job runs. Jobs sharing a
+    /// seed share an image digest, so hot-set records recorded by one job
+    /// benefit every other (the cluster replay sets this from the trace's
+    /// `image_id`). `None` → derived per job id, the standalone behaviour.
+    pub image_seed: Option<u64>,
+    /// Identity seed of the runtime package set (keys the environment
+    /// cache). `None` → derived per job id.
+    pub env_seed: Option<u64>,
 }
 
 impl Default for JobConfig {
@@ -180,6 +197,8 @@ impl Default for JobConfig {
             pp: 2,
             dp: 8,
             tp: 8,
+            image_seed: None,
+            env_seed: None,
         }
     }
 }
@@ -223,6 +242,8 @@ impl JobConfig {
             pp: doc.i64_or("job.pp", base.pp as i64) as u32,
             dp: doc.i64_or("job.dp", base.dp as i64) as u32,
             tp: doc.i64_or("job.tp", base.tp as i64) as u32,
+            image_seed: base.image_seed,
+            env_seed: base.env_seed,
         }
     }
 }

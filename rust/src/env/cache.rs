@@ -9,15 +9,16 @@
 //! versions, GPU type, ...) expires the cache.
 //!
 //! This module does the real filesystem work — snapshot, diff, pack
-//! (custom archive + zstd), unpack — and keeps the registry of cache
-//! entries. The simulator models the *time* of these operations; the e2e
-//! example and tests run them for real.
+//! (custom archive + RLE compression), unpack — and keeps the registry of
+//! cache entries. The simulator models the *time* of these operations; the
+//! e2e example and tests run them for real.
 
-use anyhow::{bail, Context, Result};
-use sha2::{Digest, Sha256};
+use crate::util::compress::{compress, decompress};
+use crate::util::error::{Context, Result};
+use crate::util::sha256::Sha256;
+use crate::bail;
 use std::collections::BTreeMap;
 use std::fs;
-use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 /// Content fingerprint of one file.
@@ -50,7 +51,7 @@ fn walk(root: &Path, dir: &Path, out: &mut BTreeMap<PathBuf, FileStamp>) -> Resu
             h.update(&data);
             out.insert(
                 path.strip_prefix(root).unwrap().to_path_buf(),
-                FileStamp { len: data.len() as u64, sha: h.finalize().into() },
+                FileStamp { len: data.len() as u64, sha: h.finalize() },
             );
         }
         // Symlinks and special files are skipped (matches the paper's
@@ -72,7 +73,8 @@ pub fn diff_snapshots(
 }
 
 /// Archive format: magic, then per file
-/// `[u32 path_len][path utf8][u64 data_len][data]`, zstd-compressed.
+/// `[u32 path_len][path utf8][u64 data_len][data]`, RLE-compressed
+/// (`util::compress`).
 const MAGIC: &[u8; 8] = b"BSENVC01";
 
 /// Pack `files` (relative to `root`) into a compressed archive.
@@ -88,16 +90,13 @@ pub fn pack(root: &Path, files: &[PathBuf], level: i32) -> Result<Vec<u8>> {
         raw.extend_from_slice(&(data.len() as u64).to_le_bytes());
         raw.extend_from_slice(&data);
     }
-    let mut enc = zstd::Encoder::new(Vec::new(), level)?;
-    enc.write_all(&raw)?;
-    Ok(enc.finish()?)
+    Ok(compress(&raw, level))
 }
 
 /// Restore an archive into `dest` (creating directories as needed).
 /// Returns the restored relative paths.
 pub fn unpack(archive: &[u8], dest: &Path) -> Result<Vec<PathBuf>> {
-    let mut raw = Vec::new();
-    zstd::Decoder::new(archive)?.read_to_end(&mut raw)?;
+    let raw = decompress(archive).context("env-cache archive")?;
     if raw.len() < 8 || &raw[..8] != MAGIC {
         bail!("bad env-cache archive magic");
     }
@@ -282,9 +281,7 @@ mod tests {
         raw.extend_from_slice(p);
         raw.extend_from_slice(&(1u64).to_le_bytes());
         raw.push(0);
-        let mut enc = zstd::Encoder::new(Vec::new(), 1).unwrap();
-        enc.write_all(&raw).unwrap();
-        let archive = enc.finish().unwrap();
+        let archive = compress(&raw, 1);
         let d = tmpdir("escape");
         assert!(unpack(&archive, &d).is_err());
         fs::remove_dir_all(&d).unwrap();
@@ -293,7 +290,7 @@ mod tests {
     #[test]
     fn unpack_rejects_garbage() {
         let d = tmpdir("garbage");
-        assert!(unpack(b"not-zstd", &d).is_err());
+        assert!(unpack(b"not-an-archive", &d).is_err());
         fs::remove_dir_all(&d).unwrap();
     }
 

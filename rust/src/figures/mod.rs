@@ -23,7 +23,9 @@ pub fn default_trace_jobs() -> usize {
         })
 }
 
-/// Run (or reuse) the week replay all §3 figures share.
+/// Run (or reuse) the week replay all §3 figures share: the full two-phase
+/// cluster replay (scheduler-derived queue waits over a demand-sized pool,
+/// contention-aware parallel startup simulation — see `trace::replay`).
 pub fn week_replay(seed: u64) -> ReplayResult {
     let trace = gen_trace(seed, default_trace_jobs(), 7.0 * 86400.0);
     replay(&trace, &ClusterConfig::default(), &BootseerConfig::baseline(), seed)

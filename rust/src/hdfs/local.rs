@@ -11,7 +11,8 @@
 
 use crate::hdfs::layout::StripeLayout;
 use crate::util::json::{self, Json};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::fs::{self, File};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
@@ -84,12 +85,12 @@ impl LocalStore {
     pub fn layout(&self, name: &str) -> Result<StripeLayout> {
         let text = fs::read_to_string(self.manifest_path(name))
             .with_context(|| format!("manifest for {name}"))?;
-        let m = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let m = json::parse(&text).map_err(|e| crate::anyhow!("manifest parse: {e}"))?;
         let get = |k: &str| -> Result<u64> {
             m.get(k)
                 .and_then(|v| v.as_f64())
                 .map(|x| x as u64)
-                .ok_or_else(|| anyhow::anyhow!("manifest missing {k}"))
+                .ok_or_else(|| crate::anyhow!("manifest missing {k}"))
         };
         Ok(StripeLayout::new(
             get("logical_bytes")?,

@@ -76,6 +76,19 @@ impl HotSetRegistry {
         rec.reports += 1;
     }
 
+    /// Directly install a hot-set record for `image_digest`. The cluster
+    /// replay's `trace::SharedWorld` uses this to materialize the record an
+    /// earlier (virtual-time) startup of the same image produced, without
+    /// re-running its record pass; equivalent to one `upload` whose
+    /// recorder saw exactly `blocks` inside the window.
+    pub fn seed_record(&mut self, image_digest: u64, blocks: impl IntoIterator<Item = u32>) {
+        let rec = self.records.entry(image_digest).or_default();
+        for b in blocks {
+            rec.blocks.insert(b);
+        }
+        rec.reports += 1;
+    }
+
     /// Fetch the hot set for an image; None on first-ever use (the record
     /// run must fall back to lazy loading).
     pub fn lookup(&self, image_digest: u64) -> Option<Vec<u32>> {
@@ -140,6 +153,20 @@ mod tests {
         assert!(reg.has_record(7));
         reg.invalidate(7);
         assert_eq!(reg.lookup(7), None);
+    }
+
+    #[test]
+    fn seed_record_equivalent_to_upload() {
+        let mut via_upload = HotSetRegistry::new(120.0);
+        let mut rec = AccessRecorder::new();
+        for (k, b) in [9u32, 3, 7, 3].into_iter().enumerate() {
+            rec.record(b, k as f64 * 0.05);
+        }
+        via_upload.upload(5, &rec);
+        let mut via_seed = HotSetRegistry::new(120.0);
+        via_seed.seed_record(5, [9u32, 3, 7, 3]);
+        assert_eq!(via_upload.lookup(5), via_seed.lookup(5));
+        assert!(via_seed.has_record(5));
     }
 
     #[test]

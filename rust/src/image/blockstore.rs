@@ -7,7 +7,7 @@
 //! env-cache packer, and `micro_blockstore` — plus the dedup accounting the
 //! simulator reads.
 
-use sha2::{Digest, Sha256};
+use crate::util::sha256::Sha256;
 use std::collections::HashMap;
 
 /// 256-bit content digest.
@@ -26,7 +26,7 @@ impl std::fmt::Debug for BlockDigest {
 pub fn digest_of(data: &[u8]) -> BlockDigest {
     let mut h = Sha256::new();
     h.update(data);
-    BlockDigest(h.finalize().into())
+    BlockDigest(h.finalize())
 }
 
 /// In-memory content-addressed store with refcounts and dedup statistics.

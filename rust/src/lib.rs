@@ -11,11 +11,16 @@
 //!   cluster substrate everything is evaluated on.
 //! * **L2/L1 (python/, build-time only)** — the MoE training workload
 //!   (JAX fwd/bwd + Pallas expert kernel) AOT-lowered to HLO text.
-//! * **runtime** — loads the HLO artifacts over PJRT and runs real training
-//!   steps after startup completes.
+//! * **runtime** (feature `pjrt`) — loads the HLO artifacts over PJRT and
+//!   runs real training steps after startup completes. Gated because the
+//!   `xla` crate is not in the offline crate set; the default build is
+//!   dependency-free.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results on every figure.
+//! The cluster-scale evaluation path is [`trace`]: a synthetic production
+//! week scheduled over a finite GPU pool by [`scheduler`], then replayed
+//! startup-by-startup (in parallel, contention-aware) through [`startup`].
+//! See `README.md` for the module map and `docs/replay.md` for the replay
+//! engine's design.
 
 pub mod ckpt;
 pub mod config;
@@ -24,11 +29,13 @@ pub mod figures;
 pub mod hdfs;
 pub mod image;
 pub mod profiler;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
 pub mod startup;
 pub mod trace;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod util;
 

@@ -3,16 +3,16 @@
 //! Subcommands:
 //!   figures [--out DIR]          regenerate every paper figure's data
 //!   startup --gpus N [...]       simulate one job startup, print stages
-//!   trace [--jobs N]             synthesize + summarize a cluster week
+//!   trace [--jobs N] [...]       synthesize + replay a cluster week
 //!   train [--steps N] [...]      run real training over the AOT artifacts
+//!                                (requires the `pjrt` feature)
 //!   version
 
 use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig};
 use bootseer::figures;
 use bootseer::startup::{run_startup, StartupKind, World};
-use bootseer::trace::gen_trace;
-use bootseer::trainer::{SyntheticCorpus, Trainer};
-use bootseer::util::human;
+use bootseer::trace::{gen_trace, replay_cluster, ReplayOptions};
+use bootseer::util::{human, stats};
 use std::path::PathBuf;
 
 fn main() {
@@ -33,8 +33,8 @@ fn main() {
                 "usage: bootseer <figures|startup|trace|train|version> [options]\n\
                  \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14)\
                  \n  startup --gpus N [--bootseer] [--hot-update] [--seed S]\
-                 \n  trace   [--jobs N] [--seed S]\
-                 \n  train   [--steps N] [--artifacts DIR] [--seed S]"
+                 \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--no-replay]\
+                 \n  train   [--steps N] [--artifacts DIR] [--seed S]   (pjrt feature)"
             );
             2
         }
@@ -137,6 +137,8 @@ fn cmd_startup(rest: &[String]) -> i32 {
 fn cmd_trace(rest: &[String]) -> i32 {
     let jobs: usize = opt(rest, "--jobs").and_then(|s| s.parse().ok()).unwrap_or(2000);
     let seed: u64 = opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let pool_gpus: Option<u32> = opt(rest, "--pool-gpus").and_then(|s| s.parse().ok());
+    let threads: usize = opt(rest, "--threads").and_then(|s| s.parse().ok()).unwrap_or(0);
     let t = gen_trace(seed, jobs, 7.0 * 86400.0);
     let gpus: u64 = t.iter().map(|j| j.gpus as u64).sum();
     let startups: u64 = t.iter().map(|j| (j.full_startups + j.hot_updates) as u64).sum();
@@ -150,10 +152,55 @@ fn cmd_trace(rest: &[String]) -> i32 {
         let n = t.iter().filter(|j| j.gpus >= lo && j.gpus <= hi).count();
         println!("  {label:>9}: {n} jobs");
     }
+    if flag(rest, "--no-replay") {
+        return 0;
+    }
+    let n_threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    println!("\nreplaying the week ({n_threads} threads)...");
+    let t0 = std::time::Instant::now();
+    let r = replay_cluster(
+        &t,
+        &ClusterConfig::default(),
+        &BootseerConfig::baseline(),
+        seed,
+        &ReplayOptions { pool_gpus, threads },
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    if !r.queue_waits.is_empty() {
+        println!(
+            "pool: {} GPUs | queue wait: median {} p90 {} max {} (scheduler-derived)",
+            r.pool_gpus,
+            human::secs(stats::median(&r.queue_waits)),
+            human::secs(stats::quantile(&r.queue_waits, 0.9)),
+            human::secs(stats::max(&r.queue_waits)),
+        );
+    }
+    println!(
+        "GPU-hours: training {:.0}, startup {:.0} → startup fraction {:.2}%",
+        r.train_gpu_hours,
+        r.startup_gpu_hours,
+        100.0 * r.startup_fraction()
+    );
+    println!("replayed {} startups in {}", startups, human::secs(wall));
     0
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_rest: &[String]) -> i32 {
+    eprintln!(
+        "the `train` subcommand needs the PJRT runtime: rebuild with\n\
+         `cargo build --release --features pjrt` (requires the xla crate; see README)"
+    );
+    1
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(rest: &[String]) -> i32 {
+    use bootseer::trainer::{SyntheticCorpus, Trainer};
     let steps: u64 = opt(rest, "--steps").and_then(|s| s.parse().ok()).unwrap_or(100);
     let seed: i32 = opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
     let dir = PathBuf::from(opt(rest, "--artifacts").unwrap_or_else(|| "artifacts".to_string()));

@@ -1,16 +1,33 @@
 //! The per-node Log Parser (§4.1): extracts `StageEvent`s from raw worker
-//! log streams, tolerating interleaved non-bootseer lines.
+//! log streams, tolerating interleaved non-bootseer lines. Hand-rolled
+//! field parsing (the offline crate set has no `regex`): a line matches
+//! exactly `[bootseer] ts=F job=N attempt=N node=N stage=S event=begin|end`.
 
 use crate::profiler::events::{EventKind, Stage, StageEvent};
-use once_cell::sync::Lazy;
-use regex::Regex;
 
-static LINE_RE: Lazy<Regex> = Lazy::new(|| {
-    Regex::new(
-        r"^\[bootseer\] ts=([0-9]+(?:\.[0-9]+)?) job=([0-9]+) attempt=([0-9]+) node=([0-9]+) stage=([a-z_]+) event=(begin|end)$",
-    )
-    .expect("static regex")
-});
+/// Strip `key=` from a token, leaving the value.
+fn field<'a>(tok: &'a str, key: &str) -> Option<&'a str> {
+    tok.strip_prefix(key)?.strip_prefix('=')
+}
+
+/// Parse a non-negative decimal with optional fraction (the regex accepted
+/// `[0-9]+(\.[0-9]+)?` — notably not `1e5`, `inf`, or a leading sign).
+fn parse_ts(s: &str) -> Option<f64> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit() || b == b'.') {
+        return None;
+    }
+    let mut parts = s.split('.');
+    let int = parts.next()?;
+    if int.is_empty() {
+        return None;
+    }
+    if let Some(frac) = parts.next() {
+        if frac.is_empty() || parts.next().is_some() {
+            return None;
+        }
+    }
+    s.parse().ok()
+}
 
 /// Stateless log parser.
 pub struct LogParser;
@@ -18,15 +35,24 @@ pub struct LogParser;
 impl LogParser {
     /// Parse one line; `None` if it is not a bootseer stage line.
     pub fn parse_line(line: &str) -> Option<StageEvent> {
-        let caps = LINE_RE.captures(line.trim())?;
-        Some(StageEvent {
-            ts: caps[1].parse().ok()?,
-            job: caps[2].parse().ok()?,
-            attempt: caps[3].parse().ok()?,
-            node: caps[4].parse().ok()?,
-            stage: Stage::parse(&caps[5])?,
-            kind: if &caps[6] == "begin" { EventKind::Begin } else { EventKind::End },
-        })
+        let mut toks = line.trim().split(' ');
+        if toks.next()? != "[bootseer]" {
+            return None;
+        }
+        let ts = parse_ts(field(toks.next()?, "ts")?)?;
+        let job = field(toks.next()?, "job")?.parse().ok()?;
+        let attempt = field(toks.next()?, "attempt")?.parse().ok()?;
+        let node = field(toks.next()?, "node")?.parse().ok()?;
+        let stage = Stage::parse(field(toks.next()?, "stage")?)?;
+        let kind = match field(toks.next()?, "event")? {
+            "begin" => EventKind::Begin,
+            "end" => EventKind::End,
+            _ => return None,
+        };
+        if toks.next().is_some() {
+            return None; // trailing junk → not one of our lines
+        }
+        Some(StageEvent { ts, job, attempt, node, stage, kind })
     }
 
     /// Parse a whole log stream, skipping foreign lines.

@@ -3,7 +3,8 @@
 //! Python never runs on this path — the artifacts are self-contained.
 
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Parsed `artifacts/meta.json`: the wire contract between aot.py and the
@@ -104,7 +105,7 @@ impl Engine {
 /// Build an f32 literal of the given shape from a slice.
 pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {shape:?} != len {}", data.len());
+    crate::ensure!(n == data.len(), "shape {shape:?} != len {}", data.len());
     let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
     xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))
 }
@@ -112,7 +113,7 @@ pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
 /// Build an i32 literal of the given shape.
 pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product();
-    anyhow::ensure!(n == data.len(), "shape {shape:?} != len {}", data.len());
+    crate::ensure!(n == data.len(), "shape {shape:?} != len {}", data.len());
     let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
     xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))
 }

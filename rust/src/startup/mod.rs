@@ -1,7 +1,30 @@
 //! Startup pipeline (paper Figure 2): stage orchestration with global sync
-//! barriers, full-startup vs hot-update, and the cluster-persistent World
-//! (hot-set records, env caches) that BootSeer exploits across restarts.
+//! barriers, full-startup vs hot-update, and the cluster-persistent
+//! [`World`] (hot-set records, env caches) that BootSeer exploits across
+//! restarts.
+//!
+//! Entry points:
+//!
+//! * [`run_startup`] — standalone single-job form: the Scheduler phase is
+//!   sampled from the §3.2 marginal distribution. Used by the CLI
+//!   `startup` subcommand, the figure sweeps (Figs 6/7/12/13/14) and the
+//!   examples.
+//! * [`run_startup_with`] — replay form: the caller supplies a
+//!   [`StartupContext`] whose queue wait was derived by
+//!   [`crate::scheduler::schedule_chains`] over a finite pool, and a
+//!   cluster whose shared-service capacities already reflect contention
+//!   with concurrently starting jobs. This is what [`crate::trace`]'s
+//!   cluster replay drives in parallel.
+//!
+//! Worker-phase stages (Image Loading → Environment Setup → Model
+//! Initialization, each ending in a global sync barrier) are planned by the
+//! subsystem planners in [`crate::image`], [`crate::env`] and
+//! [`crate::ckpt`], and run on the fluid simulator in [`crate::sim`].
+//! Every stage emits profiler events ([`crate::profiler`]) exactly like the
+//! production deployment logs them.
 
 pub mod pipeline;
 
-pub use pipeline::{run_startup, StartupKind, StartupOutcome, World};
+pub use pipeline::{
+    run_startup, run_startup_with, StartupContext, StartupKind, StartupOutcome, World,
+};

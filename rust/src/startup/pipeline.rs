@@ -81,8 +81,24 @@ impl StartupOutcome {
     }
 }
 
+/// The pre-worker phase a startup runs under: how long it queued and how
+/// long allocation took. The standalone [`run_startup`] samples `queue_s`
+/// from the §3.2 lognormal; the cluster replay ([`crate::trace`]) passes
+/// waits derived from [`crate::scheduler::schedule_chains`] over a finite
+/// pool.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StartupContext {
+    pub queue_s: f64,
+    pub alloc_s: f64,
+}
+
 /// Run one startup of `job` on a fresh allocation, mutating `world`
 /// (hot-set records, env caches). Deterministic for a given seed.
+///
+/// Standalone form: samples the queue wait from the §3.2 marginal
+/// distribution (single-job demos, figure sweeps). Inside the cluster
+/// replay use [`run_startup_with`], which takes the scheduler-derived
+/// [`StartupContext`] instead.
 pub fn run_startup(
     job_id: u64,
     attempt: u32,
@@ -94,27 +110,53 @@ pub fn run_startup(
     seed: u64,
 ) -> StartupOutcome {
     let nodes = job.nodes(cluster_cfg);
+    let mut rng = Rng::seeded(seed ^ 0x57A2_7009 ^ job_id);
+    let ctx = if kind == StartupKind::Full {
+        StartupContext {
+            queue_s: rng.lognormal(d::QUEUE_WAIT_MU, d::QUEUE_WAIT_SIGMA),
+            alloc_s: d::ALLOC_BASE_S + 0.02 * nodes as f64,
+        }
+    } else {
+        StartupContext::default() // hot update keeps its allocation
+    };
+    run_startup_with(job_id, attempt, cluster_cfg, job, cfg, world, kind, seed, ctx)
+}
+
+/// Run one startup with an externally supplied scheduler phase (`ctx`).
+/// This is the replay path: no sampling happens here — queue waits come
+/// from the caller, worker-phase durations from the fluid simulator.
+#[allow(clippy::too_many_arguments)]
+pub fn run_startup_with(
+    job_id: u64,
+    attempt: u32,
+    cluster_cfg: &ClusterConfig,
+    job: &JobConfig,
+    cfg: &BootseerConfig,
+    world: &mut World,
+    kind: StartupKind,
+    seed: u64,
+    ctx: StartupContext,
+) -> StartupOutcome {
+    let nodes = job.nodes(cluster_cfg);
     let cluster = ClusterConfig { nodes, ..cluster_cfg.clone() };
     let mut cs = ClusterSim::build(&cluster, seed ^ job_id.wrapping_mul(0x9E37_79B9));
-    let mut rng = Rng::seeded(seed ^ 0x57A2_7009 ^ job_id);
 
     let img = ImageSpec::synth(
-        job_id ^ 0x1AA6E, // image identity is per-job (same across restarts)
+        // Image identity: shared across jobs when the caller assigns one
+        // (cluster replay), else per-job (same across restarts either way).
+        job.image_seed.unwrap_or(job_id ^ 0x1AA6E),
         job.image_bytes,
         job.image_block_bytes,
         job.image_hot_fraction,
     );
-    let pkgs = PackageSet::synth(job, job_id ^ 0x9AC5);
+    let pkgs = PackageSet::synth(job, job.env_seed.unwrap_or(job_id ^ 0x9AC5));
 
     let mut events = Vec::new();
     let n = nodes as usize;
 
     // ---- Scheduler phase (job-level; GPUs not yet allocated) ----
     let (queue_s, alloc_s) = if kind == StartupKind::Full {
-        (
-            rng.lognormal(d::QUEUE_WAIT_MU, d::QUEUE_WAIT_SIGMA),
-            d::ALLOC_BASE_S + 0.02 * nodes as f64,
-        )
+        (ctx.queue_s, ctx.alloc_s)
     } else {
         (0.0, 0.0) // hot update keeps its allocation
     };

@@ -1,17 +1,47 @@
-//! Production-trace workload generator + replay (§3).
+//! Production-trace workload generator + contention-aware cluster replay
+//! (§3).
 //!
 //! The paper's characterization runs over a week of cluster data: 28,000+
 //! jobs, 700,000+ requested GPUs, with the distributions reported in §3
 //! (most jobs small; large jobs restart 2–8 times, sometimes 20+; queue
-//! waits ~100 s median with hour-long tails). `gen_trace` synthesizes a
-//! trace with those marginals; `replay` runs every startup of every job
-//! through the full pipeline simulator and feeds the profiler, producing
-//! the duration DB behind Figures 1 and 3–7.
+//! waits ~100 s median with hour-long tails). [`gen_trace`] synthesizes a
+//! trace with those marginals; [`replay_cluster`] replays every startup of
+//! every job and feeds the profiler, producing the duration DB behind
+//! Figures 1 and 3–7.
+//!
+//! The replay is a two-phase engine (design note: `docs/replay.md`):
+//!
+//! 1. **Schedule** — [`schedule_trace`] turns every job into a
+//!    [`crate::scheduler::ChainJob`] (one segment per full startup;
+//!    restarts release their GPUs and re-enter the queue, hot updates keep
+//!    their allocation) and runs [`crate::scheduler::schedule_chains`] over
+//!    a finite GPU pool. Queue waits are *derived from contention*, not
+//!    sampled.
+//! 2. **Replay** — every startup becomes an independent simulation unit
+//!    with a deterministic per-unit seed, replayed in parallel across
+//!    threads. Shared-service bandwidth (registry, cluster cache, HDFS) is
+//!    charged against the set of *concurrently starting* jobs from phase 1,
+//!    and warm-cache state (image hot-set records, environment caches) is
+//!    served from a [`SharedWorld`] registry keyed by image digest with
+//!    virtual-time visibility — so results are byte-identical regardless of
+//!    thread count.
+//!
+//! [`replay`] is the convenience wrapper with auto-sized pool and
+//! auto-detected threads; `bootseer trace --pool-gpus N --threads T`
+//! exposes both knobs.
 
+use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
+use crate::env::packages::PackageSet;
+use crate::image::spec::ImageSpec;
 use crate::profiler::StageAnalysisService;
-use crate::startup::{run_startup, StartupKind, StartupOutcome, World};
+use crate::scheduler::{schedule_chains, ChainJob, ChainOutcome};
+use crate::startup::{
+    run_startup_with, StartupContext, StartupKind, StartupOutcome, World,
+};
 use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// One job in the synthetic week.
 #[derive(Clone, Debug)]
@@ -27,6 +57,10 @@ pub struct TraceJob {
     /// Productive training time between startups, hours.
     pub train_hours: f64,
     pub priority: u32,
+    /// Container image identity. Many jobs share a platform image, so one
+    /// job's hot-set record and environment cache warm every later job on
+    /// the same image — as in production (§4.2/§4.3).
+    pub image_id: u64,
 }
 
 /// Job-scale buckets used by the §3 figures.
@@ -45,6 +79,42 @@ pub fn bucket_of(gpus: u32) -> usize {
         .iter()
         .position(|&(lo, hi, _)| gpus >= lo && gpus <= hi)
         .unwrap_or(SCALE_BUCKETS.len() - 1)
+}
+
+/// Shared container-image pool sizes per job size class (small / medium /
+/// large). Small is a zoo of team images; the few flagship-scale images are
+/// heavily shared.
+const IMAGE_POOL: [u64; 3] = [12, 6, 4];
+const IMAGE_CLASS_BASE: [u64; 3] = [0, 1000, 2000];
+
+fn image_class(gpus: u32) -> usize {
+    if gpus <= 64 {
+        0
+    } else if gpus <= 512 {
+        1
+    } else {
+        2
+    }
+}
+
+/// SplitMix64 finalizer (stateless hash; mirrors `util::rng`'s seeder).
+fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic per-image size factor (fraction of the paper's 28.62 GB
+/// image). Images used by bigger job classes are bigger, preserving §3.1's
+/// "smaller jobs tend to involve smaller container images".
+pub fn image_size_factor(image_id: u64) -> f64 {
+    const BANDS: [(f64, f64); 3] = [(0.30, 0.60), (0.55, 0.90), (0.85, 1.10)];
+    let cls = ((image_id / 1000) as usize).min(2);
+    let h = mix64(image_id.wrapping_mul(0x9E3779B97F4A7C15));
+    let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    let (lo, hi) = BANDS[cls];
+    lo + u * (hi - lo)
 }
 
 fn poisson(rng: &mut Rng, lambda: f64) -> u32 {
@@ -97,17 +167,189 @@ pub fn gen_trace(seed: u64, n_jobs: usize, horizon_s: f64) -> Vec<TraceJob> {
             };
             let full_startups = 1 + poisson(&mut rng, lambda.min(20.0)) + storm;
             let hot_updates = poisson(&mut rng, 0.2 + lambda.min(6.0) / 3.0);
+            let submit_s = rng.f64() * horizon_s;
+            let priority = rng.weighted(&[0.1, 0.7, 0.2]) as u32;
+            let cls = image_class(gpus);
+            let image_id = IMAGE_CLASS_BASE[cls] + rng.below(IMAGE_POOL[cls]);
             TraceJob {
                 id: i as u64 + 1,
-                submit_s: rng.f64() * horizon_s,
+                submit_s,
                 gpus,
                 full_startups,
                 hot_updates,
                 train_hours,
-                priority: rng.weighted(&[0.1, 0.7, 0.2]) as u32,
+                priority,
+                image_id,
             }
         })
         .collect()
+}
+
+/// The startup-relevant job configuration the replay derives for a trace
+/// job: image size follows the shared image, checkpoint size follows job
+/// scale, PP widens with node count so the per-node resume share stays in
+/// the production-realistic range (Fig 5's 100–200 s model-init band).
+pub fn trace_job_config(tj: &TraceJob) -> JobConfig {
+    let img_f = image_size_factor(tj.image_id);
+    let size_f = (tj.gpus as f64 / 128.0).clamp(0.05, 4.0);
+    let base = JobConfig::paper_moe(tj.gpus.max(16));
+    let nodes_est = (tj.gpus.max(16) + 7) / 8;
+    JobConfig {
+        gpus: tj.gpus,
+        image_bytes: (base.image_bytes as f64 * img_f) as u64,
+        ckpt_bytes: (base.ckpt_bytes as f64 * size_f) as u64,
+        pp: base.pp.max(nodes_est / 4),
+        image_seed: Some(0x1AA6E ^ tj.image_id.wrapping_mul(0x9E3779B97F4A7C15)),
+        env_seed: Some(0x9AC5 ^ tj.image_id.wrapping_mul(0xA24BAED4963EE407)),
+        ..base
+    }
+}
+
+/// Closed-form startup-duration estimate (seconds) used by phase 1 to size
+/// scheduler segments and by the contention sweep to bound each startup's
+/// interval. Deliberately coarse — the replay measures the real duration —
+/// but in the right band (a few hundred seconds for typical jobs).
+pub fn estimate_startup_s(job: &JobConfig, cluster: &ClusterConfig) -> f64 {
+    let n = job.nodes(cluster).max(1) as f64;
+    let alloc = d::ALLOC_BASE_S + 0.02 * n;
+    let hot_bytes = job.image_bytes as f64 * job.image_hot_fraction;
+    let hot_blocks = (hot_bytes / job.image_block_bytes as f64).max(1.0);
+    let contention = 1.0 + d::LAZY_CONTENTION_PENALTY * (n - 1.0).min(31.0);
+    let image = d::CONTAINER_START_S
+        + hot_blocks * d::LAZY_MISS_LATENCY_S * contention
+        + hot_bytes / d::NODE_NIC_BPS;
+    let env = job.env_packages as f64
+        * (d::SCM_ADMIT_BASE_S + job.env_install_cpu_mean_s + 0.02)
+        + d::ENV_DAEMON_BASE_S
+        + d::env_daemon_sync_s(n as usize);
+    let resume = (job.ckpt_bytes as f64 / job.pp.max(1) as f64) / d::HDFS_STREAM_BPS;
+    let init = d::MODEL_INIT_BASE_S + d::model_init_sync_s(n as usize) + resume;
+    alloc + image + env + init
+}
+
+/// Demand-based GPU-pool sizing: total GPU-seconds the trace wants, spread
+/// over the submission horizon, at the target utilization — then clamped so
+/// the largest job fits at all.
+pub fn default_pool_gpus(trace: &[TraceJob], cluster: &ClusterConfig) -> u32 {
+    let ests: Vec<f64> = trace
+        .iter()
+        .map(|tj| estimate_startup_s(&trace_job_config(tj), cluster))
+        .collect();
+    pool_from_demand(trace, &ests)
+}
+
+/// Pool sizing from precomputed per-job startup estimates.
+fn pool_from_demand(trace: &[TraceJob], ests: &[f64]) -> u32 {
+    let horizon = trace
+        .iter()
+        .map(|t| t.submit_s)
+        .fold(0.0f64, f64::max)
+        .max(3600.0);
+    let mut demand = 0.0;
+    for (tj, est) in trace.iter().zip(ests) {
+        demand += tj.gpus as f64 * (tj.train_hours * 3600.0 + tj.full_startups as f64 * est);
+    }
+    let pool = ((demand / horizon / d::POOL_TARGET_UTILIZATION / 8.0).ceil() as u32).max(1) * 8;
+    pool.max(trace.iter().map(|t| t.gpus).max().unwrap_or(8))
+}
+
+/// Phase-1 output: the pool and every job's scheduled segments.
+pub struct TraceSchedule {
+    pub pool_gpus: u32,
+    /// One outcome per trace job, in trace order; segment `k` is the job's
+    /// `k`-th full startup.
+    pub outcomes: Vec<ChainOutcome>,
+    /// Per-job startup-duration estimate (seconds).
+    pub ests: Vec<f64>,
+}
+
+/// Phase 1: run the event-driven chain scheduler over the whole trace.
+/// Every full startup of every job gets a contention-derived start time and
+/// queue wait; restarts re-enter the queue, hot updates keep their
+/// allocation and never appear here.
+pub fn schedule_trace(
+    trace: &[TraceJob],
+    cluster: &ClusterConfig,
+    pool_gpus: Option<u32>,
+) -> TraceSchedule {
+    let jobs_cfg: Vec<JobConfig> = trace.iter().map(trace_job_config).collect();
+    schedule_trace_with(trace, cluster, pool_gpus, &jobs_cfg)
+}
+
+/// [`schedule_trace`] over already-derived job configs — the replay calls
+/// this so phase 1 and phase 2 share one derivation and can never
+/// desynchronize.
+fn schedule_trace_with(
+    trace: &[TraceJob],
+    cluster: &ClusterConfig,
+    pool_gpus: Option<u32>,
+    jobs_cfg: &[JobConfig],
+) -> TraceSchedule {
+    let ests: Vec<f64> =
+        jobs_cfg.iter().map(|job| estimate_startup_s(job, cluster)).collect();
+    let max_gpus = trace.iter().map(|t| t.gpus).max().unwrap_or(8);
+    let pool = pool_gpus
+        .unwrap_or_else(|| pool_from_demand(trace, &ests))
+        .max(max_gpus);
+    let chains: Vec<ChainJob> = trace
+        .iter()
+        .zip(&ests)
+        .map(|(tj, &est)| {
+            let slice = tj.train_hours * 3600.0 / tj.full_startups.max(1) as f64;
+            ChainJob {
+                id: tj.id,
+                submit_s: tj.submit_s,
+                gpus: tj.gpus,
+                priority: tj.priority,
+                segments: vec![est + slice; tj.full_startups.max(1) as usize],
+            }
+        })
+        .collect();
+    let outcomes = schedule_chains(pool, &chains, d::SCHED_ROUND_S);
+    TraceSchedule { pool_gpus: pool, outcomes, ests }
+}
+
+/// Cluster-wide warm-state registry, keyed by image digest (hot-set
+/// records) and environment signature (env caches). Built once from the
+/// phase-1 schedule: an artifact becomes *available* at the estimated end
+/// of the chronologically first startup that would have produced it, and a
+/// startup at virtual time `t` sees exactly the artifacts with
+/// `available_s <= t`. Visibility is a pure function of the schedule, never
+/// of thread interleaving — this is what makes the parallel replay
+/// byte-identical at any `--threads`.
+pub struct SharedWorld {
+    images: HashMap<u64, SharedImage>,
+    envs: HashMap<u64, SharedEnv>,
+}
+
+struct SharedImage {
+    hot_blocks: Vec<u32>,
+    available_s: f64,
+}
+
+struct SharedEnv {
+    cache_bytes: u64,
+    available_s: f64,
+}
+
+impl SharedWorld {
+    /// Materialize the [`World`] a startup beginning at virtual time `t`
+    /// observes: warm iff some earlier-ending startup shared its image /
+    /// environment signature.
+    pub fn world_at(&self, digest: u64, env_sig: u64, t: f64) -> World {
+        let mut w = World::new();
+        if let Some(si) = self.images.get(&digest) {
+            if si.available_s <= t {
+                w.hotset.seed_record(digest, si.hot_blocks.iter().copied());
+            }
+        }
+        if let Some(se) = self.envs.get(&env_sig) {
+            if se.available_s <= t {
+                w.envcache.store(env_sig, se.cache_bytes);
+            }
+        }
+        w
+    }
 }
 
 /// Summary of one replayed job.
@@ -122,6 +364,10 @@ pub struct JobReplay {
     pub install_durations: Vec<f64>,
     /// Per-stage durations (job-level) of the last FULL startup.
     pub last_full: Option<StartupOutcome>,
+    /// Scheduler-derived queue wait of each full startup.
+    pub queue_waits: Vec<f64>,
+    /// Cluster-clock start time of each full startup's allocation.
+    pub starts_s: Vec<f64>,
 }
 
 /// Replay output: the profiler DB plus per-job summaries and the Fig-1
@@ -131,6 +377,11 @@ pub struct ReplayResult {
     pub jobs: Vec<JobReplay>,
     pub train_gpu_hours: f64,
     pub startup_gpu_hours: f64,
+    /// GPU pool the scheduler ran over.
+    pub pool_gpus: u32,
+    /// Scheduler-derived queue wait of every full startup (job order, then
+    /// attempt order) — the §3.2 distribution.
+    pub queue_waits: Vec<f64>,
 }
 
 impl ReplayResult {
@@ -139,88 +390,328 @@ impl ReplayResult {
     }
 }
 
-/// Replay every startup of every job through the pipeline simulator.
-pub fn replay(
+/// Knobs of the cluster replay.
+#[derive(Clone, Debug)]
+pub struct ReplayOptions {
+    /// GPU pool the scheduler allocates from; `None` → demand-based sizing
+    /// via [`default_pool_gpus`].
+    pub pool_gpus: Option<u32>,
+    /// Worker threads for the parallel startup replay; 0 → one per
+    /// available core. The result is identical for every value.
+    pub threads: usize,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        ReplayOptions { pool_gpus: None, threads: 0 }
+    }
+}
+
+/// One independent simulation unit of phase 2.
+struct Unit {
+    job_idx: usize,
+    attempt: u32,
+    kind: StartupKind,
+    start_s: f64,
+    est_s: f64,
+    queue_s: f64,
+    digest: u64,
+    env_sig: u64,
+    eff_cluster: ClusterConfig,
+}
+
+/// Per-startup effective service capacities: the seed per-job entitlement,
+/// degraded by the fleet share when the concurrently-starting node count
+/// exceeds the fleet service capacity.
+fn effective_cluster(cluster: &ClusterConfig, nodes: u32, avg_active_nodes: f64) -> ClusterConfig {
+    let n = nodes as f64;
+    let f = (cluster.fleet_service_nodes as f64 / avg_active_nodes.max(1.0)).min(1.0);
+    ClusterConfig {
+        hdfs_datanodes: (((cluster.hdfs_datanodes.max(nodes * 8)) as f64 * f).round() as u32)
+            .max(1),
+        cluster_cache_egress_bps: cluster.cluster_cache_egress_bps.max(n * 1.0e9) * f,
+        registry_egress_bps: cluster.registry_egress_bps.max(n * 0.5e9) * f,
+        ..cluster.clone()
+    }
+}
+
+/// Replay every startup of every job through the pipeline simulator, with
+/// scheduler-derived queue waits (phase 1) and shared-service contention
+/// across concurrently starting jobs (phase 2). See the module docs and
+/// `docs/replay.md`.
+pub fn replay_cluster(
     trace: &[TraceJob],
     cluster: &ClusterConfig,
     cfg: &BootseerConfig,
     seed: u64,
+    opts: &ReplayOptions,
 ) -> ReplayResult {
+    if trace.is_empty() {
+        return ReplayResult {
+            svc: StageAnalysisService::new(),
+            jobs: Vec::new(),
+            train_gpu_hours: 0.0,
+            startup_gpu_hours: 0.0,
+            pool_gpus: 0,
+            queue_waits: Vec::new(),
+        };
+    }
+
+    // ---- Phase 0: per-job configs ----
+    let jobs_cfg: Vec<JobConfig> = trace.iter().map(trace_job_config).collect();
+    let nodes_of: Vec<u32> = jobs_cfg.iter().map(|j| j.nodes(cluster).max(1)).collect();
+
+    // ---- Phase 1: schedule every full startup over the finite pool ----
+    let sched = schedule_trace_with(trace, cluster, opts.pool_gpus, &jobs_cfg);
+
+    // ---- Image / environment identities (shared across jobs) ----
+    // digest + hot set per distinct image seed; signature per distinct env
+    // seed. Both are pure functions of the job config, computed once.
+    let mut img_idents: HashMap<u64, (u64, Vec<u32>)> = HashMap::new();
+    let mut env_idents: HashMap<u64, u64> = HashMap::new();
+    let mut job_digest = Vec::with_capacity(trace.len());
+    let mut job_env_sig = Vec::with_capacity(trace.len());
+    for (j, tj) in trace.iter().enumerate() {
+        let job = &jobs_cfg[j];
+        let img_seed = job.image_seed.unwrap_or(tj.id ^ 0x1AA6E);
+        let (digest, _) = img_idents.entry(img_seed).or_insert_with(|| {
+            let img = ImageSpec::synth(
+                img_seed,
+                job.image_bytes,
+                job.image_block_bytes,
+                job.image_hot_fraction,
+            );
+            (img.digest, img.startup_access.clone())
+        });
+        job_digest.push(*digest);
+        let env_seed = job.env_seed.unwrap_or(tj.id ^ 0x9AC5);
+        let sig = *env_idents
+            .entry(env_seed)
+            .or_insert_with(|| PackageSet::synth(job, env_seed).signature());
+        job_env_sig.push(sig);
+    }
+
+    // ---- Build the unit list: every full startup + every hot update ----
+    let mut units: Vec<Unit> = Vec::new();
+    let mut job_units: Vec<Vec<usize>> = vec![Vec::new(); trace.len()];
+    for (j, tj) in trace.iter().enumerate() {
+        let est = sched.ests[j];
+        let segs = &sched.outcomes[j].segments;
+        if segs.is_empty() {
+            // Cannot happen with the pool clamp, but stay total: replay the
+            // job uncontended at its submit time.
+            job_units[j].push(units.len());
+            units.push(Unit {
+                job_idx: j,
+                attempt: 0,
+                kind: StartupKind::Full,
+                start_s: tj.submit_s,
+                est_s: est,
+                queue_s: 0.0,
+                digest: job_digest[j],
+                env_sig: job_env_sig[j],
+                eff_cluster: cluster.clone(),
+            });
+            continue;
+        }
+        for (k, s) in segs.iter().enumerate() {
+            job_units[j].push(units.len());
+            units.push(Unit {
+                job_idx: j,
+                attempt: k as u32,
+                kind: StartupKind::Full,
+                start_s: s.start_s,
+                est_s: est,
+                queue_s: s.queue_wait_s,
+                digest: job_digest[j],
+                env_sig: job_env_sig[j],
+                eff_cluster: cluster.clone(),
+            });
+        }
+        // Hot updates happen while the last segment trains; they keep the
+        // allocation (no queue) and re-run env setup + model init.
+        let last = segs[segs.len() - 1];
+        let window = (last.end_s - last.start_s - est).max(0.0);
+        for h in 0..tj.hot_updates {
+            let t = last.start_s + est + window * (h + 1) as f64 / (tj.hot_updates + 1) as f64;
+            job_units[j].push(units.len());
+            units.push(Unit {
+                job_idx: j,
+                attempt: tj.full_startups + h,
+                kind: StartupKind::HotUpdate,
+                start_s: t,
+                est_s: est,
+                queue_s: 0.0,
+                digest: job_digest[j],
+                env_sig: job_env_sig[j],
+                eff_cluster: cluster.clone(),
+            });
+        }
+    }
+
+    // ---- Contention sweep: A(t) = Σ nodes of startups in flight at t ----
+    let mut pts: Vec<(f64, f64)> = Vec::with_capacity(units.len() * 2);
+    for u in &units {
+        let n = nodes_of[u.job_idx] as f64;
+        pts.push((u.start_s, n));
+        pts.push((u.start_s + u.est_s, -n));
+    }
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut times: Vec<f64> = Vec::with_capacity(pts.len());
+    let mut level: Vec<f64> = Vec::with_capacity(pts.len());
+    let mut pref: Vec<f64> = Vec::with_capacity(pts.len());
+    let mut cur = 0.0f64;
+    let mut acc = 0.0f64;
+    for &(t, dl) in &pts {
+        if let Some(&lt) = times.last() {
+            acc += cur * (t - lt);
+        }
+        times.push(t);
+        pref.push(acc);
+        cur += dl;
+        level.push(cur);
+    }
+    let int_at = |x: f64| -> f64 {
+        let i = times.partition_point(|&t| t <= x);
+        if i == 0 {
+            0.0
+        } else {
+            pref[i - 1] + level[i - 1] * (x - times[i - 1])
+        }
+    };
+
+    // ---- Warm-state availability: earliest estimated end per identity ----
+    let mut img_avail: HashMap<u64, f64> = HashMap::new();
+    let mut env_avail: HashMap<u64, f64> = HashMap::new();
+    for u in &units {
+        let end = u.start_s + u.est_s;
+        if u.kind == StartupKind::Full {
+            let e = img_avail.entry(u.digest).or_insert(f64::INFINITY);
+            *e = e.min(end);
+        }
+        let e = env_avail.entry(u.env_sig).or_insert(f64::INFINITY);
+        *e = e.min(end);
+    }
+    let mut shared = SharedWorld { images: HashMap::new(), envs: HashMap::new() };
+    for (digest, blocks) in img_idents.values() {
+        if let Some(&avail) = img_avail.get(digest) {
+            shared
+                .images
+                .insert(*digest, SharedImage { hot_blocks: blocks.clone(), available_s: avail });
+        }
+    }
+    for (j, _) in trace.iter().enumerate() {
+        let sig = job_env_sig[j];
+        if let Some(&avail) = env_avail.get(&sig) {
+            shared
+                .envs
+                .entry(sig)
+                .or_insert(SharedEnv { cache_bytes: jobs_cfg[j].env_cache_bytes, available_s: avail });
+        }
+    }
+
+    // ---- Per-unit effective services + warm visibility ----
+    for u in &mut units {
+        let avg_active = (int_at(u.start_s + u.est_s) - int_at(u.start_s)) / u.est_s.max(1e-9);
+        u.eff_cluster = effective_cluster(cluster, nodes_of[u.job_idx], avg_active);
+    }
+
+    // ---- Phase 2: replay every unit, in parallel across threads ----
+    let n_threads = if opts.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        opts.threads
+    };
+    let run_unit = |u: &Unit| -> StartupOutcome {
+        let tj = &trace[u.job_idx];
+        let job = &jobs_cfg[u.job_idx];
+        let mut world = shared.world_at(u.digest, u.env_sig, u.start_s);
+        let unit_seed = seed
+            ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A);
+        let (queue_s, alloc_s) = if u.kind == StartupKind::Full {
+            (u.queue_s, d::ALLOC_BASE_S + 0.02 * nodes_of[u.job_idx] as f64)
+        } else {
+            (0.0, 0.0)
+        };
+        run_startup_with(
+            tj.id,
+            u.attempt,
+            &u.eff_cluster,
+            job,
+            cfg,
+            &mut world,
+            u.kind,
+            unit_seed,
+            StartupContext { queue_s, alloc_s },
+        )
+    };
+    let mut slots: Vec<Option<StartupOutcome>> = (0..units.len()).map(|_| None).collect();
+    if n_threads <= 1 || units.len() <= 1 {
+        for (i, u) in units.iter().enumerate() {
+            slots[i] = Some(run_unit(u));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let collected: Vec<Vec<(usize, StartupOutcome)>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_threads);
+            for _ in 0..n_threads {
+                let next = &next;
+                let units = &units;
+                let run_unit = &run_unit;
+                handles.push(scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= units.len() {
+                            break;
+                        }
+                        local.push((i, run_unit(&units[i])));
+                    }
+                    local
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("replay worker panicked"))
+                .collect()
+        });
+        for (i, o) in collected.into_iter().flatten() {
+            slots[i] = Some(o);
+        }
+    }
+
+    // ---- Aggregate in deterministic (job, attempt) order ----
     let mut svc = StageAnalysisService::new();
     let mut jobs = Vec::with_capacity(trace.len());
     let mut train_gpu_hours = 0.0;
     let mut startup_gpu_hours = 0.0;
-    for tj in trace {
-        // Smaller jobs run smaller models: image and checkpoint scale with
-        // job size (§3.1: "smaller jobs tend to start more quickly, as they
-        // typically involve smaller container images and smaller model
-        // checkpoints"), and shared services (HDFS, cache, registry) are
-        // fleet-sized, not fixed at the 16-node testbed configuration.
-        let size_f = (tj.gpus as f64 / 128.0).clamp(0.05, 4.0);
-        let img_f = 0.3 + 0.7 * (tj.gpus as f64 / 128.0).min(1.0);
-        let base_job = JobConfig::paper_moe(tj.gpus.max(16));
-        // Bigger models are sharded wider: scale PP with node count so the
-        // per-node resume share stays in the production-realistic range
-        // (the paper's fleet-level Fig 5 shows model-init at 100-200 s
-        // across all scales).
-        let nodes_est = (tj.gpus.max(16) + 7) / 8;
-        let job = JobConfig {
-            gpus: tj.gpus,
-            image_bytes: (base_job.image_bytes as f64 * img_f) as u64,
-            ckpt_bytes: (base_job.ckpt_bytes as f64 * size_f) as u64,
-            pp: base_job.pp.max(nodes_est / 4),
-            ..base_job
-        };
-        let nodes = job.nodes(cluster).max(1);
-        let cluster = ClusterConfig {
-            hdfs_datanodes: cluster.hdfs_datanodes.max(nodes * 8),
-            cluster_cache_egress_bps: cluster
-                .cluster_cache_egress_bps
-                .max(nodes as f64 * 1.0e9),
-            registry_egress_bps: cluster.registry_egress_bps.max(nodes as f64 * 0.5e9),
-            ..cluster.clone()
-        };
-        let cluster = &cluster;
-        let mut world = World::new();
+    let mut queue_waits = Vec::new();
+    for (j, tj) in trace.iter().enumerate() {
+        svc.register_job(tj.id, tj.gpus);
         let mut startup_worker_s = Vec::new();
         let mut first_total = 0.0;
         let mut installs = Vec::new();
-        let mut last_full = None;
-        svc.register_job(tj.id, tj.gpus);
-        for s in 0..tj.full_startups {
-            let o = run_startup(
-                tj.id,
-                s,
-                cluster,
-                &job,
-                cfg,
-                &mut world,
-                StartupKind::Full,
-                seed ^ (s as u64).wrapping_mul(0xA5A5_5A5A),
-            );
-            if s == 0 {
-                first_total = o.total_s;
+        let mut last_full: Option<StartupOutcome> = None;
+        let mut job_queue_waits = Vec::new();
+        let mut starts_s = Vec::new();
+        for &ui in &job_units[j] {
+            let u = &units[ui];
+            let o = slots[ui].take().expect("unit replayed");
+            startup_worker_s.push(o.worker_phase_s);
+            startup_gpu_hours += o.gpu_seconds_wasted() / 3600.0;
+            if u.kind == StartupKind::Full {
+                if u.attempt == 0 {
+                    first_total = o.total_s;
+                }
+                installs = o.install_durations.clone();
+                job_queue_waits.push(u.queue_s);
+                starts_s.push(u.start_s);
+                svc.ingest_all(o.events.iter().cloned());
+                last_full = Some(o);
             }
-            startup_worker_s.push(o.worker_phase_s);
-            startup_gpu_hours += o.gpu_seconds_wasted() / 3600.0;
-            installs = o.install_durations.clone();
-            svc.ingest_all(o.events.iter().cloned());
-            last_full = Some(o);
         }
-        for h in 0..tj.hot_updates {
-            let o = run_startup(
-                tj.id,
-                tj.full_startups + h,
-                cluster,
-                &job,
-                cfg,
-                &mut world,
-                StartupKind::HotUpdate,
-                seed ^ 0xB00F ^ ((h as u64) << 17),
-            );
-            startup_worker_s.push(o.worker_phase_s);
-            startup_gpu_hours += o.gpu_seconds_wasted() / 3600.0;
-        }
+        queue_waits.extend(job_queue_waits.iter().copied());
         train_gpu_hours += tj.gpus as f64 * tj.train_hours;
         jobs.push(JobReplay {
             job: tj.clone(),
@@ -228,9 +719,28 @@ pub fn replay(
             first_total_s: first_total,
             install_durations: installs,
             last_full,
+            queue_waits: job_queue_waits,
+            starts_s,
         });
     }
-    ReplayResult { svc, jobs, train_gpu_hours, startup_gpu_hours }
+    ReplayResult {
+        svc,
+        jobs,
+        train_gpu_hours,
+        startup_gpu_hours,
+        pool_gpus: sched.pool_gpus,
+        queue_waits,
+    }
+}
+
+/// Replay with default options: auto-sized pool, one worker per core.
+pub fn replay(
+    trace: &[TraceJob],
+    cluster: &ClusterConfig,
+    cfg: &BootseerConfig,
+    seed: u64,
+) -> ReplayResult {
+    replay_cluster(trace, cluster, cfg, seed, &ReplayOptions::default())
 }
 
 #[cfg(test)]
@@ -264,6 +774,10 @@ mod tests {
         // ~25 GPUs/job average... our mixture averages above 8).
         let total: u64 = t.iter().map(|j| j.gpus as u64).sum();
         assert!(total > 100_000, "total gpus {total}");
+        // Images are shared: the whole week runs on a small image pool.
+        let images: std::collections::HashSet<u64> = t.iter().map(|j| j.image_id).collect();
+        assert!(images.len() <= 22, "distinct images {}", images.len());
+        assert!(images.len() >= 10);
     }
 
     #[test]
@@ -282,6 +796,7 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.gpus, y.gpus);
             assert_eq!(x.full_startups, y.full_startups);
+            assert_eq!(x.image_id, y.image_id);
         }
     }
 
@@ -294,10 +809,15 @@ mod tests {
         assert!(r.startup_gpu_hours > 0.0);
         let frac = r.startup_fraction();
         // Fig 1 band: startup is a few percent of cluster GPU hours.
-        assert!((0.005..0.15).contains(&frac), "startup fraction {frac}");
+        assert!((0.004..0.18).contains(&frac), "startup fraction {frac}");
         // Profiler got events for every job.
         assert_eq!(r.svc.db.jobs().len(), 150);
         assert!(r.svc.anomalies.is_empty());
+        // Queue waits come from the scheduler, one per full startup.
+        let n_fulls: usize = t.iter().map(|j| j.full_startups as usize).sum();
+        assert_eq!(r.queue_waits.len(), n_fulls);
+        assert!(r.queue_waits.iter().all(|&w| w >= 0.0));
+        assert!(r.pool_gpus >= t.iter().map(|j| j.gpus).max().unwrap());
     }
 
     #[test]
@@ -311,5 +831,141 @@ mod tests {
             boot.startup_gpu_hours,
             base.startup_gpu_hours
         );
+    }
+
+    #[test]
+    fn queue_waits_match_paper_distribution() {
+        // Phase 1 only (cheap): the §3.2 shape — ~100 s median from the
+        // scheduling-round cadence, hour-long tails from pool contention.
+        let t = gen_trace(1, 250, 7.0 * 86400.0);
+        let s = schedule_trace(&t, &ClusterConfig::default(), None);
+        let waits: Vec<f64> = s
+            .outcomes
+            .iter()
+            .flat_map(|o| o.segments.iter().map(|g| g.queue_wait_s))
+            .collect();
+        let n_fulls: usize = t.iter().map(|j| j.full_startups as usize).sum();
+        assert_eq!(waits.len(), n_fulls, "every full startup scheduled");
+        let med = stats::median(&waits);
+        assert!((30.0..300.0).contains(&med), "median queue wait {med}");
+        assert!(stats::max(&waits) > 3600.0, "tail {}", stats::max(&waits));
+    }
+
+    #[test]
+    fn schedule_never_overallocates_pool() {
+        let t = gen_trace(1, 250, 7.0 * 86400.0);
+        let s = schedule_trace(&t, &ClusterConfig::default(), None);
+        let mut evs: Vec<(f64, i64)> = Vec::new();
+        for (tj, o) in t.iter().zip(&s.outcomes) {
+            for seg in &o.segments {
+                evs.push((seg.start_s, tj.gpus as i64));
+                evs.push((seg.end_s, -(tj.gpus as i64)));
+            }
+        }
+        evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut used = 0i64;
+        for (_, dl) in evs {
+            used += dl;
+            assert!(used <= s.pool_gpus as i64, "pool over-allocated: {used}");
+        }
+    }
+
+    #[test]
+    fn parallel_replay_identical_across_thread_counts() {
+        let t = gen_trace(11, 60, 86400.0);
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::baseline();
+        let one = replay_cluster(
+            &t,
+            &cluster,
+            &cfg,
+            5,
+            &ReplayOptions { pool_gpus: None, threads: 1 },
+        );
+        let many = replay_cluster(
+            &t,
+            &cluster,
+            &cfg,
+            5,
+            &ReplayOptions { pool_gpus: None, threads: 8 },
+        );
+        assert_eq!(one.pool_gpus, many.pool_gpus);
+        assert_eq!(one.queue_waits, many.queue_waits);
+        assert_eq!(
+            one.startup_gpu_hours.to_bits(),
+            many.startup_gpu_hours.to_bits(),
+            "gpu-hour accumulation must be byte-identical"
+        );
+        for (a, b) in one.jobs.iter().zip(&many.jobs) {
+            assert_eq!(a.startup_worker_s, b.startup_worker_s);
+            assert_eq!(a.first_total_s.to_bits(), b.first_total_s.to_bits());
+        }
+        // And the whole thing is deterministic given the seed.
+        let again = replay_cluster(
+            &t,
+            &cluster,
+            &cfg,
+            5,
+            &ReplayOptions { pool_gpus: None, threads: 8 },
+        );
+        assert_eq!(again.startup_gpu_hours.to_bits(), many.startup_gpu_hours.to_bits());
+    }
+
+    #[test]
+    fn shared_image_warms_later_jobs() {
+        // Two jobs on the same image, far apart in time: the second one's
+        // first-ever startup already sees the hot-set record + env cache the
+        // first job produced (cross-job sharing, as in production).
+        let mk = |id: u64, submit: f64| TraceJob {
+            id,
+            submit_s: submit,
+            gpus: 64,
+            full_startups: 1,
+            hot_updates: 0,
+            train_hours: 0.2,
+            priority: 1,
+            image_id: 7,
+        };
+        let t = vec![mk(1, 0.0), mk(2, 20_000.0)];
+        let r = replay_cluster(
+            &t,
+            &ClusterConfig::default(),
+            &BootseerConfig::bootseer(),
+            9,
+            &ReplayOptions { pool_gpus: Some(256), threads: 1 },
+        );
+        let cold = r.jobs[0].startup_worker_s[0];
+        let warm = r.jobs[1].startup_worker_s[0];
+        assert!(
+            warm < cold * 0.8,
+            "second job on a shared image should start warm: {cold} vs {warm}"
+        );
+        // Different image → no warm benefit.
+        let mut t2 = t.clone();
+        t2[1].image_id = 8;
+        let r2 = replay_cluster(
+            &t2,
+            &ClusterConfig::default(),
+            &BootseerConfig::bootseer(),
+            9,
+            &ReplayOptions { pool_gpus: Some(256), threads: 1 },
+        );
+        assert!(r2.jobs[1].startup_worker_s[0] > warm * 1.2);
+    }
+
+    #[test]
+    fn contention_degrades_concurrent_bursts() {
+        // The same 128-GPU job replayed alone vs inside a burst of large
+        // concurrent starters: the burst copy must not start faster, and
+        // the fleet share math must bite once active nodes exceed the
+        // fleet service capacity.
+        let cluster = ClusterConfig::default();
+        let solo = effective_cluster(&cluster, 16, 16.0);
+        let burst = effective_cluster(&cluster, 16, 4.0 * cluster.fleet_service_nodes as f64);
+        assert!(solo.registry_egress_bps > burst.registry_egress_bps * 3.0);
+        assert!(solo.cluster_cache_egress_bps > burst.cluster_cache_egress_bps * 3.0);
+        assert!(burst.hdfs_datanodes < solo.hdfs_datanodes);
+        // Solo equals the per-job entitlement (seed behaviour).
+        assert_eq!(solo.registry_egress_bps, cluster.registry_egress_bps.max(16.0 * 0.5e9));
     }
 }

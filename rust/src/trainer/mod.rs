@@ -6,7 +6,8 @@ use crate::ckpt::format::Checkpoint;
 use crate::hdfs::local::LocalStore;
 use crate::runtime::{f32_literal, i32_literal, literal_f32s, literal_scalar, Engine, ModelMeta};
 use crate::util::rng::Rng;
-use anyhow::{ensure, Context, Result};
+use crate::ensure;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Synthetic corpus with learnable structure: the next token follows
@@ -135,7 +136,7 @@ impl Trainer {
 }
 
 fn literal_dims(l: &xla::Literal) -> Result<Vec<usize>> {
-    let shape = l.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let shape = l.array_shape().map_err(|e| crate::anyhow!("{e:?}"))?;
     Ok(shape.dims().iter().map(|&d| d as usize).collect())
 }
 

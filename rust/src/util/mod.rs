@@ -1,11 +1,17 @@
 //! Shared substrate: deterministic RNG + distributions, statistics,
-//! JSON, humanized formatting, the bench harness, and the mini
-//! property-testing framework. None of this is BootSeer-specific; it exists
-//! because the offline crate universe lacks rand/serde/criterion/proptest.
+//! JSON, humanized formatting, the bench harness, the mini
+//! property-testing framework, and the anyhow/sha2/zstd stand-ins
+//! (`error`, `sha256`, `compress`). None of this is BootSeer-specific; it
+//! exists because the offline crate universe lacks
+//! rand/serde/criterion/proptest/anyhow/sha2/zstd — the default build has
+//! zero external dependencies.
 
 pub mod bench;
+pub mod compress;
+pub mod error;
 pub mod human;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
