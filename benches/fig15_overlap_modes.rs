@@ -1,0 +1,38 @@
+//! Overlap-mode sweep: worker-phase startup under the three stage-graph
+//! gating disciplines (Sequential / Overlapped / Speculative), warm
+//! BootSeer configuration, 16→128 GPUs. Emits `BENCH_overlap.json`
+//! (mode → worker-phase seconds per scale) so the perf trajectory is
+//! tracked across PRs.
+//!
+//!     cargo bench --bench fig15_overlap_modes
+//!     BOOTSEER_BENCH_FAST=1 cargo bench --bench fig15_overlap_modes
+
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header(
+        "overlap-mode sweep — startup stage graph",
+        "Sequential ≥ Overlapped ≥ Speculative worker phase at every scale",
+    );
+    let fast = std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1");
+    let reps = if fast { 1 } else { 3 };
+    let mut b = Bench::new("fig15_overlap");
+    let mut out = None;
+    b.once(&format!("4 scales x 3 modes x {reps} reps"), || {
+        out = Some(figures::overlap_sweep(reps));
+    });
+    let sweep = out.unwrap();
+    println!("\n{}", sweep.render());
+    let path = "BENCH_overlap.json";
+    match std::fs::write(path, sweep.to_json().to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("write {path}: {e}"),
+    }
+    // Machine-checkable invariant, also enforced by the library tests.
+    for p in &sweep.points {
+        assert!(p.worker_s[1] <= p.worker_s[0] + 1e-9, "gpus={}", p.gpus);
+        assert!(p.worker_s[2] <= p.worker_s[1] + 1e-9, "gpus={}", p.gpus);
+    }
+    b.finish();
+}

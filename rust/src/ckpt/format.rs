@@ -91,12 +91,19 @@ impl Checkpoint {
         out
     }
 
+    /// Parse a serialized checkpoint. Returns `Err` — never panics — on
+    /// truncated buffers, bad magic, or a corrupt manifest (including
+    /// offset/shape values whose extents overflow or overrun the payload).
     pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
-        if data.len() < 16 || &data[..8] != b"BSCKPT01" {
+        if data.len() < 16 {
+            bail!("truncated checkpoint header: {} bytes", data.len());
+        }
+        if &data[..8] != b"BSCKPT01" {
             bail!("bad checkpoint magic");
         }
         let mlen = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
-        if 16 + mlen > data.len() {
+        // `saturating_sub` keeps the bound total even for absurd lengths.
+        if mlen > data.len().saturating_sub(16) {
             bail!("truncated checkpoint manifest");
         }
         let manifest = std::str::from_utf8(&data[16..16 + mlen])?;
@@ -104,9 +111,10 @@ impl Checkpoint {
         let step = m.get("step").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
         let n_elems =
             m.get("n_elems").and_then(|v| v.as_usize()).context("manifest n_elems")?;
+        let payload_bytes = n_elems.checked_mul(4).context("manifest n_elems overflow")?;
         let body = &data[16 + mlen..];
-        if body.len() != n_elems * 4 {
-            bail!("payload size mismatch: {} != {}", body.len(), n_elems * 4);
+        if body.len() != payload_bytes {
+            bail!("payload size mismatch: {} != {}", body.len(), payload_bytes);
         }
         let payload: Vec<f32> = body
             .chunks_exact(4)
@@ -125,15 +133,24 @@ impl Checkpoint {
                         .and_then(|v| v.as_arr())
                         .context("shape")?
                         .iter()
-                        .map(|x| x.as_usize().unwrap_or(0))
-                        .collect(),
+                        .map(|x| x.as_usize().context("shape dim"))
+                        .collect::<Result<Vec<_>>>()?,
                     offset: t.get("offset").and_then(|v| v.as_usize()).context("offset")?,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
-        // Validate tensor extents.
+        // Validate tensor extents with overflow-checked arithmetic.
         for t in &tensors {
-            if t.offset + t.numel() > payload.len() {
+            let numel = t
+                .shape
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .with_context(|| format!("tensor {} shape overflows", t.name))?;
+            let end = t
+                .offset
+                .checked_add(numel)
+                .with_context(|| format!("tensor {} extent overflows", t.name))?;
+            if end > payload.len() {
                 bail!("tensor {} overruns payload", t.name);
             }
         }
@@ -209,6 +226,64 @@ mod tests {
         let mut bytes = c.to_bytes();
         bytes.truncate(bytes.len() - 4); // drop one f32
         assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_short_buffers_at_every_length() {
+        // Every truncation of a valid checkpoint must error, never panic —
+        // including the sub-header lengths that used to slice blindly.
+        let full = sample_ckpt().to_bytes();
+        assert!(Checkpoint::from_bytes(&[]).is_err());
+        for len in [1, 7, 8, 9, 15, 16, 17, full.len() / 2, full.len() - 1] {
+            assert!(
+                Checkpoint::from_bytes(&full[..len]).is_err(),
+                "truncation to {len} bytes must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = sample_ckpt().to_bytes();
+        bytes[0] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        // Right length, wrong magic, no panic.
+        assert!(Checkpoint::from_bytes(&[0u8; 16]).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_manifest_length() {
+        // mlen = u64::MAX: the 16 + mlen bound must not overflow.
+        let mut bytes = b"BSCKPT01".to_vec();
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(b"{}");
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_overflowing_tensor_extent() {
+        // A manifest whose tensor offset+numel overflows usize must error
+        // cleanly instead of panicking in the extent check.
+        let manifest = format!(
+            "{{\"step\":1,\"n_elems\":2,\"tensors\":[{{\"name\":\"x\",\"shape\":[2],\"offset\":{}}}]}}",
+            usize::MAX
+        );
+        let mut bytes = b"BSCKPT01".to_vec();
+        bytes.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(manifest.as_bytes());
+        bytes.extend_from_slice(&[0u8; 8]); // 2 f32 elems
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_non_numeric_shape() {
+        let manifest =
+            "{\"step\":1,\"n_elems\":1,\"tensors\":[{\"name\":\"x\",\"shape\":[\"a\"],\"offset\":0}]}";
+        let mut bytes = b"BSCKPT01".to_vec();
+        bytes.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(manifest.as_bytes());
+        bytes.extend_from_slice(&[0u8; 4]);
+        assert!(Checkpoint::from_bytes(bytes.as_slice()).is_err());
     }
 
     #[test]

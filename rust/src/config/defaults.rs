@@ -170,6 +170,11 @@ pub const LAZY_CONTENTION_PENALTY: f64 = 0.055;
 pub const LAZY_MISS_BATCH_BLOCKS: u32 = 16;
 /// Container start (runtime init, mounts) once hot data is present.
 pub const CONTAINER_START_S: f64 = 3.0;
+/// Per-node byte budget for speculative staging during the Allocation
+/// phase (`OverlapMode::Speculative`): enough for the paper image's hot
+/// set (~2 GB) plus the env cache archive (270 MB), small enough that the
+/// scheduler's allocation-phase dead time is not saturated by one job.
+pub const SPEC_PREFETCH_BUDGET_BYTES: u64 = 4 * GB;
 /// Traditional OCI pull decompress+unpack throughput per node (bytes/s).
 /// Layer extraction is CPU-bound and single-streamed in containerd — the
 /// dominant cost of the OCI strawman and the reason flattened block images

@@ -38,6 +38,49 @@ impl ImageMode {
     }
 }
 
+/// How the worker-phase stages of the startup stage-graph are gated
+/// relative to each other (see `docs/stage_graph.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Paper-faithful Figure 2: Image Loading → Env Setup → Model Init,
+    /// each ending in a global sync barrier. Byte-identical to the
+    /// pre-graph pipeline. The default.
+    Sequential,
+    /// Per-node chaining: a node starts Environment Setup as soon as its
+    /// own image lands, and its checkpoint resume read starts streaming
+    /// into the page cache then too; only training-begin still waits for
+    /// every node. NIC contention between concurrently active stages is
+    /// resolved by the max-min fair engine.
+    Overlapped,
+    /// Overlapped, plus speculative staging during the Allocation phase:
+    /// nodes already granted begin pulling the image hot set and the env
+    /// cache archive before the worker phase opens, bounded by
+    /// `BootseerConfig::spec_prefetch_budget_bytes` per node.
+    Speculative,
+}
+
+impl OverlapMode {
+    pub const ALL: [OverlapMode; 3] =
+        [OverlapMode::Sequential, OverlapMode::Overlapped, OverlapMode::Speculative];
+
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s {
+            "sequential" | "seq" => Some(OverlapMode::Sequential),
+            "overlapped" | "overlap" => Some(OverlapMode::Overlapped),
+            "speculative" | "spec" => Some(OverlapMode::Speculative),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::Sequential => "sequential",
+            OverlapMode::Overlapped => "overlapped",
+            OverlapMode::Speculative => "speculative",
+        }
+    }
+}
+
 /// Physical cluster + shared-service model.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -261,6 +304,12 @@ pub struct BootseerConfig {
     pub prefetch_threads: u32,
     pub stripe_chunk_bytes: u64,
     pub stripe_width: u32,
+    /// Stage-graph gating between worker-phase stages (default Sequential,
+    /// the paper-faithful pipeline).
+    pub overlap: OverlapMode,
+    /// Per-node byte budget for speculative staging during Allocation
+    /// (`OverlapMode::Speculative` only).
+    pub spec_prefetch_budget_bytes: u64,
 }
 
 impl BootseerConfig {
@@ -276,6 +325,8 @@ impl BootseerConfig {
             prefetch_threads: d::PAPER_PREFETCH_THREADS,
             stripe_chunk_bytes: d::STRIPE_CHUNK_BYTES,
             stripe_width: d::STRIPE_WIDTH,
+            overlap: OverlapMode::Sequential,
+            spec_prefetch_budget_bytes: d::SPEC_PREFETCH_BUDGET_BYTES,
         }
     }
 
@@ -316,6 +367,19 @@ impl BootseerConfig {
                 .i64_or("bootseer.stripe_chunk_bytes", base.stripe_chunk_bytes as i64)
                 as u64,
             stripe_width: doc.i64_or("bootseer.stripe_width", base.stripe_width as i64) as u32,
+            overlap: doc
+                .get("bootseer.overlap")
+                .and_then(|v| v.as_str())
+                .and_then(OverlapMode::parse)
+                .unwrap_or(base.overlap),
+            // Clamp at 0: a negative value must not wrap into an
+            // effectively unlimited budget.
+            spec_prefetch_budget_bytes: doc
+                .i64_or(
+                    "bootseer.spec_prefetch_budget_bytes",
+                    base.spec_prefetch_budget_bytes as i64,
+                )
+                .max(0) as u64,
         }
     }
 }
@@ -427,5 +491,32 @@ mod tests {
         assert_eq!(ImageMode::parse("bootseer"), Some(ImageMode::RecordPrefetch));
         assert_eq!(ImageMode::parse("nope"), None);
         assert_eq!(ImageMode::Lazy.name(), "lazy");
+    }
+
+    #[test]
+    fn overlap_mode_parse_roundtrip() {
+        for m in OverlapMode::ALL {
+            assert_eq!(OverlapMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(OverlapMode::parse("overlap"), Some(OverlapMode::Overlapped));
+        assert_eq!(OverlapMode::parse("nope"), None);
+        // Both paper configurations default to the paper-faithful pipeline.
+        assert_eq!(BootseerConfig::baseline().overlap, OverlapMode::Sequential);
+        assert_eq!(BootseerConfig::bootseer().overlap, OverlapMode::Sequential);
+    }
+
+    #[test]
+    fn overlap_from_doc() {
+        let doc = Doc::parse(
+            r#"
+            [bootseer]
+            overlap = "speculative"
+            spec_prefetch_budget_bytes = 1000000
+            "#,
+        )
+        .unwrap();
+        let boot = BootseerConfig::from_doc(&doc);
+        assert_eq!(boot.overlap, OverlapMode::Speculative);
+        assert_eq!(boot.spec_prefetch_budget_bytes, 1_000_000);
     }
 }

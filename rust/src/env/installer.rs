@@ -14,6 +14,7 @@ use crate::config::defaults as d;
 use crate::config::{BootseerConfig, JobConfig};
 use crate::env::cache::EnvCacheRegistry;
 use crate::env::packages::PackageSet;
+use crate::image::loader::staged_of;
 use crate::sim::{ClusterSim, TaskId};
 
 /// Planned Environment Setup stage.
@@ -49,8 +50,27 @@ pub fn plan_env_setup(
     deps: &[Vec<TaskId>],
     tag: u64,
 ) -> EnvSetupPlan {
+    plan_env_setup_with(cs, pkgs, job, cfg, cache_reg, deps, &[], tag)
+}
+
+/// [`plan_env_setup`] with per-node env-cache-archive bytes already staged
+/// by speculative prefetch (`prestaged`, empty → none): on a cache hit the
+/// restore download shrinks by the staged amount. A cache miss ignores it
+/// (there is nothing to stage before the cache exists).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_env_setup_with(
+    cs: &mut ClusterSim,
+    pkgs: &PackageSet,
+    job: &JobConfig,
+    cfg: &BootseerConfig,
+    cache_reg: &mut EnvCacheRegistry,
+    deps: &[Vec<TaskId>],
+    prestaged: &[u64],
+    tag: u64,
+) -> EnvSetupPlan {
     let n = cs.nodes();
     assert!(deps.is_empty() || deps.len() == n);
+    assert!(prestaged.is_empty() || prestaged.len() == n);
     let sig = pkgs.signature();
     let hit = cfg.env_cache && cache_reg.lookup(sig).is_some();
 
@@ -73,11 +93,13 @@ pub fn plan_env_setup(
 
         let installed_end = if hit {
             // Restore: fetch archive from HDFS (round-robin group), unpack.
+            // Staged bytes (speculative prefetch) are already local.
             let entry = cache_reg.lookup(sig).unwrap();
+            let staged = staged_of(prestaged, i);
             let group = cs.hdfs_groups[i % cs.hdfs_groups.len()];
             let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s, &[start], 0);
             let dl = cs.sim.flow(
-                entry.compressed_bytes as f64,
+                entry.compressed_bytes.saturating_sub(staged) as f64,
                 vec![group, cs.node_nic[i]],
                 &[nn],
                 0,

@@ -7,5 +7,5 @@ pub mod installer;
 pub mod packages;
 
 pub use cache::{CacheCapture, EnvCacheRegistry};
-pub use installer::{plan_env_setup, EnvSetupPlan};
+pub use installer::{plan_env_setup, plan_env_setup_with, EnvSetupPlan};
 pub use packages::{Package, PackageSet};

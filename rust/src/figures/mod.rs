@@ -2,7 +2,7 @@
 //! producing the measured series (plus a rendered table and JSON export).
 //! Benches and the CLI are thin wrappers over these.
 
-use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
+use crate::config::{BootseerConfig, ClusterConfig, JobConfig, OverlapMode};
 use crate::profiler::Stage;
 use crate::startup::{run_startup, StartupKind, StartupOutcome, World};
 use crate::trace::{bucket_of, gen_trace, replay, ReplayResult, SCALE_BUCKETS};
@@ -584,6 +584,118 @@ impl Fig12 {
     }
 }
 
+// ----------------------------------------------- Overlap-mode sweep --
+
+pub struct OverlapPoint {
+    pub gpus: u32,
+    /// Median worker-phase seconds per mode, in [`OverlapMode::ALL`] order
+    /// (Sequential, Overlapped, Speculative).
+    pub worker_s: [f64; 3],
+}
+
+pub struct OverlapSweep {
+    pub points: Vec<OverlapPoint>,
+}
+
+/// Worker-phase startup across the stage-graph overlap modes (warm
+/// BootSeer configuration) at the §5.1 scales; `reps` runs per cell, the
+/// median is reported. `Sequential` is the paper-faithful pipeline;
+/// `Overlapped` chains stages per node; `Speculative` additionally stages
+/// the image hot set + env archive during Allocation.
+pub fn overlap_sweep(reps: u32) -> OverlapSweep {
+    let scales = [16u32, 32, 64, 128];
+    let cluster = ClusterConfig::default();
+    let points = scales
+        .iter()
+        .map(|&gpus| {
+            let job = JobConfig::paper_moe(gpus);
+            let mut worker_s = [0.0f64; 3];
+            for (mi, &mode) in OverlapMode::ALL.iter().enumerate() {
+                let cfg = BootseerConfig { overlap: mode, ..BootseerConfig::bootseer() };
+                let mut runs: Vec<f64> = (0..reps.max(1))
+                    .map(|r| {
+                        let mut w = World::new();
+                        // Warm-up: record the hot set + create the cache.
+                        run_startup(
+                            gpus as u64,
+                            0,
+                            &cluster,
+                            &job,
+                            &cfg,
+                            &mut w,
+                            StartupKind::Full,
+                            7 + r as u64,
+                        );
+                        run_startup(
+                            gpus as u64,
+                            1,
+                            &cluster,
+                            &job,
+                            &cfg,
+                            &mut w,
+                            StartupKind::Full,
+                            77 + r as u64,
+                        )
+                        .worker_phase_s
+                    })
+                    .collect();
+                runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                worker_s[mi] = runs[runs.len() / 2];
+            }
+            OverlapPoint { gpus, worker_s }
+        })
+        .collect();
+    OverlapSweep { points }
+}
+
+impl OverlapSweep {
+    pub fn render(&self) -> String {
+        let mut rows = vec![vec![
+            "gpus".to_string(),
+            "sequential".to_string(),
+            "overlapped".to_string(),
+            "speculative".to_string(),
+            "spec speedup".to_string(),
+        ]];
+        for p in &self.points {
+            let [seq, ovl, spec] = p.worker_s;
+            rows.push(vec![
+                p.gpus.to_string(),
+                human::secs(seq),
+                human::secs(ovl),
+                human::secs(spec),
+                human::ratio(seq / spec.max(1e-9)),
+            ]);
+        }
+        let ordered = self.points.iter().all(|p| {
+            p.worker_s[1] <= p.worker_s[0] + 1e-9 && p.worker_s[2] <= p.worker_s[1] + 1e-9
+        });
+        format!(
+            "{}stage-graph gating Sequential ≥ Overlapped ≥ Speculative: {}\n",
+            human::table(&rows),
+            if ordered { "holds at every scale" } else { "VIOLATED — see table" }
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("gpus", p.gpus as u64)
+                    .set("sequential_s", p.worker_s[0])
+                    .set("overlapped_s", p.worker_s[1])
+                    .set("speculative_s", p.worker_s[2]);
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("points", Json::Arr(arr));
+        j
+    }
+}
+
 // -------------------------------------------------------------- Fig 14 --
 
 pub struct Fig14 {
@@ -693,6 +805,34 @@ mod tests {
             assert!((1.4..4.0).contains(&r), "gpus={} ratio={r}", p.gpus);
         }
         assert!(!f.render_stages().is_empty());
+    }
+
+    #[test]
+    fn overlap_sweep_ordering() {
+        let f = overlap_sweep(1);
+        assert_eq!(f.points.len(), 4);
+        for p in &f.points {
+            // Monotone at every scale (ties tolerated off the 128 anchor).
+            assert!(
+                p.worker_s[1] <= p.worker_s[0] + 1e-9,
+                "gpus={}: overlapped {} vs sequential {}",
+                p.gpus,
+                p.worker_s[1],
+                p.worker_s[0]
+            );
+            assert!(
+                p.worker_s[2] <= p.worker_s[1] + 1e-9,
+                "gpus={}: speculative {} vs overlapped {}",
+                p.gpus,
+                p.worker_s[2],
+                p.worker_s[1]
+            );
+        }
+        // Strict reduction at the paper's flagship 128-GPU scale.
+        let p128 = f.points.iter().find(|p| p.gpus == 128).unwrap();
+        assert!(p128.worker_s[1] < p128.worker_s[0]);
+        assert!(p128.worker_s[2] < p128.worker_s[1]);
+        assert!(!f.render().is_empty());
     }
 
     #[test]

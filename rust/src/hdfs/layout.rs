@@ -178,6 +178,54 @@ mod tests {
     }
 
     #[test]
+    fn zero_byte_file() {
+        let l = paper_layout(0);
+        assert_eq!(l.n_chunks(), 0);
+        assert_eq!((0..l.width).map(|f| l.file_bytes(f)).sum::<u64>(), 0);
+        assert_eq!(l.total_hdfs_blocks(), 0);
+        assert!(l.groups_touched(21, 0).is_empty());
+        let flat = StripeLayout::unstriped(0, HDFS_BLOCK_BYTES);
+        assert_eq!(flat.n_chunks(), 0);
+        assert_eq!(flat.total_hdfs_blocks(), 0);
+    }
+
+    #[test]
+    fn file_smaller_than_one_chunk() {
+        let l = paper_layout(123);
+        assert_eq!(l.n_chunks(), 1);
+        assert_eq!(l.chunk_len(0), 123);
+        assert_eq!(l.locate(0), ChunkLoc { file: 0, index_in_file: 0, hdfs_block: 0 });
+        assert_eq!(l.file_bytes(0), 123);
+        // The other stripe files are empty and hold no HDFS blocks.
+        for f in 1..l.width {
+            assert_eq!(l.file_bytes(f), 0);
+            assert_eq!(l.file_hdfs_blocks(f), 0);
+        }
+        assert_eq!(l.total_hdfs_blocks(), 1);
+        assert_eq!(l.groups_touched(21, 0), vec![0]);
+    }
+
+    #[test]
+    fn exact_multiple_boundary() {
+        // Logical size an exact multiple of the chunk size: no partial tail
+        // chunk, every chunk full-length.
+        let chunks = 4 * STRIPE_WIDTH as u64;
+        let l = paper_layout(chunks * STRIPE_CHUNK_BYTES);
+        assert_eq!(l.n_chunks(), chunks);
+        for c in 0..l.n_chunks() {
+            assert_eq!(l.chunk_len(c), STRIPE_CHUNK_BYTES);
+        }
+        for f in 0..l.width {
+            assert_eq!(l.file_bytes(f), 4 * STRIPE_CHUNK_BYTES);
+        }
+        // And exactly one HDFS-block boundary: a file of exactly one block.
+        let one = StripeLayout::new(HDFS_BLOCK_BYTES, STRIPE_CHUNK_BYTES, 1, HDFS_BLOCK_BYTES);
+        assert_eq!(one.file_hdfs_blocks(0), 1);
+        let last = one.locate(one.n_chunks() - 1);
+        assert_eq!(last.hdfs_block, 0); // last chunk still in block 0
+    }
+
+    #[test]
     fn prop_locate_bijective() {
         prop_check(24, |g| {
             let bytes = g.u64_in(1, 50_000_000);

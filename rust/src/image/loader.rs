@@ -45,17 +45,33 @@ pub fn plan_image_load(
     deps: &[Vec<TaskId>],
     tag: u64,
 ) -> ImageLoadPlan {
+    plan_image_load_with(cs, img, cfg, registry, deps, &[], tag)
+}
+
+/// [`plan_image_load`] with per-node bytes already staged by speculative
+/// prefetch during the Allocation phase (`prestaged`, empty → none): staged
+/// bytes are subtracted from the foreground fetch on each node.
+pub fn plan_image_load_with(
+    cs: &mut ClusterSim,
+    img: &ImageSpec,
+    cfg: &BootseerConfig,
+    registry: &HotSetRegistry,
+    deps: &[Vec<TaskId>],
+    prestaged: &[u64],
+    tag: u64,
+) -> ImageLoadPlan {
     assert!(deps.is_empty() || deps.len() == cs.nodes());
+    assert!(prestaged.is_empty() || prestaged.len() == cs.nodes());
     match cfg.image_mode {
-        ImageMode::OciFull => plan_oci_full(cs, img, cfg, deps, tag),
-        ImageMode::Lazy => plan_lazy(cs, img, deps, tag),
+        ImageMode::OciFull => plan_oci_full(cs, img, cfg, deps, prestaged, tag),
+        ImageMode::Lazy => plan_lazy(cs, img, deps, prestaged, tag),
         ImageMode::RecordPrefetch => {
             // First-ever use of the image: no hot-set record exists yet, so
             // BootSeer falls back to lazy loading (the record run).
             if registry.has_record(img.digest) {
-                plan_prefetch(cs, img, cfg, registry, deps, tag)
+                plan_prefetch(cs, img, cfg, registry, deps, prestaged, tag)
             } else {
-                plan_lazy(cs, img, deps, tag)
+                plan_lazy(cs, img, deps, prestaged, tag)
             }
         }
     }
@@ -70,15 +86,22 @@ fn dep_of<'a>(deps: &'a [Vec<TaskId>], i: usize) -> &'a [TaskId] {
     }
 }
 
+/// Bytes already staged on node `i` (empty or short `prestaged` means
+/// none). Also used by `env::installer` — one definition of the
+/// empty-means-none convention.
+pub(crate) fn staged_of(prestaged: &[u64], i: usize) -> u64 {
+    prestaged.get(i).copied().unwrap_or(0)
+}
+
 fn plan_oci_full(
     cs: &mut ClusterSim,
     img: &ImageSpec,
     cfg: &BootseerConfig,
     deps: &[Vec<TaskId>],
+    prestaged: &[u64],
     tag: u64,
 ) -> ImageLoadPlan {
     let n = cs.nodes();
-    let bytes = img.total_bytes as f64;
     let mut node_done = Vec::with_capacity(n);
     let swarm = if cfg.p2p {
         Some(Swarm::build(
@@ -93,6 +116,7 @@ fn plan_oci_full(
     };
     for i in 0..n {
         let gate = dep_of(deps, i);
+        let bytes = img.total_bytes.saturating_sub(staged_of(prestaged, i)) as f64;
         let dl = match &swarm {
             Some(sw) => sw.download(&mut cs.sim, bytes, cs.node_nic[i], gate, 0),
             None => {
@@ -100,9 +124,11 @@ fn plan_oci_full(
                 cs.sim.flow(bytes, path, gate, 0)
             }
         };
-        // Layered-OCI decompress + unpack: CPU-bound, ~180 MB/s per node.
-        let unpack =
-            cs.sim.delay(cs.cpu_time(i, bytes / d::OCI_UNPACK_BPS), &[dl], 0);
+        // Layered-OCI decompress + unpack: CPU-bound, ~180 MB/s per node
+        // (always over the full image; staged bytes still need unpacking).
+        let unpack = cs
+            .sim
+            .delay(cs.cpu_time(i, img.total_bytes as f64 / d::OCI_UNPACK_BPS), &[dl], 0);
         let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), &[unpack], tag);
         node_done.push(start);
     }
@@ -113,6 +139,7 @@ fn plan_lazy(
     cs: &mut ClusterSim,
     img: &ImageSpec,
     deps: &[Vec<TaskId>],
+    prestaged: &[u64],
     tag: u64,
 ) -> ImageLoadPlan {
     let n = cs.nodes();
@@ -127,16 +154,24 @@ fn plan_lazy(
     let contention = 1.0 + d::LAZY_CONTENTION_PENALTY * ((n as f64 - 1.0).min(31.0));
     let mut node_done = Vec::with_capacity(n);
     for i in 0..n {
+        // Staged bytes are already local, so that fraction of the startup
+        // reads never faults (a multiply by exactly 1.0 when nothing is
+        // staged, keeping the unstaged path bit-identical).
+        let frac = if hot_bytes > 0.0 {
+            (hot_bytes - staged_of(prestaged, i) as f64).max(0.0) / hot_bytes
+        } else {
+            1.0
+        };
         // Container starts immediately against the lazy mount...
         let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), dep_of(deps, i), 0);
         // ...then faults in the hot set: `batches` sequential miss bursts.
         let mut prev = start;
         for _ in 0..batches {
             let miss_lat =
-                cs.cpu_time(i, d::LAZY_MISS_LATENCY_S) * blocks_per_batch * contention;
+                cs.cpu_time(i, d::LAZY_MISS_LATENCY_S) * blocks_per_batch * contention * frac;
             let lat = cs.sim.delay(miss_lat, &[prev], 0);
             let path = vec![cs.cache, cs.node_nic[i]];
-            prev = cs.sim.flow(bytes_per_batch, path, &[lat], 0);
+            prev = cs.sim.flow(bytes_per_batch * frac, path, &[lat], 0);
         }
         // Stage ends when startup reads are all served.
         node_done.push(cs.sim.barrier(&[prev], tag));
@@ -154,6 +189,7 @@ fn plan_prefetch(
     cfg: &BootseerConfig,
     registry: &HotSetRegistry,
     deps: &[Vec<TaskId>],
+    prestaged: &[u64],
     tag: u64,
 ) -> ImageLoadPlan {
     let n = cs.nodes();
@@ -176,11 +212,12 @@ fn plan_prefetch(
     let mut background = Vec::with_capacity(n);
     for i in 0..n {
         let gate = dep_of(deps, i);
+        let fg_bytes = hot_bytes.saturating_sub(staged_of(prestaged, i)) as f64;
         let prefetch = match &swarm {
-            Some(sw) => sw.download(&mut cs.sim, hot_bytes as f64, cs.node_nic[i], gate, 0),
+            Some(sw) => sw.download(&mut cs.sim, fg_bytes, cs.node_nic[i], gate, 0),
             None => {
                 let path = vec![cs.cache, cs.node_nic[i]];
-                cs.sim.flow(hot_bytes as f64, path, gate, 0)
+                cs.sim.flow(fg_bytes, path, gate, 0)
             }
         };
         let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), &[prefetch], tag);
@@ -323,6 +360,46 @@ mod tests {
         assert!(oci_t > lazy_t * 3.0, "oci {oci_t} vs lazy {lazy_t}");
         assert!(oci_t < lazy_t * 20.0, "oci {oci_t} vs lazy {lazy_t}");
         assert_eq!(plan.foreground_bytes_per_node, img.total_bytes);
+    }
+
+    #[test]
+    fn prestaged_bytes_shrink_foreground() {
+        // Speculative staging: half the hot set already local → the stage's
+        // own fetch shrinks, for the prefetch and the lazy engines alike.
+        for cfg in [BootseerConfig::bootseer(), BootseerConfig::baseline()] {
+            let (mut cs, img, reg) = setup(2);
+            let plan = plan_image_load(&mut cs, &img, &cfg, &reg, &[], 1);
+            let (t_full, _) = run_stage(&mut cs, &plan);
+
+            let (mut cs2, img2, reg2) = setup(2);
+            let staged = vec![img2.hot_bytes() / 2; 2];
+            let plan2 =
+                plan_image_load_with(&mut cs2, &img2, &cfg, &reg2, &[], &staged, 1);
+            let (t_half, _) = run_stage(&mut cs2, &plan2);
+            assert!(t_half < t_full, "{}: {t_half} vs {t_full}", cfg.image_mode.name());
+        }
+    }
+
+    #[test]
+    fn empty_prestage_is_identical() {
+        let (mut cs, img, reg) = setup(4);
+        let plan = plan_image_load(&mut cs, &img, &BootseerConfig::bootseer(), &reg, &[], 1);
+        let (t_a, times_a) = run_stage(&mut cs, &plan);
+        let (mut cs2, img2, reg2) = setup(4);
+        let plan2 = plan_image_load_with(
+            &mut cs2,
+            &img2,
+            &BootseerConfig::bootseer(),
+            &reg2,
+            &[],
+            &[0, 0, 0, 0],
+            1,
+        );
+        let (t_b, times_b) = run_stage(&mut cs2, &plan2);
+        assert_eq!(t_a.to_bits(), t_b.to_bits());
+        for (a, b) in times_a.iter().zip(&times_b) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -10,6 +10,6 @@ pub mod spec;
 
 pub use access::{AccessRecorder, HotSetRegistry};
 pub use blockstore::{digest_of, BlockDigest, BlockStore};
-pub use loader::{plan_image_load, ImageLoadPlan};
+pub use loader::{plan_image_load, plan_image_load_with, ImageLoadPlan};
 pub use p2p::Swarm;
 pub use spec::ImageSpec;

@@ -8,7 +8,7 @@
 //!                                (requires the `pjrt` feature)
 //!   version
 
-use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig};
+use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig, OverlapMode};
 use bootseer::figures;
 use bootseer::startup::{run_startup, StartupKind, World};
 use bootseer::trace::{gen_trace, replay_cluster, ReplayOptions};
@@ -31,9 +31,9 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: bootseer <figures|startup|trace|train|version> [options]\n\
-                 \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14)\
-                 \n  startup --gpus N [--bootseer] [--hot-update] [--seed S]\
-                 \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--no-replay]\
+                 \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14) + overlap sweep\
+                 \n  startup --gpus N [--bootseer] [--hot-update] [--overlap sequential|overlapped|speculative] [--seed S]\
+                 \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--bootseer] [--overlap M] [--no-replay]\
                  \n  train   [--steps N] [--artifacts DIR] [--seed S]   (pjrt feature)"
             );
             2
@@ -48,6 +48,15 @@ fn flag(rest: &[String], name: &str) -> bool {
 
 fn opt(rest: &[String], name: &str) -> Option<String> {
     rest.iter().position(|a| a == name).and_then(|i| rest.get(i + 1).cloned())
+}
+
+/// `--overlap MODE` (default Sequential); exits with an error on a bad mode.
+fn overlap_opt(rest: &[String]) -> Result<OverlapMode, String> {
+    match opt(rest, "--overlap") {
+        None => Ok(OverlapMode::Sequential),
+        Some(s) => OverlapMode::parse(&s)
+            .ok_or_else(|| format!("bad --overlap {s:?} (sequential|overlapped|speculative)")),
+    }
 }
 
 fn cmd_figures(rest: &[String]) -> i32 {
@@ -94,6 +103,9 @@ fn cmd_figures(rest: &[String]) -> i32 {
     let f14 = figures::fig14(3);
     println!("-- Fig 14 --\n{}", f14.render());
     save("fig14", f14.to_json());
+    let ov = figures::overlap_sweep(3);
+    println!("-- Overlap-mode sweep (stage graph) --\n{}", ov.render());
+    save("overlap", ov.to_json());
     0
 }
 
@@ -102,7 +114,15 @@ fn cmd_startup(rest: &[String]) -> i32 {
     let seed: u64 = opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
     let boot = flag(rest, "--bootseer");
     let kind = if flag(rest, "--hot-update") { StartupKind::HotUpdate } else { StartupKind::Full };
-    let cfg = if boot { BootseerConfig::bootseer() } else { BootseerConfig::baseline() };
+    let overlap = match overlap_opt(rest) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let base = if boot { BootseerConfig::bootseer() } else { BootseerConfig::baseline() };
+    let cfg = BootseerConfig { overlap, ..base };
     let job = JobConfig::paper_moe(gpus);
     let cluster = ClusterConfig::default();
     let mut world = World::new();
@@ -112,10 +132,11 @@ fn cmd_startup(rest: &[String]) -> i32 {
     }
     let o = run_startup(1, 1, &cluster, &job, &cfg, &mut world, kind, seed + 1);
     println!(
-        "job: {} gpus ({} nodes), {}, image {}, ckpt {}",
+        "job: {} gpus ({} nodes), {}, {} stage graph, image {}, ckpt {}",
         gpus,
         o.nodes,
         if boot { "BOOTSEER" } else { "baseline" },
+        cfg.overlap.name(),
         human::bytes(job.image_bytes),
         human::bytes(job.ckpt_bytes)
     );
@@ -139,6 +160,19 @@ fn cmd_trace(rest: &[String]) -> i32 {
     let seed: u64 = opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(1);
     let pool_gpus: Option<u32> = opt(rest, "--pool-gpus").and_then(|s| s.parse().ok());
     let threads: usize = opt(rest, "--threads").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let overlap = match overlap_opt(rest) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // Speculative staging needs warm state (hot-set records, env caches) to
+    // know what to stage, i.e. the BootSeer feature set.
+    let boot = flag(rest, "--bootseer");
+    if overlap == OverlapMode::Speculative && !boot {
+        eprintln!("note: --overlap speculative stages nothing without --bootseer (no records/caches)");
+    }
     let t = gen_trace(seed, jobs, 7.0 * 86400.0);
     let gpus: u64 = t.iter().map(|j| j.gpus as u64).sum();
     let startups: u64 = t.iter().map(|j| (j.full_startups + j.hot_updates) as u64).sum();
@@ -160,12 +194,17 @@ fn cmd_trace(rest: &[String]) -> i32 {
     } else {
         threads
     };
-    println!("\nreplaying the week ({n_threads} threads)...");
+    println!(
+        "\nreplaying the week ({n_threads} threads, {} config, {} stage graph)...",
+        if boot { "bootseer" } else { "baseline" },
+        overlap.name()
+    );
     let t0 = std::time::Instant::now();
+    let base = if boot { BootseerConfig::bootseer() } else { BootseerConfig::baseline() };
     let r = replay_cluster(
         &t,
         &ClusterConfig::default(),
-        &BootseerConfig::baseline(),
+        &BootseerConfig { overlap, ..base },
         seed,
         &ReplayOptions { pool_gpus, threads },
     );

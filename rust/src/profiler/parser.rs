@@ -100,6 +100,52 @@ pip install torch... done
     }
 
     #[test]
+    fn rejects_malformed_field_variants() {
+        // Truncated after any field.
+        for line in [
+            "[bootseer]",
+            "[bootseer] ts=1.0",
+            "[bootseer] ts=1.0 job=1 attempt=0 node=0 stage=env_setup",
+        ] {
+            assert!(LogParser::parse_line(line).is_none(), "{line:?}");
+        }
+        // Fields out of order, duplicated, or with junk values.
+        for line in [
+            "[bootseer] job=1 ts=1.0 attempt=0 node=0 stage=env_setup event=begin",
+            "[bootseer] ts=1.0 ts=2.0 job=1 attempt=0 node=0 stage=env_setup event=begin",
+            "[bootseer] ts=1e5 job=1 attempt=0 node=0 stage=env_setup event=begin",
+            "[bootseer] ts=-1.0 job=1 attempt=0 node=0 stage=env_setup event=begin",
+            "[bootseer] ts=1..0 job=1 attempt=0 node=0 stage=env_setup event=begin",
+            "[bootseer] ts=. job=1 attempt=0 node=0 stage=env_setup event=begin",
+            "[bootseer] ts=1.0 job=-1 attempt=0 node=0 stage=env_setup event=begin",
+            "[bootseer] ts=1.0 job=1 attempt=0 node=0 stage=env_setup event=done",
+            "[bootseer] ts=1.0 job=1 attempt=0 node=0 stage=env_setup event=begin extra",
+        ] {
+            assert!(LogParser::parse_line(line).is_none(), "{line:?}");
+        }
+    }
+
+    #[test]
+    fn interleaved_and_partial_lines() {
+        // A stream where bootseer lines are interleaved with partial copies
+        // of themselves (a torn write, a pip progress bar, an empty line):
+        // only the well-formed lines survive.
+        let text = "\
+[bootseer] ts=1.000000 job=3 attempt=0 node=0 stage=image_loading event=begin
+[bootseer] ts=2.000000 job=3 attempt=0 node=0 stage=image_load
+Collecting torch [bootseer] ts=9 job=3
+[bootseer] ts=2.500000 job=3 attempt=0 node=0 stage=image_loading event=end
+
+[bootseer] ts=3.000000 job=3 attempt=0 node=1 stage=env_setup event=begin
+";
+        let evs = LogParser::parse_stream(text);
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].stage, Stage::ImageLoading);
+        assert_eq!(evs[1].ts, 2.5);
+        assert_eq!(evs[2].node, 1);
+    }
+
+    #[test]
     fn tolerates_whitespace() {
         let e = StageEvent {
             job: 1,

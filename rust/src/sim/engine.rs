@@ -23,14 +23,25 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-/// f64 ordered for the delay heap (delays are always finite).
-#[derive(PartialEq, PartialOrd)]
+/// f64 ordered for the delay heap via `total_cmp` (delays are always
+/// finite and non-negative, so the total order agrees with the numeric
+/// order). All four comparison traits are derived from the same total
+/// order to keep them consistent.
 struct OrdF64(f64);
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
 impl Eq for OrdF64 {}
-#[allow(clippy::derive_ord_xor_partial_ord)]
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
 impl Ord for OrdF64 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.partial_cmp(other).unwrap()
+        self.0.total_cmp(&other.0)
     }
 }
 
@@ -353,7 +364,11 @@ impl FluidSim {
             } else {
                 f64::INFINITY // starved flow; cannot finish until rates change
             };
-            if best.map_or(true, |(bt, bid)| t < bt || (t == bt && id < bid)) {
+            let better = match best {
+                None => true,
+                Some((bt, bid)) => t < bt || (t == bt && id < bid),
+            };
+            if better {
                 best = Some((t, id));
             }
         }

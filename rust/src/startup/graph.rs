@@ -1,0 +1,541 @@
+//! The unified startup stage-graph.
+//!
+//! Subsystem planners used to be three free functions with three different
+//! signatures, composed by hand-written barrier plumbing in `pipeline.rs`.
+//! Here each subsystem instead implements [`StagePlanner`]: it declares its
+//! profiler [`Stage`], how it attaches to the stage before it
+//! ([`EdgeKind`], per [`OverlapMode`]), optionally what it could usefully
+//! pre-stage during the Allocation phase ([`SpecRequest`]), and how to lay
+//! its per-node tasks onto the fluid sim. [`StageGraph::compile`] turns an
+//! ordered set of planners into one task DAG and returns a
+//! [`CompiledGraph`] from which the pipeline emits events and spans
+//! uniformly.
+//!
+//! The three gating disciplines (see `docs/stage_graph.md`):
+//!
+//! * `Sequential` — every stage ends in a global sync barrier, exactly the
+//!   paper's Figure 2. Compiles to the same task structure the pre-graph
+//!   pipeline built, so outcomes are byte-identical.
+//! * `Overlapped` — stages chain per node: a node enters Environment Setup
+//!   the moment its own image lands, and its checkpoint hot-chunk prefetch
+//!   starts then too. NIC/service contention between concurrently active
+//!   stages is resolved by the max-min fair engine.
+//! * `Speculative` — `Overlapped`, plus staging flows that start during the
+//!   Allocation phase on nodes already granted, bounded by a per-node byte
+//!   budget. Staged bytes are credited to the stage's foreground work, and
+//!   the stage gates on its staging flow (no free lunch: the bytes still
+//!   cross the same pipes, just during the scheduler's dead time).
+
+use crate::config::OverlapMode;
+use crate::image::p2p::Swarm;
+use crate::profiler::events::Stage;
+use crate::sim::{ClusterSim, TaskId};
+use crate::startup::World;
+
+/// How a stage's per-node tasks attach to the stage before it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Every node waits for every node of the upstream stage — the paper's
+    /// "(Sync)" barrier.
+    GlobalBarrier,
+    /// Node `i` waits only for node `i` of the upstream stage.
+    PerNode,
+    /// No dependency on the upstream stage: gated at the graph entry only
+    /// (allocation complete).
+    Entry,
+}
+
+/// Where speculative staging pulls its bytes from. Each variant mirrors
+/// the transport the requesting stage itself would use for the same
+/// bytes, so staged bytes never move slower than the in-stage fetch they
+/// replace — the structural guarantee behind Overlapped ≥ Speculative.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpecSource {
+    /// P2P swarm fed by the cluster cache (image hot set with `p2p` on) —
+    /// the transport `plan_prefetch` uses in-stage.
+    CacheSwarm,
+    /// Plain cluster-cache egress (image hot set with `p2p` off).
+    ClusterCache,
+    /// An HDFS DataNode group, round-robin by node (env cache archive) —
+    /// the same group the restore download would hit.
+    Hdfs,
+}
+
+/// A stage's request for speculative staging during Allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecRequest {
+    pub bytes_per_node: u64,
+    pub source: SpecSource,
+}
+
+/// What a planner laid down for its stage.
+pub struct PlannedStage {
+    /// Per-node stage completion.
+    pub node_done: Vec<TaskId>,
+    /// Sub-stage spans to report (e.g. InstallScript inside EnvSetup):
+    /// per-node `(begin, end)` task pairs.
+    pub sub_spans: Vec<(Stage, Vec<(TaskId, TaskId)>)>,
+}
+
+/// Inputs the graph hands a planner when compiling its stage.
+pub struct StageInputs<'a> {
+    /// Per-node gate tasks this stage must respect.
+    pub deps: &'a [Vec<TaskId>],
+    /// Bytes already staged per node during Allocation (empty → none).
+    pub prestaged: &'a [u64],
+    /// `(stage, per-node done)` of every stage already compiled, in graph
+    /// order — planners pull custom overlap edges from here.
+    pub upstream: &'a [(Stage, Vec<TaskId>)],
+    pub mode: OverlapMode,
+    /// Tag to attach to the stage's node-done tasks.
+    pub tag: u64,
+}
+
+impl StageInputs<'_> {
+    /// Per-node completion of an already-compiled stage, if present.
+    pub fn done_of(&self, s: Stage) -> Option<&[TaskId]> {
+        self.upstream.iter().find(|(st, _)| *st == s).map(|(_, v)| v.as_slice())
+    }
+}
+
+/// One subsystem's startup stage, pluggable into the graph.
+pub trait StagePlanner {
+    /// Profiler stage this planner's tasks report under.
+    fn stage(&self) -> Stage;
+
+    /// How this stage attaches to the stage before it, per overlap mode.
+    fn edge(&self, mode: OverlapMode) -> EdgeKind;
+
+    /// Bytes this stage would pre-stage per node during the Allocation
+    /// phase (`Speculative` mode). `None` → nothing useful to stage.
+    fn spec_request(&self, world: &World) -> Option<SpecRequest> {
+        let _ = world;
+        None
+    }
+
+    /// Lay the stage's tasks onto the sim.
+    fn plan(
+        &mut self,
+        cs: &mut ClusterSim,
+        world: &mut World,
+        inp: &StageInputs<'_>,
+    ) -> PlannedStage;
+}
+
+/// Tag attached to a stage's node-done tasks (the pre-graph pipeline used
+/// the same numbering).
+fn stage_tag(s: Stage) -> u64 {
+    match s {
+        Stage::ImageLoading => 1,
+        Stage::EnvSetup => 2,
+        Stage::ModelInit => 3,
+        _ => 0,
+    }
+}
+
+/// One compiled stage: enough handles to emit events and spans after the
+/// sim has run.
+pub struct CompiledStage {
+    pub stage: Stage,
+    /// Per-node gate whose completion timestamps the stage Begin events.
+    pub begin_gate: Vec<TaskId>,
+    pub node_done: Vec<TaskId>,
+    pub sub_spans: Vec<(Stage, Vec<(TaskId, TaskId)>)>,
+    /// Bytes staged per node during Allocation (empty → none).
+    pub prestaged: Vec<u64>,
+}
+
+/// The compiled graph.
+pub struct CompiledGraph {
+    /// Stages in graph order.
+    pub stages: Vec<CompiledStage>,
+    /// Completion of the whole graph (every node of the final stage).
+    pub done: TaskId,
+}
+
+impl CompiledGraph {
+    pub fn stage(&self, s: Stage) -> Option<&CompiledStage> {
+        self.stages.iter().find(|c| c.stage == s)
+    }
+}
+
+/// An ordered set of stage planners plus the gating discipline to compile
+/// them under.
+pub struct StageGraph<'p> {
+    planners: Vec<Box<dyn StagePlanner + 'p>>,
+    mode: OverlapMode,
+    /// Per-node speculative staging budget, bytes (`Speculative` only).
+    budget: u64,
+}
+
+impl<'p> StageGraph<'p> {
+    pub fn new(mode: OverlapMode, budget: u64) -> StageGraph<'p> {
+        StageGraph { planners: Vec::new(), mode, budget }
+    }
+
+    pub fn add(&mut self, planner: Box<dyn StagePlanner + 'p>) {
+        self.planners.push(planner);
+    }
+
+    /// Compile every stage onto the sim. `entry[i]` gates node `i`'s first
+    /// stage (allocation complete); `grants[i]` (Speculative mode) is the
+    /// task marking node `i`'s allocation grant, where staging flows start.
+    pub fn compile(
+        &mut self,
+        cs: &mut ClusterSim,
+        world: &mut World,
+        entry: &[Vec<TaskId>],
+        grants: Option<&[TaskId]>,
+    ) -> CompiledGraph {
+        let n = cs.nodes();
+        assert_eq!(entry.len(), n, "one entry gate set per node");
+        assert!(!self.planners.is_empty(), "graph has at least one stage");
+
+        // ---- Speculative staging during Allocation ----
+        // For each planner: (bytes staged per node, staging task per node).
+        let mut staged: Vec<Option<(Vec<u64>, Vec<TaskId>)>> =
+            (0..self.planners.len()).map(|_| None).collect();
+        if self.mode == OverlapMode::Speculative {
+            if let Some(grants) = grants {
+                assert_eq!(grants.len(), n, "one grant per node");
+                let mut remaining = vec![self.budget; n];
+                for (k, p) in self.planners.iter().enumerate() {
+                    let Some(req) = p.spec_request(world) else { continue };
+                    let bytes_v: Vec<u64> = (0..n)
+                        .map(|i| {
+                            let b = req.bytes_per_node.min(remaining[i]);
+                            remaining[i] -= b;
+                            b
+                        })
+                        .collect();
+                    if bytes_v.iter().all(|&b| b == 0) {
+                        continue; // budget exhausted: no flows, no join
+                    }
+                    let swarm = if req.source == SpecSource::CacheSwarm {
+                        Some(Swarm::build(
+                            &mut cs.sim,
+                            "spec.swarm",
+                            cs.cfg.cluster_cache_egress_bps,
+                            n as u32,
+                            cs.cfg.node_nic_bps,
+                        ))
+                    } else {
+                        None
+                    };
+                    let task_v: Vec<TaskId> = (0..n)
+                        .map(|i| {
+                            if bytes_v[i] == 0 {
+                                // Nothing to stage here; the placeholder is
+                                // never joined (the join checks bytes > 0).
+                                return grants[i];
+                            }
+                            let b = bytes_v[i] as f64;
+                            match (req.source, &swarm) {
+                                (SpecSource::CacheSwarm, Some(sw)) => {
+                                    sw.download(&mut cs.sim, b, cs.node_nic[i], &[grants[i]], 0)
+                                }
+                                (SpecSource::Hdfs, _) => {
+                                    let g = cs.hdfs_groups[i % cs.hdfs_groups.len()];
+                                    cs.sim.flow(b, vec![g, cs.node_nic[i]], &[grants[i]], 0)
+                                }
+                                _ => cs.sim.flow(
+                                    b,
+                                    vec![cs.cache, cs.node_nic[i]],
+                                    &[grants[i]],
+                                    0,
+                                ),
+                            }
+                        })
+                        .collect();
+                    staged[k] = Some((bytes_v, task_v));
+                }
+            }
+        }
+
+        // ---- Stages in graph order ----
+        let mut upstream: Vec<(Stage, Vec<TaskId>)> = Vec::new();
+        let mut compiled: Vec<CompiledStage> = Vec::new();
+        let mut prev_done: Option<Vec<TaskId>> = None;
+        for (k, p) in self.planners.iter_mut().enumerate() {
+            // The first stage has no upstream: PerNode degenerates to Entry
+            // (GlobalBarrier still syncs on every node's entry gate — the
+            // hot-update shape).
+            let edge = match (p.edge(self.mode), prev_done.is_some()) {
+                (EdgeKind::PerNode, false) => EdgeKind::Entry,
+                (e, _) => e,
+            };
+            let (mut deps, mut begin_gate): (Vec<Vec<TaskId>>, Vec<TaskId>) = match edge {
+                EdgeKind::Entry => {
+                    let bg = entry
+                        .iter()
+                        .map(|g| if g.len() == 1 { g[0] } else { cs.sim.barrier(g, 0) })
+                        .collect();
+                    (entry.to_vec(), bg)
+                }
+                EdgeKind::PerNode => {
+                    let prev = prev_done.as_ref().expect("PerNode edge needs upstream");
+                    (prev.iter().map(|&t| vec![t]).collect(), prev.clone())
+                }
+                EdgeKind::GlobalBarrier => {
+                    let bar = match prev_done.as_ref() {
+                        Some(prev) => cs.sim.barrier(prev, 0),
+                        None => {
+                            let all: Vec<TaskId> =
+                                entry.iter().flat_map(|g| g.iter().copied()).collect();
+                            cs.sim.barrier(&all, 0)
+                        }
+                    };
+                    (vec![vec![bar]; n], vec![bar; n])
+                }
+            };
+
+            // Join the stage's speculative staging flows: the stage starts
+            // once its normal gate AND its staged bytes have landed.
+            let prestaged: Vec<u64> = match &staged[k] {
+                Some((bytes, tasks)) => {
+                    for i in 0..n {
+                        if bytes[i] > 0 {
+                            let mut d = std::mem::take(&mut deps[i]);
+                            d.push(tasks[i]);
+                            let joined = cs.sim.barrier(&d, 0);
+                            deps[i] = vec![joined];
+                            begin_gate[i] = joined;
+                        }
+                    }
+                    bytes.clone()
+                }
+                None => Vec::new(),
+            };
+
+            let inp = StageInputs {
+                deps: &deps,
+                prestaged: &prestaged,
+                upstream: &upstream,
+                mode: self.mode,
+                tag: stage_tag(p.stage()),
+            };
+            let plan = p.plan(cs, world, &inp);
+            assert_eq!(plan.node_done.len(), n, "one done task per node");
+            upstream.push((p.stage(), plan.node_done.clone()));
+            compiled.push(CompiledStage {
+                stage: p.stage(),
+                begin_gate,
+                node_done: plan.node_done.clone(),
+                sub_spans: plan.sub_spans,
+                prestaged,
+            });
+            prev_done = Some(plan.node_done);
+        }
+
+        let done = cs.sim.barrier(prev_done.as_ref().expect("nonempty graph"), 0);
+        CompiledGraph { stages: compiled, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    /// A synthetic stage: per-node fixed delays, plus an optional staging
+    /// request whose credited bytes become extra per-node delay (so tests
+    /// can observe what the graph passed in).
+    struct FixedStage {
+        stage: Stage,
+        edge: EdgeKind,
+        durations: Vec<f64>,
+        spec: Option<SpecRequest>,
+        /// Seconds of extra delay per staged byte (observability hook).
+        s_per_staged_byte: f64,
+    }
+
+    impl FixedStage {
+        fn new(stage: Stage, edge: EdgeKind, durations: Vec<f64>) -> FixedStage {
+            FixedStage { stage, edge, durations, spec: None, s_per_staged_byte: 0.0 }
+        }
+    }
+
+    impl StagePlanner for FixedStage {
+        fn stage(&self) -> Stage {
+            self.stage
+        }
+
+        fn edge(&self, _mode: OverlapMode) -> EdgeKind {
+            self.edge
+        }
+
+        fn spec_request(&self, _world: &World) -> Option<SpecRequest> {
+            self.spec
+        }
+
+        fn plan(
+            &mut self,
+            cs: &mut ClusterSim,
+            _world: &mut World,
+            inp: &StageInputs<'_>,
+        ) -> PlannedStage {
+            let node_done = (0..cs.nodes())
+                .map(|i| {
+                    let staged = inp.prestaged.get(i).copied().unwrap_or(0);
+                    let dur =
+                        self.durations[i] + staged as f64 * self.s_per_staged_byte;
+                    cs.sim.delay(dur, &inp.deps[i], inp.tag)
+                })
+                .collect();
+            PlannedStage { node_done, sub_spans: Vec::new() }
+        }
+    }
+
+    fn setup(nodes: u32) -> (ClusterSim, World) {
+        (ClusterSim::build(&ClusterConfig::with_nodes(nodes), 42), World::new())
+    }
+
+    #[test]
+    fn global_barrier_waits_for_slowest() {
+        let (mut cs, mut w) = setup(2);
+        let gate0 = cs.sim.delay(0.0, &[], 0);
+        let entry = vec![vec![gate0]; 2];
+        let mut g = StageGraph::new(OverlapMode::Sequential, 0);
+        g.add(Box::new(FixedStage::new(
+            Stage::ImageLoading,
+            EdgeKind::Entry,
+            vec![1.0, 10.0],
+        )));
+        g.add(Box::new(FixedStage::new(
+            Stage::EnvSetup,
+            EdgeKind::GlobalBarrier,
+            vec![1.0, 1.0],
+        )));
+        let c = g.compile(&mut cs, &mut w, &entry, None);
+        cs.sim.run();
+        // Node 0's env starts only after node 1's image (t=10).
+        let env = c.stage(Stage::EnvSetup).unwrap();
+        assert_eq!(cs.sim.finished_at(env.begin_gate[0]), 10.0);
+        assert_eq!(cs.sim.finished_at(env.node_done[0]), 11.0);
+        assert_eq!(cs.sim.finished_at(c.done), 11.0);
+    }
+
+    #[test]
+    fn per_node_edge_lets_fast_nodes_run_ahead() {
+        let (mut cs, mut w) = setup(2);
+        let gate0 = cs.sim.delay(0.0, &[], 0);
+        let entry = vec![vec![gate0]; 2];
+        let mut g = StageGraph::new(OverlapMode::Overlapped, 0);
+        g.add(Box::new(FixedStage::new(
+            Stage::ImageLoading,
+            EdgeKind::Entry,
+            vec![1.0, 10.0],
+        )));
+        g.add(Box::new(FixedStage::new(
+            Stage::EnvSetup,
+            EdgeKind::PerNode,
+            vec![1.0, 1.0],
+        )));
+        let c = g.compile(&mut cs, &mut w, &entry, None);
+        cs.sim.run();
+        // Node 0 chains off its own image at t=1; the whole graph still
+        // completes when the slowest node does.
+        let env = c.stage(Stage::EnvSetup).unwrap();
+        assert_eq!(cs.sim.finished_at(env.node_done[0]), 2.0);
+        assert_eq!(cs.sim.finished_at(env.node_done[1]), 11.0);
+        assert_eq!(cs.sim.finished_at(c.done), 11.0);
+    }
+
+    #[test]
+    fn speculative_staging_respects_budget() {
+        let (mut cs, mut w) = setup(2);
+        let gate0 = cs.sim.delay(5.0, &[], 0);
+        let entry = vec![vec![gate0]; 2];
+        let grants: Vec<TaskId> = (0..2).map(|_| cs.sim.delay(1.0, &[], 0)).collect();
+        let mut g = StageGraph::new(OverlapMode::Speculative, 400);
+        let mut img = FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![0.0, 0.0]);
+        img.spec = Some(SpecRequest { bytes_per_node: 300, source: SpecSource::ClusterCache });
+        let mut env = FixedStage::new(Stage::EnvSetup, EdgeKind::PerNode, vec![0.0, 0.0]);
+        env.spec = Some(SpecRequest { bytes_per_node: 300, source: SpecSource::Hdfs });
+        g.add(Box::new(img));
+        g.add(Box::new(env));
+        let c = g.compile(&mut cs, &mut w, &entry, Some(&grants));
+        cs.sim.run();
+        // First stage gets its full request; the second is clamped by what
+        // remains of the per-node budget.
+        assert_eq!(c.stages[0].prestaged, vec![300, 300]);
+        assert_eq!(c.stages[1].prestaged, vec![100, 100]);
+    }
+
+    #[test]
+    fn non_speculative_modes_never_stage() {
+        for mode in [OverlapMode::Sequential, OverlapMode::Overlapped] {
+            let (mut cs, mut w) = setup(2);
+            let gate0 = cs.sim.delay(0.0, &[], 0);
+            let entry = vec![vec![gate0]; 2];
+            let grants: Vec<TaskId> = (0..2).map(|_| cs.sim.delay(0.0, &[], 0)).collect();
+            let mut g = StageGraph::new(mode, u64::MAX);
+            let mut img =
+                FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![1.0, 1.0]);
+            img.spec =
+                Some(SpecRequest { bytes_per_node: 300, source: SpecSource::ClusterCache });
+            g.add(Box::new(img));
+            let c = g.compile(&mut cs, &mut w, &entry, Some(&grants));
+            cs.sim.run();
+            assert!(c.stages[0].prestaged.is_empty());
+        }
+    }
+
+    #[test]
+    fn first_stage_global_barrier_syncs_on_entry() {
+        // The hot-update shape: the first stage is behind a global barrier
+        // over every node's entry gate.
+        let (mut cs, mut w) = setup(2);
+        let g0 = cs.sim.delay(3.0, &[], 0);
+        let g1 = cs.sim.delay(7.0, &[], 0);
+        let entry = vec![vec![g0], vec![g1]];
+        let mut g = StageGraph::new(OverlapMode::Sequential, 0);
+        g.add(Box::new(FixedStage::new(
+            Stage::EnvSetup,
+            EdgeKind::GlobalBarrier,
+            vec![1.0, 1.0],
+        )));
+        let c = g.compile(&mut cs, &mut w, &entry, None);
+        cs.sim.run();
+        // Both nodes start at t=7 (slowest entry gate).
+        assert_eq!(cs.sim.finished_at(c.stages[0].node_done[0]), 8.0);
+        assert_eq!(cs.sim.finished_at(c.stages[0].node_done[1]), 8.0);
+    }
+
+    #[test]
+    fn upstream_handles_visible_to_later_stages() {
+        struct Probing;
+        impl StagePlanner for Probing {
+            fn stage(&self) -> Stage {
+                Stage::ModelInit
+            }
+            fn edge(&self, _m: OverlapMode) -> EdgeKind {
+                EdgeKind::PerNode
+            }
+            fn plan(
+                &mut self,
+                cs: &mut ClusterSim,
+                _world: &mut World,
+                inp: &StageInputs<'_>,
+            ) -> PlannedStage {
+                // Gate on the image stage directly (the overlap edge).
+                let img = inp.done_of(Stage::ImageLoading).expect("image compiled");
+                let node_done = (0..cs.nodes())
+                    .map(|i| cs.sim.delay(1.0, &[img[i]], inp.tag))
+                    .collect();
+                PlannedStage { node_done, sub_spans: Vec::new() }
+            }
+        }
+        let (mut cs, mut w) = setup(1);
+        let gate0 = cs.sim.delay(0.0, &[], 0);
+        let entry = vec![vec![gate0]];
+        let mut g = StageGraph::new(OverlapMode::Overlapped, 0);
+        g.add(Box::new(FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![2.0])));
+        g.add(Box::new(FixedStage::new(Stage::EnvSetup, EdgeKind::PerNode, vec![50.0])));
+        g.add(Box::new(Probing));
+        let c = g.compile(&mut cs, &mut w, &entry, None);
+        cs.sim.run();
+        // ModelInit gated on image (t=2), not env (t=52).
+        assert_eq!(cs.sim.finished_at(c.stage(Stage::ModelInit).unwrap().node_done[0]), 3.0);
+    }
+}

@@ -17,14 +17,25 @@
 //!   cluster replay drives in parallel.
 //!
 //! Worker-phase stages (Image Loading → Environment Setup → Model
-//! Initialization, each ending in a global sync barrier) are planned by the
-//! subsystem planners in [`crate::image`], [`crate::env`] and
-//! [`crate::ckpt`], and run on the fluid simulator in [`crate::sim`].
-//! Every stage emits profiler events ([`crate::profiler`]) exactly like the
-//! production deployment logs them.
+//! Initialization) are planned by the subsystem [`graph::StagePlanner`]s in
+//! [`stages`] — thin adapters over [`crate::image`], [`crate::env`] and
+//! [`crate::ckpt`] — and compiled onto the fluid simulator ([`crate::sim`])
+//! by the [`graph::StageGraph`] under one of three gating disciplines
+//! ([`crate::config::OverlapMode`]): `Sequential` (paper-faithful global
+//! barriers, the default), `Overlapped` (per-node chaining), or
+//! `Speculative` (staging during Allocation). Every stage emits profiler
+//! events ([`crate::profiler`]) exactly like the production deployment logs
+//! them. Design note: `docs/stage_graph.md`.
 
+pub mod graph;
 pub mod pipeline;
+pub mod stages;
 
+pub use graph::{
+    CompiledGraph, CompiledStage, EdgeKind, PlannedStage, SpecRequest, SpecSource, StageGraph,
+    StageInputs, StagePlanner,
+};
 pub use pipeline::{
     run_startup, run_startup_with, StartupContext, StartupKind, StartupOutcome, World,
 };
+pub use stages::{EnvStage, ImageStage, InitStage};

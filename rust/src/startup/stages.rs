@@ -1,0 +1,183 @@
+//! The three subsystem planners of the Figure-2 worker phase, adapted to
+//! the [`StagePlanner`] trait: Image Loading (`crate::image`), Environment
+//! Setup (`crate::env`) and Model Initialization (`crate::ckpt`). Each
+//! declares its profiler stage, its gating edge per overlap mode, and —
+//! where staging ahead of time is physically possible — its speculative
+//! prefetch request.
+
+use crate::ckpt::resume::plan_model_init_with;
+use crate::config::{BootseerConfig, JobConfig, OverlapMode};
+use crate::env::installer::plan_env_setup_with;
+use crate::env::packages::PackageSet;
+use crate::image::loader::plan_image_load_with;
+use crate::image::spec::ImageSpec;
+use crate::profiler::events::Stage;
+use crate::sim::ClusterSim;
+use crate::startup::graph::{
+    EdgeKind, PlannedStage, SpecRequest, SpecSource, StageInputs, StagePlanner,
+};
+use crate::startup::World;
+
+/// Image Loading (§4.2) as a graph stage.
+pub struct ImageStage<'a> {
+    img: &'a ImageSpec,
+    cfg: &'a BootseerConfig,
+}
+
+impl<'a> ImageStage<'a> {
+    pub fn new(img: &'a ImageSpec, cfg: &'a BootseerConfig) -> ImageStage<'a> {
+        ImageStage { img, cfg }
+    }
+}
+
+impl StagePlanner for ImageStage<'_> {
+    fn stage(&self) -> Stage {
+        Stage::ImageLoading
+    }
+
+    fn edge(&self, _mode: OverlapMode) -> EdgeKind {
+        // Image loading is the first worker-phase stage in every mode.
+        EdgeKind::Entry
+    }
+
+    fn spec_request(&self, world: &World) -> Option<SpecRequest> {
+        // Only a recorded hot set can be staged ahead of time: before the
+        // record run nobody knows which blocks startup will touch. The
+        // staging transport mirrors what the stage itself would use.
+        let hot = world.hotset.lookup(self.img.digest)?;
+        let bytes: u64 = hot.iter().map(|&b| self.img.block_len(b)).sum();
+        let source =
+            if self.cfg.p2p { SpecSource::CacheSwarm } else { SpecSource::ClusterCache };
+        (bytes > 0).then_some(SpecRequest { bytes_per_node: bytes, source })
+    }
+
+    fn plan(
+        &mut self,
+        cs: &mut ClusterSim,
+        world: &mut World,
+        inp: &StageInputs<'_>,
+    ) -> PlannedStage {
+        let plan = plan_image_load_with(
+            cs,
+            self.img,
+            self.cfg,
+            &world.hotset,
+            inp.deps,
+            inp.prestaged,
+            inp.tag,
+        );
+        PlannedStage { node_done: plan.node_done, sub_spans: Vec::new() }
+    }
+}
+
+/// Environment Setup (§4.3) as a graph stage. Reports the InstallScript
+/// sub-span (§3.3's straggler proxy).
+pub struct EnvStage<'a> {
+    pkgs: &'a PackageSet,
+    job: &'a JobConfig,
+    cfg: &'a BootseerConfig,
+}
+
+impl<'a> EnvStage<'a> {
+    pub fn new(pkgs: &'a PackageSet, job: &'a JobConfig, cfg: &'a BootseerConfig) -> EnvStage<'a> {
+        EnvStage { pkgs, job, cfg }
+    }
+}
+
+impl StagePlanner for EnvStage<'_> {
+    fn stage(&self) -> Stage {
+        Stage::EnvSetup
+    }
+
+    fn edge(&self, mode: OverlapMode) -> EdgeKind {
+        match mode {
+            OverlapMode::Sequential => EdgeKind::GlobalBarrier,
+            // A node enters env setup the moment its own image lands.
+            OverlapMode::Overlapped | OverlapMode::Speculative => EdgeKind::PerNode,
+        }
+    }
+
+    fn spec_request(&self, world: &World) -> Option<SpecRequest> {
+        // Only a cache hit has an archive to stage; a miss installs from
+        // scratch and there is nothing to pull early.
+        if !self.cfg.env_cache {
+            return None;
+        }
+        let entry = world.envcache.lookup(self.pkgs.signature())?;
+        (entry.compressed_bytes > 0).then_some(SpecRequest {
+            bytes_per_node: entry.compressed_bytes,
+            source: SpecSource::Hdfs,
+        })
+    }
+
+    fn plan(
+        &mut self,
+        cs: &mut ClusterSim,
+        world: &mut World,
+        inp: &StageInputs<'_>,
+    ) -> PlannedStage {
+        let plan = plan_env_setup_with(
+            cs,
+            self.pkgs,
+            self.job,
+            self.cfg,
+            &mut world.envcache,
+            inp.deps,
+            inp.prestaged,
+            inp.tag,
+        );
+        PlannedStage {
+            node_done: plan.node_done,
+            sub_spans: vec![(Stage::InstallScript, plan.install_span)],
+        }
+    }
+}
+
+/// Model Initialization (§4.4) as a graph stage.
+pub struct InitStage<'a> {
+    job: &'a JobConfig,
+    cfg: &'a BootseerConfig,
+}
+
+impl<'a> InitStage<'a> {
+    pub fn new(job: &'a JobConfig, cfg: &'a BootseerConfig) -> InitStage<'a> {
+        InitStage { job, cfg }
+    }
+}
+
+impl StagePlanner for InitStage<'_> {
+    fn stage(&self) -> Stage {
+        Stage::ModelInit
+    }
+
+    fn edge(&self, mode: OverlapMode) -> EdgeKind {
+        match mode {
+            OverlapMode::Sequential => EdgeKind::GlobalBarrier,
+            OverlapMode::Overlapped | OverlapMode::Speculative => EdgeKind::PerNode,
+        }
+    }
+
+    // No speculative request: the per-node resume share is hundreds of GB —
+    // far past any allocation-window budget — and which replica reads which
+    // shard is only known once ranks are assigned.
+
+    fn plan(
+        &mut self,
+        cs: &mut ClusterSim,
+        _world: &mut World,
+        inp: &StageInputs<'_>,
+    ) -> PlannedStage {
+        // Overlapped modes: the node's resume share starts streaming
+        // through the host-level HDFS-FUSE client as soon as its container
+        // is up (image stage done), concurrent with env setup; rank launch
+        // still waits for env.
+        let read_gates = match inp.mode {
+            OverlapMode::Sequential => None,
+            OverlapMode::Overlapped | OverlapMode::Speculative => {
+                inp.done_of(Stage::ImageLoading)
+            }
+        };
+        let plan = plan_model_init_with(cs, self.job, self.cfg, inp.deps, read_gates, inp.tag);
+        PlannedStage { node_done: plan.node_done, sub_spans: Vec::new() }
+    }
+}

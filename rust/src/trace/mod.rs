@@ -19,12 +19,15 @@
 //!    sampled.
 //! 2. **Replay** — every startup becomes an independent simulation unit
 //!    with a deterministic per-unit seed, replayed in parallel across
-//!    threads. Shared-service bandwidth (registry, cluster cache, HDFS) is
-//!    charged against the set of *concurrently starting* jobs from phase 1,
-//!    and warm-cache state (image hot-set records, environment caches) is
-//!    served from a [`SharedWorld`] registry keyed by image digest with
-//!    virtual-time visibility — so results are byte-identical regardless of
-//!    thread count.
+//!    threads through the startup stage-graph ([`crate::startup::graph`];
+//!    the [`crate::config::OverlapMode`] on the replayed `BootseerConfig`
+//!    selects sequential / overlapped / speculative gating). Shared-service
+//!    bandwidth (registry, cluster cache, HDFS) is charged against the set
+//!    of *concurrently starting* jobs from phase 1, and warm-cache state
+//!    (image hot-set records, environment caches) is served from a
+//!    [`SharedWorld`] registry keyed by image digest with virtual-time
+//!    visibility — so results are byte-identical regardless of thread
+//!    count.
 //!
 //! [`replay`] is the convenience wrapper with auto-sized pool and
 //! auto-detected threads; `bootseer trace --pool-gpus N --threads T`
@@ -830,6 +833,44 @@ mod tests {
             "bootseer {} vs baseline {}",
             boot.startup_gpu_hours,
             base.startup_gpu_hours
+        );
+    }
+
+    #[test]
+    fn replay_overlap_modes_reduce_startup_hours_and_stay_deterministic() {
+        use crate::config::OverlapMode;
+        let t = gen_trace(4, 40, 86400.0);
+        let cluster = ClusterConfig::default();
+        let run_mode = |mode: OverlapMode, threads: usize| {
+            replay_cluster(
+                &t,
+                &cluster,
+                &BootseerConfig { overlap: mode, ..BootseerConfig::bootseer() },
+                7,
+                &ReplayOptions { pool_gpus: None, threads },
+            )
+        };
+        let seq = run_mode(OverlapMode::Sequential, 1);
+        let ovl = run_mode(OverlapMode::Overlapped, 1);
+        let spec = run_mode(OverlapMode::Speculative, 1);
+        assert!(
+            ovl.startup_gpu_hours < seq.startup_gpu_hours,
+            "overlapped {} vs sequential {}",
+            ovl.startup_gpu_hours,
+            seq.startup_gpu_hours
+        );
+        assert!(
+            spec.startup_gpu_hours < ovl.startup_gpu_hours,
+            "speculative {} vs overlapped {}",
+            spec.startup_gpu_hours,
+            ovl.startup_gpu_hours
+        );
+        // Thread-count determinism holds through the graph in every mode.
+        let spec8 = run_mode(OverlapMode::Speculative, 8);
+        assert_eq!(
+            spec.startup_gpu_hours.to_bits(),
+            spec8.startup_gpu_hours.to_bits(),
+            "overlap replay must stay byte-identical across thread counts"
         );
     }
 

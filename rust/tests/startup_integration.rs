@@ -2,7 +2,7 @@
 //! BootSeer vs baseline at the paper's scales, and real-bytes env-cache +
 //! checkpoint paths composing with the sim (no artifacts required).
 
-use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig};
+use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig, OverlapMode};
 use bootseer::env::cache::{pack, snapshot_dir, unpack, CacheCapture};
 use bootseer::profiler::{LogParser, Stage, StageAnalysisService};
 use bootseer::startup::{run_startup, StartupKind, World};
@@ -26,6 +26,33 @@ fn bootseer_vs_baseline_all_paper_scales() {
             "gpus={gpus}: base {:.1}s boot {:.1}s ratio {ratio:.2}",
             base.worker_phase_s,
             boot.worker_phase_s
+        );
+    }
+}
+
+/// Stage-graph overlap modes at every paper scale: the ordering holds and
+/// the profiler still round-trips the event stream cleanly.
+#[test]
+fn overlap_modes_ordered_at_all_paper_scales() {
+    let cluster = ClusterConfig::default();
+    for gpus in [16u32, 64, 128] {
+        let job = JobConfig::paper_moe(gpus);
+        let mut worker = Vec::new();
+        for mode in OverlapMode::ALL {
+            let cfg = BootseerConfig { overlap: mode, ..BootseerConfig::bootseer() };
+            let mut w = World::new();
+            run_startup(1, 0, &cluster, &job, &cfg, &mut w, StartupKind::Full, 3);
+            let o = run_startup(1, 1, &cluster, &job, &cfg, &mut w, StartupKind::Full, 4);
+            // Profiler ingests the overlapped stream without anomalies.
+            let log: String = o.events.iter().map(|e| e.log_line() + "\n").collect();
+            let mut svc = StageAnalysisService::new();
+            svc.ingest_all(LogParser::parse_stream(&log));
+            assert!(svc.anomalies.is_empty(), "gpus={gpus} mode={mode:?}");
+            worker.push(o.worker_phase_s);
+        }
+        assert!(
+            worker[1] <= worker[0] + 1e-9 && worker[2] <= worker[1] + 1e-9,
+            "gpus={gpus}: seq/ovl/spec = {worker:?}"
         );
     }
 }
