@@ -4,7 +4,10 @@ use bootseer::figures;
 use bootseer::util::bench::{figure_header, Bench};
 
 fn main() {
-    figure_header("Fig 1 — cluster GPU-hours: training vs startup", ">3.5% of GPU time wasted on startup");
+    figure_header(
+        "Fig 1 — cluster GPU-hours: training vs startup",
+        ">3.5% of GPU time wasted on startup",
+    );
     let mut b = Bench::new("fig01");
     let mut out = None;
     b.once("week_replay+fig01", || {

@@ -4,7 +4,10 @@ use bootseer::figures;
 use bootseer::util::bench::{figure_header, Bench};
 
 fn main() {
-    figure_header("Fig 3a/3b — startup overhead vs job scale", ">100-GPU jobs ≈6-7 min job-level; node-level ~1 min lower");
+    figure_header(
+        "Fig 3a/3b — startup overhead vs job scale",
+        ">100-GPU jobs ≈6-7 min job-level; node-level ~1 min lower",
+    );
     let mut b = Bench::new("fig03");
     let mut out = None;
     b.once("week_replay+fig03", || {

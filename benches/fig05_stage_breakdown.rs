@@ -5,7 +5,10 @@ use bootseer::figures;
 use bootseer::util::bench::{figure_header, Bench};
 
 fn main() {
-    figure_header("Fig 5 — per-stage node-level breakdown", "image 20-40s; env 100-300s (dominant); init 100-200s");
+    figure_header(
+        "Fig 5 — per-stage node-level breakdown",
+        "image 20-40s; env 100-300s (dominant); init 100-200s",
+    );
     let mut b = Bench::new("fig05");
     let mut out = None;
     b.once("week_replay+fig05", || {

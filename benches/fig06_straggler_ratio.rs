@@ -4,7 +4,10 @@ use bootseer::figures;
 use bootseer::util::bench::{figure_header, Bench};
 
 fn main() {
-    figure_header("Fig 6 — straggler Max/Median vs scale", "~1.0 small → ~1.5 at 1000+ GPUs (tail 4x)");
+    figure_header(
+        "Fig 6 — straggler Max/Median vs scale",
+        "~1.0 small → ~1.5 at 1000+ GPUs (tail 4x)",
+    );
     let mut b = Bench::new("fig06");
     let mut out = None;
     b.once("scale_sweep(5 seeds x 6 scales)", || {

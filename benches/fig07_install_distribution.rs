@@ -4,7 +4,10 @@ use bootseer::figures;
 use bootseer::util::bench::{figure_header, Bench};
 
 fn main() {
-    figure_header("Fig 7 — 11,520-GPU job install durations", "long tail: most ≤60s, <1% near 92s");
+    figure_header(
+        "Fig 7 — 11,520-GPU job install durations",
+        "long tail: most ≤60s, <1% near 92s",
+    );
     let mut b = Bench::new("fig07");
     let mut out = None;
     b.once("run_startup(1440 nodes)", || {

@@ -4,7 +4,10 @@ use bootseer::figures;
 use bootseer::util::bench::{figure_header, Bench};
 
 fn main() {
-    figure_header("Fig 12 — end-to-end startup vs scale", "BootSeer ≈2x faster at 16..128 GPUs");
+    figure_header(
+        "Fig 12 — end-to-end startup vs scale",
+        "BootSeer ≈2x faster at 16..128 GPUs",
+    );
     let mut b = Bench::new("fig12");
     let mut out = None;
     b.once("scales x 3 reps x (baseline+bootseer)", || {

@@ -4,7 +4,10 @@ use bootseer::figures;
 use bootseer::util::bench::{figure_header, Bench};
 
 fn main() {
-    figure_header("Fig 14 — env-cache straggler elimination (128 GPUs)", "BootSeer flattens the install-time distribution");
+    figure_header(
+        "Fig 14 — env-cache straggler elimination (128 GPUs)",
+        "BootSeer flattens the install-time distribution",
+    );
     let mut b = Bench::new("fig14");
     let mut out = None;
     b.iter("baseline+bootseer 128-GPU startups", || {

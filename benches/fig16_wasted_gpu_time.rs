@@ -1,0 +1,68 @@
+//! Wasted-GPU-time sweep under fault injection (Fig 16): one synthetic
+//! week replayed per stage-graph overlap mode with the production-
+//! calibrated fault processes (`FaultConfig::paper`) — seeded crash
+//! hazard, checkpoint rollback, warm/cold restarts, brownouts, injected
+//! stragglers. Emits `BENCH_faults.json` so the wasted-GPU-time trajectory
+//! is tracked across PRs (CI diffs it against `benches/baselines/`).
+//!
+//! Paper anchor: "more than 3.5% of GPU time is wasted due to startup
+//! overhead alone" — the Sequential/baseline point must land in the 2–5%
+//! band, and the Speculative mitigation must waste strictly less on the
+//! 128+-GPU jobs.
+//!
+//!     cargo bench --bench fig16_wasted_gpu_time
+//!     BOOTSEER_BENCH_FAST=1 cargo bench --bench fig16_wasted_gpu_time
+
+use bootseer::config::OverlapMode;
+use bootseer::faults::FaultConfig;
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header(
+        "fig 16: wasted GPU time under fault injection",
+        ">3.5% of GPU time wasted at baseline; overlap mitigations cut it",
+    );
+    let faults = FaultConfig::paper();
+    println!("faults: {}", faults.describe());
+    let mut b = Bench::new("fig16_wasted_gpu_time");
+    let mut out = None;
+    b.once(
+        &format!("{}-job week x 3 modes", figures::FAULTS_SWEEP_JOBS),
+        || {
+            out = Some(figures::wasted_gpu_time_sweep(
+                figures::FAULTS_SWEEP_SEED,
+                figures::FAULTS_SWEEP_JOBS,
+                &faults,
+            ));
+        },
+    );
+    let sweep = out.unwrap();
+    println!("\n{}", sweep.render());
+    let path = "BENCH_faults.json";
+    match std::fs::write(path, sweep.to_json().to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("write {path}: {e}"),
+    }
+    // Machine-checkable acceptance invariants.
+    let seq = sweep.point(OverlapMode::Sequential);
+    let spec = sweep.point(OverlapMode::Speculative);
+    assert!(
+        (0.02..=0.05).contains(&seq.wasted_fraction),
+        "baseline wasted fraction {} outside the paper's 2-5% band",
+        seq.wasted_fraction
+    );
+    assert!(
+        spec.wasted_fraction_ge128 < seq.wasted_fraction_ge128,
+        "speculative must waste strictly less at 128+ GPUs: {} vs {}",
+        spec.wasted_fraction_ge128,
+        seq.wasted_fraction_ge128
+    );
+    assert!(
+        spec.wasted_fraction < seq.wasted_fraction,
+        "speculative must waste strictly less overall: {} vs {}",
+        spec.wasted_fraction,
+        seq.wasted_fraction
+    );
+    b.finish();
+}

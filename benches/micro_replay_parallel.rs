@@ -29,7 +29,7 @@ fn main() {
             &cluster,
             &cfg,
             1,
-            &ReplayOptions { pool_gpus: None, threads: 1 },
+            &ReplayOptions { pool_gpus: None, threads: 1, ..ReplayOptions::default() },
         );
         hours_seq = r.startup_gpu_hours;
         r.startup_gpu_hours
@@ -41,7 +41,7 @@ fn main() {
             &cluster,
             &cfg,
             1,
-            &ReplayOptions { pool_gpus: None, threads: 0 },
+            &ReplayOptions { pool_gpus: None, threads: 0, ..ReplayOptions::default() },
         );
         hours_par = r.startup_gpu_hours;
         r.startup_gpu_hours

@@ -26,8 +26,17 @@ fn main() {
         let cluster = ClusterConfig::default();
         b.iter(&format!("startup_sim_{nodes}nodes"), || {
             let mut w = World::new();
-            run_startup(1, 0, &cluster, &job, &BootseerConfig::baseline(), &mut w, StartupKind::Full, 1)
-                .worker_phase_s
+            run_startup(
+                1,
+                0,
+                &cluster,
+                &job,
+                &BootseerConfig::baseline(),
+                &mut w,
+                StartupKind::Full,
+                1,
+            )
+            .worker_phase_s
         });
     }
     b.finish();

@@ -8,7 +8,8 @@ fn main() {
     let dir = std::env::temp_dir().join(format!("bootseer-bench-io-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     let store = LocalStore::open(&dir).unwrap();
-    let mb = if std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1") { 64 } else { 256 };
+    let fast = std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1");
+    let mb = if fast { 64 } else { 256 };
     let mut rng = Rng::seeded(1);
     let data: Vec<u8> = (0..mb * 1_000_000).map(|_| rng.next_u64() as u8).collect();
 

@@ -11,7 +11,9 @@ use bootseer::util::{human, stats};
 
 fn main() {
     let n_jobs = figures::default_trace_jobs();
-    println!("synthesizing a cluster week: {n_jobs} jobs (paper: 28,000+; scale with BOOTSEER_TRACE_JOBS)\n");
+    println!(
+        "synthesizing a cluster week: {n_jobs} jobs (paper: 28,000+; scale with BOOTSEER_TRACE_JOBS)\n"
+    );
 
     let r = figures::week_replay(1);
     println!("-- Fig 1: GPU-hours split --\n{}", figures::fig01(&r).render());

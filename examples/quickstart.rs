@@ -15,7 +15,16 @@ fn main() {
 
     // Baseline: lazy image loading + on-the-fly pip installs + plain HDFS.
     let mut w0 = World::new();
-    let base = run_startup(1, 0, &cluster, &job, &BootseerConfig::baseline(), &mut w0, StartupKind::Full, 42);
+    let base = run_startup(
+        1,
+        0,
+        &cluster,
+        &job,
+        &BootseerConfig::baseline(),
+        &mut w0,
+        StartupKind::Full,
+        42,
+    );
 
     // BootSeer: first run records hot blocks + captures the env cache...
     let mut w1 = World::new();

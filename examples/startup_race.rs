@@ -12,7 +12,8 @@ use bootseer::util::{human, stats};
 
 fn run(label: &str, cfg: &BootseerConfig, world: &mut World, attempt: u32, kind: StartupKind) {
     let job = JobConfig::paper_moe(128);
-    let o = run_startup(1, attempt, &ClusterConfig::default(), &job, cfg, world, kind, 9 + attempt as u64);
+    let cluster = ClusterConfig::default();
+    let o = run_startup(1, attempt, &cluster, &job, cfg, world, kind, 9 + attempt as u64);
     let inst = stats::BoxSummary::of(&o.install_durations);
     println!(
         "{label:<28} image {:>8}  env {:>8}  init {:>8}  | worker total {:>8}  install max/med {:.2}",

@@ -22,7 +22,8 @@ use bootseer::util::{human, json::Json};
 use std::time::Instant;
 
 fn main() -> bootseer::util::error::Result<()> {
-    let steps: u64 = std::env::var("BOOTSEER_E2E_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let steps: u64 =
+        std::env::var("BOOTSEER_E2E_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
     let artifacts = std::path::PathBuf::from("artifacts");
     bootseer::ensure!(
         artifacts.join("meta.json").exists(),
@@ -38,7 +39,16 @@ fn main() -> bootseer::util::error::Result<()> {
     run_startup(1, 0, &cluster, &job, &cfg, &mut w, StartupKind::Full, 1);
     let warm = run_startup(1, 1, &cluster, &job, &cfg, &mut w, StartupKind::Full, 2);
     let mut w0 = World::new();
-    let base = run_startup(1, 0, &cluster, &job, &BootseerConfig::baseline(), &mut w0, StartupKind::Full, 2);
+    let base = run_startup(
+        1,
+        0,
+        &cluster,
+        &job,
+        &BootseerConfig::baseline(),
+        &mut w0,
+        StartupKind::Full,
+        2,
+    );
     println!(
         "baseline worker phase {} | bootseer (warm) {} | speedup {}\n",
         human::secs(base.worker_phase_s),

@@ -160,16 +160,19 @@ impl ClusterConfig {
             nodes: doc.i64_or("cluster.nodes", base.nodes as i64) as u32,
             gpus_per_node: doc.i64_or("cluster.gpus_per_node", base.gpus_per_node as i64) as u32,
             node_nic_bps: doc.f64_or("cluster.node_nic_bps", base.node_nic_bps),
-            node_disk_write_bps: doc.f64_or("cluster.node_disk_write_bps", base.node_disk_write_bps),
+            node_disk_write_bps: doc
+                .f64_or("cluster.node_disk_write_bps", base.node_disk_write_bps),
             node_disk_read_bps: doc.f64_or("cluster.node_disk_read_bps", base.node_disk_read_bps),
-            registry_egress_bps: doc.f64_or("cluster.registry_egress_bps", base.registry_egress_bps),
+            registry_egress_bps: doc
+                .f64_or("cluster.registry_egress_bps", base.registry_egress_bps),
             cluster_cache_egress_bps: doc
                 .f64_or("cluster.cluster_cache_egress_bps", base.cluster_cache_egress_bps),
             scm_egress_bps: doc.f64_or("cluster.scm_egress_bps", base.scm_egress_bps),
             scm_throttle_concurrency: doc
                 .i64_or("cluster.scm_throttle_concurrency", base.scm_throttle_concurrency as i64)
                 as u32,
-            scm_throttle_penalty: doc.f64_or("cluster.scm_throttle_penalty", base.scm_throttle_penalty),
+            scm_throttle_penalty: doc
+                .f64_or("cluster.scm_throttle_penalty", base.scm_throttle_penalty),
             scm_reject_prob: doc.f64_or("cluster.scm_reject_prob", base.scm_reject_prob),
             scm_backoff_s: doc.f64_or("cluster.scm_backoff_s", base.scm_backoff_s),
             hdfs_datanodes: doc.i64_or("cluster.hdfs_datanodes", base.hdfs_datanodes as i64) as u32,
@@ -180,9 +183,11 @@ impl ClusterConfig {
             hdfs_replication: doc.i64_or("cluster.hdfs_replication", base.hdfs_replication as i64)
                 as u32,
             hdfs_nn_op_s: doc.f64_or("cluster.hdfs_nn_op_s", base.hdfs_nn_op_s),
-            straggler_tail_prob: doc.f64_or("cluster.straggler_tail_prob", base.straggler_tail_prob),
+            straggler_tail_prob: doc
+                .f64_or("cluster.straggler_tail_prob", base.straggler_tail_prob),
             straggler_body_std: doc.f64_or("cluster.straggler_body_std", base.straggler_body_std),
-            straggler_tail_alpha: doc.f64_or("cluster.straggler_tail_alpha", base.straggler_tail_alpha),
+            straggler_tail_alpha: doc
+                .f64_or("cluster.straggler_tail_alpha", base.straggler_tail_alpha),
             straggler_cap: doc.f64_or("cluster.straggler_cap", base.straggler_cap),
             fleet_service_nodes: doc
                 .i64_or("cluster.fleet_service_nodes", base.fleet_service_nodes as i64)
@@ -390,6 +395,9 @@ pub struct RunConfig {
     pub cluster: ClusterConfig,
     pub job: JobConfig,
     pub bootseer: BootseerConfig,
+    /// Fault-injection processes for the cluster replay (`[faults]`
+    /// table; defaults to off — the fault-free replay).
+    pub faults: crate::faults::FaultConfig,
     pub seed: u64,
 }
 
@@ -399,6 +407,7 @@ impl Default for RunConfig {
             cluster: ClusterConfig::default(),
             job: JobConfig::default(),
             bootseer: BootseerConfig::baseline(),
+            faults: crate::faults::FaultConfig::off(),
             seed: 0xB007_5EE3,
         }
     }
@@ -412,6 +421,7 @@ impl RunConfig {
             cluster: ClusterConfig::from_doc(&doc),
             job: JobConfig::from_doc(&doc),
             bootseer: BootseerConfig::from_doc(&doc),
+            faults: crate::faults::FaultConfig::from_doc(&doc),
             seed: doc.i64_or("seed", 0xB007_5EE3) as u64,
         })
     }

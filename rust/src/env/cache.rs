@@ -113,7 +113,8 @@ pub fn unpack(archive: &[u8], dest: &Path) -> Result<Vec<PathBuf>> {
         }
         let rel = PathBuf::from(std::str::from_utf8(&raw[i..i + plen])?);
         // Refuse path escapes.
-        if rel.is_absolute() || rel.components().any(|c| matches!(c, std::path::Component::ParentDir)) {
+        let escapes = rel.components().any(|c| matches!(c, std::path::Component::ParentDir));
+        if rel.is_absolute() || escapes {
             bail!("archive path escapes destination: {rel:?}");
         }
         i += plen;
@@ -196,7 +197,8 @@ mod tests {
     use super::*;
 
     fn tmpdir(name: &str) -> PathBuf {
-        let p = std::env::temp_dir().join(format!("bootseer-envcache-{name}-{}", std::process::id()));
+        let p = std::env::temp_dir()
+            .join(format!("bootseer-envcache-{name}-{}", std::process::id()));
         let _ = fs::remove_dir_all(&p);
         fs::create_dir_all(&p).unwrap();
         p

@@ -80,8 +80,8 @@ pub fn plan_env_setup_with(
 
     // Admission latency model: request-rate limiting at the SCM backend.
     let over = (n as f64 / cs.cfg.scm_throttle_concurrency as f64 - 1.0).max(0.0);
-    let admit_s = d::SCM_ADMIT_BASE_S
-        * (1.0 + d::SCM_ADMIT_PENALTY * (n as f64 - cs.cfg.scm_throttle_concurrency as f64).max(0.0));
+    let throttled = (n as f64 - cs.cfg.scm_throttle_concurrency as f64).max(0.0);
+    let admit_s = d::SCM_ADMIT_BASE_S * (1.0 + d::SCM_ADMIT_PENALTY * throttled);
     let reject_p = (cs.cfg.scm_reject_prob * over * cs.cfg.scm_throttle_concurrency as f64)
         .clamp(0.0, 0.15);
 

@@ -1,0 +1,608 @@
+//! Deterministic fault-injection and restart engine (ROADMAP: scenario
+//! diversity; MegaScale / datacenter-characterization related work).
+//!
+//! BootSeer's premise is that startup overhead matters *because failures
+//! are frequent*: "more than 3.5% of GPU time is wasted due to startup
+//! overhead alone". The trace replay historically only played back
+//! restarts pre-scripted in the trace; this module *generates* failures on
+//! top, as seeded stochastic processes that fire during simulated startup
+//! and training hold:
+//!
+//! * **Hardware crash hazard** — per-job exponential time-to-failure whose
+//!   rate scales with the job's GPU count
+//!   ([`FaultConfig::hazard_per_gpu_hour`]), the MegaScale-class "bigger
+//!   jobs fail more" law. A crash interrupts the in-flight segment at the
+//!   failure instant ([`crate::scheduler::SegmentFate::Interrupt`]): the
+//!   GPUs return to the pool right there, training since the last resume
+//!   point is rolled back ([`FaultConfig::ckpt_interval_s`]), and a retry
+//!   re-enters the scheduler queue keeping the chain's priority.
+//! * **Warm-vs-cold restart** — whether the retry lands back on its
+//!   previous nodes ([`FaultConfig::relocate_prob`]): same nodes keep
+//!   their node-local warm state (staged image hot set, unpacked env), a
+//!   reschedule evicts it and the restart startup runs cold.
+//! * **Single-node stragglers** — a startup drawn into the straggler fault
+//!   ([`FaultConfig::straggler_prob`]) runs its allocation with a badly
+//!   degraded node mixed in (the §3.3/§3.4 slow-node phenomenon, injected
+//!   rather than background-rate).
+//! * **Shared-service brownouts** — Poisson windows
+//!   ([`FaultConfig::brownouts_per_week`]) during which the registry /
+//!   cluster-cache / HDFS tier serves at a fraction of its capacity
+//!   ([`BrownoutWindows`]).
+//!
+//! Everything is a pure function of `(seed, job id, segment, retry)` via
+//! [`fault_seed`] — never of thread interleaving or query order — which is
+//! what keeps the parallel cluster replay byte-identical at any
+//! `--threads` and lets the replay re-derive per-attempt decisions without
+//! threading state through the scheduler. Zero rates
+//! ([`FaultConfig::off`]) short-circuit every draw, reproducing the
+//! fault-free replay bit-for-bit. Design note: `docs/faults.md`.
+
+use crate::scheduler::{ChainJob, FaultOracle, SegmentFate};
+use crate::util::rng::{mix64, Rng};
+use std::collections::HashMap;
+
+/// Domain-separation salts for the per-decision seed streams.
+const SALT_CRASH: u64 = 0xFA01;
+const SALT_RELOCATE: u64 = 0xFA02;
+const SALT_STRAGGLER: u64 = 0xFA03;
+const SALT_BROWNOUT: u64 = 0xFA04;
+
+/// The seed of the decision stream for `(job, seg, retry)` under `salt`.
+/// Pure — the replay and the scheduler oracle derive identical decisions
+/// from identical identities, with no shared state.
+pub fn fault_seed(seed: u64, job: u64, seg: u64, retry: u64, salt: u64) -> u64 {
+    mix64(
+        seed ^ salt
+            ^ job.wrapping_mul(0x9E3779B97F4A7C15)
+            ^ seg.wrapping_mul(0xC2B2AE3D27D4EB4F)
+            ^ retry.wrapping_mul(0x165667B19E3779F9),
+    )
+}
+
+/// Rates and policies of the fault engine. All-zero rates ([`Self::off`])
+/// disable every process and reproduce the fault-free replay byte-for-byte.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Hardware crash hazard, failures per GPU-hour. The per-job failure
+    /// rate is `hazard * gpus` per hour — large jobs crash proportionally
+    /// more often (MegaScale-class fleets see ~2e-5: a 16k-GPU job
+    /// interrupted a few times a day).
+    pub hazard_per_gpu_hour: f64,
+    /// Probability a fault-generated restart is rescheduled onto different
+    /// nodes, evicting the node-local warm state (staged image blocks,
+    /// unpacked environment). `1 - relocate_prob` restarts land back on
+    /// their previous nodes and start warm.
+    pub relocate_prob: f64,
+    /// Probability a startup's allocation contains a badly degraded node
+    /// (injected straggler).
+    pub straggler_prob: f64,
+    /// Multiplier on the cluster's `straggler_tail_prob` when the
+    /// straggler fault fires for a startup.
+    pub straggler_severity: f64,
+    /// Shared-service brownout arrivals per week (Poisson).
+    pub brownouts_per_week: f64,
+    /// Duration of one brownout window, seconds.
+    pub brownout_duration_s: f64,
+    /// Fraction of registry/cache/HDFS capacity still served during a
+    /// brownout (0 = total outage, 1 = no effect).
+    pub brownout_capacity_factor: f64,
+    /// Checkpoint cadence: a crash rolls training back to the last
+    /// multiple of this interval; the work since is lost and re-done.
+    pub ckpt_interval_s: f64,
+    /// Retry cap per scripted segment (termination bound for the
+    /// scheduler; the hazard itself makes long retry chains unlikely).
+    pub max_retries: u32,
+}
+
+impl FaultConfig {
+    /// No faults: every process disabled. The replay under this config is
+    /// byte-identical to the fault-free replay.
+    pub fn off() -> FaultConfig {
+        FaultConfig {
+            hazard_per_gpu_hour: 0.0,
+            relocate_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_severity: 1.0,
+            brownouts_per_week: 0.0,
+            brownout_duration_s: 0.0,
+            brownout_capacity_factor: 1.0,
+            ckpt_interval_s: 1800.0,
+            max_retries: 8,
+        }
+    }
+
+    /// Production-calibrated defaults: a MegaScale-class crash hazard
+    /// (1.8e-5 failures per GPU-hour — a 16k-GPU job interrupted a few
+    /// times a day), 30-minute checkpoints, half of the restarts
+    /// rescheduled cold, mild straggler injection, and a couple of short
+    /// shared-service brownouts per week. Under this config the replayed
+    /// week's wasted GPU time lands in the paper's headline band (~3.5%,
+    /// "more than 3.5% of GPU time is wasted").
+    pub fn paper() -> FaultConfig {
+        FaultConfig {
+            hazard_per_gpu_hour: 1.8e-5,
+            relocate_prob: 0.5,
+            straggler_prob: 0.05,
+            straggler_severity: 20.0,
+            brownouts_per_week: 2.0,
+            brownout_duration_s: 1800.0,
+            brownout_capacity_factor: 0.35,
+            ckpt_interval_s: 1800.0,
+            max_retries: 8,
+        }
+    }
+
+    /// Restart-storm stress scenario: an order of magnitude more crashes,
+    /// most restarts rescheduled cold, long brownouts. For exercising the
+    /// scheduler's interruption path under pressure, not for calibration.
+    pub fn storm() -> FaultConfig {
+        FaultConfig {
+            hazard_per_gpu_hour: 2.0e-4,
+            relocate_prob: 0.8,
+            straggler_prob: 0.15,
+            brownouts_per_week: 10.0,
+            brownout_duration_s: 3600.0,
+            ..FaultConfig::paper()
+        }
+    }
+
+    /// Any process active? `false` guarantees the replay takes the
+    /// fault-free paths everywhere.
+    pub fn enabled(&self) -> bool {
+        self.hazard_per_gpu_hour > 0.0
+            || self.straggler_prob > 0.0
+            || self.brownouts_per_week > 0.0
+    }
+
+    /// Parse a `--faults` rate-spec: a preset name (`off`, `paper`,
+    /// `storm`) optionally followed by `key=value` overrides, all
+    /// comma-separated. A spec starting with an override applies it over
+    /// `paper`. Keys: `hazard`, `relocate`, `straggler`,
+    /// `straggler_severity`, `brownouts`, `brownout_s`, `brownout_cap`,
+    /// `ckpt_interval`, `max_retries`.
+    ///
+    /// ```
+    /// use bootseer::faults::FaultConfig;
+    /// assert_eq!(FaultConfig::parse("off").unwrap(), FaultConfig::off());
+    /// let c = FaultConfig::parse("paper,hazard=1e-4,relocate=1").unwrap();
+    /// assert_eq!(c.hazard_per_gpu_hour, 1e-4);
+    /// assert_eq!(c.relocate_prob, 1.0);
+    /// ```
+    pub fn parse(spec: &str) -> Result<FaultConfig, String> {
+        let mut cfg: Option<FaultConfig> = None;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part {
+                "off" | "none" => {
+                    cfg = Some(FaultConfig::off());
+                    continue;
+                }
+                "paper" | "default" => {
+                    cfg = Some(FaultConfig::paper());
+                    continue;
+                }
+                "storm" => {
+                    cfg = Some(FaultConfig::storm());
+                    continue;
+                }
+                _ => {}
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad --faults part {part:?} (want preset or key=value)"))?;
+            let c = cfg.get_or_insert_with(FaultConfig::paper);
+            let f: f64 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad --faults value {val:?} for {key:?}"))?;
+            match key.trim() {
+                "hazard" | "hazard_per_gpu_hour" => c.hazard_per_gpu_hour = f.max(0.0),
+                "relocate" | "relocate_prob" => c.relocate_prob = f.clamp(0.0, 1.0),
+                "straggler" | "straggler_prob" => c.straggler_prob = f.clamp(0.0, 1.0),
+                "straggler_severity" => c.straggler_severity = f.max(1.0),
+                "brownouts" | "brownouts_per_week" => c.brownouts_per_week = f.max(0.0),
+                "brownout_s" | "brownout_duration_s" => c.brownout_duration_s = f.max(0.0),
+                "brownout_cap" | "brownout_capacity_factor" => {
+                    c.brownout_capacity_factor = f.clamp(0.0, 1.0)
+                }
+                "ckpt_interval" | "ckpt_interval_s" => c.ckpt_interval_s = f.max(0.0),
+                "max_retries" => c.max_retries = f.max(0.0) as u32,
+                _ => return Err(format!("unknown --faults key {key:?}")),
+            }
+        }
+        Ok(cfg.unwrap_or_else(FaultConfig::paper))
+    }
+
+    /// Read the `[faults]` table of a config document (`faults.preset`
+    /// plus per-field overrides; absent table → [`FaultConfig::off`], the
+    /// historical behaviour).
+    pub fn from_doc(doc: &crate::config::toml::Doc) -> FaultConfig {
+        let base = match doc.get("faults.preset").and_then(|v| v.as_str()) {
+            Some(p) => FaultConfig::parse(p).unwrap_or_else(|_| FaultConfig::off()),
+            None => FaultConfig::off(),
+        };
+        FaultConfig {
+            hazard_per_gpu_hour: doc
+                .f64_or("faults.hazard_per_gpu_hour", base.hazard_per_gpu_hour)
+                .max(0.0),
+            relocate_prob: doc.f64_or("faults.relocate_prob", base.relocate_prob).clamp(0.0, 1.0),
+            straggler_prob: doc
+                .f64_or("faults.straggler_prob", base.straggler_prob)
+                .clamp(0.0, 1.0),
+            straggler_severity: doc
+                .f64_or("faults.straggler_severity", base.straggler_severity)
+                .max(1.0),
+            brownouts_per_week: doc
+                .f64_or("faults.brownouts_per_week", base.brownouts_per_week)
+                .max(0.0),
+            brownout_duration_s: doc
+                .f64_or("faults.brownout_duration_s", base.brownout_duration_s)
+                .max(0.0),
+            brownout_capacity_factor: doc
+                .f64_or("faults.brownout_capacity_factor", base.brownout_capacity_factor)
+                .clamp(0.0, 1.0),
+            ckpt_interval_s: doc.f64_or("faults.ckpt_interval_s", base.ckpt_interval_s).max(0.0),
+            max_retries: doc.i64_or("faults.max_retries", base.max_retries as i64).max(0) as u32,
+        }
+    }
+
+    /// Short human-readable summary of the active processes.
+    pub fn describe(&self) -> String {
+        if !self.enabled() {
+            return "off".to_string();
+        }
+        format!(
+            "hazard {:.1e}/GPU-h, relocate {:.0}%, straggler {:.0}%, {} brownouts/wk, ckpt {}s",
+            self.hazard_per_gpu_hour,
+            100.0 * self.relocate_prob,
+            100.0 * self.straggler_prob,
+            self.brownouts_per_week,
+            self.ckpt_interval_s
+        )
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig::off()
+    }
+}
+
+/// The seeded hazard oracle the cluster replay plugs into
+/// [`crate::scheduler::schedule_chains_with`]. Holds the per-chain startup
+/// estimates so a mid-hold failure can tell "failed during startup"
+/// (nothing trained, nothing lost) from "failed during training" (work
+/// since the last checkpoint rolled back).
+pub struct FaultEngine {
+    cfg: FaultConfig,
+    seed: u64,
+    est_by_id: HashMap<u64, f64>,
+}
+
+impl FaultEngine {
+    /// Build the oracle: `ests` maps chain id → estimated startup seconds
+    /// (the non-training prefix of every segment hold).
+    pub fn new(cfg: FaultConfig, seed: u64, ests: &[(u64, f64)]) -> FaultEngine {
+        FaultEngine { cfg, seed, est_by_id: ests.iter().copied().collect() }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Does the fault-generated restart of `(job, seg, retry)` land on
+    /// different nodes than the failed run (cold node-local caches)?
+    /// `retry` is the retry number of the *restart* (≥ 1).
+    pub fn relocated(&self, job: u64, seg: u64, retry: u32) -> bool {
+        if self.cfg.relocate_prob <= 0.0 {
+            return false;
+        }
+        if self.cfg.relocate_prob >= 1.0 {
+            return true;
+        }
+        let mut rng = Rng::seeded(fault_seed(self.seed, job, seg, retry as u64, SALT_RELOCATE));
+        rng.chance(self.cfg.relocate_prob)
+    }
+
+    /// Does the startup `(job, attempt)` draw an injected straggler node?
+    pub fn straggler(&self, job: u64, attempt: u32) -> bool {
+        if self.cfg.straggler_prob <= 0.0 {
+            return false;
+        }
+        let mut rng = Rng::seeded(fault_seed(self.seed, job, attempt as u64, 0, SALT_STRAGGLER));
+        rng.chance(self.cfg.straggler_prob)
+    }
+}
+
+impl FaultOracle for FaultEngine {
+    fn fate(
+        &self,
+        chain: &ChainJob,
+        seg: usize,
+        retry: u32,
+        _start_s: f64,
+        hold_s: f64,
+    ) -> SegmentFate {
+        if self.cfg.hazard_per_gpu_hour <= 0.0 || retry >= self.cfg.max_retries {
+            return SegmentFate::Complete;
+        }
+        let lambda = self.cfg.hazard_per_gpu_hour * chain.gpus as f64 / 3600.0;
+        if lambda <= 0.0 {
+            return SegmentFate::Complete;
+        }
+        let mut rng =
+            Rng::seeded(fault_seed(self.seed, chain.id, seg as u64, retry as u64, SALT_CRASH));
+        let ttf = rng.exponential(lambda);
+        if ttf >= hold_s {
+            return SegmentFate::Complete;
+        }
+        let est = self.est_by_id.get(&chain.id).copied().unwrap_or(0.0).min(hold_s);
+        // Failed during startup → nothing trained; during training → roll
+        // back to the last checkpoint, losing the remainder.
+        let trained = (ttf - est).max(0.0);
+        let lost = if self.cfg.ckpt_interval_s > 0.0 {
+            trained % self.cfg.ckpt_interval_s
+        } else {
+            trained
+        };
+        let retained = trained - lost;
+        SegmentFate::Interrupt {
+            after_s: ttf,
+            lost_train_s: lost,
+            // The retry re-runs a full startup plus the not-yet-retained
+            // training (including re-doing the rolled-back work).
+            retry_hold_s: (hold_s - retained).max(est),
+        }
+    }
+}
+
+/// Shared-service brownout windows over the replay horizon: Poisson
+/// arrivals, fixed duration, generated once from the seed (never from
+/// per-unit state) so the parallel replay sees one consistent outage
+/// calendar.
+#[derive(Clone, Debug)]
+pub struct BrownoutWindows {
+    windows: Vec<(f64, f64)>,
+    capacity_factor: f64,
+}
+
+impl BrownoutWindows {
+    pub fn generate(cfg: &FaultConfig, seed: u64, horizon_s: f64) -> BrownoutWindows {
+        let mut windows = Vec::new();
+        if cfg.brownouts_per_week > 0.0 && cfg.brownout_duration_s > 0.0 && horizon_s > 0.0 {
+            let rate = cfg.brownouts_per_week / (7.0 * 86400.0);
+            let mut rng = Rng::seeded(mix64(seed ^ SALT_BROWNOUT));
+            let mut t = rng.exponential(rate);
+            while t < horizon_s {
+                windows.push((t, t + cfg.brownout_duration_s));
+                t += cfg.brownout_duration_s + rng.exponential(rate);
+            }
+        }
+        BrownoutWindows { windows, capacity_factor: cfg.brownout_capacity_factor }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn windows(&self) -> &[(f64, f64)] {
+        &self.windows
+    }
+
+    /// Fraction of `[a, b]` covered by brownout windows.
+    pub fn overlap_fraction(&self, a: f64, b: f64) -> f64 {
+        if b <= a || self.windows.is_empty() {
+            return 0.0;
+        }
+        let mut covered = 0.0;
+        for &(w0, w1) in &self.windows {
+            covered += (b.min(w1) - a.max(w0)).max(0.0);
+        }
+        (covered / (b - a)).min(1.0)
+    }
+
+    /// Capacity multiplier for a startup occupying `[a, b]`: 1.0 outside
+    /// brownouts, down to `capacity_factor` when fully inside one.
+    pub fn capacity_scale(&self, a: f64, b: f64) -> f64 {
+        let f = self.overlap_fraction(a, b);
+        1.0 - f * (1.0 - self.capacity_factor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(id: u64, gpus: u32) -> ChainJob {
+        ChainJob { id, submit_s: 0.0, gpus, priority: 1, segments: vec![1000.0] }
+    }
+
+    #[test]
+    fn off_never_fires() {
+        let eng = FaultEngine::new(FaultConfig::off(), 7, &[(1, 100.0)]);
+        let c = chain(1, 2048);
+        for seg in 0..4usize {
+            assert_eq!(eng.fate(&c, seg, 0, 0.0, 1e9), SegmentFate::Complete);
+        }
+        assert!(!eng.relocated(1, 0, 1));
+        assert!(!eng.straggler(1, 0));
+        assert!(!FaultConfig::off().enabled());
+        assert!(FaultConfig::paper().enabled());
+    }
+
+    #[test]
+    fn fate_is_deterministic_and_identity_keyed() {
+        let eng = FaultEngine::new(FaultConfig::storm(), 7, &[(1, 100.0), (2, 100.0)]);
+        let c = chain(1, 2048);
+        let a = eng.fate(&c, 0, 0, 0.0, 1e6);
+        let b = eng.fate(&c, 0, 0, 500.0, 1e6); // start time must not matter
+        assert_eq!(a, b);
+        // Different retry → independent draw.
+        let r1 = eng.fate(&c, 0, 1, 0.0, 1e6);
+        assert!(a != r1 || matches!(a, SegmentFate::Complete));
+        // A different engine seed changes the outcome stream.
+        let eng2 = FaultEngine::new(FaultConfig::storm(), 8, &[(1, 100.0)]);
+        let a2 = eng2.fate(&c, 0, 0, 0.0, 1e6);
+        assert!(a != a2 || matches!(a, SegmentFate::Complete));
+    }
+
+    #[test]
+    fn big_jobs_fail_sooner_on_average() {
+        let eng = FaultEngine::new(FaultConfig::paper(), 3, &[]);
+        let hold = 1e7;
+        let mean_ttf = |gpus: u32| {
+            let mut sum = 0.0;
+            let mut n = 0;
+            for id in 1..400u64 {
+                if let SegmentFate::Interrupt { after_s, .. } =
+                    eng.fate(&chain(id, gpus), 0, 0, 0.0, hold)
+                {
+                    sum += after_s;
+                    n += 1;
+                }
+            }
+            sum / n.max(1) as f64
+        };
+        let small = mean_ttf(64);
+        let large = mean_ttf(2048);
+        assert!(large < small / 4.0, "2048-GPU TTF {large} vs 64-GPU {small}");
+    }
+
+    #[test]
+    fn rollback_respects_checkpoint_interval() {
+        // λ = 1.4e-3 × 512 / 3600 → mean TTF ≈ 5,000 s: most failures land
+        // inside the training window (est=300 .. hold=50,000).
+        let cfg = FaultConfig { hazard_per_gpu_hour: 1.4e-3, ..FaultConfig::paper() };
+        let est = 300.0;
+        let eng = FaultEngine::new(cfg.clone(), 5, &[(1, est)]);
+        let mut saw_training_failure = false;
+        for seg in 0..50usize {
+            match eng.fate(&chain(1, 512), seg, 0, 0.0, 50_000.0) {
+                SegmentFate::Complete => {}
+                SegmentFate::Interrupt { after_s, lost_train_s, retry_hold_s } => {
+                    assert!(lost_train_s <= cfg.ckpt_interval_s + 1e-9);
+                    assert!(lost_train_s >= 0.0);
+                    assert!(retry_hold_s >= est - 1e-9, "retry re-runs a startup");
+                    assert!(retry_hold_s <= 50_000.0 + 1e-9);
+                    if after_s < est {
+                        assert_eq!(lost_train_s, 0.0, "startup failure trains nothing");
+                        assert!((retry_hold_s - 50_000.0).abs() < 1e-6);
+                    } else {
+                        saw_training_failure = true;
+                        let retained = (after_s - est) - lost_train_s;
+                        assert!((retry_hold_s - (50_000.0 - retained)).abs() < 1e-6);
+                    }
+                }
+            }
+        }
+        assert!(saw_training_failure);
+    }
+
+    #[test]
+    fn retry_cap_terminates() {
+        let cfg = FaultConfig { hazard_per_gpu_hour: 10.0, max_retries: 3, ..FaultConfig::off() };
+        let eng = FaultEngine::new(cfg, 1, &[(1, 10.0)]);
+        let c = chain(1, 8192);
+        assert!(matches!(eng.fate(&c, 0, 0, 0.0, 1e6), SegmentFate::Interrupt { .. }));
+        assert_eq!(eng.fate(&c, 0, 3, 0.0, 1e6), SegmentFate::Complete);
+    }
+
+    #[test]
+    fn relocation_and_straggler_rates() {
+        let cfg = FaultConfig { relocate_prob: 0.3, straggler_prob: 0.1, ..FaultConfig::paper() };
+        let eng = FaultEngine::new(cfg, 11, &[]);
+        let reloc =
+            (1..4000u64).filter(|&j| eng.relocated(j, 0, 1)).count() as f64 / 4000.0;
+        let strag = (1..4000u64).filter(|&j| eng.straggler(j, 0)).count() as f64 / 4000.0;
+        assert!((reloc - 0.3).abs() < 0.05, "relocation rate {reloc}");
+        assert!((strag - 0.1).abs() < 0.03, "straggler rate {strag}");
+        // Edge probabilities are exact.
+        let all = FaultEngine::new(
+            FaultConfig { relocate_prob: 1.0, ..FaultConfig::paper() },
+            11,
+            &[],
+        );
+        assert!(all.relocated(1, 0, 1));
+    }
+
+    #[test]
+    fn brownout_windows_deterministic_and_bounded() {
+        let cfg = FaultConfig::storm();
+        let a = BrownoutWindows::generate(&cfg, 9, 7.0 * 86400.0);
+        let b = BrownoutWindows::generate(&cfg, 9, 7.0 * 86400.0);
+        assert_eq!(a.windows(), b.windows());
+        assert!(!a.is_empty(), "storm preset should produce windows in a week");
+        for &(w0, w1) in a.windows() {
+            assert!(w1 - w0 == cfg.brownout_duration_s);
+            assert!(w0 >= 0.0 && w0 < 7.0 * 86400.0);
+        }
+        // Non-overlapping by construction.
+        for w in a.windows().windows(2) {
+            assert!(w[0].1 <= w[1].0 + 1e-9);
+        }
+        let none = BrownoutWindows::generate(&FaultConfig::off(), 9, 7.0 * 86400.0);
+        assert!(none.is_empty());
+        assert_eq!(none.capacity_scale(0.0, 1000.0), 1.0);
+    }
+
+    #[test]
+    fn brownout_overlap_math() {
+        let w = BrownoutWindows {
+            windows: vec![(100.0, 200.0), (400.0, 500.0)],
+            capacity_factor: 0.25,
+        };
+        assert_eq!(w.overlap_fraction(0.0, 100.0), 0.0);
+        assert_eq!(w.overlap_fraction(100.0, 200.0), 1.0);
+        assert!((w.overlap_fraction(150.0, 450.0) - (50.0 + 50.0) / 300.0).abs() < 1e-12);
+        assert_eq!(w.capacity_scale(100.0, 200.0), 0.25);
+        assert_eq!(w.capacity_scale(0.0, 50.0), 1.0);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(FaultConfig::parse("off").unwrap(), FaultConfig::off());
+        assert_eq!(FaultConfig::parse("paper").unwrap(), FaultConfig::paper());
+        assert_eq!(FaultConfig::parse("storm").unwrap(), FaultConfig::storm());
+        let c = FaultConfig::parse("storm,hazard=1e-3,max_retries=2").unwrap();
+        assert_eq!(c.hazard_per_gpu_hour, 1e-3);
+        assert_eq!(c.max_retries, 2);
+        assert_eq!(c.relocate_prob, FaultConfig::storm().relocate_prob);
+        // Bare overrides start from the paper preset.
+        let c = FaultConfig::parse("hazard=0").unwrap();
+        assert_eq!(c.hazard_per_gpu_hour, 0.0);
+        assert_eq!(c.ckpt_interval_s, FaultConfig::paper().ckpt_interval_s);
+        assert!(FaultConfig::parse("bogus").is_err());
+        assert!(FaultConfig::parse("hazard=abc").is_err());
+        assert!(FaultConfig::parse("nope=1").is_err());
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = crate::config::toml::Doc::parse(
+            r#"
+            [faults]
+            preset = "paper"
+            hazard_per_gpu_hour = 5e-5
+            relocate_prob = 0.9
+            "#,
+        )
+        .unwrap();
+        let c = FaultConfig::from_doc(&doc);
+        assert_eq!(c.hazard_per_gpu_hour, 5e-5);
+        assert_eq!(c.relocate_prob, 0.9);
+        assert_eq!(c.ckpt_interval_s, FaultConfig::paper().ckpt_interval_s);
+        // Absent table → off.
+        let empty = crate::config::toml::Doc::parse("").unwrap();
+        assert_eq!(FaultConfig::from_doc(&empty), FaultConfig::off());
+    }
+
+    #[test]
+    fn describe_mentions_processes() {
+        assert_eq!(FaultConfig::off().describe(), "off");
+        let d = FaultConfig::paper().describe();
+        assert!(d.contains("hazard") && d.contains("brownouts"));
+    }
+}

@@ -155,7 +155,8 @@ mod tests {
         assert_eq!(img.total_bytes, PAPER_IMAGE_BYTES);
         let file_bytes: u64 = img.files.iter().map(|f| f.bytes).sum();
         assert_eq!(file_bytes, PAPER_IMAGE_BYTES);
-        assert_eq!(img.n_blocks() as u64, (PAPER_IMAGE_BYTES + IMAGE_BLOCK_BYTES - 1) / IMAGE_BLOCK_BYTES);
+        let expect_blocks = (PAPER_IMAGE_BYTES + IMAGE_BLOCK_BYTES - 1) / IMAGE_BLOCK_BYTES;
+        assert_eq!(img.n_blocks() as u64, expect_blocks);
     }
 
     #[test]

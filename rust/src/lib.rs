@@ -25,6 +25,7 @@
 pub mod ckpt;
 pub mod config;
 pub mod env;
+pub mod faults;
 pub mod figures;
 pub mod hdfs;
 pub mod image;

@@ -9,6 +9,7 @@
 //!   version
 
 use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig, OverlapMode};
+use bootseer::faults::FaultConfig;
 use bootseer::figures;
 use bootseer::startup::{run_startup, StartupKind, World};
 use bootseer::trace::{gen_trace, replay_cluster, ReplayOptions};
@@ -31,9 +32,10 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: bootseer <figures|startup|trace|train|version> [options]\n\
-                 \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14) + overlap sweep\
+                 \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14,16) + overlap sweep\
                  \n  startup --gpus N [--bootseer] [--hot-update] [--overlap sequential|overlapped|speculative] [--seed S]\
-                 \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--bootseer] [--overlap M] [--no-replay]\
+                 \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--bootseer] [--overlap M]\
+                 \n          [--faults off|paper|storm|k=v,...] [--no-replay]\
                  \n  train   [--steps N] [--artifacts DIR] [--seed S]   (pjrt feature)"
             );
             2
@@ -106,6 +108,13 @@ fn cmd_figures(rest: &[String]) -> i32 {
     let ov = figures::overlap_sweep(3);
     println!("-- Overlap-mode sweep (stage graph) --\n{}", ov.render());
     save("overlap", ov.to_json());
+    let fw = figures::wasted_gpu_time_sweep(
+        figures::FAULTS_SWEEP_SEED,
+        figures::FAULTS_SWEEP_JOBS,
+        &FaultConfig::paper(),
+    );
+    println!("-- Fig 16: wasted GPU time under fault injection --\n{}", fw.render());
+    save("fig16", fw.to_json());
     0
 }
 
@@ -140,8 +149,12 @@ fn cmd_startup(rest: &[String]) -> i32 {
         human::bytes(job.image_bytes),
         human::bytes(job.ckpt_bytes)
     );
-    let mut rows =
-        vec![vec!["stage".to_string(), "begin".to_string(), "end".to_string(), "duration".to_string()]];
+    let mut rows = vec![vec![
+        "stage".to_string(),
+        "begin".to_string(),
+        "end".to_string(),
+        "duration".to_string(),
+    ]];
     for (s, b, e) in &o.stage_spans {
         rows.push(vec![s.name().to_string(), human::secs(*b), human::secs(*e), human::secs(e - b)]);
     }
@@ -167,11 +180,23 @@ fn cmd_trace(rest: &[String]) -> i32 {
             return 2;
         }
     };
+    let faults = match opt(rest, "--faults") {
+        None => FaultConfig::off(),
+        Some(spec) => match FaultConfig::parse(&spec) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
     // Speculative staging needs warm state (hot-set records, env caches) to
     // know what to stage, i.e. the BootSeer feature set.
     let boot = flag(rest, "--bootseer");
     if overlap == OverlapMode::Speculative && !boot {
-        eprintln!("note: --overlap speculative stages nothing without --bootseer (no records/caches)");
+        eprintln!(
+            "note: --overlap speculative stages nothing without --bootseer (no records/caches)"
+        );
     }
     let t = gen_trace(seed, jobs, 7.0 * 86400.0);
     let gpus: u64 = t.iter().map(|j| j.gpus as u64).sum();
@@ -195,18 +220,20 @@ fn cmd_trace(rest: &[String]) -> i32 {
         threads
     };
     println!(
-        "\nreplaying the week ({n_threads} threads, {} config, {} stage graph)...",
+        "\nreplaying the week ({n_threads} threads, {} config, {} stage graph, faults: {})...",
         if boot { "bootseer" } else { "baseline" },
-        overlap.name()
+        overlap.name(),
+        faults.describe()
     );
     let t0 = std::time::Instant::now();
     let base = if boot { BootseerConfig::bootseer() } else { BootseerConfig::baseline() };
+    let faults_on = faults.enabled();
     let r = replay_cluster(
         &t,
         &ClusterConfig::default(),
         &BootseerConfig { overlap, ..base },
         seed,
-        &ReplayOptions { pool_gpus, threads },
+        &ReplayOptions { pool_gpus, threads, faults },
     );
     let wall = t0.elapsed().as_secs_f64();
     if !r.queue_waits.is_empty() {
@@ -224,6 +251,14 @@ fn cmd_trace(rest: &[String]) -> i32 {
         r.startup_gpu_hours,
         100.0 * r.startup_fraction()
     );
+    if faults_on {
+        println!(
+            "faults: {} generated restarts | rollback {:.0} GPU-h | wasted (startup+rollback) {:.2}%",
+            r.fault_restarts,
+            r.lost_train_gpu_hours,
+            100.0 * r.wasted_fraction()
+        );
+    }
     println!("replayed {} startups in {}", startups, human::secs(wall));
     0
 }

@@ -94,8 +94,10 @@ pip install torch... done
 
     #[test]
     fn rejects_malformed() {
-        assert!(LogParser::parse_line("[bootseer] ts=x job=1 attempt=0 node=0 stage=env_setup event=begin").is_none());
-        assert!(LogParser::parse_line("[bootseer] ts=1 job=1 attempt=0 node=0 stage=nope event=begin").is_none());
+        let bad_ts = "[bootseer] ts=x job=1 attempt=0 node=0 stage=env_setup event=begin";
+        assert!(LogParser::parse_line(bad_ts).is_none());
+        let bad_stage = "[bootseer] ts=1 job=1 attempt=0 node=0 stage=nope event=begin";
+        assert!(LogParser::parse_line(bad_stage).is_none());
         assert!(LogParser::parse_line("").is_none());
     }
 

@@ -23,6 +23,16 @@
 //! allocate-immediately semantics (what [`schedule`] uses, and what the
 //! scheduler unit tests pin down).
 //!
+//! **Interruption path** ([`schedule_chains_with`]): an optional
+//! [`FaultOracle`] is consulted at every segment allocation and may declare
+//! the segment [`SegmentFate::Interrupt`]ed mid-hold — the failure instant
+//! ends the segment early, its GPUs return to the pool right there, and a
+//! *retry* of the same scripted segment re-enters the queue at that instant
+//! with the oracle-provided remaining hold, competing again under the
+//! chain's original priority. [`crate::faults`] provides the seeded
+//! hazard-based oracle the cluster replay drives this with; `None`
+//! reproduces the uninterrupted schedule bit-for-bit.
+//!
 //! Consumed by [`crate::trace`]'s contention-aware replay (phase 1 of the
 //! two-phase design described in `docs/replay.md`); the queue waits it
 //! assigns flow into the profiler via [`crate::startup`]'s stage events.
@@ -64,13 +74,54 @@ pub struct ChainJob {
     pub segments: Vec<f64>,
 }
 
-/// One scheduled segment of a chain.
+/// One scheduled segment of a chain. With a [`FaultOracle`] in play a
+/// scripted segment may appear several times: each interrupted run is
+/// recorded (with `interrupted == true`) followed by its retries, until one
+/// run completes or the oracle gives up.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SegmentOutcome {
     pub start_s: f64,
     pub end_s: f64,
     /// Time between (re-)submission and allocation.
     pub queue_wait_s: f64,
+    /// The segment ended early at a failure instant (`end_s` is the
+    /// failure time, not the planned hold end) and a retry re-entered the
+    /// queue at `end_s`.
+    pub interrupted: bool,
+    /// Training progress rolled back at the interruption (seconds of work
+    /// since the last resume point, lost and re-done by the retry). Zero
+    /// for completed segments.
+    pub lost_train_s: f64,
+}
+
+/// What a [`FaultOracle`] decides for one segment at allocation time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SegmentFate {
+    /// The segment runs its full hold.
+    Complete,
+    /// The segment fails `after_s` seconds into its hold (`0 < after_s <
+    /// hold`): its GPUs are released then and a retry with hold
+    /// `retry_hold_s` re-enters the queue at the failure instant.
+    /// `lost_train_s` is the training progress rolled back (recorded on
+    /// the interrupted [`SegmentOutcome`]).
+    Interrupt { after_s: f64, lost_train_s: f64, retry_hold_s: f64 },
+}
+
+/// Decides, deterministically, whether a segment run fails mid-hold.
+/// Queried exactly once per (chain, scripted segment, retry) at the
+/// allocation instant; implementations must be pure functions of those
+/// identities (plus their own seed) so the schedule is reproducible. The
+/// oracle is responsible for termination: it must return
+/// [`SegmentFate::Complete`] once `retry` reaches its cap.
+pub trait FaultOracle {
+    fn fate(
+        &self,
+        chain: &ChainJob,
+        seg: usize,
+        retry: u32,
+        start_s: f64,
+        hold_s: f64,
+    ) -> SegmentFate;
 }
 
 /// Scheduling outcome for a whole chain. `segments` is empty when the job
@@ -83,7 +134,7 @@ pub struct ChainOutcome {
 }
 
 /// Totally ordered f64 wrapper (times are finite and non-negative here).
-#[derive(PartialEq)]
+#[derive(Clone, Copy, PartialEq)]
 struct F64Ord(f64);
 impl Eq for F64Ord {}
 impl PartialOrd for F64Ord {
@@ -99,7 +150,9 @@ impl Ord for F64Ord {
 
 /// Queue key: strict priority, then FIFO by (re-)submission time, then id.
 /// `submit_bits` is the IEEE bit pattern of the non-negative submit time,
-/// which orders identically to the float itself.
+/// which orders identically to the float itself. `retry`/`hold_bits` ride
+/// along so a retry keeps its chain's priority but carries its own
+/// (shrunken) hold.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct PendKey {
     prio: u32,
@@ -107,6 +160,27 @@ struct PendKey {
     id: u64,
     chain: usize,
     seg: usize,
+    retry: u32,
+    hold_bits: u64,
+}
+
+/// A timed scheduler event (arrival or completion), min-ordered by
+/// `(t, id, chain, seg, retry)` — the same tie-break order the
+/// pre-interruption tuples used, so the `None`-oracle schedule is
+/// bit-identical to the historical one.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Ev {
+    t: F64Ord,
+    id: u64,
+    chain: usize,
+    seg: usize,
+    retry: u32,
+    /// Arrivals: the hold to queue with. Completions: the retry's hold
+    /// when `is_retry` (unused otherwise).
+    hold: F64Ord,
+    /// Completions only: this completion is a failure instant and the same
+    /// scripted segment re-enters the queue as `retry + 1`.
+    is_retry: bool,
 }
 
 /// Event-driven scheduler over a pool of `pool_gpus` (single-segment form).
@@ -144,6 +218,21 @@ pub fn schedule(pool_gpus: u32, jobs: &[SchedJob]) -> Vec<SchedOutcome> {
 ///
 /// Returns one [`ChainOutcome`] per input chain, in input order.
 pub fn schedule_chains(pool_gpus: u32, chains: &[ChainJob], round_s: f64) -> Vec<ChainOutcome> {
+    schedule_chains_with(pool_gpus, chains, round_s, None)
+}
+
+/// [`schedule_chains`] with an optional fault oracle: at every segment
+/// allocation the oracle may declare the run interrupted mid-hold, in which
+/// case the segment ends (and releases its GPUs) at the failure instant and
+/// a retry with the oracle's remaining hold re-enters the queue right
+/// there, keeping the chain's priority. `None` is bit-identical to
+/// [`schedule_chains`].
+pub fn schedule_chains_with(
+    pool_gpus: u32,
+    chains: &[ChainJob],
+    round_s: f64,
+    oracle: Option<&dyn FaultOracle>,
+) -> Vec<ChainOutcome> {
     // Next allocation pass no earlier than `t`, quantized to the round grid.
     let quantize_up = |t: f64| -> f64 {
         if round_s <= 0.0 {
@@ -158,15 +247,22 @@ pub fn schedule_chains(pool_gpus: u32, chains: &[ChainJob], round_s: f64) -> Vec
         .map(|c| ChainOutcome { id: c.id, gpus: c.gpus, segments: Vec::new() })
         .collect();
 
-    // (time, id, chain index, segment index), min-ordered by time.
-    let mut arrivals: BinaryHeap<Reverse<(F64Ord, u64, usize, usize)>> = BinaryHeap::new();
+    let mut arrivals: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     for (ci, c) in chains.iter().enumerate() {
         if c.gpus > pool_gpus || c.segments.is_empty() {
             continue; // can never run; outcome stays empty
         }
-        arrivals.push(Reverse((F64Ord(c.submit_s.max(0.0)), c.id, ci, 0)));
+        arrivals.push(Reverse(Ev {
+            t: F64Ord(c.submit_s.max(0.0)),
+            id: c.id,
+            chain: ci,
+            seg: 0,
+            retry: 0,
+            hold: F64Ord(c.segments[0]),
+            is_retry: false,
+        }));
     }
-    let mut completions: BinaryHeap<Reverse<(F64Ord, u64, usize, usize)>> = BinaryHeap::new();
+    let mut completions: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     let mut pending: BTreeSet<PendKey> = BTreeSet::new();
     let mut free = pool_gpus;
     let mut next_pass: Option<f64> = None;
@@ -174,11 +270,11 @@ pub fn schedule_chains(pool_gpus: u32, chains: &[ChainJob], round_s: f64) -> Vec
     loop {
         // Advance to the next event: arrival, completion, or scheduled pass.
         let mut now = f64::INFINITY;
-        if let Some(Reverse((t, _, _, _))) = arrivals.peek() {
-            now = now.min(t.0);
+        if let Some(Reverse(ev)) = arrivals.peek() {
+            now = now.min(ev.t.0);
         }
-        if let Some(Reverse((t, _, _, _))) = completions.peek() {
-            now = now.min(t.0);
+        if let Some(Reverse(ev)) = completions.peek() {
+            now = now.min(ev.t.0);
         }
         if let Some(p) = next_pass {
             now = now.min(p);
@@ -188,30 +284,47 @@ pub fn schedule_chains(pool_gpus: u32, chains: &[ChainJob], round_s: f64) -> Vec
         }
 
         let mut changed = false;
-        // Completions free GPUs and re-submit the chain's next segment.
-        while let Some(Reverse((t, _, _, _))) = completions.peek() {
-            if t.0 > now + 1e-12 {
+        // Completions free GPUs and re-submit the chain's next run: the
+        // retry of an interrupted segment, or the next scripted segment.
+        while let Some(Reverse(ev)) = completions.peek() {
+            if ev.t.0 > now + 1e-12 {
                 break;
             }
-            let Reverse((_, id, ci, si)) = completions.pop().unwrap();
-            free += chains[ci].gpus;
+            let Reverse(ev) = completions.pop().unwrap();
+            free += chains[ev.chain].gpus;
             changed = true;
-            if si + 1 < chains[ci].segments.len() {
-                arrivals.push(Reverse((F64Ord(now), id, ci, si + 1)));
+            if ev.is_retry {
+                arrivals.push(Reverse(Ev {
+                    t: F64Ord(now),
+                    retry: ev.retry + 1,
+                    is_retry: false,
+                    ..ev
+                }));
+            } else if ev.seg + 1 < chains[ev.chain].segments.len() {
+                arrivals.push(Reverse(Ev {
+                    t: F64Ord(now),
+                    seg: ev.seg + 1,
+                    retry: 0,
+                    hold: F64Ord(chains[ev.chain].segments[ev.seg + 1]),
+                    is_retry: false,
+                    ..ev
+                }));
             }
         }
         // Arrivals enter the pending queue.
-        while let Some(Reverse((t, _, _, _))) = arrivals.peek() {
-            if t.0 > now + 1e-12 {
+        while let Some(Reverse(ev)) = arrivals.peek() {
+            if ev.t.0 > now + 1e-12 {
                 break;
             }
-            let Reverse((t, id, ci, si)) = arrivals.pop().unwrap();
+            let Reverse(ev) = arrivals.pop().unwrap();
             pending.insert(PendKey {
-                prio: chains[ci].priority,
-                submit_bits: t.0.to_bits(),
-                id,
-                chain: ci,
-                seg: si,
+                prio: chains[ev.chain].priority,
+                submit_bits: ev.t.0.to_bits(),
+                id: ev.id,
+                chain: ev.chain,
+                seg: ev.seg,
+                retry: ev.retry,
+                hold_bits: ev.hold.0.to_bits(),
             });
             changed = true;
         }
@@ -243,14 +356,51 @@ pub fn schedule_chains(pool_gpus: u32, chains: &[ChainJob], round_s: f64) -> Vec
                     pending.remove(&key);
                     let c = &chains[key.chain];
                     free -= c.gpus;
-                    let hold = c.segments[key.seg];
+                    let hold = f64::from_bits(key.hold_bits);
                     let submit = f64::from_bits(key.submit_bits);
-                    out[key.chain].segments.push(SegmentOutcome {
-                        start_s: now,
-                        end_s: now + hold,
-                        queue_wait_s: now - submit,
-                    });
-                    completions.push(Reverse((F64Ord(now + hold), key.id, key.chain, key.seg)));
+                    let fate = match oracle {
+                        Some(o) => o.fate(c, key.seg, key.retry, now, hold),
+                        None => SegmentFate::Complete,
+                    };
+                    match fate {
+                        SegmentFate::Complete => {
+                            out[key.chain].segments.push(SegmentOutcome {
+                                start_s: now,
+                                end_s: now + hold,
+                                queue_wait_s: now - submit,
+                                interrupted: false,
+                                lost_train_s: 0.0,
+                            });
+                            completions.push(Reverse(Ev {
+                                t: F64Ord(now + hold),
+                                id: key.id,
+                                chain: key.chain,
+                                seg: key.seg,
+                                retry: key.retry,
+                                hold: F64Ord(0.0),
+                                is_retry: false,
+                            }));
+                        }
+                        SegmentFate::Interrupt { after_s, lost_train_s, retry_hold_s } => {
+                            let after = after_s.clamp(0.0, hold);
+                            out[key.chain].segments.push(SegmentOutcome {
+                                start_s: now,
+                                end_s: now + after,
+                                queue_wait_s: now - submit,
+                                interrupted: true,
+                                lost_train_s,
+                            });
+                            completions.push(Reverse(Ev {
+                                t: F64Ord(now + after),
+                                id: key.id,
+                                chain: key.chain,
+                                seg: key.seg,
+                                retry: key.retry,
+                                hold: F64Ord(retry_hold_s.max(0.0)),
+                                is_retry: true,
+                            }));
+                        }
+                    }
                 }
                 next_pass = None;
             }
@@ -395,7 +545,8 @@ mod tests {
 
     #[test]
     fn oversized_chain_never_runs() {
-        let chains = [ChainJob { id: 7, submit_s: 0.0, gpus: 200, priority: 0, segments: vec![1.0] }];
+        let chains =
+            [ChainJob { id: 7, submit_s: 0.0, gpus: 200, priority: 0, segments: vec![1.0] }];
         let out = schedule_chains(100, &chains, 0.0);
         assert!(out[0].segments.is_empty());
     }
@@ -403,14 +554,187 @@ mod tests {
     #[test]
     fn rounds_quantize_start_times() {
         // With 30 s rounds, a job submitted at t=5 starts at the next pass.
-        let chains = [ChainJob { id: 1, submit_s: 5.0, gpus: 10, priority: 1, segments: vec![4.0] }];
+        let chains =
+            [ChainJob { id: 1, submit_s: 5.0, gpus: 10, priority: 1, segments: vec![4.0] }];
         let out = schedule_chains(100, &chains, 30.0);
         assert_eq!(out[0].segments[0].start_s, 30.0);
         assert_eq!(out[0].segments[0].queue_wait_s, 25.0);
         // A submission exactly on the grid is served at that pass.
-        let chains = [ChainJob { id: 1, submit_s: 60.0, gpus: 10, priority: 1, segments: vec![4.0] }];
+        let chains =
+            [ChainJob { id: 1, submit_s: 60.0, gpus: 10, priority: 1, segments: vec![4.0] }];
         let out = schedule_chains(100, &chains, 30.0);
         assert_eq!(out[0].segments[0].start_s, 60.0);
+    }
+
+    // ---- interruption path ----
+
+    /// Scripted oracle: fails the first `fails` runs of every segment at
+    /// `after_s` into the hold, losing `lost` and requeuing the full hold.
+    struct ScriptedFaults {
+        fails: u32,
+        after_s: f64,
+        lost: f64,
+    }
+
+    impl FaultOracle for ScriptedFaults {
+        fn fate(
+            &self,
+            _chain: &ChainJob,
+            _seg: usize,
+            retry: u32,
+            _start_s: f64,
+            hold_s: f64,
+        ) -> SegmentFate {
+            if retry < self.fails {
+                SegmentFate::Interrupt {
+                    after_s: self.after_s.min(hold_s),
+                    lost_train_s: self.lost,
+                    retry_hold_s: hold_s,
+                }
+            } else {
+                SegmentFate::Complete
+            }
+        }
+    }
+
+    #[test]
+    fn none_oracle_is_bit_identical() {
+        let chains = [
+            ChainJob { id: 1, submit_s: 0.0, gpus: 60, priority: 1, segments: vec![10.0, 5.0] },
+            ChainJob { id: 2, submit_s: 1.0, gpus: 60, priority: 0, segments: vec![20.0] },
+        ];
+        let a = schedule_chains(100, &chains, 30.0);
+        let b = schedule_chains_with(100, &chains, 30.0, None);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.segments, y.segments);
+        }
+    }
+
+    #[test]
+    fn interrupted_segment_requeues_and_completes() {
+        // One chain, empty pool, continuous rounds: the first run of the
+        // only segment fails at t=3, the retry starts immediately at the
+        // failure instant and runs the full hold.
+        let chains =
+            [ChainJob { id: 1, submit_s: 0.0, gpus: 10, priority: 1, segments: vec![10.0] }];
+        let oracle = ScriptedFaults { fails: 1, after_s: 3.0, lost: 2.0 };
+        let out = schedule_chains_with(100, &chains, 0.0, Some(&oracle));
+        assert_eq!(out[0].segments.len(), 2);
+        let failed = out[0].segments[0];
+        let retry = out[0].segments[1];
+        assert!(failed.interrupted);
+        assert_eq!(failed.start_s, 0.0);
+        assert_eq!(failed.end_s, 3.0, "segment ends at the failure instant");
+        assert_eq!(failed.lost_train_s, 2.0);
+        assert!(!retry.interrupted);
+        assert_eq!(retry.start_s, 3.0, "retry re-enters at the failure instant");
+        assert_eq!(retry.end_s, 13.0);
+        assert_eq!(retry.lost_train_s, 0.0);
+    }
+
+    #[test]
+    fn interruption_releases_gpus_at_failure_instant() {
+        // A full-pool chain fails at t=2; a queued job must be able to
+        // start right then, not at the planned hold end (t=100).
+        let chains = [
+            ChainJob { id: 1, submit_s: 0.0, gpus: 100, priority: 1, segments: vec![100.0] },
+            ChainJob { id: 2, submit_s: 0.5, gpus: 100, priority: 0, segments: vec![5.0] },
+        ];
+        let oracle = ScriptedFaults { fails: 1, after_s: 2.0, lost: 0.0 };
+        let out = schedule_chains_with(100, &chains, 0.0, Some(&oracle));
+        let b = out[1].segments[0];
+        assert_eq!(b.start_s, 2.0, "failure instant frees the pool for the queued job");
+        // The retry (same priority 1) waits behind the higher-priority B.
+        let retry = out[0].segments[1];
+        assert!(retry.start_s >= 7.0, "retry waits for B: {}", retry.start_s);
+    }
+
+    #[test]
+    fn restart_keeps_chain_priority() {
+        // High-priority chain A fails; its retry must beat a lower-priority
+        // job B that queued earlier at the same failure instant.
+        let chains = [
+            ChainJob { id: 1, submit_s: 0.0, gpus: 100, priority: 0, segments: vec![50.0] },
+            ChainJob { id: 2, submit_s: 0.1, gpus: 100, priority: 2, segments: vec![50.0] },
+        ];
+        let oracle = ScriptedFaults { fails: 1, after_s: 5.0, lost: 0.0 };
+        let out = schedule_chains_with(100, &chains, 0.0, Some(&oracle));
+        let retry = out[0].segments[1];
+        let b = out[1].segments[0];
+        assert!(!retry.interrupted && retry.start_s == 5.0, "retry preempts the queue");
+        assert!(b.start_s >= retry.end_s, "low-priority job waits for the retry");
+    }
+
+    #[test]
+    fn restart_storm_never_deadlocks() {
+        // Many jobs all failing repeatedly inside one window: every chain
+        // still finishes every scripted segment (each with its retries),
+        // and the pool is never over-allocated.
+        let chains: Vec<ChainJob> = (0..40)
+            .map(|i| ChainJob {
+                id: i + 1,
+                submit_s: (i as f64) * 0.5,
+                gpus: 20 + (i as u32 % 5) * 16,
+                priority: (i % 3) as u32,
+                segments: vec![30.0, 20.0],
+            })
+            .collect();
+        let oracle = ScriptedFaults { fails: 3, after_s: 1.0, lost: 0.5 };
+        let out = schedule_chains_with(256, &chains, 15.0, Some(&oracle));
+        let mut evs: Vec<(f64, i64)> = Vec::new();
+        for (c, o) in chains.iter().zip(&out) {
+            // 2 scripted segments x (3 failures + 1 completion) each.
+            assert_eq!(o.segments.len(), 8, "chain {} fully scheduled", c.id);
+            assert_eq!(o.segments.iter().filter(|s| !s.interrupted).count(), 2);
+            for s in &o.segments {
+                assert!(s.end_s > s.start_s - 1e-9);
+                evs.push((s.start_s, c.gpus as i64));
+                evs.push((s.end_s, -(c.gpus as i64)));
+            }
+        }
+        evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut used = 0i64;
+        for (_, d) in evs {
+            used += d;
+            assert!(used <= 256, "pool over-allocated under the storm: {used}");
+        }
+    }
+
+    #[test]
+    fn prop_interrupted_chains_conserve_pool() {
+        prop_check(16, |g| {
+            let pool = g.u64_in(32, 256) as u32;
+            let n = g.usize_in(1, 15);
+            let chains: Vec<ChainJob> = (0..n)
+                .map(|i| ChainJob {
+                    id: i as u64 + 1,
+                    submit_s: g.f64_in(0.0, 100.0),
+                    gpus: g.u64_in(1, pool as u64) as u32,
+                    priority: g.u64_in(0, 3) as u32,
+                    segments: (0..g.usize_in(1, 3)).map(|_| g.f64_in(5.0, 40.0)).collect(),
+                })
+                .collect();
+            let fails = g.u64_in(0, 3) as u32;
+            let oracle = ScriptedFaults { fails, after_s: g.f64_in(0.5, 10.0), lost: 1.0 };
+            let out = schedule_chains_with(pool, &chains, 10.0, Some(&oracle));
+            let mut evs: Vec<(f64, i64)> = Vec::new();
+            for (c, o) in chains.iter().zip(&out) {
+                let completed = o.segments.iter().filter(|s| !s.interrupted).count();
+                prop_assert!(completed == c.segments.len(), "every scripted segment completes");
+                for s in &o.segments {
+                    prop_assert!(s.queue_wait_s >= -1e-9);
+                    evs.push((s.start_s, c.gpus as i64));
+                    evs.push((s.end_s, -(c.gpus as i64)));
+                }
+            }
+            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let mut used = 0i64;
+            for (_, d) in evs {
+                used += d;
+                prop_assert!(used <= pool as i64, "pool over-allocated: {used} > {pool}");
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -187,6 +187,24 @@ impl<'p> StageGraph<'p> {
         entry: &[Vec<TaskId>],
         grants: Option<&[TaskId]>,
     ) -> CompiledGraph {
+        self.compile_with(cs, world, entry, grants, &[])
+    }
+
+    /// [`Self::compile`] with per-stage bytes already resident on every
+    /// node's local disk (`local`): a warm restart that lands back on its
+    /// previous nodes still holds the staged image hot set and the
+    /// environment archive locally, so those bytes are credited against
+    /// each stage's foreground fetch without any staging flow (they never
+    /// cross the network again). An empty `local` compiles identically to
+    /// [`Self::compile`].
+    pub fn compile_with(
+        &mut self,
+        cs: &mut ClusterSim,
+        world: &mut World,
+        entry: &[Vec<TaskId>],
+        grants: Option<&[TaskId]>,
+        local: &[(Stage, u64)],
+    ) -> CompiledGraph {
         let n = cs.nodes();
         assert_eq!(entry.len(), n, "one entry gate set per node");
         assert!(!self.planners.is_empty(), "graph has at least one stage");
@@ -291,6 +309,13 @@ impl<'p> StageGraph<'p> {
 
             // Join the stage's speculative staging flows: the stage starts
             // once its normal gate AND its staged bytes have landed.
+            // Locally resident bytes (warm restart on the same nodes) are
+            // pure credit — no flow, no join.
+            let local_bytes = local
+                .iter()
+                .find(|(s, _)| *s == p.stage())
+                .map(|&(_, b)| b)
+                .unwrap_or(0);
             let prestaged: Vec<u64> = match &staged[k] {
                 Some((bytes, tasks)) => {
                     for i in 0..n {
@@ -302,8 +327,13 @@ impl<'p> StageGraph<'p> {
                             begin_gate[i] = joined;
                         }
                     }
-                    bytes.clone()
+                    if local_bytes == 0 {
+                        bytes.clone()
+                    } else {
+                        bytes.iter().map(|&b| b + local_bytes).collect()
+                    }
                 }
+                None if local_bytes > 0 => vec![local_bytes; n],
                 None => Vec::new(),
             };
 
@@ -479,6 +509,70 @@ mod tests {
             cs.sim.run();
             assert!(c.stages[0].prestaged.is_empty());
         }
+    }
+
+    #[test]
+    fn local_credit_feeds_prestaged_without_flows() {
+        // Warm-restart credit: bytes appear in `prestaged` for the matching
+        // stage only, with no staging flows (works in every mode).
+        for mode in OverlapMode::ALL {
+            let (mut cs, mut w) = setup(2);
+            let gate0 = cs.sim.delay(0.0, &[], 0);
+            let entry = vec![vec![gate0]; 2];
+            let mut g = StageGraph::new(mode, 0);
+            g.add(Box::new(FixedStage::new(
+                Stage::ImageLoading,
+                EdgeKind::Entry,
+                vec![1.0, 1.0],
+            )));
+            g.add(Box::new(FixedStage::new(
+                Stage::EnvSetup,
+                EdgeKind::GlobalBarrier,
+                vec![1.0, 1.0],
+            )));
+            let local = [(Stage::ImageLoading, 700u64)];
+            let c = g.compile_with(&mut cs, &mut w, &entry, None, &local);
+            cs.sim.run();
+            assert_eq!(c.stages[0].prestaged, vec![700, 700], "{mode:?}");
+            assert!(c.stages[1].prestaged.is_empty(), "{mode:?}");
+            // Credit does not delay the stage: begin gate is the entry gate.
+            assert_eq!(cs.sim.finished_at(c.stages[0].begin_gate[0]), 0.0);
+        }
+    }
+
+    #[test]
+    fn local_credit_adds_to_speculative_staging() {
+        let (mut cs, mut w) = setup(2);
+        let gate0 = cs.sim.delay(5.0, &[], 0);
+        let entry = vec![vec![gate0]; 2];
+        let grants: Vec<TaskId> = (0..2).map(|_| cs.sim.delay(1.0, &[], 0)).collect();
+        let mut g = StageGraph::new(OverlapMode::Speculative, 400);
+        let mut img = FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![0.0, 0.0]);
+        img.spec = Some(SpecRequest { bytes_per_node: 300, source: SpecSource::ClusterCache });
+        g.add(Box::new(img));
+        let local = [(Stage::ImageLoading, 50u64)];
+        let c = g.compile_with(&mut cs, &mut w, &entry, Some(&grants), &local);
+        cs.sim.run();
+        assert_eq!(c.stages[0].prestaged, vec![350, 350]);
+    }
+
+    #[test]
+    fn empty_local_compiles_identically() {
+        let build = |local: &[(Stage, u64)]| {
+            let (mut cs, mut w) = setup(2);
+            let gate0 = cs.sim.delay(0.0, &[], 0);
+            let entry = vec![vec![gate0]; 2];
+            let mut g = StageGraph::new(OverlapMode::Sequential, 0);
+            g.add(Box::new(FixedStage::new(
+                Stage::ImageLoading,
+                EdgeKind::Entry,
+                vec![2.0, 3.0],
+            )));
+            let c = g.compile_with(&mut cs, &mut w, &entry, None, local);
+            cs.sim.run();
+            cs.sim.finished_at(c.done).to_bits()
+        };
+        assert_eq!(build(&[]), build(&[(Stage::EnvSetup, 100)]));
     }
 
     #[test]

@@ -90,10 +90,19 @@ impl StartupOutcome {
 /// from the §3.2 lognormal; the cluster replay ([`crate::trace`]) passes
 /// waits derived from [`crate::scheduler::schedule_chains`] over a finite
 /// pool.
+///
+/// `local_image_bytes` / `local_env_bytes` model a warm restart that
+/// landed back on its previous nodes (fault-injection restart policy,
+/// [`crate::faults`]): the staged image hot set and the environment
+/// archive are still on every node's local disk, so those bytes are
+/// credited against the stages' foreground fetches. Zero (the default)
+/// is byte-identical to a cold allocation.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StartupContext {
     pub queue_s: f64,
     pub alloc_s: f64,
+    pub local_image_bytes: u64,
+    pub local_env_bytes: u64,
 }
 
 /// Run one startup of `job` on a fresh allocation, mutating `world`
@@ -119,6 +128,7 @@ pub fn run_startup(
         StartupContext {
             queue_s: rng.lognormal(d::QUEUE_WAIT_MU, d::QUEUE_WAIT_SIGMA),
             alloc_s: d::ALLOC_BASE_S + 0.02 * nodes as f64,
+            ..StartupContext::default()
         }
     } else {
         StartupContext::default() // hot update keeps its allocation
@@ -164,10 +174,38 @@ pub fn run_startup_with(
     } else {
         (0.0, 0.0) // hot update keeps its allocation
     };
-    events.push(StageEvent { job: job_id, attempt, node: JOB_LEVEL, stage: Stage::Queuing, kind: EventKind::Begin, ts: 0.0 });
-    events.push(StageEvent { job: job_id, attempt, node: JOB_LEVEL, stage: Stage::Queuing, kind: EventKind::End, ts: queue_s });
-    events.push(StageEvent { job: job_id, attempt, node: JOB_LEVEL, stage: Stage::Allocation, kind: EventKind::Begin, ts: queue_s });
-    events.push(StageEvent { job: job_id, attempt, node: JOB_LEVEL, stage: Stage::Allocation, kind: EventKind::End, ts: queue_s + alloc_s });
+    events.push(StageEvent {
+        job: job_id,
+        attempt,
+        node: JOB_LEVEL,
+        stage: Stage::Queuing,
+        kind: EventKind::Begin,
+        ts: 0.0,
+    });
+    events.push(StageEvent {
+        job: job_id,
+        attempt,
+        node: JOB_LEVEL,
+        stage: Stage::Queuing,
+        kind: EventKind::End,
+        ts: queue_s,
+    });
+    events.push(StageEvent {
+        job: job_id,
+        attempt,
+        node: JOB_LEVEL,
+        stage: Stage::Allocation,
+        kind: EventKind::Begin,
+        ts: queue_s,
+    });
+    events.push(StageEvent {
+        job: job_id,
+        attempt,
+        node: JOB_LEVEL,
+        stage: Stage::Allocation,
+        kind: EventKind::End,
+        ts: queue_s + alloc_s,
+    });
 
     let worker_t0 = queue_s + alloc_s;
     let gate0 = cs.sim.delay(worker_t0, &[], 0);
@@ -198,7 +236,16 @@ pub fn run_startup_with(
     graph.add(Box::new(EnvStage::new(&pkgs, job, cfg)));
     graph.add(Box::new(InitStage::new(job, cfg)));
     let entry: Vec<Vec<TaskId>> = vec![vec![gate0]; n];
-    let compiled = graph.compile(&mut cs, world, &entry, grants.as_deref());
+    // Warm-restart credit: bytes still on every node's local disk from the
+    // previous attempt on the same nodes (zero for cold allocations).
+    let mut local: Vec<(Stage, u64)> = Vec::new();
+    if ctx.local_image_bytes > 0 && kind == StartupKind::Full {
+        local.push((Stage::ImageLoading, ctx.local_image_bytes));
+    }
+    if ctx.local_env_bytes > 0 {
+        local.push((Stage::EnvSetup, ctx.local_env_bytes));
+    }
+    let compiled = graph.compile_with(&mut cs, world, &entry, grants.as_deref(), &local);
 
     // ---- Run the simulation ----
     cs.sim.run();
@@ -219,17 +266,52 @@ pub fn run_startup_with(
     // ---- Emit per-node events, uniformly from the compiled graph ----
     for i in 0..n {
         for cst in &compiled.stages {
-            events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: cst.stage, kind: EventKind::Begin, ts: cs.sim.finished_at(cst.begin_gate[i]) });
-            events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: cst.stage, kind: EventKind::End, ts: cs.sim.finished_at(cst.node_done[i]) });
+            events.push(StageEvent {
+                job: job_id,
+                attempt,
+                node: i as u32,
+                stage: cst.stage,
+                kind: EventKind::Begin,
+                ts: cs.sim.finished_at(cst.begin_gate[i]),
+            });
+            events.push(StageEvent {
+                job: job_id,
+                attempt,
+                node: i as u32,
+                stage: cst.stage,
+                kind: EventKind::End,
+                ts: cs.sim.finished_at(cst.node_done[i]),
+            });
             for (sub, spans) in &cst.sub_spans {
                 let (s0, s1) = spans[i];
-                events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: *sub, kind: EventKind::Begin, ts: cs.sim.finished_at(s0) });
-                events.push(StageEvent { job: job_id, attempt, node: i as u32, stage: *sub, kind: EventKind::End, ts: cs.sim.finished_at(s1) });
+                events.push(StageEvent {
+                    job: job_id,
+                    attempt,
+                    node: i as u32,
+                    stage: *sub,
+                    kind: EventKind::Begin,
+                    ts: cs.sim.finished_at(s0),
+                });
+                events.push(StageEvent {
+                    job: job_id,
+                    attempt,
+                    node: i as u32,
+                    stage: *sub,
+                    kind: EventKind::End,
+                    ts: cs.sim.finished_at(s1),
+                });
             }
         }
     }
     let training_begin = cs.sim.finished_at(compiled.done);
-    events.push(StageEvent { job: job_id, attempt, node: 0, stage: Stage::Training, kind: EventKind::Begin, ts: training_begin });
+    events.push(StageEvent {
+        job: job_id,
+        attempt,
+        node: 0,
+        stage: Stage::Training,
+        kind: EventKind::Begin,
+        ts: training_begin,
+    });
 
     // ---- Stage spans: earliest node begin → latest node end. Under
     // Sequential gating this reduces to the barrier-to-barrier spans the
@@ -455,6 +537,51 @@ mod tests {
             assert!(o.span(Stage::ImageLoading).is_none());
             assert!(o.total_s > 0.0);
         }
+    }
+
+    #[test]
+    fn local_warm_bytes_speed_up_restart() {
+        // A warm restart on the same nodes (fault-injection restart
+        // policy) credits the locally resident image hot set + env archive
+        // against the stage fetches; zero credit is byte-identical.
+        let job = JobConfig::paper_moe(64);
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::bootseer();
+        let run_ctx = |local_img: u64, local_env: u64| {
+            let mut w = World::new();
+            // Warm run records the hot set + creates the env cache.
+            run_startup(9, 0, &cluster, &job, &cfg, &mut w, StartupKind::Full, 21);
+            run_startup_with(
+                9,
+                1,
+                &cluster,
+                &job,
+                &cfg,
+                &mut w,
+                StartupKind::Full,
+                22,
+                StartupContext {
+                    queue_s: 10.0,
+                    alloc_s: 2.0,
+                    local_image_bytes: local_img,
+                    local_env_bytes: local_env,
+                },
+            )
+        };
+        let cold = run_ctx(0, 0);
+        let warm = run_ctx(
+            (job.image_bytes as f64 * job.image_hot_fraction) as u64,
+            job.env_cache_bytes,
+        );
+        assert!(
+            warm.worker_phase_s < cold.worker_phase_s,
+            "warm {} vs cold {}",
+            warm.worker_phase_s,
+            cold.worker_phase_s
+        );
+        // Zero credit is exactly the plain context path.
+        let again = run_ctx(0, 0);
+        assert_eq!(cold.worker_phase_s.to_bits(), again.worker_phase_s.to_bits());
     }
 
     #[test]

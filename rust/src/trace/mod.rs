@@ -29,6 +29,21 @@
 //!    visibility — so results are byte-identical regardless of thread
 //!    count.
 //!
+//! A third, optional axis layers **generated faults** over the replay
+//! ([`ReplayOptions::faults`], CLI `--faults`, config `[faults]`): the
+//! seeded crash hazard of [`crate::faults`] interrupts scheduled segments
+//! at their failure instants (phase 1, via
+//! [`crate::scheduler::schedule_chains_with`]), rolls training back to the
+//! last resume point, and re-queues the restart — warm or cold depending
+//! on whether it lands on its previous nodes — while brownout windows and
+//! injected stragglers degrade phase 2's effective services. All fault
+//! decisions are pure functions of `(seed, identity)`, computed before the
+//! parallel phase, so the replay stays byte-identical at any `--threads`;
+//! a zero fault rate is byte-identical to the fault-free replay.
+//! [`ReplayResult::wasted_fraction`] is the paper's headline metric
+//! (">3.5% of GPU time is wasted"), reproduced by
+//! [`crate::figures::wasted_gpu_time_sweep`].
+//!
 //! [`replay`] is the convenience wrapper with auto-sized pool and
 //! auto-detected threads; `bootseer trace --pool-gpus N --threads T`
 //! exposes both knobs.
@@ -36,13 +51,14 @@
 use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
 use crate::env::packages::PackageSet;
+use crate::faults::{BrownoutWindows, FaultConfig, FaultEngine};
 use crate::image::spec::ImageSpec;
 use crate::profiler::StageAnalysisService;
-use crate::scheduler::{schedule_chains, ChainJob, ChainOutcome};
+use crate::scheduler::{schedule_chains_with, ChainJob, ChainOutcome, FaultOracle};
 use crate::startup::{
     run_startup_with, StartupContext, StartupKind, StartupOutcome, World,
 };
-use crate::util::rng::Rng;
+use crate::util::rng::{mix64, Rng};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -98,14 +114,6 @@ fn image_class(gpus: u32) -> usize {
     } else {
         2
     }
-}
-
-/// SplitMix64 finalizer (stateless hash; mirrors `util::rng`'s seeder).
-fn mix64(x: u64) -> u64 {
-    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    z ^ (z >> 31)
 }
 
 /// Deterministic per-image size factor (fraction of the paper's 28.62 GB
@@ -276,17 +284,22 @@ pub fn schedule_trace(
     pool_gpus: Option<u32>,
 ) -> TraceSchedule {
     let jobs_cfg: Vec<JobConfig> = trace.iter().map(trace_job_config).collect();
-    schedule_trace_with(trace, cluster, pool_gpus, &jobs_cfg)
+    schedule_trace_with(trace, cluster, pool_gpus, &jobs_cfg, &FaultConfig::off(), 0)
 }
 
 /// [`schedule_trace`] over already-derived job configs — the replay calls
 /// this so phase 1 and phase 2 share one derivation and can never
-/// desynchronize.
+/// desynchronize. With an active [`FaultConfig`] the seeded crash hazard
+/// ([`FaultEngine`]) interrupts in-flight segments: the outcome then
+/// contains extra (interrupted + retry) segment runs beyond the scripted
+/// chain; [`FaultConfig::off`] is bit-identical to the fault-free schedule.
 fn schedule_trace_with(
     trace: &[TraceJob],
     cluster: &ClusterConfig,
     pool_gpus: Option<u32>,
     jobs_cfg: &[JobConfig],
+    faults: &FaultConfig,
+    seed: u64,
 ) -> TraceSchedule {
     let ests: Vec<f64> =
         jobs_cfg.iter().map(|job| estimate_startup_s(job, cluster)).collect();
@@ -308,7 +321,12 @@ fn schedule_trace_with(
             }
         })
         .collect();
-    let outcomes = schedule_chains(pool, &chains, d::SCHED_ROUND_S);
+    let id_ests: Vec<(u64, f64)> =
+        trace.iter().zip(&ests).map(|(tj, &e)| (tj.id, e)).collect();
+    let engine = FaultEngine::new(faults.clone(), seed, &id_ests);
+    let oracle: Option<&dyn FaultOracle> =
+        if faults.hazard_per_gpu_hour > 0.0 { Some(&engine) } else { None };
+    let outcomes = schedule_chains_with(pool, &chains, d::SCHED_ROUND_S, oracle);
     TraceSchedule { pool_gpus: pool, outcomes, ests }
 }
 
@@ -371,6 +389,11 @@ pub struct JobReplay {
     pub queue_waits: Vec<f64>,
     /// Cluster-clock start time of each full startup's allocation.
     pub starts_s: Vec<f64>,
+    /// GPU-seconds this job wasted: startup time (capped at the failure
+    /// instant for interrupted attempts) plus checkpoint-rollback losses.
+    pub wasted_gpu_s: f64,
+    /// Fault-generated restarts this job suffered (0 without faults).
+    pub fault_restarts: u32,
 }
 
 /// Replay output: the profiler DB plus per-job summaries and the Fig-1
@@ -380,6 +403,11 @@ pub struct ReplayResult {
     pub jobs: Vec<JobReplay>,
     pub train_gpu_hours: f64,
     pub startup_gpu_hours: f64,
+    /// GPU-hours of training rolled back at fault instants (work since the
+    /// last resume point, lost and re-done). Zero without faults.
+    pub lost_train_gpu_hours: f64,
+    /// Fault-generated restarts across the whole trace.
+    pub fault_restarts: u64,
     /// GPU pool the scheduler ran over.
     pub pool_gpus: u32,
     /// Scheduler-derived queue wait of every full startup (job order, then
@@ -391,10 +419,21 @@ impl ReplayResult {
     pub fn startup_fraction(&self) -> f64 {
         self.startup_gpu_hours / (self.startup_gpu_hours + self.train_gpu_hours)
     }
+
+    /// Total wasted GPU-hours: startup overhead plus rollback losses —
+    /// the paper's "more than 3.5% of GPU time is wasted" quantity.
+    pub fn wasted_gpu_hours(&self) -> f64 {
+        self.startup_gpu_hours + self.lost_train_gpu_hours
+    }
+
+    /// Wasted share of all GPU time spent (training + waste).
+    pub fn wasted_fraction(&self) -> f64 {
+        self.wasted_gpu_hours() / (self.wasted_gpu_hours() + self.train_gpu_hours)
+    }
 }
 
 /// Knobs of the cluster replay.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct ReplayOptions {
     /// GPU pool the scheduler allocates from; `None` → demand-based sizing
     /// via [`default_pool_gpus`].
@@ -402,12 +441,10 @@ pub struct ReplayOptions {
     /// Worker threads for the parallel startup replay; 0 → one per
     /// available core. The result is identical for every value.
     pub threads: usize,
-}
-
-impl Default for ReplayOptions {
-    fn default() -> Self {
-        ReplayOptions { pool_gpus: None, threads: 0 }
-    }
+    /// Fault-injection processes layered over the replay
+    /// ([`FaultConfig::off`] by default — byte-identical to the fault-free
+    /// replay).
+    pub faults: FaultConfig,
 }
 
 /// One independent simulation unit of phase 2.
@@ -421,6 +458,15 @@ struct Unit {
     digest: u64,
     env_sig: u64,
     eff_cluster: ClusterConfig,
+    /// Fault bookkeeping (all inert without faults): which scripted
+    /// segment + retry this run is, whether it was interrupted mid-hold,
+    /// its scheduler-assigned length, the training rolled back at its
+    /// failure, and whether a restart landed warm on its previous nodes.
+    retry: u32,
+    interrupted: bool,
+    seg_len_s: f64,
+    lost_train_s: f64,
+    warm_local: bool,
 }
 
 /// Per-startup effective service capacities: the seed per-job entitlement,
@@ -455,6 +501,8 @@ pub fn replay_cluster(
             jobs: Vec::new(),
             train_gpu_hours: 0.0,
             startup_gpu_hours: 0.0,
+            lost_train_gpu_hours: 0.0,
+            fault_restarts: 0,
             pool_gpus: 0,
             queue_waits: Vec::new(),
         };
@@ -465,28 +513,36 @@ pub fn replay_cluster(
     let nodes_of: Vec<u32> = jobs_cfg.iter().map(|j| j.nodes(cluster).max(1)).collect();
 
     // ---- Phase 1: schedule every full startup over the finite pool ----
-    let sched = schedule_trace_with(trace, cluster, opts.pool_gpus, &jobs_cfg);
+    // The fault engine's crash hazard interrupts segments in here; the
+    // same engine re-derives per-restart decisions (relocation, injected
+    // stragglers) below, keyed purely by identity — no shared state.
+    let sched =
+        schedule_trace_with(trace, cluster, opts.pool_gpus, &jobs_cfg, &opts.faults, seed);
+    let fengine = FaultEngine::new(opts.faults.clone(), seed, &[]);
 
     // ---- Image / environment identities (shared across jobs) ----
-    // digest + hot set per distinct image seed; signature per distinct env
-    // seed. Both are pure functions of the job config, computed once.
-    let mut img_idents: HashMap<u64, (u64, Vec<u32>)> = HashMap::new();
+    // digest + hot set + hot bytes per distinct image seed; signature per
+    // distinct env seed. Both are pure functions of the job config,
+    // computed once.
+    let mut img_idents: HashMap<u64, (u64, Vec<u32>, u64)> = HashMap::new();
     let mut env_idents: HashMap<u64, u64> = HashMap::new();
     let mut job_digest = Vec::with_capacity(trace.len());
+    let mut job_hot_bytes = Vec::with_capacity(trace.len());
     let mut job_env_sig = Vec::with_capacity(trace.len());
     for (j, tj) in trace.iter().enumerate() {
         let job = &jobs_cfg[j];
         let img_seed = job.image_seed.unwrap_or(tj.id ^ 0x1AA6E);
-        let (digest, _) = img_idents.entry(img_seed).or_insert_with(|| {
+        let (digest, _, hot_bytes) = img_idents.entry(img_seed).or_insert_with(|| {
             let img = ImageSpec::synth(
                 img_seed,
                 job.image_bytes,
                 job.image_block_bytes,
                 job.image_hot_fraction,
             );
-            (img.digest, img.startup_access.clone())
+            (img.digest, img.startup_access.clone(), img.hot_bytes())
         });
         job_digest.push(*digest);
+        job_hot_bytes.push(*hot_bytes);
         let env_seed = job.env_seed.unwrap_or(tj.id ^ 0x9AC5);
         let sig = *env_idents
             .entry(env_seed)
@@ -514,10 +570,20 @@ pub fn replay_cluster(
                 digest: job_digest[j],
                 env_sig: job_env_sig[j],
                 eff_cluster: cluster.clone(),
+                retry: 0,
+                interrupted: false,
+                seg_len_s: est,
+                lost_train_s: 0.0,
+                warm_local: false,
             });
             continue;
         }
+        // Walk the outcome runs reconstructing (scripted segment, retry):
+        // an interrupted run is followed by its retry of the same segment.
+        let mut seg_idx = 0u64;
+        let mut retry = 0u32;
         for (k, s) in segs.iter().enumerate() {
+            let warm_local = retry > 0 && !fengine.relocated(tj.id, seg_idx, retry);
             job_units[j].push(units.len());
             units.push(Unit {
                 job_idx: j,
@@ -529,7 +595,18 @@ pub fn replay_cluster(
                 digest: job_digest[j],
                 env_sig: job_env_sig[j],
                 eff_cluster: cluster.clone(),
+                retry,
+                interrupted: s.interrupted,
+                seg_len_s: s.end_s - s.start_s,
+                lost_train_s: s.lost_train_s,
+                warm_local,
             });
+            if s.interrupted {
+                retry += 1;
+            } else {
+                seg_idx += 1;
+                retry = 0;
+            }
         }
         // Hot updates happen while the last segment trains; they keep the
         // allocation (no queue) and re-run env setup + model init.
@@ -540,7 +617,7 @@ pub fn replay_cluster(
             job_units[j].push(units.len());
             units.push(Unit {
                 job_idx: j,
-                attempt: tj.full_startups + h,
+                attempt: segs.len() as u32 + h,
                 kind: StartupKind::HotUpdate,
                 start_s: t,
                 est_s: est,
@@ -548,6 +625,11 @@ pub fn replay_cluster(
                 digest: job_digest[j],
                 env_sig: job_env_sig[j],
                 eff_cluster: cluster.clone(),
+                retry: 0,
+                interrupted: false,
+                seg_len_s: 0.0,
+                lost_train_s: 0.0,
+                warm_local: false,
             });
         }
     }
@@ -596,7 +678,7 @@ pub fn replay_cluster(
         *e = e.min(end);
     }
     let mut shared = SharedWorld { images: HashMap::new(), envs: HashMap::new() };
-    for (digest, blocks) in img_idents.values() {
+    for (digest, blocks, _) in img_idents.values() {
         if let Some(&avail) = img_avail.get(digest) {
             shared
                 .images
@@ -609,14 +691,36 @@ pub fn replay_cluster(
             shared
                 .envs
                 .entry(sig)
-                .or_insert(SharedEnv { cache_bytes: jobs_cfg[j].env_cache_bytes, available_s: avail });
+                .or_insert(SharedEnv {
+                    cache_bytes: jobs_cfg[j].env_cache_bytes,
+                    available_s: avail,
+                });
         }
     }
 
-    // ---- Per-unit effective services + warm visibility ----
+    // ---- Per-unit effective services + fault-injected degradation ----
+    // Brownout windows are generated once from the seed over the whole
+    // horizon; injected stragglers are keyed by (job, attempt). Both are
+    // computed here, before the parallel phase, so thread interleaving can
+    // never observe them differently.
+    let horizon = units.iter().map(|u| u.start_s + u.est_s).fold(0.0f64, f64::max);
+    let brownouts = BrownoutWindows::generate(&opts.faults, seed, horizon);
     for u in &mut units {
         let avg_active = (int_at(u.start_s + u.est_s) - int_at(u.start_s)) / u.est_s.max(1e-9);
         u.eff_cluster = effective_cluster(cluster, nodes_of[u.job_idx], avg_active);
+        if !brownouts.is_empty() {
+            let f = brownouts.capacity_scale(u.start_s, u.start_s + u.est_s);
+            if f < 1.0 {
+                u.eff_cluster.registry_egress_bps *= f;
+                u.eff_cluster.cluster_cache_egress_bps *= f;
+                u.eff_cluster.hdfs_datanode_egress_bps *= f;
+            }
+        }
+        if u.kind == StartupKind::Full && fengine.straggler(trace[u.job_idx].id, u.attempt) {
+            let tail = u.eff_cluster.straggler_tail_prob;
+            u.eff_cluster.straggler_tail_prob =
+                (tail * opts.faults.straggler_severity).min(0.9);
+        }
     }
 
     // ---- Phase 2: replay every unit, in parallel across threads ----
@@ -625,10 +729,25 @@ pub fn replay_cluster(
     } else {
         opts.threads
     };
+    let blocks_of: HashMap<u64, &[u32]> =
+        img_idents.values().map(|(d, b, _)| (*d, b.as_slice())).collect();
     let run_unit = |u: &Unit| -> StartupOutcome {
         let tj = &trace[u.job_idx];
         let job = &jobs_cfg[u.job_idx];
         let mut world = shared.world_at(u.digest, u.env_sig, u.start_s);
+        if u.warm_local {
+            // Restart on its previous nodes: the job's own prior attempt
+            // guarantees a record + cache regardless of cluster-level
+            // availability timing.
+            if !world.hotset.has_record(u.digest) {
+                if let Some(blocks) = blocks_of.get(&u.digest) {
+                    world.hotset.seed_record(u.digest, blocks.iter().copied());
+                }
+            }
+            if world.envcache.lookup(u.env_sig).is_none() {
+                world.envcache.store(u.env_sig, job.env_cache_bytes);
+            }
+        }
         let unit_seed = seed
             ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
             ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A);
@@ -636,6 +755,11 @@ pub fn replay_cluster(
             (u.queue_s, d::ALLOC_BASE_S + 0.02 * nodes_of[u.job_idx] as f64)
         } else {
             (0.0, 0.0)
+        };
+        let (local_image_bytes, local_env_bytes) = if u.warm_local {
+            (job_hot_bytes[u.job_idx], job.env_cache_bytes)
+        } else {
+            (0, 0)
         };
         run_startup_with(
             tj.id,
@@ -646,7 +770,7 @@ pub fn replay_cluster(
             &mut world,
             u.kind,
             unit_seed,
-            StartupContext { queue_s, alloc_s },
+            StartupContext { queue_s, alloc_s, local_image_bytes, local_env_bytes },
         )
     };
     let mut slots: Vec<Option<StartupOutcome>> = (0..units.len()).map(|_| None).collect();
@@ -689,21 +813,43 @@ pub fn replay_cluster(
     let mut jobs = Vec::with_capacity(trace.len());
     let mut train_gpu_hours = 0.0;
     let mut startup_gpu_hours = 0.0;
+    let mut lost_train_gpu_hours = 0.0;
+    let mut fault_restarts = 0u64;
     let mut queue_waits = Vec::new();
     for (j, tj) in trace.iter().enumerate() {
         svc.register_job(tj.id, tj.gpus);
+        let alloc_s = d::ALLOC_BASE_S + 0.02 * nodes_of[j] as f64;
         let mut startup_worker_s = Vec::new();
         let mut first_total = 0.0;
         let mut installs = Vec::new();
         let mut last_full: Option<StartupOutcome> = None;
         let mut job_queue_waits = Vec::new();
         let mut starts_s = Vec::new();
+        let mut wasted_gpu_s = 0.0;
+        let mut job_fault_restarts = 0u32;
         for &ui in &job_units[j] {
             let u = &units[ui];
             let o = slots[ui].take().expect("unit replayed");
             startup_worker_s.push(o.worker_phase_s);
-            startup_gpu_hours += o.gpu_seconds_wasted() / 3600.0;
+            if u.interrupted {
+                // The run ended at the failure instant: only the startup
+                // time actually spent before it counts as waste.
+                let charged = o.worker_phase_s.min((u.seg_len_s - alloc_s).max(0.0));
+                startup_gpu_hours += charged * tj.gpus as f64 / 3600.0;
+                wasted_gpu_s += charged * tj.gpus as f64;
+            } else {
+                startup_gpu_hours += o.gpu_seconds_wasted() / 3600.0;
+                wasted_gpu_s += o.gpu_seconds_wasted();
+            }
+            if u.lost_train_s > 0.0 {
+                lost_train_gpu_hours += u.lost_train_s * tj.gpus as f64 / 3600.0;
+                wasted_gpu_s += u.lost_train_s * tj.gpus as f64;
+            }
             if u.kind == StartupKind::Full {
+                if u.retry > 0 {
+                    fault_restarts += 1;
+                    job_fault_restarts += 1;
+                }
                 if u.attempt == 0 {
                     first_total = o.total_s;
                 }
@@ -724,6 +870,8 @@ pub fn replay_cluster(
             last_full,
             queue_waits: job_queue_waits,
             starts_s,
+            wasted_gpu_s,
+            fault_restarts: job_fault_restarts,
         });
     }
     ReplayResult {
@@ -731,6 +879,8 @@ pub fn replay_cluster(
         jobs,
         train_gpu_hours,
         startup_gpu_hours,
+        lost_train_gpu_hours,
+        fault_restarts,
         pool_gpus: sched.pool_gpus,
         queue_waits,
     }
@@ -847,7 +997,7 @@ mod tests {
                 &cluster,
                 &BootseerConfig { overlap: mode, ..BootseerConfig::bootseer() },
                 7,
-                &ReplayOptions { pool_gpus: None, threads },
+                &ReplayOptions { pool_gpus: None, threads, ..ReplayOptions::default() },
             )
         };
         let seq = run_mode(OverlapMode::Sequential, 1);
@@ -921,14 +1071,14 @@ mod tests {
             &cluster,
             &cfg,
             5,
-            &ReplayOptions { pool_gpus: None, threads: 1 },
+            &ReplayOptions { pool_gpus: None, threads: 1, ..ReplayOptions::default() },
         );
         let many = replay_cluster(
             &t,
             &cluster,
             &cfg,
             5,
-            &ReplayOptions { pool_gpus: None, threads: 8 },
+            &ReplayOptions { pool_gpus: None, threads: 8, ..ReplayOptions::default() },
         );
         assert_eq!(one.pool_gpus, many.pool_gpus);
         assert_eq!(one.queue_waits, many.queue_waits);
@@ -947,7 +1097,7 @@ mod tests {
             &cluster,
             &cfg,
             5,
-            &ReplayOptions { pool_gpus: None, threads: 8 },
+            &ReplayOptions { pool_gpus: None, threads: 8, ..ReplayOptions::default() },
         );
         assert_eq!(again.startup_gpu_hours.to_bits(), many.startup_gpu_hours.to_bits());
     }
@@ -973,7 +1123,7 @@ mod tests {
             &ClusterConfig::default(),
             &BootseerConfig::bootseer(),
             9,
-            &ReplayOptions { pool_gpus: Some(256), threads: 1 },
+            &ReplayOptions { pool_gpus: Some(256), threads: 1, ..ReplayOptions::default() },
         );
         let cold = r.jobs[0].startup_worker_s[0];
         let warm = r.jobs[1].startup_worker_s[0];
@@ -989,9 +1139,219 @@ mod tests {
             &ClusterConfig::default(),
             &BootseerConfig::bootseer(),
             9,
-            &ReplayOptions { pool_gpus: Some(256), threads: 1 },
+            &ReplayOptions { pool_gpus: Some(256), threads: 1, ..ReplayOptions::default() },
         );
         assert!(r2.jobs[1].startup_worker_s[0] > warm * 1.2);
+    }
+
+    // ---- fault injection ----
+
+    /// A fault spec hot enough to actually fire on a small trace.
+    fn hot_faults() -> FaultConfig {
+        FaultConfig {
+            hazard_per_gpu_hour: 5.0e-4,
+            ..FaultConfig::paper()
+        }
+    }
+
+    #[test]
+    fn zero_fault_rate_is_byte_identical() {
+        // `faults: off` must take the exact same code paths as the
+        // fault-free replay: every number bit-equal.
+        let t = gen_trace(6, 50, 86400.0);
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::baseline();
+        let plain = replay_cluster(
+            &t,
+            &cluster,
+            &cfg,
+            5,
+            &ReplayOptions { pool_gpus: None, threads: 2, ..ReplayOptions::default() },
+        );
+        let off = replay_cluster(
+            &t,
+            &cluster,
+            &cfg,
+            5,
+            &ReplayOptions { pool_gpus: None, threads: 2, faults: FaultConfig::off() },
+        );
+        assert_eq!(plain.startup_gpu_hours.to_bits(), off.startup_gpu_hours.to_bits());
+        assert_eq!(plain.queue_waits, off.queue_waits);
+        assert_eq!(off.lost_train_gpu_hours, 0.0);
+        assert_eq!(off.fault_restarts, 0);
+        assert_eq!(
+            plain.wasted_gpu_hours().to_bits(),
+            plain.startup_gpu_hours.to_bits(),
+            "without faults, wasted == startup overhead"
+        );
+        for (a, b) in plain.jobs.iter().zip(&off.jobs) {
+            assert_eq!(a.startup_worker_s, b.startup_worker_s);
+            assert_eq!(b.fault_restarts, 0);
+        }
+    }
+
+    #[test]
+    fn faults_generate_restarts_and_increase_waste() {
+        let t = gen_trace(6, 50, 86400.0);
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::baseline();
+        let off = replay_cluster(&t, &cluster, &cfg, 5, &ReplayOptions::default());
+        let on = replay_cluster(
+            &t,
+            &cluster,
+            &cfg,
+            5,
+            &ReplayOptions { faults: hot_faults(), ..ReplayOptions::default() },
+        );
+        assert!(on.fault_restarts > 0, "hot hazard must fire on a 50-job trace");
+        assert!(on.lost_train_gpu_hours > 0.0, "training failures roll work back");
+        assert!(
+            on.wasted_gpu_hours() > off.wasted_gpu_hours(),
+            "faults add waste: {} vs {}",
+            on.wasted_gpu_hours(),
+            off.wasted_gpu_hours()
+        );
+        // Per-job waste sums to the cluster totals.
+        let per_job: f64 = on.jobs.iter().map(|j| j.wasted_gpu_s).sum();
+        let total = on.wasted_gpu_hours();
+        assert!(
+            (per_job / 3600.0 - total).abs() < 1e-6 * total.max(1.0),
+            "per-job wasted {} vs total {total}",
+            per_job / 3600.0
+        );
+        let per_job_restarts: u64 = on.jobs.iter().map(|j| j.fault_restarts as u64).sum();
+        assert_eq!(per_job_restarts, on.fault_restarts);
+        // Training itself is unaffected: the lost work is re-done.
+        assert_eq!(on.train_gpu_hours.to_bits(), off.train_gpu_hours.to_bits());
+    }
+
+    #[test]
+    fn fault_replay_deterministic_across_threads_and_modes() {
+        use crate::config::OverlapMode;
+        let t = gen_trace(4, 40, 86400.0);
+        let cluster = ClusterConfig::default();
+        for mode in OverlapMode::ALL {
+            let cfg = BootseerConfig { overlap: mode, ..BootseerConfig::bootseer() };
+            let run = |threads: usize| {
+                replay_cluster(
+                    &t,
+                    &cluster,
+                    &cfg,
+                    7,
+                    &ReplayOptions { pool_gpus: None, threads, faults: hot_faults() },
+                )
+            };
+            let one = run(1);
+            let four = run(4);
+            assert!(one.fault_restarts > 0, "{mode:?}: hazard fired");
+            assert_eq!(one.fault_restarts, four.fault_restarts, "{mode:?}");
+            assert_eq!(
+                one.startup_gpu_hours.to_bits(),
+                four.startup_gpu_hours.to_bits(),
+                "{mode:?}: startup hours bit-equal across threads"
+            );
+            assert_eq!(
+                one.lost_train_gpu_hours.to_bits(),
+                four.lost_train_gpu_hours.to_bits(),
+                "{mode:?}: lost hours bit-equal across threads"
+            );
+            assert_eq!(one.queue_waits, four.queue_waits, "{mode:?}");
+            for (a, b) in one.jobs.iter().zip(&four.jobs) {
+                assert_eq!(a.startup_worker_s, b.startup_worker_s, "{mode:?}");
+                assert_eq!(a.wasted_gpu_s.to_bits(), b.wasted_gpu_s.to_bits(), "{mode:?}");
+            }
+            // And reruns with the same seed reproduce the same bits.
+            let again = run(4);
+            assert_eq!(
+                again.wasted_gpu_hours().to_bits(),
+                four.wasted_gpu_hours().to_bits(),
+                "{mode:?}: rerun bit-equal"
+            );
+        }
+    }
+
+    #[test]
+    fn warm_restart_beats_cold_restart() {
+        // One job, hazard hot enough to force restarts: with relocate=0
+        // every restart lands back on its nodes (local hot set + env
+        // archive still on disk); with relocate=1 every restart is
+        // rescheduled cold. The warm restart startups must be faster.
+        let t = vec![TraceJob {
+            id: 1,
+            submit_s: 0.0,
+            gpus: 128,
+            full_startups: 1,
+            hot_updates: 0,
+            train_hours: 40.0,
+            priority: 1,
+            image_id: 7,
+        }];
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::bootseer();
+        let run = |relocate: f64| {
+            let faults = FaultConfig {
+                hazard_per_gpu_hour: 2.0e-3,
+                relocate_prob: relocate,
+                straggler_prob: 0.0,
+                brownouts_per_week: 0.0,
+                ..FaultConfig::paper()
+            };
+            replay_cluster(
+                &t,
+                &cluster,
+                &cfg,
+                11,
+                &ReplayOptions { pool_gpus: Some(256), threads: 1, faults },
+            )
+        };
+        let warm = run(0.0);
+        let cold = run(1.0);
+        assert!(warm.fault_restarts >= 1, "restarts fired: {}", warm.fault_restarts);
+        assert_eq!(warm.fault_restarts, cold.fault_restarts, "same crash schedule");
+        // Compare the restart attempts only (index ≥ 1 in worker series).
+        let mean_tail = |r: &ReplayResult| {
+            let w = &r.jobs[0].startup_worker_s[1..];
+            w.iter().sum::<f64>() / w.len() as f64
+        };
+        let wm = mean_tail(&warm);
+        let cm = mean_tail(&cold);
+        assert!(wm < cm, "warm restarts {wm} should beat cold {cm}");
+    }
+
+    #[test]
+    fn brownouts_slow_overlapping_startups() {
+        // A constant brownout covering the whole horizon with harsh
+        // degradation must slow the replayed startups.
+        let t = gen_trace(8, 20, 43200.0);
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::baseline();
+        let calm = replay_cluster(&t, &cluster, &cfg, 3, &ReplayOptions::default());
+        let browned = replay_cluster(
+            &t,
+            &cluster,
+            &cfg,
+            3,
+            &ReplayOptions {
+                faults: FaultConfig {
+                    brownouts_per_week: 2000.0,
+                    brownout_duration_s: 7200.0,
+                    brownout_capacity_factor: 0.15,
+                    hazard_per_gpu_hour: 0.0,
+                    straggler_prob: 0.0,
+                    ..FaultConfig::paper()
+                },
+                ..ReplayOptions::default()
+            },
+        );
+        assert!(
+            browned.startup_gpu_hours > calm.startup_gpu_hours * 1.02,
+            "brownouts degrade startups: {} vs {}",
+            browned.startup_gpu_hours,
+            calm.startup_gpu_hours
+        );
+        // No crashes configured: schedule identical, no restarts.
+        assert_eq!(browned.fault_restarts, 0);
+        assert_eq!(browned.queue_waits, calm.queue_waits);
     }
 
     #[test]

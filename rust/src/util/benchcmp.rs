@@ -1,0 +1,190 @@
+//! Bench-regression comparison: diff a fresh `BENCH_*.json` against the
+//! committed baseline under `benches/baselines/` with a relative
+//! tolerance. Backs the `bench-gate` binary CI runs after the bench
+//! sweeps, turning the artifacts from "uploaded and forgotten" into a
+//! blocking regression gate.
+//!
+//! All tracked metrics are **lower-is-better** (simulated seconds, wasted
+//! fractions, GPU-hours of overhead), so only `fresh > baseline * (1 +
+//! tol)` counts as a regression; improvements just pass (refresh the
+//! baseline to ratchet them in). A metric present in one file but not the
+//! other is a schema drift and fails too — intentional changes must update
+//! the committed baseline in the same PR.
+
+use crate::util::json::Json;
+
+/// Is this leaf a tracked lower-is-better metric? Keys ending in `_s`
+/// (simulated seconds) or `_fraction`, every `wasted*` quantity (incl.
+/// sliced variants like `wasted_fraction_ge128`), plus the GPU-hour
+/// overhead counters. Identity/metadata fields (gpus, seed, n_jobs,
+/// train_gpu_hours, ...) are compared for presence only.
+pub fn is_metric_key(key: &str) -> bool {
+    key.ends_with("_s")
+        || key.ends_with("_fraction")
+        || key.starts_with("wasted")
+        || key == "startup_gpu_hours"
+        || key == "lost_gpu_hours"
+}
+
+/// One comparison violation, human-readable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Violation {
+    pub path: String,
+    pub detail: String,
+}
+
+impl Violation {
+    fn new(path: &str, detail: String) -> Violation {
+        Violation { path: path.to_string(), detail }
+    }
+}
+
+/// Compare `fresh` against `baseline`; returns every violation (empty =
+/// gate passes). `tol` is the allowed relative regression on each metric
+/// (0.35 = fail when fresh exceeds baseline by more than 35%).
+pub fn compare(baseline: &Json, fresh: &Json, tol: f64) -> Vec<Violation> {
+    let mut out = Vec::new();
+    walk(baseline, fresh, "", tol, &mut out);
+    out
+}
+
+fn walk(base: &Json, fresh: &Json, path: &str, tol: f64, out: &mut Vec<Violation>) {
+    match (base, fresh) {
+        (Json::Obj(b), Json::Obj(f)) => {
+            for (k, bv) in b {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                match f.get(k) {
+                    Some(fv) => walk(bv, fv, &sub, tol, out),
+                    None => out.push(Violation::new(
+                        &sub,
+                        "missing from fresh run (schema drift — update the baseline)"
+                            .to_string(),
+                    )),
+                }
+            }
+            for k in f.keys() {
+                if !b.contains_key(k) {
+                    let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                    out.push(Violation::new(
+                        &sub,
+                        "missing from baseline (schema drift — update the baseline)"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+        (Json::Arr(b), Json::Arr(f)) => {
+            if b.len() != f.len() {
+                out.push(Violation::new(
+                    path,
+                    format!("array length {} vs baseline {}", f.len(), b.len()),
+                ));
+                return;
+            }
+            for (i, (bv, fv)) in b.iter().zip(f).enumerate() {
+                walk(bv, fv, &format!("{path}[{i}]"), tol, out);
+            }
+        }
+        (Json::Num(b), Json::Num(f)) => {
+            let key = path.rsplit('.').next().unwrap_or(path);
+            let key = key.split('[').next().unwrap_or(key);
+            if is_metric_key(key) && *f > b * (1.0 + tol) + 1e-12 {
+                out.push(Violation::new(
+                    path,
+                    format!(
+                        "regressed: {f:.6} vs baseline {b:.6} (+{:.1}%, tolerance {:.0}%)",
+                        100.0 * (f / b.max(1e-12) - 1.0),
+                        100.0 * tol
+                    ),
+                ));
+            }
+        }
+        // Non-numeric leaves (mode names, configs): presence is enough.
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn j(s: &str) -> Json {
+        parse(s).unwrap()
+    }
+
+    #[test]
+    fn metric_key_classification() {
+        assert!(is_metric_key("sequential_s"));
+        assert!(is_metric_key("wasted_fraction"));
+        assert!(is_metric_key("wasted_fraction_ge128"));
+        assert!(is_metric_key("wasted_gpu_hours"));
+        assert!(is_metric_key("startup_gpu_hours"));
+        assert!(!is_metric_key("gpus"));
+        assert!(!is_metric_key("train_gpu_hours"));
+        assert!(!is_metric_key("seed"));
+        assert!(!is_metric_key("fault_restarts"));
+    }
+
+    #[test]
+    fn sliced_headline_metric_is_gated() {
+        let base = j(r#"{"modes": [{"wasted_fraction_ge128": 0.033}]}"#);
+        let fresh = j(r#"{"modes": [{"wasted_fraction_ge128": 0.30}]}"#);
+        let v = compare(&base, &fresh, 0.35);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].path, "modes[0].wasted_fraction_ge128");
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = j(r#"{"points": [{"gpus": 128, "sequential_s": 100.0}]}"#);
+        let fresh = j(r#"{"points": [{"gpus": 128, "sequential_s": 120.0}]}"#);
+        assert!(compare(&base, &fresh, 0.35).is_empty());
+    }
+
+    #[test]
+    fn regression_fails() {
+        let base = j(r#"{"points": [{"gpus": 128, "sequential_s": 100.0}]}"#);
+        let fresh = j(r#"{"points": [{"gpus": 128, "sequential_s": 140.0}]}"#);
+        let v = compare(&base, &fresh, 0.35);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].path.contains("sequential_s"), "{:?}", v[0]);
+        assert!(v[0].detail.contains("regressed"));
+    }
+
+    #[test]
+    fn improvement_and_metadata_drift_pass() {
+        // Faster is fine; a *bigger* gpus identity field is not a metric.
+        let base = j(r#"{"points": [{"gpus": 128, "sequential_s": 100.0}]}"#);
+        let fresh = j(r#"{"points": [{"gpus": 999, "sequential_s": 10.0}]}"#);
+        assert!(compare(&base, &fresh, 0.1).is_empty());
+    }
+
+    #[test]
+    fn schema_drift_fails_both_ways() {
+        let base = j(r#"{"a_s": 1.0, "b_s": 1.0}"#);
+        let fresh = j(r#"{"a_s": 1.0, "c_s": 1.0}"#);
+        let v = compare(&base, &fresh, 0.5);
+        assert_eq!(v.len(), 2);
+        assert!(v.iter().any(|x| x.path == "b_s"));
+        assert!(v.iter().any(|x| x.path == "c_s"));
+    }
+
+    #[test]
+    fn array_length_mismatch_fails() {
+        let base = j(r#"{"points": [1, 2]}"#);
+        let fresh = j(r#"{"points": [1]}"#);
+        let v = compare(&base, &fresh, 0.5);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("array length"));
+    }
+
+    #[test]
+    fn nested_paths_reported() {
+        let base = j(r#"{"modes": [{"mode": "seq", "wasted_fraction": 0.03}]}"#);
+        let fresh = j(r#"{"modes": [{"mode": "seq", "wasted_fraction": 0.08}]}"#);
+        let v = compare(&base, &fresh, 0.35);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].path, "modes[0].wasted_fraction");
+    }
+}

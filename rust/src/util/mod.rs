@@ -7,6 +7,7 @@
 //! zero external dependencies.
 
 pub mod bench;
+pub mod benchcmp;
 pub mod compress;
 pub mod error;
 pub mod human;

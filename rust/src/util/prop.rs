@@ -40,7 +40,11 @@ impl Gen {
     }
 
     /// Vector of random length in `len` with elements from `f`.
-    pub fn vec<T>(&mut self, len: std::ops::Range<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::Range<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
         let n = self.usize_in(len.start, len.end.saturating_sub(1).max(len.start));
         (0..n).map(|_| f(self)).collect()
     }

@@ -16,6 +16,18 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Stateless SplitMix64 finalizer: one high-quality 64-bit mix of `x`.
+/// The identity hash behind every "pure function of (seed, id, ...)"
+/// derivation in the simulator (`trace` image identities, `faults`
+/// decision streams) — one definition so the streams can never diverge.
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256** — fast, high-quality, 256-bit state PRNG.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -220,6 +232,16 @@ impl TailedSlowdown {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix64_is_stateless_and_mixing() {
+        assert_eq!(mix64(42), mix64(42));
+        assert_ne!(mix64(42), mix64(43));
+        // Matches the seeder's finalizer: mixing 0 equals the first
+        // splitmix64 output from state 0.
+        let mut s = 0u64;
+        assert_eq!(mix64(0), splitmix64(&mut s));
+    }
 
     #[test]
     fn deterministic_for_seed() {

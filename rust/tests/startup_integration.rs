@@ -16,10 +16,37 @@ fn bootseer_vs_baseline_all_paper_scales() {
         let cluster = ClusterConfig::default();
         let mut wb = World::new();
         // Warm run records hot set + creates env cache.
-        run_startup(1, 0, &cluster, &job, &BootseerConfig::bootseer(), &mut wb, StartupKind::Full, 3);
-        let boot = run_startup(1, 1, &cluster, &job, &BootseerConfig::bootseer(), &mut wb, StartupKind::Full, 4);
+        run_startup(
+            1,
+            0,
+            &cluster,
+            &job,
+            &BootseerConfig::bootseer(),
+            &mut wb,
+            StartupKind::Full,
+            3,
+        );
+        let boot = run_startup(
+            1,
+            1,
+            &cluster,
+            &job,
+            &BootseerConfig::bootseer(),
+            &mut wb,
+            StartupKind::Full,
+            4,
+        );
         let mut w0 = World::new();
-        let base = run_startup(1, 0, &cluster, &job, &BootseerConfig::baseline(), &mut w0, StartupKind::Full, 4);
+        let base = run_startup(
+            1,
+            0,
+            &cluster,
+            &job,
+            &BootseerConfig::baseline(),
+            &mut w0,
+            StartupKind::Full,
+            4,
+        );
         let ratio = base.worker_phase_s / boot.worker_phase_s;
         assert!(
             (1.4..4.0).contains(&ratio),
@@ -91,9 +118,27 @@ fn env_cache_flattens_install_distribution() {
     let cluster = ClusterConfig::default();
     let mut w = World::new();
     run_startup(1, 0, &cluster, &job, &BootseerConfig::bootseer(), &mut w, StartupKind::Full, 5);
-    let hit = run_startup(1, 1, &cluster, &job, &BootseerConfig::bootseer(), &mut w, StartupKind::Full, 6);
+    let hit = run_startup(
+        1,
+        1,
+        &cluster,
+        &job,
+        &BootseerConfig::bootseer(),
+        &mut w,
+        StartupKind::Full,
+        6,
+    );
     let mut w0 = World::new();
-    let base = run_startup(1, 0, &cluster, &job, &BootseerConfig::baseline(), &mut w0, StartupKind::Full, 6);
+    let base = run_startup(
+        1,
+        0,
+        &cluster,
+        &job,
+        &BootseerConfig::baseline(),
+        &mut w0,
+        StartupKind::Full,
+        6,
+    );
     let spread_hit = stats::max(&hit.install_durations) - stats::min(&hit.install_durations);
     let spread_base = stats::max(&base.install_durations) - stats::min(&base.install_durations);
     assert!(spread_hit < spread_base / 3.0, "hit {spread_hit} base {spread_base}");

@@ -1,0 +1,78 @@
+//! `bench-gate` — CI bench-regression gate.
+//!
+//! Usage:
+//!
+//!     bench-gate <baseline.json> <fresh.json> [--tol 0.35]
+//!
+//! Compares a fresh bench sweep (`BENCH_overlap.json`,
+//! `BENCH_faults.json`) against the committed baseline under
+//! `benches/baselines/`, failing (exit 1) on any tracked metric regressing
+//! past the tolerance, or on schema drift between the two files. All
+//! tracked metrics are lower-is-better; see `util::benchcmp` for the
+//! rules. Improvements pass — regenerate the baseline from the fresh
+//! artifact to ratchet them in.
+
+use bootseer::util::benchcmp::compare;
+use bootseer::util::json;
+
+fn load(path: &str) -> Result<json::Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    json::parse(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut tol = 0.35f64;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--tol" {
+            tol = args
+                .get(i + 1)
+                .and_then(|s| s.parse().ok())
+                .unwrap_or_else(|| {
+                    eprintln!("bad --tol value");
+                    std::process::exit(2);
+                });
+            i += 2;
+        } else {
+            paths.push(args[i].clone());
+            i += 1;
+        }
+    }
+    if paths.len() != 2 {
+        eprintln!("usage: bench-gate <baseline.json> <fresh.json> [--tol 0.35]");
+        std::process::exit(2);
+    }
+    let (base, fresh) = match (load(&paths[0]), load(&paths[1])) {
+        (Ok(b), Ok(f)) => (b, f),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench-gate: {e}");
+            std::process::exit(2);
+        }
+    };
+    let violations = compare(&base, &fresh, tol);
+    if violations.is_empty() {
+        println!(
+            "bench-gate: {} within {:.0}% of {}",
+            paths[1],
+            100.0 * tol,
+            paths[0]
+        );
+        return;
+    }
+    eprintln!(
+        "bench-gate: {} regressed against {} ({} violation(s), tolerance {:.0}%):",
+        paths[1],
+        paths[0],
+        violations.len(),
+        100.0 * tol
+    );
+    for v in &violations {
+        eprintln!("  {}: {}", v.path, v.detail);
+    }
+    eprintln!(
+        "If this change is intentional, refresh the committed baseline from the fresh artifact."
+    );
+    std::process::exit(1);
+}

@@ -1,0 +1,151 @@
+//! API-surface stub of the PJRT `xla` bindings.
+//!
+//! The real crate wraps libxla/PJRT and cannot live in the offline crate
+//! universe, but the feature-gated `runtime`/`trainer` code must not rot
+//! unbuilt: this stub mirrors exactly the API surface those modules use,
+//! so `cargo check --features pjrt` type-checks them in CI. Every function
+//! panics at runtime — to actually train, vendor the real bindings at this
+//! path (the `Cargo.toml` dependency line stays the same).
+
+use std::borrow::Borrow;
+
+/// Error type of the bindings (only ever formatted with `{:?}` upstream).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} — vendor the real PJRT bindings at vendor/xla-stub to run this"
+    )))
+}
+
+/// Scalar element types the bindings accept (the subset bootseer uses).
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal (tensor) value.
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub("Literal::reshape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        stub("Literal::get_first_element")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        stub("Literal::array_shape")
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Deserialized HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A PJRT client (CPU backend in bootseer's usage).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+}
+
+/// A compiled executable loaded on a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer produced by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_explanatory() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e:?}").contains("vendor the real PJRT bindings"));
+    }
+
+    #[test]
+    fn literal_construction_is_inert() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert_eq!(l.element_count(), 0);
+        assert!(l.reshape(&[2]).is_err());
+    }
+}
