@@ -1,11 +1,32 @@
 //! Hot-path microbench: the fluid-flow engine (events/s) and full startup
 //! sims at several scales — the L3 §Perf target (1,440-node startup < 1 s).
+//!
+//! The headline cases are the churn replay shape (waves of striped reads
+//! injected mid-run, per-read stream resources retiring as they finish):
+//!
+//! * `fluid_churn_ratio_*` runs a bounded instance through BOTH the
+//!   current engine and the preserved pre-refactor [`ReferenceSim`]; the
+//!   measured ratio lands in `BENCH_simnet.json`
+//!   (`runtime_vs_reference_fraction`, lower is better) and is
+//!   regression-gated against `benches/baselines/BENCH_simnet.json` in
+//!   CI — the O(active)-bounded engine must stay ≥5x faster.
+//! * `fluid_churn_20k` runs the full 20k-concurrent-flow / ~2k-resource
+//!   instance through the new engine alone (the reference engine is
+//!   O(everything ever created) per event and cannot reach this scale in
+//!   bench time — which is the point).
+//!
+//!     cargo bench --bench micro_simnet
+//!     BOOTSEER_BENCH_FAST=1 cargo bench --bench micro_simnet
 use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig};
+use bootseer::sim::golden::churn;
+use bootseer::sim::reference::ReferenceSim;
 use bootseer::sim::{Capacity, FluidSim};
 use bootseer::startup::{run_startup, StartupKind, World};
 use bootseer::util::bench::Bench;
+use bootseer::util::json::Json;
 
 fn main() {
+    let fast = std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1");
     let mut b = Bench::new("micro_simnet");
 
     // Raw engine: 2,000 flows over 200 shared resources.
@@ -39,5 +60,82 @@ fn main() {
             .worker_phase_s
         });
     }
+
+    // ---- churn ratio: new engine vs pre-refactor reference ----
+    // Always the bounded 320x8 instance: the reference engine is
+    // O(everything ever created) per event, so a 20k-flow run of it would
+    // take from minutes to hours per iteration — and the ratio (the gated
+    // metric) is scale- and machine-neutral, measured where both engines
+    // finish quickly.
+    let (rn, rw, rwidth) = (320usize, 2usize, 8usize);
+    let mut ratio_events = 0usize;
+    let new_s = b.iter("fluid_churn_ratio_new", || {
+        let mut sim = FluidSim::new();
+        let out = churn(&mut sim, 10, rn, rw, rwidth);
+        ratio_events = out.len();
+        ratio_events
+    });
+    let ref_s = b.iter("fluid_churn_ratio_reference", || {
+        let mut sim = ReferenceSim::new();
+        churn(&mut sim, 10, rn, rw, rwidth).len()
+    });
+    let speedup = ref_s / new_s;
+    let new_meps = ratio_events as f64 / new_s / 1e6;
+    let ref_meps = ratio_events as f64 / ref_s / 1e6;
+    println!(
+        "\nchurn ratio {rn}x{rwidth} ({ratio_events} events): new {new_meps:.3} Mev/s vs \
+         reference {ref_meps:.3} Mev/s → {speedup:.1}x"
+    );
+
+    // ---- 20k-flow / 2k-resource scale case, new engine only ----
+    // 1,000 nodes x 20 parallel striped streams per wave ≈ 20k concurrent
+    // flows over ~2k persistent resources (groups, NICs, disks, SCM), with
+    // per-read streams injected and retired mid-run. The reference engine
+    // cannot reach this scale in bench time — which is the point.
+    let (sn, sw, swidth) = (1000usize, 4usize, 20usize);
+    let mut scale_events = 0usize;
+    let scale_s = b.iter("fluid_churn_20k", || {
+        let mut sim = FluidSim::new();
+        let out = churn(&mut sim, 10, sn, sw, swidth);
+        scale_events = out.len();
+        scale_events
+    });
+    let scale_meps = scale_events as f64 / scale_s / 1e6;
+    println!("churn 20k {sn}x{swidth} ({scale_events} events): {scale_meps:.3} Mev/s");
+
+    let mut ratio_case = Json::obj();
+    ratio_case
+        .set("nodes", rn as u64)
+        .set("waves", rw as u64)
+        .set("width", rwidth as u64)
+        .set("events", ratio_events as u64)
+        .set("new_meps", new_meps)
+        .set("ref_meps", ref_meps)
+        .set("speedup_x", speedup)
+        // The gated metric (lower is better): fraction of the reference
+        // engine's runtime the new engine needs. A machine-speed-neutral
+        // ratio, so the gate tolerance can stay tight.
+        .set("runtime_vs_reference_fraction", new_s / ref_s);
+    let mut scale_case = Json::obj();
+    scale_case
+        .set("nodes", sn as u64)
+        .set("waves", sw as u64)
+        .set("width", swidth as u64)
+        .set("events", scale_events as u64)
+        .set("new_meps", scale_meps);
+    let mut j = Json::obj();
+    j.set("churn_ratio", ratio_case);
+    j.set("churn_20k", scale_case);
+    j.set("fast", fast);
+    let path = "BENCH_simnet.json";
+    match std::fs::write(path, j.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("write {path}: {e}"),
+    }
+    // Sanity floor (the gate enforces the real ≥5x bar via the baseline).
+    assert!(
+        speedup >= 3.0,
+        "engine speedup collapsed: {speedup:.2}x vs reference on the churn ratio case"
+    );
     b.finish();
 }

@@ -72,7 +72,10 @@ pub fn plan_env_setup_with(
     assert!(deps.is_empty() || deps.len() == n);
     assert!(prestaged.is_empty() || prestaged.len() == n);
     let sig = pkgs.signature();
-    let hit = cfg.env_cache && cache_reg.lookup(sig).is_some();
+    // One registry lookup for the whole plan (it used to be re-run per
+    // node inside the loop below).
+    let cache_entry = if cfg.env_cache { cache_reg.lookup(sig) } else { None };
+    let hit = cache_entry.is_some();
 
     let mut node_done = Vec::with_capacity(n);
     let mut install_span = Vec::with_capacity(n);
@@ -91,12 +94,11 @@ pub fn plan_env_setup_with(
         let gate: &[TaskId] = if deps.is_empty() { &[] } else { &deps[i] };
         let start = cs.sim.barrier(gate, 0);
 
-        let installed_end = if hit {
+        let installed_end = if let Some(entry) = &cache_entry {
             // Restore: fetch archive from HDFS (round-robin group), unpack.
             // Staged bytes (speculative prefetch) are already local.
-            let entry = cache_reg.lookup(sig).unwrap();
             let staged = staged_of(prestaged, i);
-            let group = cs.hdfs_groups[i % cs.hdfs_groups.len()];
+            let group = cs.hdfs_group_of(i);
             let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s, &[start], 0);
             let dl = cs.sim.flow(
                 entry.compressed_bytes.saturating_sub(staged) as f64,

@@ -49,11 +49,16 @@ fn plan_read_sequential(
     // NameNode lookup, then a single stream capped by HDFS_STREAM_BPS.
     // The stream walks blocks across groups sequentially; because only one
     // group is active at a time, we model it as one flow through a
-    // per-read stream-cap resource plus a representative group.
+    // per-read stream-cap resource plus a representative group. The stream
+    // resource lives exactly as long as its one flow (scoped), so a long
+    // simulation's resource table doesn't accrete one slot per read.
     let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s, deps, 0);
-    let stream =
-        cs.sim.add_resource(&format!("hdfs.stream.n{node}"), Capacity::Fixed(d::HDFS_STREAM_BPS));
-    let group = cs.hdfs_groups[node % cs.hdfs_groups.len()];
+    let stream = cs.sim.add_resource_scoped(
+        &format!("hdfs.stream.n{node}"),
+        Capacity::Fixed(d::HDFS_STREAM_BPS),
+        1,
+    );
+    let group = cs.hdfs_group_of(node);
     // Download to local disk...
     let dl = cs.sim.flow(
         bytes as f64,
@@ -81,17 +86,28 @@ fn plan_read_striped(
     );
     // The FUSE client keeps P streams in flight; each stream is capped at
     // HDFS_STREAM_BPS and the set of streams spreads over the groups the
-    // striped placement touches. One NameNode op per physical file.
+    // striped placement touches. One NameNode op per *non-empty* physical
+    // file: a file with fewer chunks than the stripe width only
+    // materializes that many stripe files, so a tiny checkpoint shard must
+    // not pay `width` NameNode ops (regression test below).
     let n_streams = d::STRIPE_PARALLEL_STREAMS.min(layout.n_chunks().max(1) as u32);
-    let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s * layout.width as f64, deps, 0);
+    let nn_ops = (layout.width as u64).min(layout.n_chunks()).max(1);
+    let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s * nn_ops as f64, deps, 0);
     let n_groups = cs.hdfs_groups.len();
-    let touched = layout.groups_touched(n_groups as u32, (node % n_groups) as u32);
+    let mut touched = layout.groups_touched(n_groups as u32, (node % n_groups) as u32);
+    if touched.is_empty() {
+        // Zero-byte file: no blocks anywhere; keep the read well-formed.
+        touched.push((node % n_groups) as u32);
+    }
     let per_stream = bytes as f64 / n_streams as f64;
     let mut parts = Vec::with_capacity(n_streams as usize);
     for s in 0..n_streams {
-        let stream = cs.sim.add_resource(
+        // Per-read stream resources are scoped to their single flow and
+        // their slots recycled once the read completes.
+        let stream = cs.sim.add_resource_scoped(
             &format!("hdfs.stripe.n{node}.s{s}"),
             Capacity::Fixed(d::HDFS_STREAM_BPS),
+            1,
         );
         // Stride group assignment by node so concurrent readers spread over
         // the whole DataNode fleet instead of piling on the same groups.
@@ -127,9 +143,10 @@ pub fn plan_write(
     let n_groups = cs.hdfs_groups.len();
     let mut parts = Vec::with_capacity(n_streams as usize);
     for s in 0..n_streams {
-        let stream = cs.sim.add_resource(
+        let stream = cs.sim.add_resource_scoped(
             &format!("hdfs.wstream.n{node}.s{s}"),
             Capacity::Fixed(d::HDFS_STREAM_BPS),
+            1,
         );
         let group = cs.hdfs_groups[(node + s as usize) % n_groups];
         parts.push(cs.sim.flow(per, vec![cs.node_nic[node], stream, group], &[nn], 0));
@@ -199,6 +216,65 @@ mod tests {
         cs2.sim.run();
         let t_par = cs2.sim.finished_at(w2);
         assert!(t_seq / t_par > 1.5, "seq {t_seq} striped {t_par}");
+    }
+
+    #[test]
+    fn small_file_charges_fewer_nn_ops() {
+        // A 2 MB shard has 2 chunks < STRIPE_WIDTH=4 stripe files, so the
+        // NameNode pays 2 ops (0.008 s), not 4 (0.016 s). The transfer
+        // itself is ~0.6 ms, so the stage time pins the op count.
+        let mut cs = ClusterSim::build(&ClusterConfig::with_nodes(1), 42);
+        let r = plan_read(&mut cs, 0, 2_000_000, ReadEngine::Striped, &[], 1);
+        cs.sim.run();
+        let t = cs.sim.finished_at(r);
+        assert!(
+            (0.008..0.012).contains(&t),
+            "2-chunk read should pay 2 NN ops: t={t}"
+        );
+    }
+
+    #[test]
+    fn zero_byte_striped_read_is_one_nn_op() {
+        let mut cs = ClusterSim::build(&ClusterConfig::with_nodes(1), 42);
+        let r = plan_read(&mut cs, 0, 0, ReadEngine::Striped, &[], 1);
+        cs.sim.run();
+        let t = cs.sim.finished_at(r);
+        assert!((0.0039..0.0061).contains(&t), "zero-byte read t={t}");
+    }
+
+    #[test]
+    fn large_reads_unchanged_by_small_file_fix() {
+        // n_chunks >= width ⇒ min(width, n_chunks) == width: the replay's
+        // GB-scale resume shares see the exact same NN charge as before.
+        let b = 206_500_000_000u64;
+        let layout = StripeLayout::new(
+            b,
+            d::STRIPE_CHUNK_BYTES,
+            d::STRIPE_WIDTH,
+            ClusterConfig::default().hdfs_block_bytes,
+        );
+        assert!(layout.n_chunks() >= layout.width as u64);
+        assert_eq!((layout.width as u64).min(layout.n_chunks()).max(1), d::STRIPE_WIDTH as u64);
+    }
+
+    #[test]
+    fn stream_resources_retire_after_read() {
+        // Per-read streams must not accrete resource slots across reads.
+        let mut cs = ClusterSim::build(&ClusterConfig::with_nodes(1), 42);
+        let first = plan_read(&mut cs, 0, 64_000_000, ReadEngine::Striped, &[], 1);
+        cs.sim.run();
+        assert!(cs.sim.is_done(first));
+        let slots_after_one = cs.sim.resource_slots();
+        for k in 0..10 {
+            let r = plan_read(&mut cs, 0, 64_000_000, ReadEngine::Striped, &[], 2 + k);
+            cs.sim.run();
+            assert!(cs.sim.is_done(r));
+        }
+        assert_eq!(
+            cs.sim.resource_slots(),
+            slots_after_one,
+            "stream slots should be recycled read-over-read"
+        );
     }
 
     #[test]

@@ -103,13 +103,16 @@ fn plan_oci_full(
 ) -> ImageLoadPlan {
     let n = cs.nodes();
     let mut node_done = Vec::with_capacity(n);
+    // One download per node crosses the pool; scoped so the pool's slot is
+    // recycled once the last node's pull completes.
     let swarm = if cfg.p2p {
-        Some(Swarm::build(
+        Some(Swarm::build_scoped(
             &mut cs.sim,
             "img.swarm",
             cs.cfg.registry_egress_bps,
             n as u32,
             cs.cfg.node_nic_bps,
+            n as u32,
         ))
     } else {
         None
@@ -197,13 +200,18 @@ fn plan_prefetch(
     let hot_bytes: u64 = hot.iter().map(|&b| img.block_len(b)).sum();
     let cold_bytes = img.total_bytes - hot_bytes;
     // Hot set is distributed peer-to-peer (or straight from the cache).
+    // Every node runs one foreground prefetch and, when cold bytes exist,
+    // one background stream — the pool's exact flow count, after which its
+    // slot is recycled.
+    let swarm_uses = n as u32 + if cold_bytes > 0 { n as u32 } else { 0 };
     let swarm = if cfg.p2p {
-        Some(Swarm::build(
+        Some(Swarm::build_scoped(
             &mut cs.sim,
             "img.prefetch.swarm",
             cs.cfg.cluster_cache_egress_bps,
             n as u32,
             cs.cfg.node_nic_bps,
+            swarm_uses,
         ))
     } else {
         None

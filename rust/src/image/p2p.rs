@@ -22,6 +22,11 @@ pub struct Swarm {
     pub n_peers: u32,
     pub origin_bps: f64,
     pub nic_bps: f64,
+    /// The steady-state pool capacity `build()` registered. The analytic
+    /// lower bound reads this same field, so the model and its bound can
+    /// never drift apart (they used to be two hand-synced copies of the
+    /// formula).
+    pub pool_bps: f64,
 }
 
 impl Swarm {
@@ -33,9 +38,32 @@ impl Swarm {
         n_peers: u32,
         nic_bps: f64,
     ) -> Swarm {
-        let cap = origin_bps + n_peers as f64 * nic_bps / 2.0;
-        let pool = sim.add_resource(name, Capacity::Fixed(cap));
-        Swarm { pool, n_peers, origin_bps, nic_bps }
+        let pool_bps = Self::pool_capacity(origin_bps, n_peers, nic_bps);
+        let pool = sim.add_resource(name, Capacity::Fixed(pool_bps));
+        Swarm { pool, n_peers, origin_bps, nic_bps, pool_bps }
+    }
+
+    /// [`Self::build`] with a *scoped* pool: the resource retires (and its
+    /// slot recycles) after exactly `uses` downloads have completed
+    /// through it. Planners know their download count up front, so their
+    /// per-plan pools no longer accrete in the resource table.
+    pub fn build_scoped(
+        sim: &mut FluidSim,
+        name: &str,
+        origin_bps: f64,
+        n_peers: u32,
+        nic_bps: f64,
+        uses: u32,
+    ) -> Swarm {
+        let pool_bps = Self::pool_capacity(origin_bps, n_peers, nic_bps);
+        let pool = sim.add_resource_scoped(name, Capacity::Fixed(pool_bps), uses);
+        Swarm { pool, n_peers, origin_bps, nic_bps, pool_bps }
+    }
+
+    /// The steady-state aggregate service rate of the swarm — computed in
+    /// exactly one place.
+    fn pool_capacity(origin_bps: f64, n_peers: u32, nic_bps: f64) -> f64 {
+        origin_bps + n_peers as f64 * nic_bps / 2.0
     }
 
     /// One node's download of `bytes` through the swarm.
@@ -51,10 +79,10 @@ impl Swarm {
     }
 
     /// Analytic lower bound on swarm completion (for tests): every node
-    /// needs `bytes`, aggregate capacity is the pool, per-node cap is NIC.
+    /// needs `bytes`, aggregate capacity is the pool the sim actually
+    /// enforces ([`Self::pool_bps`]), per-node cap is the NIC.
     pub fn lower_bound_s(&self, bytes: f64) -> f64 {
-        let aggregate = self.origin_bps + self.n_peers as f64 * self.nic_bps / 2.0;
-        (bytes / self.nic_bps).max(self.n_peers as f64 * bytes / aggregate)
+        (bytes / self.nic_bps).max(self.n_peers as f64 * bytes / self.pool_bps)
     }
 }
 
@@ -101,6 +129,47 @@ mod tests {
         let t4 = run_swarm(4, 100.0, 1000.0, 1000.0);
         let t256 = run_swarm(256, 100.0, 1000.0, 1000.0);
         assert!(t256 < t4 * 2.0, "t4={t4} t256={t256}");
+    }
+
+    #[test]
+    fn lower_bound_matches_built_pool() {
+        // The bound must read the exact capacity build() registered on the
+        // sim — one formula, one place.
+        let mut sim = FluidSim::new();
+        let sw = Swarm::build(&mut sim, "s", 123.0, 17, 456.0);
+        let registered = match sim.capacity(sw.pool) {
+            Capacity::Fixed(c) => *c,
+            _ => panic!("swarm pool must be Fixed"),
+        };
+        assert_eq!(registered.to_bits(), sw.pool_bps.to_bits());
+        assert_eq!(
+            sw.lower_bound_s(1000.0).to_bits(),
+            (1000.0f64 / 456.0).max(17.0 * 1000.0 / sw.pool_bps).to_bits()
+        );
+        // Scoped build registers the same capacity.
+        let sw2 = Swarm::build_scoped(&mut sim, "s2", 123.0, 17, 456.0, 17);
+        let registered2 = match sim.capacity(sw2.pool) {
+            Capacity::Fixed(c) => *c,
+            _ => panic!("swarm pool must be Fixed"),
+        };
+        assert_eq!(registered2.to_bits(), sw.pool_bps.to_bits());
+    }
+
+    #[test]
+    fn scoped_pool_retires_after_declared_downloads() {
+        let mut sim = FluidSim::new();
+        let nics: Vec<ResourceId> =
+            (0..4).map(|i| sim.add_resource(&format!("nic{i}"), Capacity::Fixed(100.0))).collect();
+        let sw = Swarm::build_scoped(&mut sim, "swarm", 50.0, 4, 100.0, 4);
+        for (i, &nic) in nics.iter().enumerate() {
+            sw.download(&mut sim, 500.0, nic, &[], i as u64);
+        }
+        sim.run();
+        let slots = sim.resource_slots();
+        // The pool slot is free again: a fresh resource reuses it.
+        let fresh = sim.add_resource("fresh", Capacity::Fixed(1.0));
+        assert_eq!(fresh.0, sw.pool.0);
+        assert_eq!(sim.resource_slots(), slots);
     }
 
     #[test]

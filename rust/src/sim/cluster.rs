@@ -105,6 +105,14 @@ impl ClusterSim {
         self.node_nic.len()
     }
 
+    /// The DataNode group node `i`'s single-stream HDFS traffic lands on
+    /// (round-robin by node — one definition shared by the FUSE planner,
+    /// the env-cache restore and the speculative stager, so they can never
+    /// disagree about placement).
+    pub fn hdfs_group_of(&self, node: NodeIdx) -> ResourceId {
+        self.hdfs_groups[node % self.hdfs_groups.len()]
+    }
+
     /// CPU time for `nominal` seconds of work on `node` (slowdown applied).
     pub fn cpu_time(&self, node: NodeIdx, nominal: f64) -> f64 {
         nominal * self.slowdown[node]

@@ -1,0 +1,474 @@
+//! Golden-schedule workloads: identical task graphs driven through the new
+//! [`FluidSim`] and the pre-refactor [`ReferenceSim`].
+//!
+//! The engine refactor must not change what the simulator *computes* —
+//! every schedule the repo has ever produced (startup figures, the
+//! cluster-week replay) has to come out the same. Since the two engines
+//! share no code, the strongest pin available is to drive both through
+//! the same deterministic workloads and compare the full
+//! `(task, finished_at, tag)` completion streams:
+//!
+//! * **Order** must be identical, event for event (same task, same tag,
+//!   same position). This pins the schedule *structure* exactly.
+//! * **Times** must be bit-identical wherever the two engines perform the
+//!   same float operations — which is every workload whose flows all
+//!   re-rate at every event (`throttled_churn`, `equal_ties`). Where the
+//!   old engine's per-step progression touches a flow across events that
+//!   don't change its rate, its fp history differs from the lazy engine's
+//!   by design, and times agree to a few ulps instead (bounded here at
+//!   [`MAX_SCHEDULE_ULPS`]; measured ≤ 8 across all seeds). See
+//!   `docs/sim_engine.md` §Equivalence for why bit-exactness across that
+//!   boundary is unattainable at O(log n) per event.
+//!
+//! The workloads deliberately mirror the shapes the pipelines compile:
+//! shared services + per-node NICs, throttled backends, striped reads over
+//! retiring per-read stream resources, global barriers, equal-flow ties,
+//! and mid-run injection. `churn` is the 20k-flow/2k-resource scale case
+//! `micro_simnet` benchmarks both engines on.
+
+use crate::sim::engine::{Capacity, Completion, FluidSim, ResourceId, TaskId};
+use crate::sim::reference::ReferenceSim;
+
+/// Largest acceptable ulp distance between the engines' completion times
+/// on the golden workloads (measured maximum is 8; see module docs).
+pub const MAX_SCHEDULE_ULPS: u64 = 64;
+
+/// The surface both engines expose, so one workload definition drives
+/// either. The reference engine has no retirement — scoped adds degrade to
+/// plain adds there, which is exactly the pre-refactor behaviour.
+pub trait SimApi {
+    fn add_resource(&mut self, name: &str, cap: Capacity) -> ResourceId;
+    fn add_resource_scoped(&mut self, name: &str, cap: Capacity, uses: u32) -> ResourceId;
+    fn delay(&mut self, seconds: f64, deps: &[TaskId], tag: u64) -> TaskId;
+    fn flow(&mut self, bytes: f64, path: Vec<ResourceId>, deps: &[TaskId], tag: u64) -> TaskId;
+    fn barrier(&mut self, deps: &[TaskId], tag: u64) -> TaskId;
+    fn step(&mut self) -> Option<Completion>;
+    fn run(&mut self) -> Vec<Completion>;
+    fn now(&self) -> f64;
+    fn finished_at(&self, id: TaskId) -> f64;
+}
+
+impl SimApi for FluidSim {
+    fn add_resource(&mut self, name: &str, cap: Capacity) -> ResourceId {
+        FluidSim::add_resource(self, name, cap)
+    }
+    fn add_resource_scoped(&mut self, name: &str, cap: Capacity, uses: u32) -> ResourceId {
+        FluidSim::add_resource_scoped(self, name, cap, uses)
+    }
+    fn delay(&mut self, seconds: f64, deps: &[TaskId], tag: u64) -> TaskId {
+        FluidSim::delay(self, seconds, deps, tag)
+    }
+    fn flow(&mut self, bytes: f64, path: Vec<ResourceId>, deps: &[TaskId], tag: u64) -> TaskId {
+        FluidSim::flow(self, bytes, path, deps, tag)
+    }
+    fn barrier(&mut self, deps: &[TaskId], tag: u64) -> TaskId {
+        FluidSim::barrier(self, deps, tag)
+    }
+    fn step(&mut self) -> Option<Completion> {
+        FluidSim::step(self)
+    }
+    fn run(&mut self) -> Vec<Completion> {
+        FluidSim::run(self)
+    }
+    fn now(&self) -> f64 {
+        FluidSim::now(self)
+    }
+    fn finished_at(&self, id: TaskId) -> f64 {
+        FluidSim::finished_at(self, id)
+    }
+}
+
+impl SimApi for ReferenceSim {
+    fn add_resource(&mut self, name: &str, cap: Capacity) -> ResourceId {
+        ReferenceSim::add_resource(self, name, cap)
+    }
+    fn add_resource_scoped(&mut self, name: &str, cap: Capacity, _uses: u32) -> ResourceId {
+        // Pre-refactor engine: no scoping, the slot lives forever.
+        ReferenceSim::add_resource(self, name, cap)
+    }
+    fn delay(&mut self, seconds: f64, deps: &[TaskId], tag: u64) -> TaskId {
+        ReferenceSim::delay(self, seconds, deps, tag)
+    }
+    fn flow(&mut self, bytes: f64, path: Vec<ResourceId>, deps: &[TaskId], tag: u64) -> TaskId {
+        ReferenceSim::flow(self, bytes, path, deps, tag)
+    }
+    fn barrier(&mut self, deps: &[TaskId], tag: u64) -> TaskId {
+        ReferenceSim::barrier(self, deps, tag)
+    }
+    fn step(&mut self) -> Option<Completion> {
+        ReferenceSim::step(self)
+    }
+    fn run(&mut self) -> Vec<Completion> {
+        ReferenceSim::run(self)
+    }
+    fn now(&self) -> f64 {
+        ReferenceSim::now(self)
+    }
+    fn finished_at(&self, id: TaskId) -> f64 {
+        ReferenceSim::finished_at(self, id)
+    }
+}
+
+/// SplitMix64 — self-contained so the workloads depend on nothing but the
+/// engine under test. (Validated against an out-of-tree twin of both
+/// engines; keep in sync if you port these workloads.)
+pub struct MiniRng {
+    state: u64,
+}
+
+impl MiniRng {
+    pub fn new(seed: u64) -> MiniRng {
+        MiniRng { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn below(&mut self, n: u64) -> u64 {
+        (((self.next_u64() as u128) * n as u128) >> 64) as u64
+    }
+
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+}
+
+/// Shared service + per-node NICs; per-node chains delay→flow→delay→flow,
+/// plus standalone delays ticking while flows are active (the spans where
+/// the engines' fp histories legitimately diverge by ulps).
+pub fn fanout_shared(sim: &mut dyn SimApi, seed: u64) -> TaskId {
+    let mut rng = MiniRng::new(seed);
+    let link = sim.add_resource("link", Capacity::Fixed(1.0e9));
+    let n = 40usize;
+    let nics: Vec<ResourceId> =
+        (0..n).map(|i| sim.add_resource(&format!("nic{i}"), Capacity::Fixed(3.0e8))).collect();
+    let mut ends = Vec::with_capacity(n);
+    for &nic in &nics {
+        let d0 = sim.delay(rng.range_f64(0.1, 2.0), &[], 0);
+        let f0 = sim.flow(rng.range_f64(1e6, 5e8), vec![link, nic], &[d0], 0);
+        let d1 = sim.delay(rng.range_f64(0.05, 1.0), &[f0], 0);
+        let f1 = sim.flow(rng.range_f64(1e6, 2e8), vec![link, nic], &[d1], 0);
+        ends.push(f1);
+    }
+    for k in 0..25u64 {
+        sim.delay(rng.range_f64(0.0, 4.0), &[], 1000 + k);
+    }
+    sim.barrier(&ends, 9999)
+}
+
+/// Waves of flows through a throttled backend, each wave gated on the
+/// last — fully coupled, so the engines share an fp history bit for bit.
+pub fn throttled_churn(sim: &mut dyn SimApi, seed: u64) -> TaskId {
+    let mut rng = MiniRng::new(seed);
+    let svc = sim.add_resource(
+        "svc",
+        Capacity::Throttled { base: 2.0e9, threshold: 8, penalty: 0.3 },
+    );
+    let sink = sim.add_resource("sink", Capacity::Fixed(5.0e9));
+    let mut prev: Vec<TaskId> = Vec::new();
+    for wave in 0..6u64 {
+        let deps: Vec<TaskId> = if prev.is_empty() {
+            Vec::new()
+        } else {
+            vec![sim.barrier(&prev, 0)]
+        };
+        prev = Vec::new();
+        let count = rng.below(20) + 4;
+        for i in 0..count {
+            let d = sim.delay(rng.range_f64(0.0, 0.5), &deps, 0);
+            let f = sim.flow(rng.range_f64(1e5, 8e7), vec![svc, sink], &[d], wave * 100 + i);
+            prev.push(f);
+        }
+    }
+    sim.barrier(&prev, 9999)
+}
+
+/// Striped-read shape: per-flow scoped stream resources + shared DataNode
+/// groups and NICs, two rounds so retired stream slots get reused mid-run.
+pub fn streams_retire(sim: &mut dyn SimApi, seed: u64) -> TaskId {
+    let mut rng = MiniRng::new(seed);
+    let n_groups = 6usize;
+    let groups: Vec<ResourceId> = (0..n_groups)
+        .map(|g| sim.add_resource(&format!("g{g}"), Capacity::Fixed(3.75e9)))
+        .collect();
+    let n_nodes = 12usize;
+    let nics: Vec<ResourceId> = (0..n_nodes)
+        .map(|i| sim.add_resource(&format!("n{i}"), Capacity::Fixed(3.125e9)))
+        .collect();
+    let mut reads = Vec::with_capacity(n_nodes);
+    for node in 0..n_nodes {
+        let nn = sim.delay(0.004 * 4.0, &[], 0);
+        let mut parts = Vec::with_capacity(4);
+        for s in 0..4usize {
+            let st = sim.add_resource_scoped("st", Capacity::Fixed(1.6e9), 1);
+            let b = rng.range_f64(1e8, 2e9);
+            parts.push(sim.flow(b, vec![st, groups[(node + s) % n_groups], nics[node]], &[nn], 0));
+        }
+        reads.push(sim.barrier(&parts, node as u64));
+    }
+    let bar = sim.barrier(&reads, 0);
+    let mut reads2 = Vec::with_capacity(n_nodes);
+    for node in 0..n_nodes {
+        let mut parts = Vec::with_capacity(3);
+        for s in 0..3usize {
+            let st = sim.add_resource_scoped("st2", Capacity::Fixed(1.6e9), 1);
+            let b = rng.range_f64(5e7, 9e8);
+            parts
+                .push(sim.flow(b, vec![st, groups[(node + s) % n_groups], nics[node]], &[bar], 0));
+        }
+        reads2.push(sim.barrier(&parts, 100 + node as u64));
+    }
+    sim.barrier(&reads2, 9999)
+}
+
+/// Exact equal-fair ties: identical flows through one link, two waves.
+pub fn equal_ties(sim: &mut dyn SimApi, _seed: u64) -> TaskId {
+    let link = sim.add_resource("link", Capacity::Fixed(1.0e8));
+    let ids: Vec<TaskId> = (0..32u64).map(|i| sim.flow(5.0e7, vec![link], &[], i)).collect();
+    let bar = sim.barrier(&ids, 9999);
+    let ids2: Vec<TaskId> =
+        (0..16u64).map(|i| sim.flow(2.5e7, vec![link], &[bar], 100 + i)).collect();
+    sim.barrier(&ids2, 10000)
+}
+
+/// Step-driven mid-run injection: every tag-1 completion injects a fresh
+/// flow over a new scoped stream — the lazy-miss / retry shape. Returns
+/// the completion stream directly (the run is the driver).
+pub fn injection(sim: &mut dyn SimApi, seed: u64) -> Vec<Completion> {
+    let mut rng = MiniRng::new(seed);
+    let pool = sim.add_resource("pool", Capacity::Fixed(8.0e9));
+    let nics: Vec<ResourceId> = (0..8)
+        .map(|i| sim.add_resource(&format!("inic{i}"), Capacity::Fixed(2.0e9)))
+        .collect();
+    for &nic in &nics {
+        sim.flow(rng.range_f64(1e8, 1e9), vec![pool, nic], &[], 1);
+    }
+    let mut out = Vec::new();
+    let mut budget = 60u32;
+    while let Some(c) = sim.step() {
+        out.push(c);
+        if c.tag == 1 && budget > 0 {
+            budget -= 1;
+            let node = rng.below(8) as usize;
+            let st = sim.add_resource_scoped("ist", Capacity::Fixed(1.5e9), 1);
+            let tag = if budget > 10 { 1 } else { 2 };
+            sim.flow(rng.range_f64(5e6, 4e8), vec![pool, st, nics[node]], &[], tag);
+        }
+    }
+    out
+}
+
+/// Tag marking a churn wave's completion barrier (`+ wave index`).
+const CHURN_WAVE_TAG: u64 = 7_000_000;
+
+/// Inject one churn wave: per node, admit-delay → `width` striped
+/// downloads over fresh scoped streams + shared group + NIC → CPU delay →
+/// node-local disk staging flow → SCM package pull.
+#[allow(clippy::too_many_arguments)]
+fn churn_wave(
+    sim: &mut dyn SimApi,
+    rng: &mut MiniRng,
+    w: usize,
+    width: usize,
+    groups: &[ResourceId],
+    nics: &[ResourceId],
+    disks: &[ResourceId],
+    scm: ResourceId,
+) -> TaskId {
+    let nodes = nics.len();
+    let n_groups = groups.len();
+    let mut pkgs = Vec::with_capacity(nodes);
+    for i in 0..nodes {
+        let admit = sim.delay(rng.range_f64(0.05, 0.4), &[], 0);
+        // All of a chain's streams read one group — the stripe-file set of
+        // one physical file lands group-local, so reader clusters stay
+        // per-group instead of coupling the whole fleet.
+        let group = groups[(w * 7 + i) % n_groups];
+        let mut parts = Vec::with_capacity(width);
+        for _s in 0..width {
+            let st = sim.add_resource_scoped("st", Capacity::Fixed(1.6e9), 1);
+            parts.push(sim.flow(
+                rng.range_f64(5e7, 2e9),
+                vec![st, group, nics[i]],
+                &[admit],
+                0,
+            ));
+        }
+        let dl = sim.barrier(&parts, 0);
+        let cpu = sim.delay(rng.range_f64(0.1, 2.0), &[dl], 0);
+        let stage = sim.flow(rng.range_f64(5e7, 1e9), vec![disks[i]], &[cpu], 0);
+        let pkg = sim.flow(rng.range_f64(1e6, 6e7), vec![scm, nics[i]], &[stage], 0);
+        pkgs.push(pkg);
+    }
+    sim.barrier(&pkgs, CHURN_WAVE_TAG + w as u64)
+}
+
+/// The scale case (`micro_simnet`): waves of per-node chains, each wave
+/// *injected mid-run* when the previous wave's barrier completes — the
+/// replay's actual shape, with per-read stream resources retiring as their
+/// flow finishes and their slots recycled by the next wave. Peak
+/// concurrency ≈ `nodes × width` flows; the live resource table stays
+/// ~`2·nodes + groups + nodes×width` in the new engine while the
+/// reference engine's table grows by `nodes × width` per wave forever.
+/// Returns the full completion stream (step-driven).
+pub fn churn(
+    sim: &mut dyn SimApi,
+    seed: u64,
+    nodes: usize,
+    waves: usize,
+    width: usize,
+) -> Vec<Completion> {
+    let mut rng = MiniRng::new(seed);
+    let n_groups = 64usize;
+    let groups: Vec<ResourceId> = (0..n_groups)
+        .map(|g| sim.add_resource(&format!("g{g}"), Capacity::Fixed(3.75e9)))
+        .collect();
+    let nics: Vec<ResourceId> = (0..nodes)
+        .map(|i| sim.add_resource(&format!("nic{i}"), Capacity::Fixed(3.125e9)))
+        .collect();
+    let disks: Vec<ResourceId> = (0..nodes)
+        .map(|i| sim.add_resource(&format!("d{i}"), Capacity::Fixed(4.0e9)))
+        .collect();
+    let scm = sim.add_resource(
+        "scm",
+        Capacity::Throttled { base: 25e9, threshold: 96, penalty: 0.003 },
+    );
+    churn_wave(sim, &mut rng, 0, width, &groups, &nics, &disks, scm);
+    let mut out = Vec::new();
+    while let Some(c) = sim.step() {
+        if c.tag >= CHURN_WAVE_TAG {
+            let w = (c.tag - CHURN_WAVE_TAG) as usize;
+            if w + 1 < waves {
+                churn_wave(sim, &mut rng, w + 1, width, &groups, &nics, &disks, scm);
+            }
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::ulps_between;
+
+    fn batch(
+        build: fn(&mut dyn SimApi, u64) -> TaskId,
+        seed: u64,
+    ) -> (Vec<Completion>, Vec<Completion>) {
+        let mut old = ReferenceSim::new();
+        build(&mut old, seed);
+        let cold = ReferenceSim::run(&mut old);
+        let mut new = FluidSim::new();
+        build(&mut new, seed);
+        let cnew = FluidSim::run(&mut new);
+        (cold, cnew)
+    }
+
+    /// Order identical event-for-event; times within MAX_SCHEDULE_ULPS.
+    fn assert_equivalent(name: &str, cold: &[Completion], cnew: &[Completion]) {
+        assert_eq!(cold.len(), cnew.len(), "{name}: event count");
+        for (i, (a, b)) in cold.iter().zip(cnew).enumerate() {
+            assert_eq!(a.task, b.task, "{name}: task order diverged at event {i}");
+            assert_eq!(a.tag, b.tag, "{name}: tag diverged at event {i}");
+            let u = ulps_between(a.time, b.time);
+            assert!(
+                u <= MAX_SCHEDULE_ULPS,
+                "{name}: time diverged {} ulps at event {i}: {} vs {}",
+                u,
+                a.time,
+                b.time
+            );
+        }
+    }
+
+    /// Bit-exact: the stricter pin, for fully-coupled workloads.
+    fn assert_bit_identical(name: &str, cold: &[Completion], cnew: &[Completion]) {
+        assert_eq!(cold.len(), cnew.len(), "{name}: event count");
+        for (i, (a, b)) in cold.iter().zip(cnew).enumerate() {
+            assert_eq!(a.task, b.task, "{name}: task at {i}");
+            assert_eq!(a.tag, b.tag, "{name}: tag at {i}");
+            assert_eq!(
+                a.time.to_bits(),
+                b.time.to_bits(),
+                "{name}: time bits at event {i}: {} vs {}",
+                a.time,
+                b.time
+            );
+        }
+    }
+
+    #[test]
+    fn golden_fanout_shared_schedules_match() {
+        for seed in [1u64, 2, 7, 42] {
+            let (cold, cnew) = batch(fanout_shared, seed);
+            assert_equivalent(&format!("fanout_shared/{seed}"), &cold, &cnew);
+        }
+    }
+
+    #[test]
+    fn golden_throttled_churn_is_bit_identical() {
+        for seed in [1u64, 2, 7, 42] {
+            let (cold, cnew) = batch(throttled_churn, seed);
+            assert_bit_identical(&format!("throttled_churn/{seed}"), &cold, &cnew);
+        }
+    }
+
+    #[test]
+    fn golden_streams_retire_schedules_match() {
+        for seed in [1u64, 2, 7, 42] {
+            let (cold, cnew) = batch(streams_retire, seed);
+            assert_equivalent(&format!("streams_retire/{seed}"), &cold, &cnew);
+        }
+    }
+
+    #[test]
+    fn golden_equal_ties_is_bit_identical() {
+        for seed in [1u64, 7] {
+            let (cold, cnew) = batch(equal_ties, seed);
+            assert_bit_identical(&format!("equal_ties/{seed}"), &cold, &cnew);
+        }
+    }
+
+    #[test]
+    fn golden_injection_schedules_match() {
+        for seed in [1u64, 7] {
+            let mut old = ReferenceSim::new();
+            let cold = injection(&mut old, seed);
+            let mut new = FluidSim::new();
+            let cnew = injection(&mut new, seed);
+            assert_equivalent(&format!("injection/{seed}"), &cold, &cnew);
+        }
+    }
+
+    #[test]
+    fn golden_churn_schedules_match_and_table_stays_bounded() {
+        let (nodes, waves, width) = (120, 4, 2);
+        let mut old = ReferenceSim::new();
+        let cold = churn(&mut old, 42, nodes, waves, width);
+        let mut new = FluidSim::new();
+        let cnew = churn(&mut new, 42, nodes, waves, width);
+        assert_equivalent("churn", &cold, &cnew);
+        // Retirement + slot recycling keep the new engine's table bounded
+        // by the *concurrent* stream count; the reference engine accretes
+        // one slot per stream forever.
+        let base = 64 + 2 * nodes + 1;
+        assert!(
+            new.resource_slots() <= base + nodes * width,
+            "new table grew: {} vs base {base} + {} streams",
+            new.resource_slots(),
+            nodes * width
+        );
+        assert_eq!(old.resource_slots(), base + nodes * width * waves);
+    }
+
+}

@@ -1,8 +1,12 @@
 //! Discrete-event simulation substrate: the fluid-flow engine
-//! (`engine`) and the cluster resource layout built on it (`cluster`).
+//! (`engine`), the pre-refactor engine kept as a golden reference
+//! (`reference`), the cross-engine golden workloads (`golden`), and the
+//! cluster resource layout built on the engine (`cluster`).
 
 pub mod cluster;
 pub mod engine;
+pub mod golden;
+pub mod reference;
 
 pub use cluster::ClusterSim;
 pub use engine::{Capacity, Completion, FluidSim, ResourceId, TaskId, Work};

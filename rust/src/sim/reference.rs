@@ -1,0 +1,370 @@
+//! The pre-refactor fluid engine, preserved verbatim as a *golden
+//! reference*.
+//!
+//! [`ReferenceSim`] is the engine exactly as it stood before the
+//! O(active)-bounded rewrite of [`crate::sim::engine::FluidSim`]: linear
+//! scan over `active_flows` for event selection, per-step progression of
+//! every active flow, `retain()` membership removal, and a
+//! `recompute_rates` that iterates every resource ever created. It also
+//! intentionally preserves the pre-refactor `bytes_through` accounting
+//! (crediting `rate * dt` unclamped — the overcount the new engine fixes),
+//! because its role is to reproduce the *old* behaviour, bugs and all.
+//!
+//! Two things keep it around:
+//!
+//! * `sim::golden` drives it and the new engine through identical
+//!   workloads and pins schedule equivalence (bit-exact where the
+//!   workload's fp history coincides, order-identical and ulp-close
+//!   everywhere — see `docs/sim_engine.md` §Equivalence).
+//! * `micro_simnet` benchmarks the new engine's churn-case speedup
+//!   against it, and the recorded ratio is regression-gated through
+//!   `BENCH_simnet.json`.
+//!
+//! Do not "fix" or optimize this file; it is a measurement baseline.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::engine::{Capacity, Completion, ResourceId, TaskId, Work};
+
+/// f64 ordered for the delay heap via `total_cmp` (see `engine::OrdF64`).
+struct OrdF64(f64);
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Resource {
+    cap: Capacity,
+    active: Vec<TaskId>,
+    #[allow(dead_code)]
+    name: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TaskState {
+    Blocked,
+    Active,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct Task {
+    work: Work,
+    state: TaskState,
+    deps_left: usize,
+    dependents: Vec<TaskId>,
+    remaining: f64,
+    rate: f64,
+    tag: u64,
+    finished_at: f64,
+}
+
+/// The pre-refactor simulator (see module docs).
+pub struct ReferenceSim {
+    now: f64,
+    resources: Vec<Resource>,
+    tasks: Vec<Task>,
+    active_flows: Vec<TaskId>,
+    delay_heap: BinaryHeap<Reverse<(OrdF64, TaskId)>>,
+    rates_dirty: bool,
+    bytes_through: Vec<f64>,
+    scr_rem_cap: Vec<f64>,
+    scr_unset_on: Vec<u32>,
+    scr_touched: Vec<usize>,
+}
+
+impl ReferenceSim {
+    pub fn new() -> ReferenceSim {
+        ReferenceSim {
+            now: 0.0,
+            resources: Vec::new(),
+            tasks: Vec::new(),
+            active_flows: Vec::new(),
+            delay_heap: BinaryHeap::new(),
+            rates_dirty: false,
+            bytes_through: Vec::new(),
+            scr_rem_cap: Vec::new(),
+            scr_unset_on: Vec::new(),
+            scr_touched: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn add_resource(&mut self, name: &str, cap: Capacity) -> ResourceId {
+        self.resources.push(Resource { cap, active: Vec::new(), name: name.to_string() });
+        self.bytes_through.push(0.0);
+        ResourceId(self.resources.len() - 1)
+    }
+
+    pub fn bytes_through(&self, r: ResourceId) -> f64 {
+        self.bytes_through[r.0]
+    }
+
+    pub fn add_task(&mut self, work: Work, deps: &[TaskId], tag: u64) -> TaskId {
+        let id = TaskId(self.tasks.len());
+        let mut deps_left = 0;
+        for &d in deps {
+            debug_assert!(d.0 < self.tasks.len(), "dependency on unknown task");
+            if self.tasks[d.0].state != TaskState::Done {
+                self.tasks[d.0].dependents.push(id);
+                deps_left += 1;
+            }
+        }
+        let remaining = match &work {
+            Work::Delay(d) => {
+                assert!(*d >= 0.0 && d.is_finite(), "bad delay {d}");
+                *d
+            }
+            Work::Flow { bytes, path } => {
+                assert!(*bytes >= 0.0 && bytes.is_finite(), "bad flow bytes {bytes}");
+                assert!(!path.is_empty(), "flow with empty path");
+                *bytes
+            }
+        };
+        self.tasks.push(Task {
+            work,
+            state: TaskState::Blocked,
+            deps_left,
+            dependents: Vec::new(),
+            remaining,
+            rate: 0.0,
+            tag,
+            finished_at: f64::NAN,
+        });
+        if deps_left == 0 {
+            self.activate(id);
+        }
+        id
+    }
+
+    pub fn delay(&mut self, seconds: f64, deps: &[TaskId], tag: u64) -> TaskId {
+        self.add_task(Work::Delay(seconds), deps, tag)
+    }
+
+    pub fn flow(
+        &mut self,
+        bytes: f64,
+        path: Vec<ResourceId>,
+        deps: &[TaskId],
+        tag: u64,
+    ) -> TaskId {
+        self.add_task(Work::Flow { bytes, path }, deps, tag)
+    }
+
+    pub fn barrier(&mut self, deps: &[TaskId], tag: u64) -> TaskId {
+        self.add_task(Work::Delay(0.0), deps, tag)
+    }
+
+    fn activate(&mut self, id: TaskId) {
+        let task = &mut self.tasks[id.0];
+        debug_assert_eq!(task.state, TaskState::Blocked);
+        task.state = TaskState::Active;
+        match &task.work {
+            Work::Delay(_) => {
+                task.remaining += self.now;
+                let t = task.remaining;
+                self.delay_heap.push(Reverse((OrdF64(t), id)));
+            }
+            Work::Flow { path, .. } => {
+                let path = path.clone();
+                for r in path {
+                    self.resources[r.0].active.push(id);
+                }
+                self.active_flows.push(id);
+                self.rates_dirty = true;
+            }
+        }
+    }
+
+    fn recompute_rates(&mut self) {
+        self.rates_dirty = false;
+        let nf = self.active_flows.len();
+        if nf == 0 {
+            return;
+        }
+        let nr = self.resources.len();
+        self.scr_rem_cap.resize(nr, 0.0);
+        self.scr_unset_on.resize(nr, 0);
+        self.scr_touched.clear();
+        for (ri, r) in self.resources.iter().enumerate() {
+            if !r.active.is_empty() {
+                self.scr_rem_cap[ri] = r.cap.effective(r.active.len());
+                self.scr_unset_on[ri] = r.active.len() as u32;
+                self.scr_touched.push(ri);
+            }
+        }
+        for &t in &self.active_flows {
+            self.tasks[t.0].rate = f64::NAN;
+        }
+        let mut unset = nf;
+        while unset > 0 {
+            let mut best: Option<(usize, f64)> = None;
+            for &ri in &self.scr_touched {
+                let n = self.scr_unset_on[ri];
+                if n == 0 {
+                    continue;
+                }
+                let fair = self.scr_rem_cap[ri] / n as f64;
+                match best {
+                    Some((bri, bfair)) => {
+                        if fair < bfair || (fair == bfair && ri < bri) {
+                            best = Some((ri, fair));
+                        }
+                    }
+                    None => best = Some((ri, fair)),
+                }
+            }
+            let Some((bottleneck, fair)) = best else { break };
+            let mut fi = 0;
+            while fi < self.resources[bottleneck].active.len() {
+                let t = self.resources[bottleneck].active[fi];
+                fi += 1;
+                if !self.tasks[t.0].rate.is_nan() {
+                    continue;
+                }
+                self.tasks[t.0].rate = fair;
+                unset -= 1;
+                let task_ptr = t.0;
+                if let Work::Flow { path, .. } = &self.tasks[task_ptr].work {
+                    for r in path {
+                        let ri = r.0;
+                        self.scr_rem_cap[ri] = (self.scr_rem_cap[ri] - fair).max(0.0);
+                        self.scr_unset_on[ri] -= 1;
+                    }
+                }
+            }
+            self.scr_unset_on[bottleneck] = 0;
+        }
+        for &ri in &self.scr_touched {
+            self.scr_rem_cap[ri] = 0.0;
+            self.scr_unset_on[ri] = 0;
+        }
+        for &t in &self.active_flows {
+            if self.tasks[t.0].rate.is_nan() {
+                self.tasks[t.0].rate = 0.0;
+            }
+        }
+    }
+
+    pub fn step(&mut self) -> Option<Completion> {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        let mut best: Option<(f64, TaskId)> =
+            self.delay_heap.peek().map(|Reverse((t, id))| (t.0, *id));
+        for &id in &self.active_flows {
+            let task = &self.tasks[id.0];
+            let t = if task.rate > 0.0 {
+                self.now + task.remaining / task.rate
+            } else if task.remaining <= 0.0 {
+                self.now
+            } else {
+                f64::INFINITY
+            };
+            let better = match best {
+                None => true,
+                Some((bt, bid)) => t < bt || (t == bt && id < bid),
+            };
+            if better {
+                best = Some((t, id));
+            }
+        }
+        let (time, id) = best?;
+        assert!(
+            time.is_finite(),
+            "deadlock: active flow starved with no other progress possible"
+        );
+        let dt = time - self.now;
+        debug_assert!(dt >= -1e-9, "time went backwards: {dt}");
+        let dt = dt.max(0.0);
+        if dt > 0.0 {
+            for &fid in &self.active_flows {
+                let rate = self.tasks[fid.0].rate;
+                let moved = rate * dt;
+                self.tasks[fid.0].remaining = (self.tasks[fid.0].remaining - moved).max(0.0);
+                if let Work::Flow { path, .. } = &self.tasks[fid.0].work {
+                    for r in path.clone() {
+                        self.bytes_through[r.0] += moved;
+                    }
+                }
+            }
+        }
+        self.now = time;
+        self.complete(id);
+        Some(Completion { task: id, time: self.now, tag: self.tasks[id.0].tag })
+    }
+
+    fn complete(&mut self, id: TaskId) {
+        let is_flow = matches!(self.tasks[id.0].work, Work::Flow { .. });
+        self.tasks[id.0].state = TaskState::Done;
+        self.tasks[id.0].finished_at = self.now;
+        if is_flow {
+            self.active_flows.retain(|&t| t != id);
+            if let Work::Flow { path, .. } = self.tasks[id.0].work.clone() {
+                for r in path {
+                    self.resources[r.0].active.retain(|&t| t != id);
+                }
+            }
+            self.rates_dirty = true;
+        } else {
+            let popped = self.delay_heap.pop().expect("delay heap empty");
+            debug_assert_eq!(popped.0 .1, id);
+        }
+        let dependents = std::mem::take(&mut self.tasks[id.0].dependents);
+        for dep in dependents {
+            let t = &mut self.tasks[dep.0];
+            t.deps_left -= 1;
+            if t.deps_left == 0 && t.state == TaskState::Blocked {
+                self.activate(dep);
+            }
+        }
+    }
+
+    pub fn run(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        while let Some(c) = self.step() {
+            out.push(c);
+        }
+        out
+    }
+
+    pub fn finished_at(&self, id: TaskId) -> f64 {
+        let t = &self.tasks[id.0];
+        assert_eq!(t.state, TaskState::Done, "task not finished");
+        t.finished_at
+    }
+
+    pub fn is_done(&self, id: TaskId) -> bool {
+        self.tasks[id.0].state == TaskState::Done
+    }
+
+    /// Total resource slots — grows without bound in the reference engine
+    /// (it has no retire/free-list API); golden tests contrast this with
+    /// the new engine's bounded table.
+    pub fn resource_slots(&self) -> usize {
+        self.resources.len()
+    }
+}
+
+impl Default for ReferenceSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}

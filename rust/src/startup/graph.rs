@@ -229,13 +229,18 @@ impl<'p> StageGraph<'p> {
                     if bytes_v.iter().all(|&b| b == 0) {
                         continue; // budget exhausted: no flows, no join
                     }
+                    // Only nodes with a nonzero staging share download
+                    // through the pool; scope it to exactly that count so
+                    // its slot recycles after the staging wave.
+                    let stagers = bytes_v.iter().filter(|&&b| b > 0).count() as u32;
                     let swarm = if req.source == SpecSource::CacheSwarm {
-                        Some(Swarm::build(
+                        Some(Swarm::build_scoped(
                             &mut cs.sim,
                             "spec.swarm",
                             cs.cfg.cluster_cache_egress_bps,
                             n as u32,
                             cs.cfg.node_nic_bps,
+                            stagers,
                         ))
                     } else {
                         None
@@ -253,7 +258,7 @@ impl<'p> StageGraph<'p> {
                                     sw.download(&mut cs.sim, b, cs.node_nic[i], &[grants[i]], 0)
                                 }
                                 (SpecSource::Hdfs, _) => {
-                                    let g = cs.hdfs_groups[i % cs.hdfs_groups.len()];
+                                    let g = cs.hdfs_group_of(i);
                                     cs.sim.flow(b, vec![g, cs.node_nic[i]], &[grants[i]], 0)
                                 }
                                 _ => cs.sim.flow(

@@ -1024,6 +1024,52 @@ mod tests {
         );
     }
 
+    /// Golden-schedule determinism for the cluster replay: the full
+    /// per-job `(worker_phase_s, total_s)` streams — the replay-level
+    /// `(finished_at, tag)` capture — must be bit-identical across thread
+    /// counts for every overlap mode, with faults off *and* with the
+    /// `paper` preset on. This is the acceptance pin for the engine
+    /// refactor: any nondeterminism or cross-thread divergence the new
+    /// heap/free-list machinery could introduce lands here as a bit flip.
+    #[test]
+    fn golden_week_replay_bit_identical_across_threads_modes_and_faults() {
+        use crate::config::OverlapMode;
+        let t = gen_trace(6, 30, 86400.0);
+        let cluster = ClusterConfig::default();
+        let capture = |mode: OverlapMode, faults: FaultConfig, threads: usize| {
+            let r = replay_cluster(
+                &t,
+                &cluster,
+                &BootseerConfig { overlap: mode, ..BootseerConfig::bootseer() },
+                11,
+                &ReplayOptions { pool_gpus: None, threads, faults },
+            );
+            let mut stream: Vec<u64> = vec![
+                r.startup_gpu_hours.to_bits(),
+                r.lost_train_gpu_hours.to_bits(),
+                r.fault_restarts,
+            ];
+            for j in &r.jobs {
+                for w in &j.startup_worker_s {
+                    stream.push(w.to_bits());
+                }
+                stream.push(j.first_total_s.to_bits());
+            }
+            stream
+        };
+        for mode in OverlapMode::ALL {
+            for faults in [FaultConfig::off(), FaultConfig::paper()] {
+                let one = capture(mode, faults.clone(), 1);
+                let many = capture(mode, faults.clone(), 4);
+                assert_eq!(
+                    one, many,
+                    "replay diverged across threads: mode={mode:?} hazard={}",
+                    faults.hazard_per_gpu_hour
+                );
+            }
+        }
+    }
+
     #[test]
     fn queue_waits_match_paper_distribution() {
         // Phase 1 only (cheap): the §3.2 shape — ~100 s median from the

@@ -112,6 +112,37 @@ pub fn close(a: f64, b: f64, rel: f64) -> bool {
     (a - b).abs() / scale <= rel
 }
 
+/// Distance in ulps between two finite f64s: how many representable
+/// doubles lie between them on the total-order line (±0.0 coincide).
+/// The one definition of ulp distance in the tree — `close_ulps` and the
+/// engine golden tests (`sim::golden`) both build on it.
+pub fn ulps_between(a: f64, b: f64) -> u64 {
+    if a == b {
+        return 0;
+    }
+    // Map the IEEE-754 bit pattern to a monotone i64 line.
+    let to_ordered = |x: f64| {
+        let i = x.to_bits() as i64;
+        if i < 0 {
+            i64::MIN.wrapping_sub(i)
+        } else {
+            i
+        }
+    };
+    to_ordered(a).abs_diff(to_ordered(b))
+}
+
+/// Ulp-level float equality: true when `a` and `b` are within `max_ulps`
+/// representable doubles of each other (NaN never compares close). This is
+/// the "exact up to accumulated rounding" comparison — vastly tighter than
+/// any epsilon a relative test would use.
+pub fn close_ulps(a: f64, b: f64, max_ulps: u64) -> bool {
+    if a.is_nan() || b.is_nan() {
+        return false;
+    }
+    ulps_between(a, b) <= max_ulps
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +188,27 @@ mod tests {
     fn close_tolerates() {
         assert!(close(1.0, 1.0000001, 1e-5));
         assert!(!close(1.0, 1.1, 1e-5));
+    }
+
+    #[test]
+    fn close_ulps_is_tight() {
+        assert!(close_ulps(1.0, 1.0, 0));
+        assert!(close_ulps(0.0, -0.0, 0));
+        let next = f64::from_bits(1.0f64.to_bits() + 1);
+        assert!(close_ulps(1.0, next, 1));
+        assert!(!close_ulps(1.0, next, 0));
+        assert!(!close_ulps(1.0, 1.0 + 1e-9, 256));
+        assert!(!close_ulps(1.0, -1.0, 1 << 20));
+        assert!(!close_ulps(f64::NAN, 1.0, 1 << 20));
+    }
+
+    #[test]
+    fn ulps_between_basics() {
+        assert_eq!(ulps_between(1.0, 1.0), 0);
+        assert_eq!(ulps_between(1.0, f64::from_bits(1.0f64.to_bits() + 1)), 1);
+        assert!(ulps_between(1.0, 1.0 + 1e-9) > 1000);
+        // Crossing zero walks the total-order line, monotonically.
+        assert_eq!(ulps_between(0.0, f64::from_bits(1)), 1);
+        assert_eq!(ulps_between(-f64::from_bits(1), f64::from_bits(1)), 2);
     }
 }
