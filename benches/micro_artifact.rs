@@ -1,0 +1,42 @@
+//! Artifact-layer materialization sweep: cold start vs warm restart vs
+//! delta resume (plus the cross-artifact dedup variant) at 16 and 128
+//! nodes, through the unified content-addressed transfer plane. Emits
+//! `BENCH_artifact.json` (seconds + bytes + byte fractions per scale) so
+//! the byte-movement trajectory is tracked across PRs by the bench gate.
+//!
+//!     cargo bench --bench micro_artifact
+//!     BOOTSEER_BENCH_FAST=1 cargo bench --bench micro_artifact
+
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header(
+        "artifact-layer sweep — cold / warm / delta materialization",
+        "warm and delta restarts re-fetch strictly fewer bytes; dedup serves shared chunks locally",
+    );
+    let fast = std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1");
+    let reps = if fast { 1 } else { 3 };
+    let mut b = Bench::new("micro_artifact");
+    let mut out = None;
+    b.once(&format!("2 scales x 4 scenarios x {reps} reps"), || {
+        out = Some(figures::artifact_sweep(reps));
+    });
+    let sweep = out.unwrap();
+    println!("\n{}", sweep.render());
+    let path = "BENCH_artifact.json";
+    match std::fs::write(path, sweep.to_json().to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("write {path}: {e}"),
+    }
+    // Machine-checkable invariants, also enforced by the library tests:
+    // the dedup/delta scenarios move strictly fewer bytes than cold.
+    for p in &sweep.points {
+        assert!(p.warm_bytes < p.cold_bytes, "nodes={}", p.nodes);
+        assert!(p.delta_bytes < p.warm_bytes, "nodes={}", p.nodes);
+        assert!(p.dedup_bytes < p.cold_bytes, "nodes={}", p.nodes);
+        assert!(p.warm_s <= p.cold_s + 1e-9, "nodes={}", p.nodes);
+        assert!(p.delta_s <= p.warm_s + 1e-9, "nodes={}", p.nodes);
+    }
+    b.finish();
+}

@@ -1,0 +1,295 @@
+//! Per-node residency tracking for content-addressed artifacts.
+//!
+//! A [`CacheState`] answers one question for the transfer plane: *how many
+//! bytes of manifest M are already on node i's local disk?* Everything
+//! that used to be a bespoke byte-credit side channel — PR 2's
+//! `prestaged` vectors, PR 3's warm-restart `local_{image,env}_bytes` —
+//! is now an entry here:
+//!
+//! * **Artifact-scoped residency** — "the first `b` bytes of artifact `a`
+//!   are resident" (a staged prefix, a warm restart's surviving hot set, a
+//!   delta-resume retained checkpoint). This is the default-config path
+//!   and is exact prefix arithmetic, no chunk walk.
+//! * **Chunk-level residency** — digest → resident bytes, consulted only
+//!   when cross-artifact dedup is enabled: a chunk of manifest M counts as
+//!   resident if its *content digest* landed via any other artifact (an
+//!   env-snapshot chunk duplicating an image hot block).
+//!
+//! Residency is tracked per node plus a `shared` layer that applies to
+//! every node of the allocation (the warm-restart case: all nodes of the
+//! restarted job kept their local state). All maps are `BTreeMap` so no
+//! iteration order can leak into simulation results.
+
+use crate::artifact::manifest::ArtifactManifest;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+struct Layer {
+    /// artifact id → resident prefix bytes.
+    artifacts: BTreeMap<u64, u64>,
+    /// chunk digest → resident bytes of that chunk's content.
+    chunks: BTreeMap<u64, u64>,
+}
+
+impl Layer {
+    fn add_artifact(&mut self, id: u64, bytes: u64) {
+        let e = self.artifacts.entry(id).or_insert(0);
+        *e = e.saturating_add(bytes);
+    }
+
+    fn add_chunks(&mut self, m: &ArtifactManifest) {
+        for c in &m.chunks {
+            let e = self.chunks.entry(c.digest).or_insert(0);
+            *e = (*e).max(c.bytes);
+        }
+    }
+}
+
+/// Chunks resident across the nodes of one allocation (one startup's
+/// scope: built from the previous attempt's state, mutated as stages
+/// materialize artifacts during the run).
+#[derive(Clone, Debug, Default)]
+pub struct CacheState {
+    shared: Layer,
+    per_node: BTreeMap<usize, Layer>,
+}
+
+impl CacheState {
+    pub fn new() -> CacheState {
+        CacheState::default()
+    }
+
+    /// Nothing resident anywhere?
+    pub fn is_empty(&self) -> bool {
+        self.shared.artifacts.is_empty()
+            && self.shared.chunks.is_empty()
+            && self.per_node.is_empty()
+    }
+
+    /// Record the first `bytes` of artifact `id` resident on every node.
+    pub fn insert_shared_artifact(&mut self, id: u64, bytes: u64) {
+        if bytes > 0 {
+            self.shared.add_artifact(id, bytes);
+        }
+    }
+
+    /// Record the first `bytes` of artifact `id` resident on node `node`.
+    pub fn insert_node_artifact(&mut self, node: usize, id: u64, bytes: u64) {
+        if bytes > 0 {
+            self.per_node.entry(node).or_default().add_artifact(id, bytes);
+        }
+    }
+
+    /// Record every chunk of `m` resident on every node (content-level
+    /// entry, feeds cross-artifact dedup).
+    pub fn insert_shared_chunks(&mut self, m: &ArtifactManifest) {
+        self.shared.add_chunks(m);
+        self.shared.add_artifact(m.id, m.total_bytes());
+    }
+
+    /// Record every chunk of `m` resident on node `node`.
+    pub fn insert_node_chunks(&mut self, node: usize, m: &ArtifactManifest) {
+        let layer = self.per_node.entry(node).or_default();
+        layer.add_chunks(m);
+        layer.add_artifact(m.id, m.total_bytes());
+    }
+
+    /// Drop artifact `id` everywhere (eviction: a relocated restart, local
+    /// disk reclaimed). Chunk-level entries inserted via `insert_*_chunks`
+    /// for other artifacts are unaffected.
+    pub fn evict_artifact(&mut self, id: u64) {
+        self.shared.artifacts.remove(&id);
+        for layer in self.per_node.values_mut() {
+            layer.artifacts.remove(&id);
+        }
+    }
+
+    fn artifact_prefix(&self, node: usize, id: u64) -> u64 {
+        let shared = self.shared.artifacts.get(&id).copied().unwrap_or(0);
+        let local = self
+            .per_node
+            .get(&node)
+            .and_then(|l| l.artifacts.get(&id))
+            .copied()
+            .unwrap_or(0);
+        shared.saturating_add(local)
+    }
+
+    fn chunk_resident(&self, node: usize, digest: u64) -> u64 {
+        let shared = self.shared.chunks.get(&digest).copied().unwrap_or(0);
+        let local = self
+            .per_node
+            .get(&node)
+            .and_then(|l| l.chunks.get(&digest))
+            .copied()
+            .unwrap_or(0);
+        shared.max(local)
+    }
+
+    /// Bytes of manifest `m` already resident on `node`.
+    ///
+    /// Without `dedup` this is exact prefix arithmetic over the
+    /// artifact-scoped entries — `min(resident prefix, total)` — the path
+    /// every default-config replay takes. With `dedup` the chunk list is
+    /// walked: a chunk not covered by the prefix still counts if its
+    /// content digest is resident via any other artifact.
+    pub fn resident_bytes(&self, node: usize, m: &ArtifactManifest, dedup: bool) -> u64 {
+        self.resident_bytes_beyond(node, m, 0, dedup)
+    }
+
+    /// [`Self::resident_bytes`], excluding the first `skip_prefix` bytes
+    /// of the manifest from the count. The caller uses this when that
+    /// prefix is already accounted elsewhere — a speculative staging flow
+    /// covering the manifest's head must not be double-credited when its
+    /// chunks are also content-resident (they are the shared prefix of an
+    /// env snapshot whose blocks the image stage just landed).
+    pub fn resident_bytes_beyond(
+        &self,
+        node: usize,
+        m: &ArtifactManifest,
+        skip_prefix: u64,
+        dedup: bool,
+    ) -> u64 {
+        let prefix = self.artifact_prefix(node, m.id).min(m.total_bytes());
+        // Chunkless summary manifests carry no content digests to walk;
+        // prefix arithmetic is all there is for them even under dedup.
+        if !dedup || m.chunks.is_empty() {
+            return prefix.saturating_sub(skip_prefix.min(m.total_bytes()));
+        }
+        let mut covered = 0u64;
+        let mut cum = 0u64;
+        for c in &m.chunks {
+            let by_skip = skip_prefix.saturating_sub(cum).min(c.bytes);
+            let by_prefix = prefix.saturating_sub(cum).min(c.bytes);
+            let by_content = self.chunk_resident(node, c.digest).min(c.bytes);
+            covered += by_prefix.max(by_content).saturating_sub(by_skip);
+            cum += c.bytes;
+        }
+        covered.min(m.total_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::manifest::ArtifactManifest;
+
+    fn m(id: u64, total: u64) -> ArtifactManifest {
+        ArtifactManifest::synthetic(id, total, 100)
+    }
+
+    #[test]
+    fn empty_cache_has_nothing() {
+        let c = CacheState::new();
+        assert!(c.is_empty());
+        assert_eq!(c.resident_bytes(0, &m(1, 1000), false), 0);
+        assert_eq!(c.resident_bytes(3, &m(1, 1000), true), 0);
+    }
+
+    #[test]
+    fn shared_prefix_applies_to_every_node() {
+        let mut c = CacheState::new();
+        c.insert_shared_artifact(7, 350);
+        let man = m(7, 1000);
+        for node in [0usize, 5, 99] {
+            assert_eq!(c.resident_bytes(node, &man, false), 350);
+        }
+        // Capped at the manifest total.
+        c.insert_shared_artifact(7, 10_000);
+        assert_eq!(c.resident_bytes(0, &man, false), 1000);
+    }
+
+    #[test]
+    fn node_entries_are_node_local_and_stack_on_shared() {
+        let mut c = CacheState::new();
+        c.insert_shared_artifact(7, 100);
+        c.insert_node_artifact(2, 7, 250);
+        let man = m(7, 1000);
+        assert_eq!(c.resident_bytes(0, &man, false), 100);
+        assert_eq!(c.resident_bytes(2, &man, false), 350);
+    }
+
+    #[test]
+    fn dedup_credits_shared_content_across_artifacts() {
+        // Artifact B's second chunk duplicates artifact A's content.
+        let a = ArtifactManifest::synthetic(1, 300, 100);
+        let mut b = ArtifactManifest::synthetic(2, 300, 100);
+        b.chunks[1].digest = a.chunks[0].digest;
+        let mut c = CacheState::new();
+        c.insert_node_chunks(0, &a);
+        // Without dedup, B has no residency; with dedup, the duplicated
+        // chunk counts.
+        assert_eq!(c.resident_bytes(0, &b, false), 0);
+        assert_eq!(c.resident_bytes(0, &b, true), 100);
+        // And on another node nothing is resident either way.
+        assert_eq!(c.resident_bytes(1, &b, true), 0);
+
+        // A chunkless summary manifest credits via prefix arithmetic even
+        // under dedup (there are no digests to walk).
+        use crate::artifact::manifest::ArtifactKind;
+        let s = ArtifactManifest::summary(9, ArtifactKind::Synthetic, 300);
+        let mut c2 = CacheState::new();
+        c2.insert_shared_artifact(9, 120);
+        assert_eq!(c2.resident_bytes(0, &s, true), 120);
+    }
+
+    #[test]
+    fn dedup_does_not_double_count_prefix_and_content() {
+        let a = ArtifactManifest::synthetic(1, 300, 100);
+        let mut c = CacheState::new();
+        c.insert_node_chunks(0, &a); // records prefix 300 AND all chunks
+        assert_eq!(c.resident_bytes(0, &a, true), 300);
+        assert_eq!(c.resident_bytes(0, &a, false), 300);
+    }
+
+    #[test]
+    fn eviction_drops_artifact_scope_only() {
+        let a = ArtifactManifest::synthetic(1, 300, 100);
+        let mut b = ArtifactManifest::synthetic(2, 100, 100);
+        b.chunks[0].digest = a.chunks[2].digest;
+        let mut c = CacheState::new();
+        c.insert_node_chunks(0, &a);
+        c.evict_artifact(a.id);
+        assert_eq!(c.resident_bytes(0, &a, false), 0);
+        // Content-level entries survive (the bytes are still on disk under
+        // another artifact's chunk).
+        assert_eq!(c.resident_bytes(0, &b, true), 100);
+    }
+
+    #[test]
+    fn beyond_prefix_excludes_already_counted_bytes() {
+        // Artifact B's first two chunks duplicate A's content; a staging
+        // flow already covers B's first 150 bytes. Credit beyond the
+        // staged prefix must count only content not in that prefix — no
+        // double-counting of the shared head.
+        let a = ArtifactManifest::synthetic(1, 300, 100);
+        let mut b = ArtifactManifest::synthetic(2, 300, 100);
+        b.chunks[0].digest = a.chunks[0].digest;
+        b.chunks[1].digest = a.chunks[1].digest;
+        let mut c = CacheState::new();
+        c.insert_node_chunks(0, &a);
+        // Without skip: both shared chunks count.
+        assert_eq!(c.resident_bytes(0, &b, true), 200);
+        // Skipping the staged 150-byte prefix leaves only the unstaged
+        // half of chunk 1.
+        assert_eq!(c.resident_bytes_beyond(0, &b, 150, true), 50);
+        // Skipping past all shared content leaves nothing.
+        assert_eq!(c.resident_bytes_beyond(0, &b, 200, true), 0);
+        // Non-dedup prefix arithmetic honors the skip too.
+        let mut d = CacheState::new();
+        d.insert_shared_artifact(9, 250);
+        let man = m(9, 1000);
+        assert_eq!(d.resident_bytes_beyond(0, &man, 100, false), 150);
+        assert_eq!(d.resident_bytes_beyond(0, &man, 400, false), 0);
+    }
+
+    #[test]
+    fn partial_prefix_counts_partial_tail_chunk() {
+        let man = m(9, 1000); // 10 chunks of 100
+        let mut c = CacheState::new();
+        c.insert_shared_artifact(9, 250);
+        assert_eq!(c.resident_bytes(0, &man, false), 250);
+        // Chunk walk agrees with prefix arithmetic.
+        assert_eq!(c.resident_bytes(0, &man, true), 250);
+    }
+}

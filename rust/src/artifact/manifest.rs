@@ -1,0 +1,303 @@
+//! Typed, content-addressed artifact manifests.
+//!
+//! Every byte set the startup pipeline moves — an image's startup-hot
+//! block set, its cold tail, a job's environment snapshot archive, a
+//! checkpoint resume shard — is described by one [`ArtifactManifest`]: a
+//! stable artifact id plus an ordered list of content-addressed chunks.
+//! The manifest is the unit the transfer plane materializes
+//! ([`crate::artifact::transfer`]) and the unit the per-node cache tracks
+//! residency of ([`crate::artifact::cache`]). Chunk digests are shared
+//! with the underlying content model (image block digests; env chunks
+//! that duplicate image blocks carry the image block's digest), which is
+//! what makes cross-artifact dedup expressible at the transfer plane.
+
+use crate::config::defaults as d;
+use crate::config::JobConfig;
+use crate::image::spec::ImageSpec;
+use crate::util::rng::mix64;
+
+/// Domain-separation salts for artifact ids and synthesized chunk digests.
+const SALT_IMG_HOT: u64 = 0xA271_0001;
+const SALT_IMG_COLD: u64 = 0xA271_0002;
+const SALT_ENV: u64 = 0xA271_0003;
+const SALT_ENV_CHUNK: u64 = 0xA271_0004;
+const SALT_CKPT: u64 = 0xA271_0005;
+const SALT_CKPT_CHUNK: u64 = 0xA271_0006;
+
+/// What kind of content a manifest describes (the four artifact classes
+/// the startup pipeline moves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// An image's startup-hot block set (record-and-prefetch foreground).
+    ImageHotSet,
+    /// The rest of the image, streamed in the background.
+    ImageColdTail,
+    /// A job's compressed environment snapshot archive.
+    EnvSnapshot,
+    /// One node's checkpoint resume share.
+    CkptShard,
+    /// Test/bench-only synthetic content.
+    Synthetic,
+}
+
+/// One content-addressed chunk of an artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    /// Content digest; equal digests are the same bytes (dedup unit).
+    pub digest: u64,
+    pub bytes: u64,
+}
+
+/// An ordered chunk list with a stable identity. Chunk order is the
+/// materialization order: a byte-bounded prefix of the list is what a
+/// budget-clamped staging pass moves first.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    /// Stable artifact identity (pure function of the content identity —
+    /// image digest, env signature, checkpoint identity).
+    pub id: u64,
+    pub kind: ArtifactKind,
+    pub chunks: Vec<Chunk>,
+    total: u64,
+}
+
+/// Split `total` bytes into `chunk_bytes`-sized chunks (partial tail),
+/// digests supplied per chunk index — the one copy of the size
+/// arithmetic every typed builder uses.
+fn split(total: u64, chunk_bytes: u64, digest_of: impl Fn(usize) -> u64) -> Vec<Chunk> {
+    assert!(chunk_bytes > 0);
+    let n = ((total + chunk_bytes - 1) / chunk_bytes) as usize;
+    (0..n)
+        .map(|k| {
+            let len = if (k + 1) as u64 * chunk_bytes <= total {
+                chunk_bytes
+            } else {
+                total - k as u64 * chunk_bytes
+            };
+            Chunk { digest: digest_of(k), bytes: len }
+        })
+        .collect()
+}
+
+impl ArtifactManifest {
+    fn build(id: u64, kind: ArtifactKind, chunks: Vec<Chunk>) -> ArtifactManifest {
+        let total = chunks.iter().map(|c| c.bytes).sum();
+        ArtifactManifest { id, kind, chunks, total }
+    }
+
+    /// A chunkless manifest carrying only identity + size. Sufficient for
+    /// every non-dedup consumer (artifact-prefix credit, staging clamps
+    /// — they never walk chunks), and what the stage planners declare on
+    /// the default path so the replay hot loop allocates no chunk lists.
+    /// The dedup plane needs the full typed builders.
+    pub fn summary(id: u64, kind: ArtifactKind, total: u64) -> ArtifactManifest {
+        ArtifactManifest { id, kind, chunks: Vec::new(), total }
+    }
+
+    /// Total logical bytes of the artifact.
+    pub fn total_bytes(&self) -> u64 {
+        self.total
+    }
+
+    /// Artifact id of an image's hot set, from the image digest.
+    pub fn image_hot_id(image_digest: u64) -> u64 {
+        mix64(SALT_IMG_HOT ^ image_digest)
+    }
+
+    /// Artifact id of an image's cold tail.
+    pub fn image_cold_id(image_digest: u64) -> u64 {
+        mix64(SALT_IMG_COLD ^ image_digest)
+    }
+
+    /// Artifact id of an environment snapshot, from the package signature.
+    pub fn env_snapshot_id(signature: u64) -> u64 {
+        mix64(SALT_ENV ^ signature)
+    }
+
+    /// Artifact id of a job's checkpoint resume shard. Keyed by the job's
+    /// checkpoint identity (size, partitioning, image lineage) — unique
+    /// among the artifacts of one startup, which is the scope a
+    /// [`crate::artifact::cache::CacheState`] lives in.
+    pub fn ckpt_shard_id(job: &JobConfig) -> u64 {
+        mix64(
+            SALT_CKPT
+                ^ job.ckpt_bytes.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ ((job.pp as u64) << 32)
+                ^ job.image_seed.unwrap_or(0),
+        )
+    }
+
+    /// The startup-hot block set of `img` (`hot` = block indices from the
+    /// hot-set record). Chunk digests are the image's own block digests,
+    /// so hot sets of images sharing blocks dedupe at the chunk level.
+    pub fn image_hot_set(img: &ImageSpec, hot: &[u32]) -> ArtifactManifest {
+        let chunks = hot
+            .iter()
+            .map(|&b| Chunk { digest: img.block_digests[b as usize], bytes: img.block_len(b) })
+            .collect();
+        Self::build(Self::image_hot_id(img.digest), ArtifactKind::ImageHotSet, chunks)
+    }
+
+    /// Every block of `img` outside the hot set, in block order.
+    pub fn image_cold_tail(img: &ImageSpec, hot: &[u32]) -> ArtifactManifest {
+        let hot_set: std::collections::BTreeSet<u32> = hot.iter().copied().collect();
+        let chunks = (0..img.n_blocks())
+            .filter(|b| !hot_set.contains(b))
+            .map(|b| Chunk { digest: img.block_digests[b as usize], bytes: img.block_len(b) })
+            .collect();
+        Self::build(Self::image_cold_id(img.digest), ArtifactKind::ImageColdTail, chunks)
+    }
+
+    /// The compressed environment snapshot archive for package signature
+    /// `sig`. When `shared_with` (the job's image hot-set manifest) is
+    /// given, the first [`d::ENV_IMAGE_SHARED_FRACTION`] of the archive's
+    /// chunks carry the corresponding image chunk digests — the archive's
+    /// site-packages duplicating libraries already present in the image's
+    /// hot runtime region (the overlap the real-bytes
+    /// [`crate::image::blockstore::BlockStore`] measures). The transfer
+    /// plane exploits the overlap only when cross-artifact dedup is
+    /// enabled; the manifest itself always describes it.
+    pub fn env_snapshot(
+        sig: u64,
+        bytes: u64,
+        shared_with: Option<&ArtifactManifest>,
+    ) -> ArtifactManifest {
+        let chunk = d::ENV_SNAPSHOT_CHUNK_BYTES;
+        let n = ((bytes + chunk - 1) / chunk) as usize;
+        let shared_n = match shared_with {
+            Some(m) => ((n as f64 * d::ENV_IMAGE_SHARED_FRACTION) as usize).min(m.chunks.len()),
+            None => 0,
+        };
+        let chunks = split(bytes, chunk, |k| {
+            if k < shared_n {
+                shared_with.expect("shared_n > 0 implies Some").chunks[k].digest
+            } else {
+                mix64(SALT_ENV_CHUNK ^ sig ^ (k as u64).wrapping_mul(0xC2B2AE3D27D4EB4F))
+            }
+        });
+        Self::build(Self::env_snapshot_id(sig), ArtifactKind::EnvSnapshot, chunks)
+    }
+
+    /// One node's checkpoint resume share (`per_node_bytes`), chunked at
+    /// [`d::CKPT_CHUNK_BYTES`]. Chunk digests are keyed by the shard
+    /// identity + chunk index, so the chunks a rollback did not rewrite
+    /// keep their digests — the basis of delta resume.
+    pub fn ckpt_shard(job: &JobConfig, per_node_bytes: u64) -> ArtifactManifest {
+        let id = Self::ckpt_shard_id(job);
+        let chunks = split(per_node_bytes, d::CKPT_CHUNK_BYTES, |k| {
+            mix64(SALT_CKPT_CHUNK ^ id ^ (k as u64).wrapping_mul(0x165667B19E3779F9))
+        });
+        Self::build(id, ArtifactKind::CkptShard, chunks)
+    }
+
+    /// A synthetic manifest for tests and benches: `total` bytes in
+    /// `chunk_bytes` chunks, digests keyed by `id`.
+    pub fn synthetic(id: u64, total: u64, chunk_bytes: u64) -> ArtifactManifest {
+        let chunks = split(total, chunk_bytes, |k| mix64(id ^ ((k as u64) << 17)));
+        Self::build(id, ArtifactKind::Synthetic, chunks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::defaults::{IMAGE_BLOCK_BYTES, PAPER_IMAGE_BYTES};
+
+    fn img() -> ImageSpec {
+        ImageSpec::synth(1, PAPER_IMAGE_BYTES, IMAGE_BLOCK_BYTES, 0.07)
+    }
+
+    #[test]
+    fn hot_and_cold_partition_the_image() {
+        let img = img();
+        let hot_blocks: Vec<u32> = {
+            let mut h = img.startup_access.clone();
+            h.sort_unstable();
+            h
+        };
+        let hot = ArtifactManifest::image_hot_set(&img, &hot_blocks);
+        let cold = ArtifactManifest::image_cold_tail(&img, &hot_blocks);
+        assert_eq!(hot.total_bytes(), img.hot_bytes());
+        assert_eq!(hot.total_bytes() + cold.total_bytes(), img.total_bytes);
+        assert_eq!(hot.chunks.len() + cold.chunks.len(), img.n_blocks() as usize);
+        assert_ne!(hot.id, cold.id);
+        assert_eq!(hot.kind, ArtifactKind::ImageHotSet);
+    }
+
+    #[test]
+    fn env_snapshot_totals_exact_and_shares_image_digests() {
+        let img = img();
+        let mut hot_blocks = img.startup_access.clone();
+        hot_blocks.sort_unstable();
+        let hotm = ArtifactManifest::image_hot_set(&img, &hot_blocks);
+        let bytes = 270_000_000u64;
+        let env = ArtifactManifest::env_snapshot(77, bytes, Some(&hotm));
+        assert_eq!(env.total_bytes(), bytes);
+        // The shared prefix carries the image chunk digests verbatim.
+        let hot_digests: std::collections::BTreeSet<u64> =
+            hotm.chunks.iter().map(|c| c.digest).collect();
+        let shared = env.chunks.iter().filter(|c| hot_digests.contains(&c.digest)).count();
+        let expect = (env.chunks.len() as f64 * d::ENV_IMAGE_SHARED_FRACTION) as usize;
+        assert!(shared >= expect, "shared {shared} < expected {expect}");
+        // Without a shared manifest the digests are disjoint from the image.
+        let plain = ArtifactManifest::env_snapshot(77, bytes, None);
+        assert_eq!(plain.total_bytes(), bytes);
+        assert!(plain.chunks.iter().all(|c| !hot_digests.contains(&c.digest)));
+        // Same signature → same id either way.
+        assert_eq!(plain.id, env.id);
+    }
+
+    #[test]
+    fn ckpt_shard_deterministic_per_job() {
+        let job = JobConfig::paper_moe(128);
+        let a = ArtifactManifest::ckpt_shard(&job, 206_500_000_000);
+        let b = ArtifactManifest::ckpt_shard(&job, 206_500_000_000);
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.total_bytes(), 206_500_000_000);
+        assert_eq!(a.chunks.len(), b.chunks.len());
+        assert_eq!(a.chunks[0].digest, b.chunks[0].digest);
+        // A different checkpoint size is a different artifact.
+        let other = JobConfig { ckpt_bytes: 1, ..JobConfig::paper_moe(128) };
+        assert_ne!(ArtifactManifest::ckpt_shard(&other, 100).id, a.id);
+    }
+
+    #[test]
+    fn summary_matches_full_manifest_identity_and_total() {
+        let img = img();
+        let mut hot = img.startup_access.clone();
+        hot.sort_unstable();
+        let full = ArtifactManifest::image_hot_set(&img, &hot);
+        let s = ArtifactManifest::summary(
+            ArtifactManifest::image_hot_id(img.digest),
+            ArtifactKind::ImageHotSet,
+            img.hot_bytes(),
+        );
+        assert_eq!(s.id, full.id);
+        assert_eq!(s.total_bytes(), full.total_bytes());
+        assert!(s.chunks.is_empty());
+    }
+
+    #[test]
+    fn synthetic_chunks_cover_total() {
+        let m = ArtifactManifest::synthetic(5, 10_500, 4_000);
+        assert_eq!(m.total_bytes(), 10_500);
+        assert_eq!(m.chunks.len(), 3);
+        assert_eq!(m.chunks[2].bytes, 2_500);
+        let empty = ArtifactManifest::synthetic(5, 0, 4_000);
+        assert_eq!(empty.total_bytes(), 0);
+        assert!(empty.chunks.is_empty());
+    }
+
+    #[test]
+    fn ids_are_domain_separated() {
+        let d = 0xABCD_u64;
+        let ids = [
+            ArtifactManifest::image_hot_id(d),
+            ArtifactManifest::image_cold_id(d),
+            ArtifactManifest::env_snapshot_id(d),
+        ];
+        assert_ne!(ids[0], ids[1]);
+        assert_ne!(ids[0], ids[2]);
+        assert_ne!(ids[1], ids[2]);
+    }
+}

@@ -1,0 +1,32 @@
+//! Unified content-addressed artifact layer.
+//!
+//! BootSeer's three mitigations — hot-block record-and-prefetch (§4.2),
+//! environment snapshotting (§4.3), striped HDFS-FUSE resume (§4.4) — are
+//! all the same problem: *move content-addressed bytes to the right node
+//! before a stage needs them*. This module is the one plane that does it:
+//!
+//! * [`manifest`] — what the bytes are: an [`ArtifactManifest`] (typed:
+//!   image hot set, image cold tail, env snapshot, checkpoint shard)
+//!   lists chunk digests + sizes.
+//! * [`cache`] — where the bytes already are: a per-node [`CacheState`]
+//!   tracks resident chunks across attempts and segments of a replay.
+//! * [`transfer`] — how missing bytes move: a [`TransferPlanner`] compiles
+//!   "materialize manifest M on node i" onto the fluid sim from a tiered
+//!   provider (local disk → peer swarm → registry / cluster cache /
+//!   HDFS).
+//!
+//! The stage-graph planners ([`crate::startup::stages`]) declare manifests
+//! instead of byte counts; speculative staging, warm-restart credit and
+//! overlapped prefetch are all just "what's already in [`CacheState`]".
+//! Cross-artifact dedup (`bootseer.artifact_dedup`) and delta checkpoint
+//! resume (`bootseer.delta_resume`) are transfer-plane features no
+//! per-subsystem byte channel could express. Design note:
+//! `docs/artifact_layer.md`.
+
+pub mod cache;
+pub mod manifest;
+pub mod transfer;
+
+pub use cache::CacheState;
+pub use manifest::{ArtifactKind, ArtifactManifest, Chunk};
+pub use transfer::{ProviderTier, TransferPlanner};

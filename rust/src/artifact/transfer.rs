@@ -1,0 +1,251 @@
+//! The single transfer plane: materialize artifact bytes on a node from a
+//! tiered provider.
+//!
+//! Every foreground byte the startup pipeline moves now flows through one
+//! [`TransferPlanner`]: the image loaders, the environment installer, the
+//! checkpoint resume and the stage-graph's speculative stager all pick a
+//! [`ProviderTier`] and call [`TransferPlanner::fetch`] instead of
+//! hand-rolling `Swarm` pools and flow paths per subsystem. The tier
+//! encodes exactly the transport the pre-refactor subsystems used, so a
+//! default-config run lays down a bit-identical task DAG:
+//!
+//! | tier            | path                                  | was |
+//! |-----------------|---------------------------------------|-----|
+//! | `RegistrySwarm` | P2P pool fed by the registry → NIC    | `image/loader.rs` OCI pull |
+//! | `CacheSwarm`    | P2P pool fed by the block cache → NIC | hot-set prefetch, spec staging |
+//! | `ClusterCache`  | block-cache egress → NIC              | lazy misses, non-P2P prefetch |
+//! | `Registry`      | registry egress → NIC → local disk    | non-P2P OCI pull |
+//! | `Scm`           | SCM backend → NIC                     | `env/installer.rs` package pulls |
+//! | `Hdfs{nn_op}`   | [NameNode op →] DataNode group → NIC  | env-cache restore, spec staging |
+//! | `HdfsStream`    | `hdfs::fuse::plan_read` engine        | `ckpt/resume.rs` resume reads |
+//!
+//! The *local disk* tier is implicit: bytes already resident per
+//! [`crate::artifact::cache::CacheState`] are subtracted before `fetch` is
+//! ever called, and never cross the network again.
+
+use crate::hdfs::fuse::{plan_read, ReadEngine};
+use crate::image::p2p::Swarm;
+use crate::sim::{ClusterSim, TaskId};
+
+/// Where a transfer pulls its bytes from (in preference order behind the
+/// implicit local-disk tier).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProviderTier {
+    /// P2P swarm fed by the container registry (full-image pulls, P2P on).
+    RegistrySwarm,
+    /// P2P swarm fed by the cluster block cache (hot-set prefetch and
+    /// speculative staging, P2P on).
+    CacheSwarm,
+    /// Cluster block-cache egress, direct (P2P off, lazy miss service).
+    ClusterCache,
+    /// Container registry egress, staged through the node's local disk
+    /// (the traditional OCI pull path).
+    Registry,
+    /// SCM / package backend (throttled shared service).
+    Scm,
+    /// An HDFS DataNode group, round-robin by node. `nn_op` charges one
+    /// NameNode lookup before the transfer (the env-cache restore does;
+    /// the speculative stager's pre-opened handle does not).
+    Hdfs { nn_op: bool },
+    /// A checkpoint read through HDFS-FUSE ([`plan_read`]): sequential
+    /// download-and-resume or BootSeer's striped engine.
+    HdfsStream(ReadEngine),
+}
+
+/// A provider bound to a sim: swarm tiers carry their (scoped) pool, the
+/// rest resolve per fetch. Build once per artifact movement, fetch once
+/// per node.
+pub struct TransferPlanner {
+    tier: ProviderTier,
+    swarm: Option<Swarm>,
+}
+
+impl TransferPlanner {
+    /// Bind `tier` to the sim. Swarm tiers register a *scoped* pool named
+    /// `name` that retires after exactly `uses` fetches (`n_peers` sizes
+    /// its steady-state capacity); every other tier ignores the three
+    /// parameters.
+    pub fn build(
+        cs: &mut ClusterSim,
+        name: &str,
+        tier: ProviderTier,
+        n_peers: u32,
+        uses: u32,
+    ) -> TransferPlanner {
+        let swarm = match tier {
+            ProviderTier::RegistrySwarm => Some(Swarm::build_scoped(
+                &mut cs.sim,
+                name,
+                cs.cfg.registry_egress_bps,
+                n_peers,
+                cs.cfg.node_nic_bps,
+                uses,
+            )),
+            ProviderTier::CacheSwarm => Some(Swarm::build_scoped(
+                &mut cs.sim,
+                name,
+                cs.cfg.cluster_cache_egress_bps,
+                n_peers,
+                cs.cfg.node_nic_bps,
+                uses,
+            )),
+            _ => None,
+        };
+        TransferPlanner { tier, swarm }
+    }
+
+    /// The bound tier.
+    pub fn tier(&self) -> ProviderTier {
+        self.tier
+    }
+
+    /// Move `bytes` onto `node` after `deps`; returns the completion task.
+    /// Fractional byte counts are allowed (the lazy loader fetches
+    /// per-batch fractions); use [`Self::fetch_u64`] for the stream tier.
+    pub fn fetch(
+        &self,
+        cs: &mut ClusterSim,
+        node: usize,
+        bytes: f64,
+        deps: &[TaskId],
+        tag: u64,
+    ) -> TaskId {
+        match (self.tier, &self.swarm) {
+            (ProviderTier::RegistrySwarm | ProviderTier::CacheSwarm, Some(sw)) => {
+                sw.download(&mut cs.sim, bytes, cs.node_nic[node], deps, tag)
+            }
+            (ProviderTier::RegistrySwarm | ProviderTier::CacheSwarm, None) => {
+                unreachable!("swarm tiers always carry a pool")
+            }
+            (ProviderTier::ClusterCache, _) => {
+                let path = vec![cs.cache, cs.node_nic[node]];
+                cs.sim.flow(bytes, path, deps, tag)
+            }
+            (ProviderTier::Registry, _) => {
+                let path = vec![cs.registry, cs.node_nic[node], cs.node_disk[node]];
+                cs.sim.flow(bytes, path, deps, tag)
+            }
+            (ProviderTier::Scm, _) => {
+                let path = vec![cs.scm, cs.node_nic[node]];
+                cs.sim.flow(bytes, path, deps, tag)
+            }
+            (ProviderTier::Hdfs { nn_op }, _) => {
+                let group = cs.hdfs_group_of(node);
+                let gate = if nn_op {
+                    vec![cs.sim.delay(cs.cfg.hdfs_nn_op_s, deps, 0)]
+                } else {
+                    deps.to_vec()
+                };
+                cs.sim.flow(bytes, vec![group, cs.node_nic[node]], &gate, tag)
+            }
+            (ProviderTier::HdfsStream(_), _) => {
+                panic!("HdfsStream reads whole-byte shards; use fetch_u64")
+            }
+        }
+    }
+
+    /// [`Self::fetch`] for whole-byte artifacts; the stream tier routes
+    /// through the HDFS-FUSE read planner.
+    pub fn fetch_u64(
+        &self,
+        cs: &mut ClusterSim,
+        node: usize,
+        bytes: u64,
+        deps: &[TaskId],
+        tag: u64,
+    ) -> TaskId {
+        match self.tier {
+            ProviderTier::HdfsStream(engine) => plan_read(cs, node, bytes, engine, deps, tag),
+            _ => self.fetch(cs, node, bytes as f64, deps, tag),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::sim::engine::Capacity;
+
+    fn sim(nodes: u32) -> ClusterSim {
+        ClusterSim::build(&ClusterConfig::with_nodes(nodes), 42)
+    }
+
+    #[test]
+    fn cache_tier_matches_direct_flow() {
+        // The planner's flow must be indistinguishable from the bespoke
+        // path the loaders used to build.
+        let mut a = sim(1);
+        let p = TransferPlanner::build(&mut a, "x", ProviderTier::ClusterCache, 0, 0);
+        let t = p.fetch(&mut a, 0, 1_000_000_000.0, &[], 1);
+        a.sim.run();
+        let mut b = sim(1);
+        let path = vec![b.cache, b.node_nic[0]];
+        let t2 = b.sim.flow(1_000_000_000.0, path, &[], 1);
+        b.sim.run();
+        assert_eq!(a.sim.finished_at(t).to_bits(), b.sim.finished_at(t2).to_bits());
+    }
+
+    #[test]
+    fn swarm_tier_builds_one_scoped_pool() {
+        let mut cs = sim(4);
+        let before = cs.sim.resource_slots();
+        let p = TransferPlanner::build(&mut cs, "t.swarm", ProviderTier::CacheSwarm, 4, 4);
+        assert_eq!(cs.sim.resource_slots(), before + 1);
+        for i in 0..4 {
+            p.fetch(&mut cs, i, 1000.0, &[], 0);
+        }
+        cs.sim.run();
+        // Scoped: the pool slot recycles after its declared uses.
+        let fresh = cs.sim.add_resource("fresh", Capacity::Fixed(1.0));
+        assert_eq!(fresh.0, p.swarm.as_ref().unwrap().pool.0);
+    }
+
+    #[test]
+    fn hdfs_tier_charges_nn_op_only_when_asked() {
+        let mut a = sim(1);
+        let with_nn = TransferPlanner::build(&mut a, "x", ProviderTier::Hdfs { nn_op: true }, 0, 0);
+        let t = with_nn.fetch(&mut a, 0, 0.0, &[], 1);
+        a.sim.run();
+        let mut b = sim(1);
+        let without =
+            TransferPlanner::build(&mut b, "x", ProviderTier::Hdfs { nn_op: false }, 0, 0);
+        let t2 = without.fetch(&mut b, 0, 0.0, &[], 1);
+        b.sim.run();
+        assert!(a.sim.finished_at(t) > b.sim.finished_at(t2));
+        assert_eq!(b.sim.finished_at(t2), 0.0);
+    }
+
+    #[test]
+    fn stream_tier_routes_through_fuse_planner() {
+        let mut a = sim(1);
+        let p = TransferPlanner::build(
+            &mut a,
+            "x",
+            ProviderTier::HdfsStream(ReadEngine::Striped),
+            0,
+            0,
+        );
+        let t = p.fetch_u64(&mut a, 0, 2_000_000, &[], 1);
+        a.sim.run();
+        let mut b = sim(1);
+        let t2 = plan_read(&mut b, 0, 2_000_000, ReadEngine::Striped, &[], 1);
+        b.sim.run();
+        assert_eq!(a.sim.finished_at(t).to_bits(), b.sim.finished_at(t2).to_bits());
+    }
+
+    #[test]
+    fn registry_tier_stages_through_disk() {
+        // Slower than the cache tier for the same bytes at equal deps: the
+        // disk leg and the smaller registry egress both bind.
+        let mut a = sim(1);
+        let reg = TransferPlanner::build(&mut a, "x", ProviderTier::Registry, 0, 0);
+        let t = reg.fetch(&mut a, 0, 50e9, &[], 1);
+        a.sim.run();
+        let mut b = sim(1);
+        let cache = TransferPlanner::build(&mut b, "x", ProviderTier::ClusterCache, 0, 0);
+        let t2 = cache.fetch(&mut b, 0, 50e9, &[], 1);
+        b.sim.run();
+        assert!(a.sim.finished_at(t) >= b.sim.finished_at(t2));
+    }
+}

@@ -5,4 +5,7 @@ pub mod format;
 pub mod resume;
 
 pub use format::{Checkpoint, TensorMeta};
-pub use resume::{plan_model_init, plan_model_init_with, resume_bytes_per_node, ModelInitPlan};
+pub use resume::{
+    plan_model_init, plan_model_init_with, resume_bytes_per_node,
+    retained_resume_bytes_per_node, ModelInitPlan,
+};

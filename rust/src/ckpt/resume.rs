@@ -5,17 +5,23 @@
 //! resumption — the only part that touches remote storage, and the part
 //! BootSeer's striped HDFS-FUSE accelerates.
 
+use crate::artifact::transfer::{ProviderTier, TransferPlanner};
 use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
-use crate::hdfs::fuse::{plan_read, ReadEngine};
+use crate::hdfs::fuse::ReadEngine;
+use crate::image::loader::staged_of;
 use crate::sim::{ClusterSim, TaskId};
 
 /// Planned Model Initialization stage.
 pub struct ModelInitPlan {
     /// Per-node stage completion.
     pub node_done: Vec<TaskId>,
-    /// Bytes each node reads from HDFS during resume.
+    /// Bytes each node's full resume share holds (before any resident
+    /// credit — the logical shard size).
     pub read_bytes_per_node: u64,
+    /// Bytes actually read from HDFS across nodes, after subtracting
+    /// per-node resident credit (delta resume).
+    pub fetched_bytes: u64,
 }
 
 /// Checkpoint bytes each node must read: every DP replica loads a full
@@ -26,6 +32,16 @@ pub fn resume_bytes_per_node(job: &JobConfig, cluster: &ClusterConfig) -> u64 {
     job.ckpt_bytes / nodes_per_replica as u64
 }
 
+/// Resume-shard bytes still valid on a node after a rollback: the chunks
+/// training did not rewrite since the resident copy
+/// (`1 − CKPT_DELTA_CHANGED_FRACTION` of the shard). The one definition
+/// the delta-resume producers (the replay's warm-restart cache, the
+/// artifact sweep) and consumer (the shard-manifest credit) share.
+pub fn retained_resume_bytes_per_node(job: &JobConfig, cluster: &ClusterConfig) -> u64 {
+    let per_node = resume_bytes_per_node(job, cluster);
+    (per_node as f64 * (1.0 - d::CKPT_DELTA_CHANGED_FRACTION)) as u64
+}
+
 /// Plan Model Initialization for every node.
 pub fn plan_model_init(
     cs: &mut ClusterSim,
@@ -34,7 +50,7 @@ pub fn plan_model_init(
     deps: &[Vec<TaskId>],
     tag: u64,
 ) -> ModelInitPlan {
-    plan_model_init_with(cs, job, cfg, deps, None, tag)
+    plan_model_init_with(cs, job, cfg, deps, None, &[], tag)
 }
 
 /// [`plan_model_init`] with an optional early per-node gate for the
@@ -45,44 +61,58 @@ pub fn plan_model_init(
 /// nothing from the job environment — concurrent with env setup and rank
 /// launch, instead of chaining strictly after launch. `None` reproduces
 /// the paper-faithful chain bit-for-bit.
+///
+/// `prestaged[i]` (empty → none) is the resume-shard byte credit already
+/// resident on node `i` — a delta resume after a same-nodes restart
+/// re-reads only the chunks rewritten since the resident copy. Zero /
+/// empty credit is byte-identical to the full read.
 pub fn plan_model_init_with(
     cs: &mut ClusterSim,
     job: &JobConfig,
     cfg: &BootseerConfig,
     deps: &[Vec<TaskId>],
     read_gates: Option<&[TaskId]>,
+    prestaged: &[u64],
     tag: u64,
 ) -> ModelInitPlan {
     let n = cs.nodes();
     assert!(deps.is_empty() || deps.len() == n);
+    assert!(prestaged.is_empty() || prestaged.len() == n);
     if let Some(g) = read_gates {
         assert_eq!(g.len(), n);
     }
     let engine = if cfg.ckpt_striped { ReadEngine::Striped } else { ReadEngine::Sequential };
     let per_node = resume_bytes_per_node(job, &cs.cfg);
+    // Resume shards stream through the HDFS-FUSE tier of the transfer
+    // plane (sequential download-and-resume or BootSeer's striped engine).
+    let provider =
+        TransferPlanner::build(cs, "ckpt.resume", ProviderTier::HdfsStream(engine), 0, 0);
     let mut node_done = Vec::with_capacity(n);
+    let mut fetched = 0u64;
     for i in 0..n {
         let gate: &[TaskId] = if deps.is_empty() { &[] } else { &deps[i] };
+        let read_bytes = per_node.saturating_sub(staged_of(prestaged, i));
+        fetched += read_bytes;
         // Rank launch + parallel-group construction + RDMA setup.
         let base = cs.cpu_time(i, d::MODEL_INIT_BASE_S) + d::model_init_sync_s(n);
         let launched = cs.sim.delay(base, gate, 0);
         let done = match read_gates {
             // Checkpoint resumption through HDFS-FUSE, after launch.
             None => {
-                let resumed = plan_read(cs, i, per_node, engine, &[launched], 0);
+                let resumed = provider.fetch_u64(cs, i, read_bytes, &[launched], 0);
                 cs.sim.barrier(&[resumed], tag)
             }
             // Overlapped: the resume read streams from the early gate into
             // the page cache; the stage completes when launch AND read are
             // done (launch-side consumption of a cached file is free).
             Some(gates) => {
-                let resumed = plan_read(cs, i, per_node, engine, &[gates[i]], 0);
+                let resumed = provider.fetch_u64(cs, i, read_bytes, &[gates[i]], 0);
                 cs.sim.barrier(&[launched, resumed], tag)
             }
         };
         node_done.push(done);
     }
-    ModelInitPlan { node_done, read_bytes_per_node: per_node }
+    ModelInitPlan { node_done, read_bytes_per_node: per_node, fetched_bytes: fetched }
 }
 
 #[cfg(test)]
@@ -146,12 +176,51 @@ mod tests {
             &BootseerConfig::baseline(),
             &deps2,
             Some(&img),
+            &[],
             1,
         );
         cs2.sim.run();
         let t_ovl =
             plan2.node_done.iter().map(|&t| cs2.sim.finished_at(t)).fold(0.0, f64::max);
         assert!(t_ovl < t_chain, "overlapped {t_ovl} vs chained {t_chain}");
+    }
+
+    #[test]
+    fn resident_credit_shrinks_read_and_zero_credit_is_identical() {
+        let job = JobConfig::paper_moe(64);
+        let cluster = ClusterConfig::with_nodes(job.nodes(&ClusterConfig::default()));
+        let run = |credit: Option<u64>| {
+            let mut cs = ClusterSim::build(&cluster, 42);
+            let n = cs.nodes();
+            let staged: Vec<u64> = match credit {
+                Some(c) => vec![c; n],
+                None => Vec::new(),
+            };
+            let plan = plan_model_init_with(
+                &mut cs,
+                &job,
+                &BootseerConfig::bootseer(),
+                &[],
+                None,
+                &staged,
+                1,
+            );
+            cs.sim.run();
+            let t = plan.node_done.iter().map(|&t| cs.sim.finished_at(t)).fold(0.0, f64::max);
+            (t, plan.fetched_bytes, plan.read_bytes_per_node)
+        };
+        let (t_full, fetched_full, per_node) = run(None);
+        let (t_zero, fetched_zero, _) = run(Some(0));
+        assert_eq!(t_full.to_bits(), t_zero.to_bits(), "zero credit must be byte-identical");
+        assert_eq!(fetched_full, fetched_zero);
+        // Delta resume: 65% of the shard resident → strictly fewer bytes
+        // and a strictly faster stage.
+        let credit = (per_node as f64 * 0.65) as u64;
+        let (t_delta, fetched_delta, _) = run(Some(credit));
+        assert!(fetched_delta < fetched_full);
+        assert!(t_delta < t_full, "delta {t_delta} vs full {t_full}");
+        let n = job.nodes(&ClusterConfig::default()) as u64;
+        assert_eq!(fetched_delta, n * (per_node - credit));
     }
 
     #[test]

@@ -175,6 +175,24 @@ pub const CONTAINER_START_S: f64 = 3.0;
 /// set (~2 GB) plus the env cache archive (270 MB), small enough that the
 /// scheduler's allocation-phase dead time is not saturated by one job.
 pub const SPEC_PREFETCH_BUDGET_BYTES: u64 = 4 * GB;
+// ---- Artifact layer (content-addressed transfer plane) ----
+
+/// Chunking of the env snapshot archive in its artifact manifest (matches
+/// the image block size, so duplicated content lines up block-for-block).
+pub const ENV_SNAPSHOT_CHUNK_BYTES: u64 = 4 * MB;
+/// Fraction of env-snapshot chunks whose content duplicates blocks already
+/// present in the image's hot runtime region (installed site-packages
+/// overlapping libraries shipped in the image — the overlap the real-bytes
+/// blockstore measures). Exploited only under `bootseer.artifact_dedup`.
+pub const ENV_IMAGE_SHARED_FRACTION: f64 = 0.30;
+/// Chunking of a checkpoint resume shard in its artifact manifest.
+pub const CKPT_CHUNK_BYTES: u64 = 64 * MB;
+/// Fraction of a resume shard's chunks rewritten since a restarted
+/// attempt's locally resident copy (optimizer/param updates between the
+/// crash's rollback point and the resident snapshot). A delta resume
+/// (`bootseer.delta_resume`) refetches only these.
+pub const CKPT_DELTA_CHANGED_FRACTION: f64 = 0.35;
+
 /// Traditional OCI pull decompress+unpack throughput per node (bytes/s).
 /// Layer extraction is CPU-bound and single-streamed in containerd — the
 /// dominant cost of the OCI strawman and the reason flattened block images

@@ -270,6 +270,23 @@ impl JobConfig {
         (self.gpus + cluster.gpus_per_node - 1) / cluster.gpus_per_node
     }
 
+    /// Identity seed of the job's container image when run as `job_id`:
+    /// the explicit shared seed when set (cluster replay), else derived
+    /// per job id. The one definition the pipeline, the replay's identity
+    /// tables, and the artifact sweeps all share — artifact ids
+    /// (`artifact::ArtifactManifest::image_hot_id`) key off the image
+    /// this seed synthesizes.
+    pub fn image_identity_seed(&self, job_id: u64) -> u64 {
+        self.image_seed.unwrap_or(job_id ^ 0x1AA6E)
+    }
+
+    /// Identity seed of the job's runtime package set when run as
+    /// `job_id` (keys the environment cache and the env-snapshot
+    /// artifact id).
+    pub fn env_identity_seed(&self, job_id: u64) -> u64 {
+        self.env_seed.unwrap_or(job_id ^ 0x9AC5)
+    }
+
     pub fn from_doc(doc: &Doc) -> JobConfig {
         let base = JobConfig::default();
         JobConfig {
@@ -315,6 +332,16 @@ pub struct BootseerConfig {
     /// Per-node byte budget for speculative staging during Allocation
     /// (`OverlapMode::Speculative` only).
     pub spec_prefetch_budget_bytes: u64,
+    /// Cross-artifact dedup at the transfer plane: chunks whose content
+    /// digest already landed via another artifact (env-snapshot chunks
+    /// duplicating image blocks) are served from local disk instead of
+    /// being re-fetched. Off by default — the paper's system moves each
+    /// artifact independently.
+    pub artifact_dedup: bool,
+    /// Delta checkpoint resume: a warm restart that kept its nodes
+    /// re-fetches only the resume-shard chunks rewritten since the
+    /// resident copy, instead of the whole shard. Off by default.
+    pub delta_resume: bool,
 }
 
 impl BootseerConfig {
@@ -332,6 +359,8 @@ impl BootseerConfig {
             stripe_width: d::STRIPE_WIDTH,
             overlap: OverlapMode::Sequential,
             spec_prefetch_budget_bytes: d::SPEC_PREFETCH_BUDGET_BYTES,
+            artifact_dedup: false,
+            delta_resume: false,
         }
     }
 
@@ -385,6 +414,8 @@ impl BootseerConfig {
                     base.spec_prefetch_budget_bytes as i64,
                 )
                 .max(0) as u64,
+            artifact_dedup: doc.bool_or("bootseer.artifact_dedup", base.artifact_dedup),
+            delta_resume: doc.bool_or("bootseer.delta_resume", base.delta_resume),
         }
     }
 }
@@ -513,6 +544,25 @@ mod tests {
         // Both paper configurations default to the paper-faithful pipeline.
         assert_eq!(BootseerConfig::baseline().overlap, OverlapMode::Sequential);
         assert_eq!(BootseerConfig::bootseer().overlap, OverlapMode::Sequential);
+    }
+
+    #[test]
+    fn artifact_flags_default_off_and_parse() {
+        // Both paper configurations move artifacts independently.
+        assert!(!BootseerConfig::baseline().artifact_dedup);
+        assert!(!BootseerConfig::bootseer().artifact_dedup);
+        assert!(!BootseerConfig::bootseer().delta_resume);
+        let doc = Doc::parse(
+            r#"
+            [bootseer]
+            artifact_dedup = true
+            delta_resume = true
+            "#,
+        )
+        .unwrap();
+        let boot = BootseerConfig::from_doc(&doc);
+        assert!(boot.artifact_dedup);
+        assert!(boot.delta_resume);
     }
 
     #[test]

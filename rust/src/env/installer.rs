@@ -10,6 +10,7 @@
 //! first run (miss), everyone installs normally and node 0 additionally
 //! captures + uploads the cache for next time.
 
+use crate::artifact::transfer::{ProviderTier, TransferPlanner};
 use crate::config::defaults as d;
 use crate::config::{BootseerConfig, JobConfig};
 use crate::env::cache::EnvCacheRegistry;
@@ -28,6 +29,10 @@ pub struct EnvSetupPlan {
     pub cache_hit: bool,
     /// Task that finishes the cache capture+upload (first run only).
     pub cache_capture_done: Option<TaskId>,
+    /// Foreground ingress bytes across nodes: archive restore downloads
+    /// (after prestaged/resident credit) on a hit, package downloads on a
+    /// miss. The capture upload is egress and not counted.
+    pub fetched_bytes: u64,
 }
 
 impl EnvSetupPlan {
@@ -89,6 +94,13 @@ pub fn plan_env_setup_with(
         .clamp(0.0, 0.15);
 
     let mut rng = cs.rng.fork(0xE27);
+    // The two transports of this stage, both through the unified transfer
+    // plane: archive restores ride an HDFS group (one NameNode op each),
+    // package pulls ride the throttled SCM backend.
+    let restore =
+        TransferPlanner::build(cs, "env.restore", ProviderTier::Hdfs { nn_op: true }, 0, 0);
+    let scm = TransferPlanner::build(cs, "env.scm", ProviderTier::Scm, 0, 0);
+    let mut fetched = 0u64;
 
     for i in 0..n {
         let gate: &[TaskId] = if deps.is_empty() { &[] } else { &deps[i] };
@@ -96,16 +108,12 @@ pub fn plan_env_setup_with(
 
         let installed_end = if let Some(entry) = &cache_entry {
             // Restore: fetch archive from HDFS (round-robin group), unpack.
-            // Staged bytes (speculative prefetch) are already local.
+            // Staged bytes (speculative prefetch / resident chunks) are
+            // already local.
             let staged = staged_of(prestaged, i);
-            let group = cs.hdfs_group_of(i);
-            let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s, &[start], 0);
-            let dl = cs.sim.flow(
-                entry.compressed_bytes.saturating_sub(staged) as f64,
-                vec![group, cs.node_nic[i]],
-                &[nn],
-                0,
-            );
+            let dl_bytes = entry.compressed_bytes.saturating_sub(staged);
+            fetched += dl_bytes;
+            let dl = restore.fetch(cs, i, dl_bytes as f64, &[start], 0);
             let unpack_s =
                 cs.cpu_time(i, entry.compressed_bytes as f64 / d::ENV_CACHE_UNPACK_BPS);
             cs.sim.delay(unpack_s, &[dl], 0)
@@ -119,8 +127,8 @@ pub fn plan_env_setup_with(
                     prev = cs.sim.delay(backoff, &[prev], 0);
                 }
                 let admit = cs.sim.delay(cs.cpu_time(i, admit_s), &[prev], 0);
-                let dl =
-                    cs.sim.flow(p.bytes as f64, vec![cs.scm, cs.node_nic[i]], &[admit], 0);
+                fetched += p.bytes;
+                let dl = scm.fetch(cs, i, p.bytes as f64, &[admit], 0);
                 prev = cs.sim.delay(cs.cpu_time(i, p.install_cpu_s), &[dl], 0);
             }
             prev
@@ -157,7 +165,13 @@ pub fn plan_env_setup_with(
         cache_reg.store(sig, job.env_cache_bytes);
     }
 
-    EnvSetupPlan { node_done, install_span, cache_hit: hit, cache_capture_done }
+    EnvSetupPlan {
+        node_done,
+        install_span,
+        cache_hit: hit,
+        cache_capture_done,
+        fetched_bytes: fetched,
+    }
 }
 
 #[cfg(test)]
@@ -271,6 +285,26 @@ mod tests {
             spread_hit < spread_base / 3.0,
             "spread hit {spread_hit} vs base {spread_base}"
         );
+    }
+
+    #[test]
+    fn fetched_bytes_hit_miss_and_credit() {
+        let cfg = BootseerConfig::bootseer();
+        let (mut cs, pkgs, job) = setup(4);
+        let mut reg = EnvCacheRegistry::new();
+        let miss = plan_env_setup(&mut cs, &pkgs, &job, &cfg, &mut reg, &[], 1);
+        assert_eq!(miss.fetched_bytes, 4 * pkgs.total_bytes());
+        let (mut cs2, pkgs2, job2) = setup(4);
+        let hit = plan_env_setup(&mut cs2, &pkgs2, &job2, &cfg, &mut reg, &[], 1);
+        assert!(hit.cache_hit);
+        assert_eq!(hit.fetched_bytes, 4 * job2.env_cache_bytes);
+        // Full residency credit → zero restore bytes over the network.
+        let (mut cs3, pkgs3, job3) = setup(4);
+        let staged = vec![job3.env_cache_bytes; 4];
+        let zero =
+            plan_env_setup_with(&mut cs3, &pkgs3, &job3, &cfg, &mut reg, &[], &staged, 1);
+        assert!(zero.cache_hit);
+        assert_eq!(zero.fetched_bytes, 0);
     }
 
     #[test]

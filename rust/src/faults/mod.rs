@@ -19,7 +19,14 @@
 //! * **Warm-vs-cold restart** — whether the retry lands back on its
 //!   previous nodes ([`FaultConfig::relocate_prob`]): same nodes keep
 //!   their node-local warm state (staged image hot set, unpacked env), a
-//!   reschedule evicts it and the restart startup runs cold.
+//!   reschedule evicts it and the restart startup runs cold. The credit
+//!   is expressed as artifact residency: the replay hands the restart a
+//!   [`crate::artifact::CacheState`] holding the failed attempt's
+//!   materialized manifests (via
+//!   [`crate::startup::StartupContext::cache`]), and with
+//!   `bootseer.delta_resume` also the checkpoint-shard chunks the
+//!   rollback did not rewrite — so a warm restart re-fetches strictly
+//!   fewer bytes than its cold start.
 //! * **Single-node stragglers** — a startup drawn into the straggler fault
 //!   ([`FaultConfig::straggler_prob`]) runs its allocation with a badly
 //!   degraded node mixed in (the §3.3/§3.4 slow-node phenomenon, injected

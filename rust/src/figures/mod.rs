@@ -916,6 +916,214 @@ impl Fig14 {
     }
 }
 
+// ------------------------------------------ Artifact-layer scenarios --
+
+/// One scale point of the artifact-layer sweep: cold / warm / delta
+/// materialization of the same job's artifacts, plus the dedup variant.
+pub struct ArtifactPoint {
+    pub nodes: u32,
+    pub gpus: u32,
+    /// Worker-phase seconds: cold start, warm restart (hot set + env
+    /// archive resident), warm restart with delta resume.
+    pub cold_s: f64,
+    pub warm_s: f64,
+    pub delta_s: f64,
+    /// Foreground bytes fetched in each scenario (deterministic).
+    pub cold_bytes: u64,
+    pub warm_bytes: u64,
+    pub delta_bytes: u64,
+    /// Cold start with cross-artifact dedup on (env chunks shared with
+    /// the image hot set served locally).
+    pub dedup_bytes: u64,
+}
+
+impl ArtifactPoint {
+    pub fn warm_bytes_fraction(&self) -> f64 {
+        self.warm_bytes as f64 / self.cold_bytes.max(1) as f64
+    }
+
+    pub fn delta_bytes_fraction(&self) -> f64 {
+        self.delta_bytes as f64 / self.cold_bytes.max(1) as f64
+    }
+
+    pub fn dedup_bytes_fraction(&self) -> f64 {
+        self.dedup_bytes as f64 / self.cold_bytes.max(1) as f64
+    }
+}
+
+pub struct ArtifactSweep {
+    pub points: Vec<ArtifactPoint>,
+}
+
+/// Cold vs warm vs delta-resume materialization through the unified
+/// artifact layer, at 16 and 128 nodes. "Cold" is a warm-*world* startup
+/// (records + caches exist cluster-wide) on freshly allocated nodes;
+/// "warm" additionally holds the image hot set and env archive on every
+/// node's local disk (the same-nodes restart); "delta" also keeps the
+/// checkpoint-shard chunks the rollback did not rewrite. `reps` runs per
+/// cell, median seconds reported; byte counts are deterministic.
+pub fn artifact_sweep(reps: u32) -> ArtifactSweep {
+    use crate::artifact::manifest::ArtifactManifest;
+    use crate::artifact::CacheState;
+    use crate::ckpt::resume::retained_resume_bytes_per_node;
+    use crate::env::packages::PackageSet;
+    use crate::image::spec::ImageSpec;
+    use crate::startup::{run_startup_with, StartupContext};
+
+    let cluster = ClusterConfig::default();
+    let points = [16u32, 128]
+        .iter()
+        .map(|&nodes| {
+            let gpus = nodes * 8;
+            let job = JobConfig::paper_moe(gpus);
+            let img = ImageSpec::synth(
+                job.image_identity_seed(1),
+                job.image_bytes,
+                job.image_block_bytes,
+                job.image_hot_fraction,
+            );
+            let sig = PackageSet::synth(&job, job.env_identity_seed(1)).signature();
+            let retained = retained_resume_bytes_per_node(&job, &cluster);
+            let warm_cache = || {
+                let mut c = CacheState::new();
+                c.insert_shared_artifact(
+                    ArtifactManifest::image_hot_id(img.digest),
+                    img.hot_bytes(),
+                );
+                c.insert_shared_artifact(
+                    ArtifactManifest::env_snapshot_id(sig),
+                    job.env_cache_bytes,
+                );
+                c
+            };
+            let delta_cache = || {
+                let mut c = warm_cache();
+                c.insert_shared_artifact(ArtifactManifest::ckpt_shard_id(&job), retained);
+                c
+            };
+            // One measured cell: warm up the world (record + env cache),
+            // then run the scenario from the given cache state.
+            let cell = |cfg: &BootseerConfig, cache: CacheState, r: u32| {
+                let mut w = World::new();
+                run_startup(1, 0, &cluster, &job, cfg, &mut w, StartupKind::Full, 7 + r as u64);
+                run_startup_with(
+                    1,
+                    1,
+                    &cluster,
+                    &job,
+                    cfg,
+                    &mut w,
+                    StartupKind::Full,
+                    77 + r as u64,
+                    StartupContext { queue_s: 0.0, alloc_s: 2.0, cache },
+                )
+            };
+            let median = |mut xs: Vec<f64>| {
+                xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                xs[xs.len() / 2]
+            };
+            let boot = BootseerConfig::bootseer();
+            let delta_cfg = BootseerConfig { delta_resume: true, ..BootseerConfig::bootseer() };
+            let dedup_cfg =
+                BootseerConfig { artifact_dedup: true, ..BootseerConfig::bootseer() };
+            let mut cold_t = Vec::new();
+            let mut warm_t = Vec::new();
+            let mut delta_t = Vec::new();
+            let mut bytes = (0u64, 0u64, 0u64, 0u64);
+            for r in 0..reps.max(1) {
+                let cold = cell(&boot, CacheState::new(), r);
+                let warm = cell(&boot, warm_cache(), r);
+                let delta = cell(&delta_cfg, delta_cache(), r);
+                let dedup = cell(&dedup_cfg, CacheState::new(), r);
+                cold_t.push(cold.worker_phase_s);
+                warm_t.push(warm.worker_phase_s);
+                delta_t.push(delta.worker_phase_s);
+                bytes = (
+                    cold.fetched_bytes,
+                    warm.fetched_bytes,
+                    delta.fetched_bytes,
+                    dedup.fetched_bytes,
+                );
+            }
+            ArtifactPoint {
+                nodes,
+                gpus,
+                cold_s: median(cold_t),
+                warm_s: median(warm_t),
+                delta_s: median(delta_t),
+                cold_bytes: bytes.0,
+                warm_bytes: bytes.1,
+                delta_bytes: bytes.2,
+                dedup_bytes: bytes.3,
+            }
+        })
+        .collect();
+    ArtifactSweep { points }
+}
+
+impl ArtifactSweep {
+    pub fn render(&self) -> String {
+        let mut rows = vec![vec![
+            "nodes".to_string(),
+            "cold".to_string(),
+            "warm".to_string(),
+            "delta".to_string(),
+            "cold bytes".to_string(),
+            "warm bytes".to_string(),
+            "delta bytes".to_string(),
+            "dedup bytes".to_string(),
+        ]];
+        for p in &self.points {
+            rows.push(vec![
+                p.nodes.to_string(),
+                human::secs(p.cold_s),
+                human::secs(p.warm_s),
+                human::secs(p.delta_s),
+                human::bytes(p.cold_bytes),
+                human::bytes(p.warm_bytes),
+                human::bytes(p.delta_bytes),
+                human::bytes(p.dedup_bytes),
+            ]);
+        }
+        let ordered = self.points.iter().all(|p| {
+            p.delta_bytes < p.warm_bytes
+                && p.warm_bytes < p.cold_bytes
+                && p.dedup_bytes < p.cold_bytes
+        });
+        format!(
+            "{}warm and delta restarts re-fetch strictly fewer bytes; dedup serves shared chunks locally: {}\n",
+            human::table(&rows),
+            if ordered { "holds at every scale" } else { "VIOLATED — see table" }
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("nodes", p.nodes as u64)
+                    .set("gpus", p.gpus as u64)
+                    .set("cold_s", p.cold_s)
+                    .set("warm_s", p.warm_s)
+                    .set("delta_s", p.delta_s)
+                    .set("cold_bytes", p.cold_bytes)
+                    .set("warm_bytes", p.warm_bytes)
+                    .set("delta_bytes", p.delta_bytes)
+                    .set("dedup_bytes", p.dedup_bytes)
+                    .set("warm_bytes_fraction", p.warm_bytes_fraction())
+                    .set("delta_bytes_fraction", p.delta_bytes_fraction())
+                    .set("dedup_bytes_fraction", p.dedup_bytes_fraction());
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("points", Json::Arr(arr));
+        j
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1047,6 +1255,22 @@ mod tests {
             seq.wasted_fraction.to_bits(),
             "sweep reproducible bit-for-bit"
         );
+    }
+
+    #[test]
+    fn artifact_sweep_strictly_reduces_bytes() {
+        let f = artifact_sweep(1);
+        assert_eq!(f.points.len(), 2);
+        for p in &f.points {
+            assert!(p.warm_bytes < p.cold_bytes, "nodes={}", p.nodes);
+            assert!(p.delta_bytes < p.warm_bytes, "nodes={}", p.nodes);
+            assert!(p.dedup_bytes < p.cold_bytes, "nodes={}", p.nodes);
+            assert!(p.warm_s <= p.cold_s + 1e-9, "nodes={}", p.nodes);
+            assert!(p.delta_s <= p.warm_s + 1e-9, "nodes={}", p.nodes);
+            assert!(p.warm_bytes_fraction() < 1.0);
+            assert!(p.delta_bytes_fraction() < p.warm_bytes_fraction());
+        }
+        assert!(!f.render().is_empty());
     }
 
     #[test]

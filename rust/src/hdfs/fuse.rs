@@ -9,6 +9,11 @@
 //! `STRIPE_PARALLEL_STREAMS` chunk fetches in flight across many DataNode
 //! groups at once, streaming straight into the training process and
 //! overlapping local I/O with the HDFS transfer.
+//!
+//! These planners implement the HDFS provider tiers of the unified
+//! transfer plane ([`crate::artifact::transfer::ProviderTier`]): bulk
+//! group fetches (`Hdfs`) and whole-shard stream reads (`HdfsStream`)
+//! both resolve here, so no caller hand-builds HDFS flow paths anymore.
 
 use crate::config::defaults as d;
 use crate::hdfs::layout::StripeLayout;

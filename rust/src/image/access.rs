@@ -7,7 +7,7 @@
 //! the union of blocks observed within the record window — and prefetch
 //! exactly those before container start.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 /// One recorded block access.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -32,15 +32,30 @@ impl AccessRecorder {
         self.events.push(AccessEvent { block, t });
     }
 
-    /// Blocks first accessed within `window_s` of container start.
-    pub fn hot_blocks(&self, window_s: f64) -> Vec<u32> {
-        let mut seen = BTreeSet::new();
+    /// First-access time per block: the *minimum* `t` over the block's
+    /// events, never the first one encountered in vector order — recorder
+    /// events arrive out of order in production (per-thread buffers flush
+    /// independently), so position in `events` carries no meaning.
+    pub fn first_access(&self) -> BTreeMap<u32, f64> {
+        let mut first: BTreeMap<u32, f64> = BTreeMap::new();
         for e in &self.events {
-            if e.t <= window_s {
-                seen.insert(e.block);
+            let t = first.entry(e.block).or_insert(e.t);
+            if e.t < *t {
+                *t = e.t;
             }
         }
-        seen.into_iter().collect()
+        first
+    }
+
+    /// Blocks whose first access falls within `window_s` of container
+    /// start, sorted by block id. Robust to out-of-order event arrival:
+    /// membership depends only on each block's minimum recorded `t`.
+    pub fn hot_blocks(&self, window_s: f64) -> Vec<u32> {
+        self.first_access()
+            .into_iter()
+            .filter(|&(_, t)| t <= window_s)
+            .map(|(b, _)| b)
+            .collect()
     }
 }
 
@@ -120,6 +135,38 @@ mod tests {
         r.record(10, 200.0); // re-access outside window; already hot
         assert_eq!(r.hot_blocks(120.0), vec![10, 20]);
         assert_eq!(r.hot_blocks(1000.0), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn hot_blocks_robust_to_out_of_order_events() {
+        // Regression: per-thread recorder buffers flush out of order, so a
+        // block's earliest access can appear *after* a later re-access in
+        // the event vector. Membership must follow the minimum t.
+        let mut shuffled = AccessRecorder::new();
+        shuffled.record(5, 200.0); // late re-access arrives first
+        shuffled.record(5, 1.0); // the true first access
+        shuffled.record(9, 130.0); // genuinely outside the window
+        assert_eq!(shuffled.hot_blocks(120.0), vec![5]);
+        assert_eq!(*shuffled.first_access().get(&5).unwrap(), 1.0);
+
+        // Any permutation of the same events yields the same hot set.
+        let events = [(10u32, 50.0), (20, 3.0), (10, 0.5), (30, 119.9), (20, 121.0)];
+        let ordered = {
+            let mut r = AccessRecorder::new();
+            for &(b, t) in &events {
+                r.record(b, t);
+            }
+            r.hot_blocks(120.0)
+        };
+        let reversed = {
+            let mut r = AccessRecorder::new();
+            for &(b, t) in events.iter().rev() {
+                r.record(b, t);
+            }
+            r.hot_blocks(120.0)
+        };
+        assert_eq!(ordered, reversed);
+        assert_eq!(ordered, vec![10, 20, 30]);
     }
 
     #[test]

@@ -58,6 +58,31 @@ impl BlockStore {
         d
     }
 
+    /// Drop one reference to the block; frees the bytes when the last
+    /// reference goes. Returns `false` if the digest is not stored.
+    /// Accounting invariant (the artifact layer's dedup arithmetic relies
+    /// on it): `logical_bytes` falls by the block length on every
+    /// successful deref, `physical_bytes` only when the block is freed.
+    pub fn remove(&mut self, d: &BlockDigest) -> bool {
+        let Some((data, rc)) = self.blocks.get_mut(d) else {
+            return false;
+        };
+        let len = data.len() as u64;
+        self.logical_bytes -= len;
+        if *rc > 1 {
+            *rc -= 1;
+        } else {
+            self.blocks.remove(d);
+            self.physical_bytes -= len;
+        }
+        true
+    }
+
+    /// Current reference count of a block (0 if absent).
+    pub fn refcount(&self, d: &BlockDigest) -> u64 {
+        self.blocks.get(d).map(|(_, rc)| *rc).unwrap_or(0)
+    }
+
     pub fn get(&self, d: &BlockDigest) -> Option<&[u8]> {
         self.blocks.get(d).map(|(v, _)| v.as_slice())
     }
@@ -146,6 +171,65 @@ mod tests {
         assert_eq!(ds.len(), 8);
         assert_eq!(s.n_blocks(), 1);
         assert!(s.dedup_ratio() > 7.9);
+    }
+
+    #[test]
+    fn remove_pins_refcount_and_physical_accounting() {
+        let mut s = BlockStore::new();
+        let a = s.put(b"shared-block"); // 12 bytes, rc=1
+        let _ = s.put(b"shared-block"); // rc=2
+        let b = s.put(b"loner"); // 5 bytes, rc=1
+        assert_eq!(s.refcount(&a), 2);
+        assert_eq!((s.logical_bytes, s.physical_bytes), (29, 17));
+
+        // Deref the shared block: logical falls, physical stays (one
+        // reference remains), content still readable.
+        assert!(s.remove(&a));
+        assert_eq!(s.refcount(&a), 1);
+        assert_eq!((s.logical_bytes, s.physical_bytes), (17, 17));
+        assert_eq!(s.get(&a), Some(b"shared-block".as_slice()));
+
+        // Last deref frees the bytes.
+        assert!(s.remove(&a));
+        assert_eq!(s.refcount(&a), 0);
+        assert_eq!(s.get(&a), None);
+        assert_eq!((s.logical_bytes, s.physical_bytes), (5, 5));
+        assert_eq!(s.n_blocks(), 1);
+
+        // Removing an absent digest is a no-op.
+        assert!(!s.remove(&a));
+        assert_eq!((s.logical_bytes, s.physical_bytes), (5, 5));
+
+        // Re-putting freed content starts a fresh refcount.
+        let a2 = s.put(b"shared-block");
+        assert_eq!(a2, a);
+        assert_eq!(s.refcount(&a2), 1);
+        assert!((s.dedup_ratio() - 1.0).abs() < 1e-12);
+        assert!(s.remove(&b));
+        assert_eq!(s.n_blocks(), 1);
+    }
+
+    #[test]
+    fn prop_put_remove_roundtrip_restores_accounting() {
+        prop_check(24, |g| {
+            let mut s = BlockStore::new();
+            let n = g.usize_in(1, 40);
+            let mut digests = Vec::new();
+            for _ in 0..n {
+                // Small alphabet forces dedup collisions.
+                let len = g.usize_in(1, 64);
+                let byte = g.u64_in(0, 3) as u8;
+                digests.push(s.put(&vec![byte; len]));
+            }
+            prop_assert!(s.physical_bytes <= s.logical_bytes);
+            for d in &digests {
+                prop_assert!(s.remove(d));
+            }
+            prop_assert!(s.logical_bytes == 0, "logical {}", s.logical_bytes);
+            prop_assert!(s.physical_bytes == 0, "physical {}", s.physical_bytes);
+            prop_assert!(s.n_blocks() == 0);
+            Ok(())
+        });
     }
 
     #[test]

@@ -14,11 +14,15 @@
 //!
 //! Planners return one completion `TaskId` per node (stage end), plus the
 //! background-streaming ids so tests can assert they don't gate the stage.
+//! All bulk bytes move through the unified transfer plane
+//! ([`crate::artifact::transfer`]): each engine picks a [`ProviderTier`]
+//! (registry swarm, cache swarm, plain cache/registry egress) instead of
+//! hand-building its own pools and flow paths.
 
+use crate::artifact::transfer::{ProviderTier, TransferPlanner};
 use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ImageMode};
 use crate::image::access::HotSetRegistry;
-use crate::image::p2p::Swarm;
 use crate::image::spec::ImageSpec;
 use crate::sim::{ClusterSim, TaskId};
 
@@ -31,6 +35,11 @@ pub struct ImageLoadPlan {
     pub background: Vec<TaskId>,
     /// Bytes each node pulled before container start (for reporting).
     pub foreground_bytes_per_node: u64,
+    /// Total foreground bytes the stage actually fetched over the network,
+    /// summed across nodes — i.e. after subtracting prestaged/resident
+    /// credit. Background cold-tail streaming is not included (it never
+    /// gates the stage).
+    pub fetched_bytes: u64,
 }
 
 /// Plan the image loading stage for every node of a job.
@@ -103,30 +112,16 @@ fn plan_oci_full(
 ) -> ImageLoadPlan {
     let n = cs.nodes();
     let mut node_done = Vec::with_capacity(n);
+    let mut fetched = 0u64;
     // One download per node crosses the pool; scoped so the pool's slot is
     // recycled once the last node's pull completes.
-    let swarm = if cfg.p2p {
-        Some(Swarm::build_scoped(
-            &mut cs.sim,
-            "img.swarm",
-            cs.cfg.registry_egress_bps,
-            n as u32,
-            cs.cfg.node_nic_bps,
-            n as u32,
-        ))
-    } else {
-        None
-    };
+    let tier = if cfg.p2p { ProviderTier::RegistrySwarm } else { ProviderTier::Registry };
+    let provider = TransferPlanner::build(cs, "img.swarm", tier, n as u32, n as u32);
     for i in 0..n {
         let gate = dep_of(deps, i);
-        let bytes = img.total_bytes.saturating_sub(staged_of(prestaged, i)) as f64;
-        let dl = match &swarm {
-            Some(sw) => sw.download(&mut cs.sim, bytes, cs.node_nic[i], gate, 0),
-            None => {
-                let path = vec![cs.registry, cs.node_nic[i], cs.node_disk[i]];
-                cs.sim.flow(bytes, path, gate, 0)
-            }
-        };
+        let bytes = img.total_bytes.saturating_sub(staged_of(prestaged, i));
+        fetched += bytes;
+        let dl = provider.fetch(cs, i, bytes as f64, gate, 0);
         // Layered-OCI decompress + unpack: CPU-bound, ~180 MB/s per node
         // (always over the full image; staged bytes still need unpacking).
         let unpack = cs
@@ -135,7 +130,12 @@ fn plan_oci_full(
         let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), &[unpack], tag);
         node_done.push(start);
     }
-    ImageLoadPlan { node_done, background: Vec::new(), foreground_bytes_per_node: img.total_bytes }
+    ImageLoadPlan {
+        node_done,
+        background: Vec::new(),
+        foreground_bytes_per_node: img.total_bytes,
+        fetched_bytes: fetched,
+    }
 }
 
 fn plan_lazy(
@@ -147,7 +147,8 @@ fn plan_lazy(
 ) -> ImageLoadPlan {
     let n = cs.nodes();
     let hot_blocks = img.startup_access.len() as u32;
-    let hot_bytes = img.hot_bytes() as f64;
+    let hot_total = img.hot_bytes();
+    let hot_bytes = hot_total as f64;
     let batches = ((hot_blocks + d::LAZY_MISS_BATCH_BLOCKS - 1) / d::LAZY_MISS_BATCH_BLOCKS).max(1);
     let blocks_per_batch = hot_blocks as f64 / batches as f64;
     let bytes_per_batch = hot_bytes / batches as f64;
@@ -156,6 +157,9 @@ fn plan_lazy(
     // out) block cache's instance count catches up.
     let contention = 1.0 + d::LAZY_CONTENTION_PENALTY * ((n as f64 - 1.0).min(31.0));
     let mut node_done = Vec::with_capacity(n);
+    let mut fetched = 0u64;
+    // On-demand misses are served by the cluster block cache.
+    let provider = TransferPlanner::build(cs, "img.lazy", ProviderTier::ClusterCache, 0, 0);
     for i in 0..n {
         // Staged bytes are already local, so that fraction of the startup
         // reads never faults (a multiply by exactly 1.0 when nothing is
@@ -165,6 +169,7 @@ fn plan_lazy(
         } else {
             1.0
         };
+        fetched += hot_total.saturating_sub(staged_of(prestaged, i));
         // Container starts immediately against the lazy mount...
         let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), dep_of(deps, i), 0);
         // ...then faults in the hot set: `batches` sequential miss bursts.
@@ -173,8 +178,7 @@ fn plan_lazy(
             let miss_lat =
                 cs.cpu_time(i, d::LAZY_MISS_LATENCY_S) * blocks_per_batch * contention * frac;
             let lat = cs.sim.delay(miss_lat, &[prev], 0);
-            let path = vec![cs.cache, cs.node_nic[i]];
-            prev = cs.sim.flow(bytes_per_batch * frac, path, &[lat], 0);
+            prev = provider.fetch(cs, i, bytes_per_batch * frac, &[lat], 0);
         }
         // Stage ends when startup reads are all served.
         node_done.push(cs.sim.barrier(&[prev], tag));
@@ -182,7 +186,8 @@ fn plan_lazy(
     ImageLoadPlan {
         node_done,
         background: Vec::new(),
-        foreground_bytes_per_node: img.hot_bytes(),
+        foreground_bytes_per_node: hot_total,
+        fetched_bytes: fetched,
     }
 }
 
@@ -204,30 +209,16 @@ fn plan_prefetch(
     // one background stream — the pool's exact flow count, after which its
     // slot is recycled.
     let swarm_uses = n as u32 + if cold_bytes > 0 { n as u32 } else { 0 };
-    let swarm = if cfg.p2p {
-        Some(Swarm::build_scoped(
-            &mut cs.sim,
-            "img.prefetch.swarm",
-            cs.cfg.cluster_cache_egress_bps,
-            n as u32,
-            cs.cfg.node_nic_bps,
-            swarm_uses,
-        ))
-    } else {
-        None
-    };
+    let tier = if cfg.p2p { ProviderTier::CacheSwarm } else { ProviderTier::ClusterCache };
+    let provider = TransferPlanner::build(cs, "img.prefetch.swarm", tier, n as u32, swarm_uses);
     let mut node_done = Vec::with_capacity(n);
     let mut background = Vec::with_capacity(n);
+    let mut fetched = 0u64;
     for i in 0..n {
         let gate = dep_of(deps, i);
-        let fg_bytes = hot_bytes.saturating_sub(staged_of(prestaged, i)) as f64;
-        let prefetch = match &swarm {
-            Some(sw) => sw.download(&mut cs.sim, fg_bytes, cs.node_nic[i], gate, 0),
-            None => {
-                let path = vec![cs.cache, cs.node_nic[i]];
-                cs.sim.flow(fg_bytes, path, gate, 0)
-            }
-        };
+        let fg_bytes = hot_bytes.saturating_sub(staged_of(prestaged, i));
+        fetched += fg_bytes;
+        let prefetch = provider.fetch(cs, i, fg_bytes as f64, gate, 0);
         let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), &[prefetch], tag);
         node_done.push(start);
         // Cold blocks stream in the background after container start. The
@@ -236,19 +227,15 @@ fn plan_prefetch(
         // rate the fair-share engine bounds via pool + NIC. It must NOT
         // gate `node_done`.
         if cold_bytes > 0 {
-            let bg = match &swarm {
-                Some(sw) => {
-                    sw.download(&mut cs.sim, cold_bytes as f64, cs.node_nic[i], &[start], 0)
-                }
-                None => {
-                    let path = vec![cs.cache, cs.node_nic[i]];
-                    cs.sim.flow(cold_bytes as f64, path, &[start], 0)
-                }
-            };
-            background.push(bg);
+            background.push(provider.fetch(cs, i, cold_bytes as f64, &[start], 0));
         }
     }
-    ImageLoadPlan { node_done, background, foreground_bytes_per_node: hot_bytes }
+    ImageLoadPlan {
+        node_done,
+        background,
+        foreground_bytes_per_node: hot_bytes,
+        fetched_bytes: fetched,
+    }
 }
 
 #[cfg(test)]
@@ -386,6 +373,39 @@ mod tests {
             let (t_half, _) = run_stage(&mut cs2, &plan2);
             assert!(t_half < t_full, "{}: {t_half} vs {t_full}", cfg.image_mode.name());
         }
+    }
+
+    #[test]
+    fn fetched_bytes_counts_foreground_after_credit() {
+        let (mut cs, img, reg) = setup(4);
+        let plan = plan_image_load(&mut cs, &img, &BootseerConfig::bootseer(), &reg, &[], 1);
+        assert_eq!(plan.fetched_bytes, 4 * img.hot_bytes());
+        // Prestaged credit shrinks the fetch, per node.
+        let (mut cs2, img2, reg2) = setup(4);
+        let staged = vec![img2.hot_bytes() / 2; 4];
+        let plan2 = plan_image_load_with(
+            &mut cs2,
+            &img2,
+            &BootseerConfig::bootseer(),
+            &reg2,
+            &[],
+            &staged,
+            1,
+        );
+        assert_eq!(plan2.fetched_bytes, 4 * (img2.hot_bytes() - img2.hot_bytes() / 2));
+        // The lazy engine accounts the same way.
+        let (mut cs3, img3, reg3) = setup(2);
+        let staged3 = vec![img3.hot_bytes(); 2];
+        let plan3 = plan_image_load_with(
+            &mut cs3,
+            &img3,
+            &BootseerConfig::baseline(),
+            &reg3,
+            &[],
+            &staged3,
+            1,
+        );
+        assert_eq!(plan3.fetched_bytes, 0);
     }
 
     #[test]

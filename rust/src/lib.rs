@@ -16,12 +16,17 @@
 //!   `xla` crate is not in the offline crate set; the default build is
 //!   dependency-free.
 //!
+//! All three mitigations move bytes through one content-addressed
+//! [`artifact`] layer (manifests, per-node cache state, a tiered transfer
+//! planner) — see `docs/artifact_layer.md`.
+//!
 //! The cluster-scale evaluation path is [`trace`]: a synthetic production
 //! week scheduled over a finite GPU pool by [`scheduler`], then replayed
 //! startup-by-startup (in parallel, contention-aware) through [`startup`].
 //! See `README.md` for the module map and `docs/replay.md` for the replay
 //! engine's design.
 
+pub mod artifact;
 pub mod ckpt;
 pub mod config;
 pub mod env;

@@ -32,10 +32,11 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: bootseer <figures|startup|trace|train|version> [options]\n\
-                 \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14,16) + overlap sweep\
-                 \n  startup --gpus N [--bootseer] [--hot-update] [--overlap sequential|overlapped|speculative] [--seed S]\
+                 \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14,16) + overlap/artifact sweeps\
+                 \n  startup --gpus N [--bootseer] [--hot-update] [--overlap sequential|overlapped|speculative]\
+                 \n          [--dedup] [--delta-resume] [--seed S]\
                  \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--bootseer] [--overlap M]\
-                 \n          [--faults off|paper|storm|k=v,...] [--no-replay]\
+                 \n          [--dedup] [--delta-resume] [--faults off|paper|storm|k=v,...] [--no-replay]\
                  \n  train   [--steps N] [--artifacts DIR] [--seed S]   (pjrt feature)"
             );
             2
@@ -58,6 +59,17 @@ fn overlap_opt(rest: &[String]) -> Result<OverlapMode, String> {
         None => Ok(OverlapMode::Sequential),
         Some(s) => OverlapMode::parse(&s)
             .ok_or_else(|| format!("bad --overlap {s:?} (sequential|overlapped|speculative)")),
+    }
+}
+
+/// Artifact-layer feature flags shared by `startup` and `trace`:
+/// `--dedup` (cross-artifact dedup) and `--delta-resume` (delta
+/// checkpoint resume on warm restarts).
+fn artifact_flags(rest: &[String], base: BootseerConfig) -> BootseerConfig {
+    BootseerConfig {
+        artifact_dedup: base.artifact_dedup || flag(rest, "--dedup"),
+        delta_resume: base.delta_resume || flag(rest, "--delta-resume"),
+        ..base
     }
 }
 
@@ -108,6 +120,9 @@ fn cmd_figures(rest: &[String]) -> i32 {
     let ov = figures::overlap_sweep(3);
     println!("-- Overlap-mode sweep (stage graph) --\n{}", ov.render());
     save("overlap", ov.to_json());
+    let fa = figures::artifact_sweep(1);
+    println!("-- Artifact-layer sweep (cold/warm/delta/dedup) --\n{}", fa.render());
+    save("artifact", fa.to_json());
     let fw = figures::wasted_gpu_time_sweep(
         figures::FAULTS_SWEEP_SEED,
         figures::FAULTS_SWEEP_JOBS,
@@ -131,7 +146,7 @@ fn cmd_startup(rest: &[String]) -> i32 {
         }
     };
     let base = if boot { BootseerConfig::bootseer() } else { BootseerConfig::baseline() };
-    let cfg = BootseerConfig { overlap, ..base };
+    let cfg = artifact_flags(rest, BootseerConfig { overlap, ..base });
     let job = JobConfig::paper_moe(gpus);
     let cluster = ClusterConfig::default();
     let mut world = World::new();
@@ -231,7 +246,7 @@ fn cmd_trace(rest: &[String]) -> i32 {
     let r = replay_cluster(
         &t,
         &ClusterConfig::default(),
-        &BootseerConfig { overlap, ..base },
+        &artifact_flags(rest, BootseerConfig { overlap, ..base }),
         seed,
         &ReplayOptions { pool_gpus, threads, faults },
     );

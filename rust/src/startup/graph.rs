@@ -4,12 +4,20 @@
 //! signatures, composed by hand-written barrier plumbing in `pipeline.rs`.
 //! Here each subsystem instead implements [`StagePlanner`]: it declares its
 //! profiler [`Stage`], how it attaches to the stage before it
-//! ([`EdgeKind`], per [`OverlapMode`]), optionally what it could usefully
-//! pre-stage during the Allocation phase ([`SpecRequest`]), and how to lay
-//! its per-node tasks onto the fluid sim. [`StageGraph::compile`] turns an
-//! ordered set of planners into one task DAG and returns a
+//! ([`EdgeKind`], per [`OverlapMode`]), which content-addressed artifacts
+//! it moves ([`ArtifactDecl`] — manifests, not byte counts), and how to
+//! lay its per-node tasks onto the fluid sim. [`StageGraph::compile`]
+//! turns an ordered set of planners into one task DAG and returns a
 //! [`CompiledGraph`] from which the pipeline emits events and spans
 //! uniformly.
+//!
+//! The artifact declarations collapse what used to be three parallel byte
+//! side channels into one: speculative staging (`Speculative` mode moves a
+//! budget-bounded prefix of each stage-ahead manifest during Allocation),
+//! warm-restart credit (bytes already resident per the caller's
+//! [`CacheState`]), and cross-artifact dedup (chunks whose content landed
+//! via an earlier stage's manifest) are all just "what's already in the
+//! cache" by the time a stage plans its foreground fetch.
 //!
 //! The three gating disciplines (see `docs/stage_graph.md`):
 //!
@@ -26,8 +34,10 @@
 //!   the stage gates on its staging flow (no free lunch: the bytes still
 //!   cross the same pipes, just during the scheduler's dead time).
 
+use crate::artifact::cache::CacheState;
+use crate::artifact::manifest::ArtifactManifest;
+use crate::artifact::transfer::{ProviderTier, TransferPlanner};
 use crate::config::OverlapMode;
-use crate::image::p2p::Swarm;
 use crate::profiler::events::Stage;
 use crate::sim::{ClusterSim, TaskId};
 use crate::startup::World;
@@ -45,27 +55,22 @@ pub enum EdgeKind {
     Entry,
 }
 
-/// Where speculative staging pulls its bytes from. Each variant mirrors
-/// the transport the requesting stage itself would use for the same
-/// bytes, so staged bytes never move slower than the in-stage fetch they
-/// replace — the structural guarantee behind Overlapped ≥ Speculative.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SpecSource {
-    /// P2P swarm fed by the cluster cache (image hot set with `p2p` on) —
-    /// the transport `plan_prefetch` uses in-stage.
-    CacheSwarm,
-    /// Plain cluster-cache egress (image hot set with `p2p` off).
-    ClusterCache,
-    /// An HDFS DataNode group, round-robin by node (env cache archive) —
-    /// the same group the restore download would hit.
-    Hdfs,
-}
-
-/// A stage's request for speculative staging during Allocation.
-#[derive(Clone, Copy, Debug)]
-pub struct SpecRequest {
-    pub bytes_per_node: u64,
-    pub source: SpecSource,
+/// One artifact a stage moves, declared to the graph as a manifest plus
+/// the transport its bytes would ride if staged ahead of time.
+#[derive(Clone, Debug)]
+pub struct ArtifactDecl {
+    pub manifest: ArtifactManifest,
+    /// Transport for staging this artifact during Allocation. Mirrors the
+    /// transport the stage itself would use for the same bytes, so staged
+    /// bytes never move slower than the in-stage fetch they replace — the
+    /// structural guarantee behind Overlapped ≥ Speculative.
+    pub tier: ProviderTier,
+    /// Eligible for speculative staging during Allocation (`Speculative`
+    /// mode). At most one stage-ahead artifact per stage.
+    pub stage_ahead: bool,
+    /// Resident bytes of this manifest are credited against the stage's
+    /// foreground fetch (background-only artifacts set `false`).
+    pub credit: bool,
 }
 
 /// What a planner laid down for its stage.
@@ -75,13 +80,18 @@ pub struct PlannedStage {
     /// Sub-stage spans to report (e.g. InstallScript inside EnvSetup):
     /// per-node `(begin, end)` task pairs.
     pub sub_spans: Vec<(Stage, Vec<(TaskId, TaskId)>)>,
+    /// Foreground bytes the stage fetched over the network, across nodes
+    /// (after resident credit).
+    pub fetched_bytes: u64,
 }
 
 /// Inputs the graph hands a planner when compiling its stage.
 pub struct StageInputs<'a> {
     /// Per-node gate tasks this stage must respect.
     pub deps: &'a [Vec<TaskId>],
-    /// Bytes already staged per node during Allocation (empty → none).
+    /// Bytes already locally resident per node (empty → none): the sum of
+    /// speculative staging and cache-resident credit for this stage's
+    /// credited artifacts. Consumers subtract with saturation.
     pub prestaged: &'a [u64],
     /// `(stage, per-node done)` of every stage already compiled, in graph
     /// order — planners pull custom overlap edges from here.
@@ -106,11 +116,14 @@ pub trait StagePlanner {
     /// How this stage attaches to the stage before it, per overlap mode.
     fn edge(&self, mode: OverlapMode) -> EdgeKind;
 
-    /// Bytes this stage would pre-stage per node during the Allocation
-    /// phase (`Speculative` mode). `None` → nothing useful to stage.
-    fn spec_request(&self, world: &World) -> Option<SpecRequest> {
-        let _ = world;
-        None
+    /// The content-addressed artifacts this stage moves. Empty (the
+    /// default) → nothing to stage ahead, nothing to credit. `dedup` says
+    /// whether the graph's cross-artifact dedup plane is on: chunk lists
+    /// are only walked then, so planners may skip materializing manifests
+    /// whose chunks have no other consumer.
+    fn artifacts(&self, world: &World, dedup: bool) -> Vec<ArtifactDecl> {
+        let _ = (world, dedup);
+        Vec::new()
     }
 
     /// Lay the stage's tasks onto the sim.
@@ -141,8 +154,10 @@ pub struct CompiledStage {
     pub begin_gate: Vec<TaskId>,
     pub node_done: Vec<TaskId>,
     pub sub_spans: Vec<(Stage, Vec<(TaskId, TaskId)>)>,
-    /// Bytes staged per node during Allocation (empty → none).
+    /// Bytes credited per node (staging + cache residency; empty → none).
     pub prestaged: Vec<u64>,
+    /// Foreground bytes the stage fetched over the network, across nodes.
+    pub fetched_bytes: u64,
 }
 
 /// The compiled graph.
@@ -151,11 +166,20 @@ pub struct CompiledGraph {
     pub stages: Vec<CompiledStage>,
     /// Completion of the whole graph (every node of the final stage).
     pub done: TaskId,
+    /// Bytes moved by speculative staging flows during Allocation, across
+    /// stages and nodes (0 outside `Speculative` mode).
+    pub staged_bytes: u64,
 }
 
 impl CompiledGraph {
     pub fn stage(&self, s: Stage) -> Option<&CompiledStage> {
         self.stages.iter().find(|c| c.stage == s)
+    }
+
+    /// Total foreground bytes fetched over the network: per-stage fetches
+    /// plus the speculative staging flows.
+    pub fn fetched_bytes(&self) -> u64 {
+        self.staged_bytes + self.stages.iter().map(|c| c.fetched_bytes).sum::<u64>()
     }
 }
 
@@ -166,20 +190,30 @@ pub struct StageGraph<'p> {
     mode: OverlapMode,
     /// Per-node speculative staging budget, bytes (`Speculative` only).
     budget: u64,
+    /// Cross-artifact dedup: materialized manifests feed the run cache so
+    /// later stages can credit shared content chunks.
+    dedup: bool,
 }
 
 impl<'p> StageGraph<'p> {
     pub fn new(mode: OverlapMode, budget: u64) -> StageGraph<'p> {
-        StageGraph { planners: Vec::new(), mode, budget }
+        StageGraph { planners: Vec::new(), mode, budget, dedup: false }
     }
 
     pub fn add(&mut self, planner: Box<dyn StagePlanner + 'p>) {
         self.planners.push(planner);
     }
 
-    /// Compile every stage onto the sim. `entry[i]` gates node `i`'s first
-    /// stage (allocation complete); `grants[i]` (Speculative mode) is the
-    /// task marking node `i`'s allocation grant, where staging flows start.
+    /// Enable cross-artifact dedup at the transfer plane
+    /// (`bootseer.artifact_dedup`).
+    pub fn set_dedup(&mut self, on: bool) {
+        self.dedup = on;
+    }
+
+    /// Compile every stage onto the sim with nothing resident. `entry[i]`
+    /// gates node `i`'s first stage (allocation complete); `grants[i]`
+    /// (Speculative mode) is the task marking node `i`'s allocation grant,
+    /// where staging flows start.
     pub fn compile(
         &mut self,
         cs: &mut ClusterSim,
@@ -187,41 +221,66 @@ impl<'p> StageGraph<'p> {
         entry: &[Vec<TaskId>],
         grants: Option<&[TaskId]>,
     ) -> CompiledGraph {
-        self.compile_with(cs, world, entry, grants, &[])
+        self.compile_cached(cs, world, entry, grants, &CacheState::new())
     }
 
-    /// [`Self::compile`] with per-stage bytes already resident on every
-    /// node's local disk (`local`): a warm restart that lands back on its
-    /// previous nodes still holds the staged image hot set and the
-    /// environment archive locally, so those bytes are credited against
-    /// each stage's foreground fetch without any staging flow (they never
-    /// cross the network again). An empty `local` compiles identically to
+    /// [`Self::compile`] against a [`CacheState`] of already-resident
+    /// chunks: a warm restart that lands back on its previous nodes still
+    /// holds the staged image hot set, the environment archive, and (with
+    /// delta resume) most of its checkpoint shard locally, so those bytes
+    /// are credited against each stage's foreground fetch without any
+    /// extra flow. An empty cache compiles identically to
     /// [`Self::compile`].
-    pub fn compile_with(
+    ///
+    /// One deliberate exception: in `Speculative` mode the Allocation-time
+    /// staging pass still moves its budget-bounded prefix regardless of
+    /// residency (the grant-time stager has no view of node-local disks
+    /// yet), exactly as the pre-refactor pipeline did — the residency
+    /// credit then covers only bytes *beyond* that staged prefix, so
+    /// nothing is ever credited twice.
+    pub fn compile_cached(
         &mut self,
         cs: &mut ClusterSim,
         world: &mut World,
         entry: &[Vec<TaskId>],
         grants: Option<&[TaskId]>,
-        local: &[(Stage, u64)],
+        cache: &CacheState,
     ) -> CompiledGraph {
         let n = cs.nodes();
         assert_eq!(entry.len(), n, "one entry gate set per node");
         assert!(!self.planners.is_empty(), "graph has at least one stage");
 
+        // Artifact declarations, one immutable pass before any planning.
+        let decls: Vec<Vec<ArtifactDecl>> =
+            self.planners.iter().map(|p| p.artifacts(world, self.dedup)).collect();
+
+        // Run-local residency: starts from the caller's warm state; with
+        // dedup on, stages insert their materialized manifests as they
+        // compile so downstream stages can credit shared content.
+        let mut run_cache = cache.clone();
+
         // ---- Speculative staging during Allocation ----
         // For each planner: (bytes staged per node, staging task per node).
         let mut staged: Vec<Option<(Vec<u64>, Vec<TaskId>)>> =
             (0..self.planners.len()).map(|_| None).collect();
+        let mut staged_bytes_total = 0u64;
         if self.mode == OverlapMode::Speculative {
             if let Some(grants) = grants {
                 assert_eq!(grants.len(), n, "one grant per node");
                 let mut remaining = vec![self.budget; n];
-                for (k, p) in self.planners.iter().enumerate() {
-                    let Some(req) = p.spec_request(world) else { continue };
+                for (k, decl_list) in decls.iter().enumerate() {
+                    let Some(a) = decl_list.iter().find(|a| a.stage_ahead) else { continue };
+                    debug_assert!(
+                        decl_list.iter().filter(|a| a.stage_ahead).count() <= 1,
+                        "at most one stage-ahead artifact per stage"
+                    );
+                    let total = a.manifest.total_bytes();
+                    if total == 0 {
+                        continue;
+                    }
                     let bytes_v: Vec<u64> = (0..n)
                         .map(|i| {
-                            let b = req.bytes_per_node.min(remaining[i]);
+                            let b = total.min(remaining[i]);
                             remaining[i] -= b;
                             b
                         })
@@ -233,18 +292,8 @@ impl<'p> StageGraph<'p> {
                     // through the pool; scope it to exactly that count so
                     // its slot recycles after the staging wave.
                     let stagers = bytes_v.iter().filter(|&&b| b > 0).count() as u32;
-                    let swarm = if req.source == SpecSource::CacheSwarm {
-                        Some(Swarm::build_scoped(
-                            &mut cs.sim,
-                            "spec.swarm",
-                            cs.cfg.cluster_cache_egress_bps,
-                            n as u32,
-                            cs.cfg.node_nic_bps,
-                            stagers,
-                        ))
-                    } else {
-                        None
-                    };
+                    let provider =
+                        TransferPlanner::build(cs, "spec.swarm", a.tier, n as u32, stagers);
                     let task_v: Vec<TaskId> = (0..n)
                         .map(|i| {
                             if bytes_v[i] == 0 {
@@ -252,24 +301,10 @@ impl<'p> StageGraph<'p> {
                                 // never joined (the join checks bytes > 0).
                                 return grants[i];
                             }
-                            let b = bytes_v[i] as f64;
-                            match (req.source, &swarm) {
-                                (SpecSource::CacheSwarm, Some(sw)) => {
-                                    sw.download(&mut cs.sim, b, cs.node_nic[i], &[grants[i]], 0)
-                                }
-                                (SpecSource::Hdfs, _) => {
-                                    let g = cs.hdfs_group_of(i);
-                                    cs.sim.flow(b, vec![g, cs.node_nic[i]], &[grants[i]], 0)
-                                }
-                                _ => cs.sim.flow(
-                                    b,
-                                    vec![cs.cache, cs.node_nic[i]],
-                                    &[grants[i]],
-                                    0,
-                                ),
-                            }
+                            provider.fetch(cs, i, bytes_v[i] as f64, &[grants[i]], 0)
                         })
                         .collect();
+                    staged_bytes_total += bytes_v.iter().sum::<u64>();
                     staged[k] = Some((bytes_v, task_v));
                 }
             }
@@ -312,15 +347,31 @@ impl<'p> StageGraph<'p> {
                 }
             };
 
+            // Cache-resident credit for the stage's credited artifacts:
+            // warm-restart state plus (under dedup) content chunks landed
+            // by earlier stages. Pure credit — no flow, no join. The
+            // stage-ahead artifact's staged prefix is excluded: those
+            // bytes are counted by the staging flow itself, and its head
+            // chunks may also be content-resident (the env snapshot's
+            // image-shared prefix) — they must not be credited twice.
+            let mut credit = vec![0u64; n];
+            let mut any_credit = false;
+            for a in decls[k].iter().filter(|a| a.credit) {
+                for (i, c) in credit.iter_mut().enumerate() {
+                    let skip = match &staged[k] {
+                        Some((bytes, _)) if a.stage_ahead => bytes[i],
+                        _ => 0,
+                    };
+                    let r = run_cache.resident_bytes_beyond(i, &a.manifest, skip, self.dedup);
+                    if r > 0 {
+                        *c = c.saturating_add(r);
+                        any_credit = true;
+                    }
+                }
+            }
+
             // Join the stage's speculative staging flows: the stage starts
             // once its normal gate AND its staged bytes have landed.
-            // Locally resident bytes (warm restart on the same nodes) are
-            // pure credit — no flow, no join.
-            let local_bytes = local
-                .iter()
-                .find(|(s, _)| *s == p.stage())
-                .map(|&(_, b)| b)
-                .unwrap_or(0);
             let prestaged: Vec<u64> = match &staged[k] {
                 Some((bytes, tasks)) => {
                     for i in 0..n {
@@ -332,13 +383,13 @@ impl<'p> StageGraph<'p> {
                             begin_gate[i] = joined;
                         }
                     }
-                    if local_bytes == 0 {
+                    if !any_credit {
                         bytes.clone()
                     } else {
-                        bytes.iter().map(|&b| b + local_bytes).collect()
+                        bytes.iter().zip(&credit).map(|(&b, &c)| b.saturating_add(c)).collect()
                     }
                 }
-                None if local_bytes > 0 => vec![local_bytes; n],
+                None if any_credit => credit,
                 None => Vec::new(),
             };
 
@@ -351,6 +402,17 @@ impl<'p> StageGraph<'p> {
             };
             let plan = p.plan(cs, world, &inp);
             assert_eq!(plan.node_done.len(), n, "one done task per node");
+
+            // Under dedup, the stage's manifests are now materialized on
+            // every node of the allocation (foreground by stage end,
+            // background eventually): record their chunks in the shared
+            // layer so later stages credit shared content.
+            if self.dedup {
+                for a in &decls[k] {
+                    run_cache.insert_shared_chunks(&a.manifest);
+                }
+            }
+
             upstream.push((p.stage(), plan.node_done.clone()));
             compiled.push(CompiledStage {
                 stage: p.stage(),
@@ -358,12 +420,13 @@ impl<'p> StageGraph<'p> {
                 node_done: plan.node_done.clone(),
                 sub_spans: plan.sub_spans,
                 prestaged,
+                fetched_bytes: plan.fetched_bytes,
             });
             prev_done = Some(plan.node_done);
         }
 
         let done = cs.sim.barrier(prev_done.as_ref().expect("nonempty graph"), 0);
-        CompiledGraph { stages: compiled, done }
+        CompiledGraph { stages: compiled, done, staged_bytes: staged_bytes_total }
     }
 }
 
@@ -372,21 +435,32 @@ mod tests {
     use super::*;
     use crate::config::ClusterConfig;
 
-    /// A synthetic stage: per-node fixed delays, plus an optional staging
-    /// request whose credited bytes become extra per-node delay (so tests
-    /// can observe what the graph passed in).
+    /// A synthetic stage: per-node fixed delays, plus an optional artifact
+    /// declaration whose credited bytes become extra per-node delay (so
+    /// tests can observe what the graph passed in).
     struct FixedStage {
         stage: Stage,
         edge: EdgeKind,
         durations: Vec<f64>,
-        spec: Option<SpecRequest>,
-        /// Seconds of extra delay per staged byte (observability hook).
+        decl: Option<ArtifactDecl>,
+        /// Seconds of extra delay per credited byte (observability hook).
         s_per_staged_byte: f64,
     }
 
     impl FixedStage {
         fn new(stage: Stage, edge: EdgeKind, durations: Vec<f64>) -> FixedStage {
-            FixedStage { stage, edge, durations, spec: None, s_per_staged_byte: 0.0 }
+            FixedStage { stage, edge, durations, decl: None, s_per_staged_byte: 0.0 }
+        }
+
+        /// Declare a stage-ahead synthetic artifact of `bytes` bytes.
+        fn with_artifact(mut self, id: u64, bytes: u64, tier: ProviderTier) -> FixedStage {
+            self.decl = Some(ArtifactDecl {
+                manifest: ArtifactManifest::synthetic(id, bytes, 100),
+                tier,
+                stage_ahead: true,
+                credit: true,
+            });
+            self
         }
     }
 
@@ -399,8 +473,8 @@ mod tests {
             self.edge
         }
 
-        fn spec_request(&self, _world: &World) -> Option<SpecRequest> {
-            self.spec
+        fn artifacts(&self, _world: &World, _dedup: bool) -> Vec<ArtifactDecl> {
+            self.decl.iter().cloned().collect()
         }
 
         fn plan(
@@ -417,7 +491,7 @@ mod tests {
                     cs.sim.delay(dur, &inp.deps[i], inp.tag)
                 })
                 .collect();
-            PlannedStage { node_done, sub_spans: Vec::new() }
+            PlannedStage { node_done, sub_spans: Vec::new(), fetched_bytes: 0 }
         }
     }
 
@@ -483,18 +557,21 @@ mod tests {
         let entry = vec![vec![gate0]; 2];
         let grants: Vec<TaskId> = (0..2).map(|_| cs.sim.delay(1.0, &[], 0)).collect();
         let mut g = StageGraph::new(OverlapMode::Speculative, 400);
-        let mut img = FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![0.0, 0.0]);
-        img.spec = Some(SpecRequest { bytes_per_node: 300, source: SpecSource::ClusterCache });
-        let mut env = FixedStage::new(Stage::EnvSetup, EdgeKind::PerNode, vec![0.0, 0.0]);
-        env.spec = Some(SpecRequest { bytes_per_node: 300, source: SpecSource::Hdfs });
-        g.add(Box::new(img));
-        g.add(Box::new(env));
+        g.add(Box::new(
+            FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![0.0, 0.0])
+                .with_artifact(0xA, 300, ProviderTier::ClusterCache),
+        ));
+        g.add(Box::new(
+            FixedStage::new(Stage::EnvSetup, EdgeKind::PerNode, vec![0.0, 0.0])
+                .with_artifact(0xB, 300, ProviderTier::Hdfs { nn_op: false }),
+        ));
         let c = g.compile(&mut cs, &mut w, &entry, Some(&grants));
         cs.sim.run();
         // First stage gets its full request; the second is clamped by what
         // remains of the per-node budget.
         assert_eq!(c.stages[0].prestaged, vec![300, 300]);
         assert_eq!(c.stages[1].prestaged, vec![100, 100]);
+        assert_eq!(c.staged_bytes, 2 * 300 + 2 * 100);
     }
 
     #[test]
@@ -505,65 +582,68 @@ mod tests {
             let entry = vec![vec![gate0]; 2];
             let grants: Vec<TaskId> = (0..2).map(|_| cs.sim.delay(0.0, &[], 0)).collect();
             let mut g = StageGraph::new(mode, u64::MAX);
-            let mut img =
-                FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![1.0, 1.0]);
-            img.spec =
-                Some(SpecRequest { bytes_per_node: 300, source: SpecSource::ClusterCache });
-            g.add(Box::new(img));
+            g.add(Box::new(
+                FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![1.0, 1.0])
+                    .with_artifact(0xA, 300, ProviderTier::ClusterCache),
+            ));
             let c = g.compile(&mut cs, &mut w, &entry, Some(&grants));
             cs.sim.run();
             assert!(c.stages[0].prestaged.is_empty());
+            assert_eq!(c.staged_bytes, 0);
         }
     }
 
     #[test]
-    fn local_credit_feeds_prestaged_without_flows() {
-        // Warm-restart credit: bytes appear in `prestaged` for the matching
-        // stage only, with no staging flows (works in every mode).
+    fn cache_residency_feeds_prestaged_without_flows() {
+        // Warm-restart credit: resident bytes appear in `prestaged` for
+        // the declaring stage only, with no staging flows (every mode).
         for mode in OverlapMode::ALL {
             let (mut cs, mut w) = setup(2);
             let gate0 = cs.sim.delay(0.0, &[], 0);
             let entry = vec![vec![gate0]; 2];
             let mut g = StageGraph::new(mode, 0);
-            g.add(Box::new(FixedStage::new(
-                Stage::ImageLoading,
-                EdgeKind::Entry,
-                vec![1.0, 1.0],
-            )));
+            g.add(Box::new(
+                FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![1.0, 1.0])
+                    .with_artifact(0xA, 700, ProviderTier::ClusterCache),
+            ));
             g.add(Box::new(FixedStage::new(
                 Stage::EnvSetup,
                 EdgeKind::GlobalBarrier,
                 vec![1.0, 1.0],
             )));
-            let local = [(Stage::ImageLoading, 700u64)];
-            let c = g.compile_with(&mut cs, &mut w, &entry, None, &local);
+            let mut cache = CacheState::new();
+            cache.insert_shared_artifact(ArtifactManifest::synthetic(0xA, 700, 100).id, 700);
+            let c = g.compile_cached(&mut cs, &mut w, &entry, None, &cache);
             cs.sim.run();
             assert_eq!(c.stages[0].prestaged, vec![700, 700], "{mode:?}");
             assert!(c.stages[1].prestaged.is_empty(), "{mode:?}");
             // Credit does not delay the stage: begin gate is the entry gate.
             assert_eq!(cs.sim.finished_at(c.stages[0].begin_gate[0]), 0.0);
+            assert_eq!(c.staged_bytes, 0);
         }
     }
 
     #[test]
-    fn local_credit_adds_to_speculative_staging() {
+    fn cache_credit_adds_to_speculative_staging() {
         let (mut cs, mut w) = setup(2);
         let gate0 = cs.sim.delay(5.0, &[], 0);
         let entry = vec![vec![gate0]; 2];
         let grants: Vec<TaskId> = (0..2).map(|_| cs.sim.delay(1.0, &[], 0)).collect();
         let mut g = StageGraph::new(OverlapMode::Speculative, 400);
-        let mut img = FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![0.0, 0.0]);
-        img.spec = Some(SpecRequest { bytes_per_node: 300, source: SpecSource::ClusterCache });
-        g.add(Box::new(img));
-        let local = [(Stage::ImageLoading, 50u64)];
-        let c = g.compile_with(&mut cs, &mut w, &entry, Some(&grants), &local);
+        g.add(Box::new(
+            FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![0.0, 0.0])
+                .with_artifact(0xA, 300, ProviderTier::ClusterCache),
+        ));
+        let mut cache = CacheState::new();
+        cache.insert_shared_artifact(ArtifactManifest::synthetic(0xA, 300, 100).id, 50);
+        let c = g.compile_cached(&mut cs, &mut w, &entry, Some(&grants), &cache);
         cs.sim.run();
         assert_eq!(c.stages[0].prestaged, vec![350, 350]);
     }
 
     #[test]
-    fn empty_local_compiles_identically() {
-        let build = |local: &[(Stage, u64)]| {
+    fn empty_cache_compiles_identically() {
+        let build = |cache: &CacheState| {
             let (mut cs, mut w) = setup(2);
             let gate0 = cs.sim.delay(0.0, &[], 0);
             let entry = vec![vec![gate0]; 2];
@@ -573,11 +653,56 @@ mod tests {
                 EdgeKind::Entry,
                 vec![2.0, 3.0],
             )));
-            let c = g.compile_with(&mut cs, &mut w, &entry, None, local);
+            let c = g.compile_cached(&mut cs, &mut w, &entry, None, cache);
             cs.sim.run();
             cs.sim.finished_at(c.done).to_bits()
         };
-        assert_eq!(build(&[]), build(&[(Stage::EnvSetup, 100)]));
+        // An empty cache and a cache holding only undeclared artifacts
+        // both compile exactly like compile().
+        let mut unrelated = CacheState::new();
+        unrelated.insert_shared_artifact(0xDEAD, 100);
+        assert_eq!(build(&CacheState::new()), build(&unrelated));
+    }
+
+    #[test]
+    fn dedup_credits_content_landed_by_earlier_stage() {
+        // Stage 2's artifact shares half its chunks with stage 1's. With
+        // dedup on, stage 2 sees the shared bytes as credit; off, nothing.
+        let run = |dedup: bool| {
+            let (mut cs, mut w) = setup(1);
+            let gate0 = cs.sim.delay(0.0, &[], 0);
+            let entry = vec![vec![gate0]];
+            let mut g = StageGraph::new(OverlapMode::Sequential, 0);
+            g.set_dedup(dedup);
+            let a = ArtifactManifest::synthetic(0xA, 400, 100);
+            let mut b_manifest = ArtifactManifest::synthetic(0xB, 400, 100);
+            for k in 0..2 {
+                b_manifest.chunks[k].digest = a.chunks[k].digest;
+            }
+            let mut img =
+                FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![1.0]);
+            img.decl = Some(ArtifactDecl {
+                manifest: a,
+                tier: ProviderTier::ClusterCache,
+                stage_ahead: false,
+                credit: true,
+            });
+            let mut env =
+                FixedStage::new(Stage::EnvSetup, EdgeKind::GlobalBarrier, vec![1.0]);
+            env.decl = Some(ArtifactDecl {
+                manifest: b_manifest,
+                tier: ProviderTier::ClusterCache,
+                stage_ahead: false,
+                credit: true,
+            });
+            g.add(Box::new(img));
+            g.add(Box::new(env));
+            let c = g.compile(&mut cs, &mut w, &entry, None);
+            cs.sim.run();
+            c.stages[1].prestaged.clone()
+        };
+        assert_eq!(run(false), Vec::<u64>::new());
+        assert_eq!(run(true), vec![200]);
     }
 
     #[test]
@@ -622,7 +747,7 @@ mod tests {
                 let node_done = (0..cs.nodes())
                     .map(|i| cs.sim.delay(1.0, &[img[i]], inp.tag))
                     .collect();
-                PlannedStage { node_done, sub_spans: Vec::new() }
+                PlannedStage { node_done, sub_spans: Vec::new(), fetched_bytes: 0 }
             }
         }
         let (mut cs, mut w) = setup(1);

@@ -25,15 +25,19 @@
 //! barriers, the default), `Overlapped` (per-node chaining), or
 //! `Speculative` (staging during Allocation). Every stage emits profiler
 //! events ([`crate::profiler`]) exactly like the production deployment logs
-//! them. Design note: `docs/stage_graph.md`.
+//! them. Planners declare the content-addressed artifacts they move
+//! ([`crate::artifact`]); speculative staging, warm-restart credit and
+//! cross-artifact dedup all resolve through one per-node
+//! [`crate::artifact::CacheState`]. Design notes: `docs/stage_graph.md`,
+//! `docs/artifact_layer.md`.
 
 pub mod graph;
 pub mod pipeline;
 pub mod stages;
 
 pub use graph::{
-    CompiledGraph, CompiledStage, EdgeKind, PlannedStage, SpecRequest, SpecSource, StageGraph,
-    StageInputs, StagePlanner,
+    ArtifactDecl, CompiledGraph, CompiledStage, EdgeKind, PlannedStage, StageGraph, StageInputs,
+    StagePlanner,
 };
 pub use pipeline::{
     run_startup, run_startup_with, StartupContext, StartupKind, StartupOutcome, World,

@@ -9,6 +9,7 @@
 //! built — global sync barriers between stages — so its outcomes are
 //! byte-identical to the paper-faithful behaviour.
 
+use crate::artifact::cache::CacheState;
 use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ClusterConfig, ImageMode, JobConfig, OverlapMode};
 use crate::env::cache::EnvCacheRegistry;
@@ -68,6 +69,13 @@ pub struct StartupOutcome {
     /// Worker-phase-only startup (image+env+init; the §5 metric which
     /// excludes queuing/allocation variability).
     pub worker_phase_s: f64,
+    /// Foreground bytes each worker-phase stage fetched over the network
+    /// (after resident-cache credit), in graph order.
+    pub stage_fetched: Vec<(Stage, u64)>,
+    /// Total foreground bytes fetched over the network: every stage's
+    /// foreground fetch plus speculative staging flows. Background
+    /// cold-tail streaming is excluded (it never gates a stage).
+    pub fetched_bytes: u64,
 }
 
 impl StartupOutcome {
@@ -83,6 +91,11 @@ impl StartupOutcome {
     pub fn gpu_seconds_wasted(&self) -> f64 {
         self.worker_phase_s * self.gpus as f64
     }
+
+    /// Foreground bytes a stage fetched (0 if the stage did not run).
+    pub fn fetched(&self, stage: Stage) -> u64 {
+        self.stage_fetched.iter().find(|(s, _)| *s == stage).map(|&(_, b)| b).unwrap_or(0)
+    }
 }
 
 /// The pre-worker phase a startup runs under: how long it queued and how
@@ -91,18 +104,18 @@ impl StartupOutcome {
 /// waits derived from [`crate::scheduler::schedule_chains`] over a finite
 /// pool.
 ///
-/// `local_image_bytes` / `local_env_bytes` model a warm restart that
-/// landed back on its previous nodes (fault-injection restart policy,
-/// [`crate::faults`]): the staged image hot set and the environment
-/// archive are still on every node's local disk, so those bytes are
-/// credited against the stages' foreground fetches. Zero (the default)
+/// `cache` models a warm restart that landed back on its previous nodes
+/// (fault-injection restart policy, [`crate::faults`]): a
+/// [`CacheState`] of artifacts still resident on every node's local disk
+/// — the staged image hot set, the environment archive, and (with delta
+/// resume) the retained checkpoint shard — whose bytes are credited
+/// against the stages' foreground fetches. An empty cache (the default)
 /// is byte-identical to a cold allocation.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct StartupContext {
     pub queue_s: f64,
     pub alloc_s: f64,
-    pub local_image_bytes: u64,
-    pub local_env_bytes: u64,
+    pub cache: CacheState,
 }
 
 /// Run one startup of `job` on a fresh allocation, mutating `world`
@@ -158,12 +171,12 @@ pub fn run_startup_with(
     let img = ImageSpec::synth(
         // Image identity: shared across jobs when the caller assigns one
         // (cluster replay), else per-job (same across restarts either way).
-        job.image_seed.unwrap_or(job_id ^ 0x1AA6E),
+        job.image_identity_seed(job_id),
         job.image_bytes,
         job.image_block_bytes,
         job.image_hot_fraction,
     );
-    let pkgs = PackageSet::synth(job, job.env_seed.unwrap_or(job_id ^ 0x9AC5));
+    let pkgs = PackageSet::synth(job, job.env_identity_seed(job_id));
 
     let mut events = Vec::new();
     let n = nodes as usize;
@@ -230,22 +243,17 @@ pub fn run_startup_with(
     // ---- Compile the worker-phase stage graph ----
     // (hot update: container already runs, so no image stage)
     let mut graph = StageGraph::new(cfg.overlap, cfg.spec_prefetch_budget_bytes);
+    graph.set_dedup(cfg.artifact_dedup);
     if kind == StartupKind::Full {
         graph.add(Box::new(ImageStage::new(&img, cfg)));
     }
-    graph.add(Box::new(EnvStage::new(&pkgs, job, cfg)));
-    graph.add(Box::new(InitStage::new(job, cfg)));
+    graph.add(Box::new(EnvStage::new(&img, &pkgs, job, cfg)));
+    graph.add(Box::new(InitStage::new(job, cfg, &cluster)));
     let entry: Vec<Vec<TaskId>> = vec![vec![gate0]; n];
-    // Warm-restart credit: bytes still on every node's local disk from the
-    // previous attempt on the same nodes (zero for cold allocations).
-    let mut local: Vec<(Stage, u64)> = Vec::new();
-    if ctx.local_image_bytes > 0 && kind == StartupKind::Full {
-        local.push((Stage::ImageLoading, ctx.local_image_bytes));
-    }
-    if ctx.local_env_bytes > 0 {
-        local.push((Stage::EnvSetup, ctx.local_env_bytes));
-    }
-    let compiled = graph.compile_with(&mut cs, world, &entry, grants.as_deref(), &local);
+    // Warm-restart credit: chunks still on every node's local disk from
+    // the previous attempt on the same nodes, per the caller's cache
+    // state (empty for cold allocations — byte-identical to compile()).
+    let compiled = graph.compile_cached(&mut cs, world, &entry, grants.as_deref(), &ctx.cache);
 
     // ---- Run the simulation ----
     cs.sim.run();
@@ -346,6 +354,10 @@ pub fn run_startup_with(
         })
         .collect();
 
+    let stage_fetched: Vec<(Stage, u64)> =
+        compiled.stages.iter().map(|c| (c.stage, c.fetched_bytes)).collect();
+    let fetched_bytes = compiled.fetched_bytes();
+
     StartupOutcome {
         job_id,
         gpus: job.gpus,
@@ -355,6 +367,8 @@ pub fn run_startup_with(
         stage_spans,
         total_s: training_begin,
         worker_phase_s: training_begin - worker_t0,
+        stage_fetched,
+        fetched_bytes,
     }
 }
 
@@ -602,14 +616,22 @@ mod tests {
     }
 
     #[test]
-    fn local_warm_bytes_speed_up_restart() {
+    fn warm_cache_speeds_up_restart() {
         // A warm restart on the same nodes (fault-injection restart
-        // policy) credits the locally resident image hot set + env archive
-        // against the stage fetches; zero credit is byte-identical.
+        // policy) carries a CacheState with the image hot set + env
+        // archive resident; an empty cache is byte-identical to cold.
+        use crate::artifact::manifest::ArtifactManifest;
         let job = JobConfig::paper_moe(64);
         let cluster = ClusterConfig::default();
         let cfg = BootseerConfig::bootseer();
-        let run_ctx = |local_img: u64, local_env: u64| {
+        let img = ImageSpec::synth(
+            job.image_identity_seed(9),
+            job.image_bytes,
+            job.image_block_bytes,
+            job.image_hot_fraction,
+        );
+        let sig = PackageSet::synth(&job, job.env_identity_seed(9)).signature();
+        let run_ctx = |cache: crate::artifact::CacheState| {
             let mut w = World::new();
             // Warm run records the hot set + creates the env cache.
             run_startup(9, 0, &cluster, &job, &cfg, &mut w, StartupKind::Full, 21);
@@ -622,28 +644,101 @@ mod tests {
                 &mut w,
                 StartupKind::Full,
                 22,
-                StartupContext {
-                    queue_s: 10.0,
-                    alloc_s: 2.0,
-                    local_image_bytes: local_img,
-                    local_env_bytes: local_env,
-                },
+                StartupContext { queue_s: 10.0, alloc_s: 2.0, cache },
             )
         };
-        let cold = run_ctx(0, 0);
-        let warm = run_ctx(
-            (job.image_bytes as f64 * job.image_hot_fraction) as u64,
+        let cold = run_ctx(CacheState::new());
+        let mut warm_cache = CacheState::new();
+        warm_cache
+            .insert_shared_artifact(ArtifactManifest::image_hot_id(img.digest), img.hot_bytes());
+        warm_cache.insert_shared_artifact(
+            ArtifactManifest::env_snapshot_id(sig),
             job.env_cache_bytes,
         );
+        let warm = run_ctx(warm_cache);
         assert!(
             warm.worker_phase_s < cold.worker_phase_s,
             "warm {} vs cold {}",
             warm.worker_phase_s,
             cold.worker_phase_s
         );
-        // Zero credit is exactly the plain context path.
-        let again = run_ctx(0, 0);
+        // Warm fetched strictly fewer bytes; image + env foreground were
+        // fully resident, so the stages fetched exactly zero.
+        assert!(warm.fetched_bytes < cold.fetched_bytes);
+        assert_eq!(warm.fetched(Stage::ImageLoading), 0);
+        assert_eq!(warm.fetched(Stage::EnvSetup), 0);
+        assert_eq!(
+            cold.fetched_bytes - warm.fetched_bytes,
+            warm.nodes as u64 * (img.hot_bytes() + job.env_cache_bytes),
+            "credit accounts exactly for the resident artifacts"
+        );
+        // Empty cache is exactly the plain context path.
+        let again = run_ctx(CacheState::new());
         assert_eq!(cold.worker_phase_s.to_bits(), again.worker_phase_s.to_bits());
+    }
+
+    #[test]
+    fn dedup_credits_env_archive_against_image_content() {
+        // With cross-artifact dedup on, the env archive's chunks that
+        // duplicate image hot blocks are served from the blocks the image
+        // stage just landed — strictly fewer env bytes, identical image
+        // bytes, and the stage can only get faster.
+        let job = JobConfig::paper_moe(32);
+        let cluster = ClusterConfig::default();
+        let run_dedup = |dedup: bool| {
+            let cfg = BootseerConfig { artifact_dedup: dedup, ..BootseerConfig::bootseer() };
+            let mut w = World::new();
+            run_startup(3, 0, &cluster, &job, &cfg, &mut w, StartupKind::Full, 5);
+            run_startup(3, 1, &cluster, &job, &cfg, &mut w, StartupKind::Full, 6)
+        };
+        let off = run_dedup(false);
+        let on = run_dedup(true);
+        assert!(
+            on.fetched(Stage::EnvSetup) < off.fetched(Stage::EnvSetup),
+            "dedup env fetch {} vs plain {}",
+            on.fetched(Stage::EnvSetup),
+            off.fetched(Stage::EnvSetup)
+        );
+        assert_eq!(on.fetched(Stage::ImageLoading), off.fetched(Stage::ImageLoading));
+        assert!(on.fetched_bytes < off.fetched_bytes);
+        assert!(on.worker_phase_s <= off.worker_phase_s + 1e-9);
+    }
+
+    #[test]
+    fn delta_resume_shrinks_warm_restart_read() {
+        use crate::artifact::manifest::ArtifactManifest;
+        use crate::ckpt::resume::{resume_bytes_per_node, retained_resume_bytes_per_node};
+        let job = JobConfig::paper_moe(64);
+        let cluster = ClusterConfig::default();
+        let per_node = resume_bytes_per_node(&job, &cluster);
+        let retained = retained_resume_bytes_per_node(&job, &cluster);
+        let run = |delta: bool, cache: crate::artifact::CacheState| {
+            let cfg = BootseerConfig { delta_resume: delta, ..BootseerConfig::bootseer() };
+            let mut w = World::new();
+            run_startup(4, 0, &cluster, &job, &cfg, &mut w, StartupKind::Full, 31);
+            run_startup_with(
+                4,
+                1,
+                &cluster,
+                &job,
+                &cfg,
+                &mut w,
+                StartupKind::Full,
+                32,
+                StartupContext { queue_s: 0.0, alloc_s: 2.0, cache },
+            )
+        };
+        let mut warm = CacheState::new();
+        warm.insert_shared_artifact(ArtifactManifest::ckpt_shard_id(&job), retained);
+        let plain = run(false, warm.clone());
+        let delta = run(true, warm);
+        // Without the feature the resident shard is ignored entirely.
+        assert_eq!(plain.fetched(Stage::ModelInit), plain.nodes as u64 * per_node);
+        assert_eq!(
+            delta.fetched(Stage::ModelInit),
+            delta.nodes as u64 * (per_node - retained)
+        );
+        assert!(delta.worker_phase_s < plain.worker_phase_s);
     }
 
     #[test]

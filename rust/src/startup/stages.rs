@@ -1,21 +1,23 @@
 //! The three subsystem planners of the Figure-2 worker phase, adapted to
 //! the [`StagePlanner`] trait: Image Loading (`crate::image`), Environment
 //! Setup (`crate::env`) and Model Initialization (`crate::ckpt`). Each
-//! declares its profiler stage, its gating edge per overlap mode, and —
-//! where staging ahead of time is physically possible — its speculative
-//! prefetch request.
+//! declares its profiler stage, its gating edge per overlap mode, and the
+//! content-addressed artifacts it moves ([`ArtifactDecl`]) — the one
+//! declaration that powers speculative staging, warm-restart credit and
+//! cross-artifact dedup alike.
 
-use crate::ckpt::resume::plan_model_init_with;
-use crate::config::{BootseerConfig, JobConfig, OverlapMode};
+use crate::artifact::manifest::{ArtifactKind, ArtifactManifest};
+use crate::artifact::transfer::ProviderTier;
+use crate::ckpt::resume::{plan_model_init_with, resume_bytes_per_node};
+use crate::config::{BootseerConfig, ClusterConfig, JobConfig, OverlapMode};
 use crate::env::installer::plan_env_setup_with;
 use crate::env::packages::PackageSet;
+use crate::hdfs::fuse::ReadEngine;
 use crate::image::loader::plan_image_load_with;
 use crate::image::spec::ImageSpec;
 use crate::profiler::events::Stage;
 use crate::sim::ClusterSim;
-use crate::startup::graph::{
-    EdgeKind, PlannedStage, SpecRequest, SpecSource, StageInputs, StagePlanner,
-};
+use crate::startup::graph::{ArtifactDecl, EdgeKind, PlannedStage, StageInputs, StagePlanner};
 use crate::startup::World;
 
 /// Image Loading (§4.2) as a graph stage.
@@ -40,15 +42,52 @@ impl StagePlanner for ImageStage<'_> {
         EdgeKind::Entry
     }
 
-    fn spec_request(&self, world: &World) -> Option<SpecRequest> {
-        // Only a recorded hot set can be staged ahead of time: before the
-        // record run nobody knows which blocks startup will touch. The
-        // staging transport mirrors what the stage itself would use.
-        let hot = world.hotset.lookup(self.img.digest)?;
-        let bytes: u64 = hot.iter().map(|&b| self.img.block_len(b)).sum();
-        let source =
-            if self.cfg.p2p { SpecSource::CacheSwarm } else { SpecSource::ClusterCache };
-        (bytes > 0).then_some(SpecRequest { bytes_per_node: bytes, source })
+    fn artifacts(&self, world: &World, dedup: bool) -> Vec<ArtifactDecl> {
+        // Only a recorded hot set has a manifest: before the record run
+        // nobody knows which blocks startup will touch. The staging
+        // transport mirrors what the stage itself would use.
+        let Some(hot) = world.hotset.lookup(self.img.digest) else {
+            return Vec::new();
+        };
+        let tier =
+            if self.cfg.p2p { ProviderTier::CacheSwarm } else { ProviderTier::ClusterCache };
+        // Chunk lists only feed the dedup plane; the default path declares
+        // chunkless (id, total) summaries so the replay hot loop allocates
+        // nothing per startup.
+        let hot_manifest = if dedup {
+            ArtifactManifest::image_hot_set(self.img, &hot)
+        } else {
+            ArtifactManifest::summary(
+                ArtifactManifest::image_hot_id(self.img.digest),
+                ArtifactKind::ImageHotSet,
+                hot.iter().map(|&b| self.img.block_len(b)).sum(),
+            )
+        };
+        let mut decls = Vec::new();
+        if hot_manifest.total_bytes() > 0 {
+            decls.push(ArtifactDecl {
+                manifest: hot_manifest,
+                tier,
+                stage_ahead: true,
+                credit: true,
+            });
+        }
+        // The cold tail streams in the background after container start:
+        // never staged ahead, never credited against the foreground fetch.
+        // Its chunk list only feeds the dedup plane, so it is not
+        // materialized on the default path (the replay hot loop).
+        if dedup {
+            let cold = ArtifactManifest::image_cold_tail(self.img, &hot);
+            if cold.total_bytes() > 0 {
+                decls.push(ArtifactDecl {
+                    manifest: cold,
+                    tier,
+                    stage_ahead: false,
+                    credit: false,
+                });
+            }
+        }
+        decls
     }
 
     fn plan(
@@ -66,21 +105,31 @@ impl StagePlanner for ImageStage<'_> {
             inp.prestaged,
             inp.tag,
         );
-        PlannedStage { node_done: plan.node_done, sub_spans: Vec::new() }
+        PlannedStage {
+            node_done: plan.node_done,
+            sub_spans: Vec::new(),
+            fetched_bytes: plan.fetched_bytes,
+        }
     }
 }
 
 /// Environment Setup (§4.3) as a graph stage. Reports the InstallScript
 /// sub-span (§3.3's straggler proxy).
 pub struct EnvStage<'a> {
+    img: &'a ImageSpec,
     pkgs: &'a PackageSet,
     job: &'a JobConfig,
     cfg: &'a BootseerConfig,
 }
 
 impl<'a> EnvStage<'a> {
-    pub fn new(pkgs: &'a PackageSet, job: &'a JobConfig, cfg: &'a BootseerConfig) -> EnvStage<'a> {
-        EnvStage { pkgs, job, cfg }
+    pub fn new(
+        img: &'a ImageSpec,
+        pkgs: &'a PackageSet,
+        job: &'a JobConfig,
+        cfg: &'a BootseerConfig,
+    ) -> EnvStage<'a> {
+        EnvStage { img, pkgs, job, cfg }
     }
 }
 
@@ -97,17 +146,46 @@ impl StagePlanner for EnvStage<'_> {
         }
     }
 
-    fn spec_request(&self, world: &World) -> Option<SpecRequest> {
-        // Only a cache hit has an archive to stage; a miss installs from
-        // scratch and there is nothing to pull early.
+    fn artifacts(&self, world: &World, dedup: bool) -> Vec<ArtifactDecl> {
+        // Only a cache hit has an archive to move; a miss installs from
+        // scratch and there is nothing to stage or credit.
         if !self.cfg.env_cache {
-            return None;
+            return Vec::new();
         }
-        let entry = world.envcache.lookup(self.pkgs.signature())?;
-        (entry.compressed_bytes > 0).then_some(SpecRequest {
-            bytes_per_node: entry.compressed_bytes,
-            source: SpecSource::Hdfs,
-        })
+        let Some(entry) = world.envcache.lookup(self.pkgs.signature()) else {
+            return Vec::new();
+        };
+        if entry.compressed_bytes == 0 {
+            return Vec::new();
+        }
+        // The archive's manifest shares content chunks with the image's
+        // hot runtime region (installed site-packages duplicating shipped
+        // libraries). Only the dedup plane reads chunk digests, so the
+        // default path declares a chunkless summary and skips rebuilding
+        // the shared hot manifest.
+        let manifest = if dedup {
+            let shared = world
+                .hotset
+                .lookup(self.img.digest)
+                .map(|hot| ArtifactManifest::image_hot_set(self.img, &hot));
+            ArtifactManifest::env_snapshot(
+                self.pkgs.signature(),
+                entry.compressed_bytes,
+                shared.as_ref(),
+            )
+        } else {
+            ArtifactManifest::summary(
+                ArtifactManifest::env_snapshot_id(self.pkgs.signature()),
+                ArtifactKind::EnvSnapshot,
+                entry.compressed_bytes,
+            )
+        };
+        vec![ArtifactDecl {
+            manifest,
+            tier: ProviderTier::Hdfs { nn_op: false },
+            stage_ahead: true,
+            credit: true,
+        }]
     }
 
     fn plan(
@@ -129,6 +207,7 @@ impl StagePlanner for EnvStage<'_> {
         PlannedStage {
             node_done: plan.node_done,
             sub_spans: vec![(Stage::InstallScript, plan.install_span)],
+            fetched_bytes: plan.fetched_bytes,
         }
     }
 }
@@ -137,11 +216,16 @@ impl StagePlanner for EnvStage<'_> {
 pub struct InitStage<'a> {
     job: &'a JobConfig,
     cfg: &'a BootseerConfig,
+    cluster: &'a ClusterConfig,
 }
 
 impl<'a> InitStage<'a> {
-    pub fn new(job: &'a JobConfig, cfg: &'a BootseerConfig) -> InitStage<'a> {
-        InitStage { job, cfg }
+    pub fn new(
+        job: &'a JobConfig,
+        cfg: &'a BootseerConfig,
+        cluster: &'a ClusterConfig,
+    ) -> InitStage<'a> {
+        InitStage { job, cfg, cluster }
     }
 }
 
@@ -157,9 +241,35 @@ impl StagePlanner for InitStage<'_> {
         }
     }
 
-    // No speculative request: the per-node resume share is hundreds of GB —
-    // far past any allocation-window budget — and which replica reads which
-    // shard is only known once ranks are assigned.
+    fn artifacts(&self, _world: &World, _dedup: bool) -> Vec<ArtifactDecl> {
+        // Never staged ahead: the per-node resume share is hundreds of GB —
+        // far past any allocation-window budget — and which replica reads
+        // which shard is only known once ranks are assigned. With delta
+        // resume on, the shard manifest is declared credit-only so a warm
+        // restart's resident chunks shrink the read. Always a chunkless
+        // summary: shard chunk digests are domain-separated and can never
+        // match another artifact's content, so a dedup walk could credit
+        // nothing beyond the prefix arithmetic anyway.
+        if !self.cfg.delta_resume {
+            return Vec::new();
+        }
+        let per_node = resume_bytes_per_node(self.job, self.cluster);
+        if per_node == 0 {
+            return Vec::new();
+        }
+        let engine =
+            if self.cfg.ckpt_striped { ReadEngine::Striped } else { ReadEngine::Sequential };
+        vec![ArtifactDecl {
+            manifest: ArtifactManifest::summary(
+                ArtifactManifest::ckpt_shard_id(self.job),
+                ArtifactKind::CkptShard,
+                per_node,
+            ),
+            tier: ProviderTier::HdfsStream(engine),
+            stage_ahead: false,
+            credit: true,
+        }]
+    }
 
     fn plan(
         &mut self,
@@ -177,7 +287,19 @@ impl StagePlanner for InitStage<'_> {
                 inp.done_of(Stage::ImageLoading)
             }
         };
-        let plan = plan_model_init_with(cs, self.job, self.cfg, inp.deps, read_gates, inp.tag);
-        PlannedStage { node_done: plan.node_done, sub_spans: Vec::new() }
+        let plan = plan_model_init_with(
+            cs,
+            self.job,
+            self.cfg,
+            inp.deps,
+            read_gates,
+            inp.prestaged,
+            inp.tag,
+        );
+        PlannedStage {
+            node_done: plan.node_done,
+            sub_spans: Vec::new(),
+            fetched_bytes: plan.fetched_bytes,
+        }
     }
 }

@@ -48,6 +48,9 @@
 //! auto-detected threads; `bootseer trace --pool-gpus N --threads T`
 //! exposes both knobs.
 
+use crate::artifact::cache::CacheState;
+use crate::artifact::manifest::ArtifactManifest;
+use crate::ckpt::resume::retained_resume_bytes_per_node;
 use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
 use crate::env::packages::PackageSet;
@@ -379,6 +382,13 @@ pub struct JobReplay {
     pub job: TraceJob,
     /// Worker-phase seconds of every full startup + hot update.
     pub startup_worker_s: Vec<f64>,
+    /// Foreground bytes each of those startups fetched over the network
+    /// (same order): the cross-segment cache-carry observable — under
+    /// Sequential/Overlapped gating a warm restart re-fetches strictly
+    /// less than its cold start. (Speculative mode's Allocation-time
+    /// stager still moves its budget-bounded prefix regardless of
+    /// residency, mirroring the pre-refactor pipeline.)
+    pub startup_fetched_bytes: Vec<u64>,
     /// Job-level total (incl. queuing) of the first startup.
     pub first_total_s: f64,
     /// Install-script durations of the last startup (straggler proxy).
@@ -531,7 +541,7 @@ pub fn replay_cluster(
     let mut job_env_sig = Vec::with_capacity(trace.len());
     for (j, tj) in trace.iter().enumerate() {
         let job = &jobs_cfg[j];
-        let img_seed = job.image_seed.unwrap_or(tj.id ^ 0x1AA6E);
+        let img_seed = job.image_identity_seed(tj.id);
         let (digest, _, hot_bytes) = img_idents.entry(img_seed).or_insert_with(|| {
             let img = ImageSpec::synth(
                 img_seed,
@@ -543,7 +553,7 @@ pub fn replay_cluster(
         });
         job_digest.push(*digest);
         job_hot_bytes.push(*hot_bytes);
-        let env_seed = job.env_seed.unwrap_or(tj.id ^ 0x9AC5);
+        let env_seed = job.env_identity_seed(tj.id);
         let sig = *env_idents
             .entry(env_seed)
             .or_insert_with(|| PackageSet::synth(job, env_seed).signature());
@@ -756,11 +766,28 @@ pub fn replay_cluster(
         } else {
             (0.0, 0.0)
         };
-        let (local_image_bytes, local_env_bytes) = if u.warm_local {
-            (job_hot_bytes[u.job_idx], job.env_cache_bytes)
-        } else {
-            (0, 0)
-        };
+        // Warm restart on its previous nodes: the artifacts the failed
+        // attempt materialized are still resident — expressed as cache
+        // state, not per-subsystem byte fields. With delta resume, the
+        // shard chunks not rewritten since the rollback point stay
+        // resident too.
+        let mut cache = CacheState::new();
+        if u.warm_local {
+            cache.insert_shared_artifact(
+                ArtifactManifest::image_hot_id(u.digest),
+                job_hot_bytes[u.job_idx],
+            );
+            cache.insert_shared_artifact(
+                ArtifactManifest::env_snapshot_id(u.env_sig),
+                job.env_cache_bytes,
+            );
+            if cfg.delta_resume {
+                cache.insert_shared_artifact(
+                    ArtifactManifest::ckpt_shard_id(job),
+                    retained_resume_bytes_per_node(job, &u.eff_cluster),
+                );
+            }
+        }
         run_startup_with(
             tj.id,
             u.attempt,
@@ -770,7 +797,7 @@ pub fn replay_cluster(
             &mut world,
             u.kind,
             unit_seed,
-            StartupContext { queue_s, alloc_s, local_image_bytes, local_env_bytes },
+            StartupContext { queue_s, alloc_s, cache },
         )
     };
     let mut slots: Vec<Option<StartupOutcome>> = (0..units.len()).map(|_| None).collect();
@@ -820,6 +847,7 @@ pub fn replay_cluster(
         svc.register_job(tj.id, tj.gpus);
         let alloc_s = d::ALLOC_BASE_S + 0.02 * nodes_of[j] as f64;
         let mut startup_worker_s = Vec::new();
+        let mut startup_fetched_bytes = Vec::new();
         let mut first_total = 0.0;
         let mut installs = Vec::new();
         let mut last_full: Option<StartupOutcome> = None;
@@ -831,6 +859,7 @@ pub fn replay_cluster(
             let u = &units[ui];
             let o = slots[ui].take().expect("unit replayed");
             startup_worker_s.push(o.worker_phase_s);
+            startup_fetched_bytes.push(o.fetched_bytes);
             if u.interrupted {
                 // The run ended at the failure instant: only the startup
                 // time actually spent before it counts as waste.
@@ -865,6 +894,7 @@ pub fn replay_cluster(
         jobs.push(JobReplay {
             job: tj.clone(),
             startup_worker_s,
+            startup_fetched_bytes,
             first_total_s: first_total,
             install_durations: installs,
             last_full,
@@ -1362,6 +1392,133 @@ mod tests {
         let wm = mean_tail(&warm);
         let cm = mean_tail(&cold);
         assert!(wm < cm, "warm restarts {wm} should beat cold {cm}");
+    }
+
+    /// Cross-segment cache carry: a faulted job's warm restart fetches
+    /// strictly fewer bytes than its cold start, and — since nothing was
+    /// evicted — exactly zero extra bytes beyond the unavoidable resume
+    /// read: the image and env stages fetch nothing at all.
+    #[test]
+    fn warm_restart_carries_cache_across_segments() {
+        let t = vec![TraceJob {
+            id: 1,
+            submit_s: 0.0,
+            gpus: 128,
+            full_startups: 1,
+            hot_updates: 0,
+            train_hours: 40.0,
+            priority: 1,
+            image_id: 7,
+        }];
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::bootseer();
+        let run = |relocate: f64| {
+            let faults = FaultConfig {
+                hazard_per_gpu_hour: 2.0e-3,
+                relocate_prob: relocate,
+                straggler_prob: 0.0,
+                brownouts_per_week: 0.0,
+                ..FaultConfig::paper()
+            };
+            replay_cluster(
+                &t,
+                &cluster,
+                &cfg,
+                11,
+                &ReplayOptions { pool_gpus: Some(256), threads: 1, faults },
+            )
+        };
+        let warm = run(0.0);
+        assert!(warm.fault_restarts >= 1, "restarts fired: {}", warm.fault_restarts);
+        let fetched = &warm.jobs[0].startup_fetched_bytes;
+        let cold_start = fetched[0];
+        for (k, &restart) in fetched.iter().enumerate().skip(1) {
+            assert!(
+                restart < cold_start,
+                "warm restart {k} fetched {restart} >= cold start {cold_start}"
+            );
+        }
+        // Nothing was evicted, so the last warm restart's image and env
+        // stages fetched zero bytes — the resume read is all that remains.
+        let last = warm.jobs[0].last_full.as_ref().expect("job replayed");
+        use crate::profiler::Stage;
+        assert_eq!(last.fetched(Stage::ImageLoading), 0, "hot set fully resident");
+        assert_eq!(last.fetched(Stage::EnvSetup), 0, "env archive fully resident");
+        assert_eq!(last.fetched_bytes, last.fetched(Stage::ModelInit));
+
+        // A relocated (cold) restart re-fetches the hot set + archive the
+        // warm one kept — same crash schedule, strictly more bytes.
+        let cold = run(1.0);
+        assert_eq!(warm.fault_restarts, cold.fault_restarts, "same crash schedule");
+        for (w, c) in warm.jobs[0]
+            .startup_fetched_bytes
+            .iter()
+            .zip(&cold.jobs[0].startup_fetched_bytes)
+            .skip(1)
+        {
+            assert!(w < c, "warm restart bytes {w} vs cold {c}");
+        }
+    }
+
+    /// Delta resume re-fetches only the rewritten shard chunks on a warm
+    /// restart: strictly fewer bytes and no slower than the plain warm
+    /// restart; with the feature off the replay is untouched.
+    #[test]
+    fn delta_resume_shrinks_warm_restart_fetches() {
+        let t = vec![TraceJob {
+            id: 1,
+            submit_s: 0.0,
+            gpus: 128,
+            full_startups: 1,
+            hot_updates: 0,
+            train_hours: 40.0,
+            priority: 1,
+            image_id: 7,
+        }];
+        let cluster = ClusterConfig::default();
+        let faults = FaultConfig {
+            hazard_per_gpu_hour: 2.0e-3,
+            relocate_prob: 0.0,
+            straggler_prob: 0.0,
+            brownouts_per_week: 0.0,
+            ..FaultConfig::paper()
+        };
+        let run = |delta: bool| {
+            let cfg = BootseerConfig { delta_resume: delta, ..BootseerConfig::bootseer() };
+            replay_cluster(
+                &t,
+                &cluster,
+                &cfg,
+                11,
+                &ReplayOptions {
+                    pool_gpus: Some(256),
+                    threads: 1,
+                    faults: faults.clone(),
+                },
+            )
+        };
+        let plain = run(false);
+        let delta = run(true);
+        assert!(plain.fault_restarts >= 1);
+        // Cold first starts identical; warm restarts strictly smaller.
+        assert_eq!(
+            plain.jobs[0].startup_fetched_bytes[0],
+            delta.jobs[0].startup_fetched_bytes[0]
+        );
+        for (p, q) in plain.jobs[0]
+            .startup_fetched_bytes
+            .iter()
+            .zip(&delta.jobs[0].startup_fetched_bytes)
+            .skip(1)
+        {
+            assert!(q < p, "delta restart bytes {q} vs plain {p}");
+        }
+        assert!(
+            delta.startup_gpu_hours < plain.startup_gpu_hours,
+            "delta {} vs plain {}",
+            delta.startup_gpu_hours,
+            plain.startup_gpu_hours
+        );
     }
 
     #[test]
