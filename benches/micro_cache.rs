@@ -1,0 +1,77 @@
+//! Fleet cache-economics sweep: one synthetic week replayed per per-node
+//! cache capacity (LRU eviction) under storm-tier fault traffic — finite
+//! registry/cluster-cache concurrency slots (deterministic load-shedding
+//! plus seeded retry backoff) and a hot crash hazard that keeps warm
+//! restarts hitting partially evicted caches. Emits `BENCH_cache.json`
+//! so the capacity knee curve — fleet wasted fraction vs cache size —
+//! is tracked across PRs (CI diffs it against `benches/baselines/`).
+//!
+//! Headline: wasted GPU time strictly falls as the cache grows and
+//! plateaus at the unbounded endpoint; hit rate rises with capacity
+//! while the shed rate stays a property of the admission limits, not of
+//! the cache size.
+//!
+//!     cargo bench --bench micro_cache
+//!     BOOTSEER_BENCH_FAST=1 cargo bench --bench micro_cache
+
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+fn main() {
+    figure_header(
+        "cache economics: capacity knee under storm faults",
+        "wasted fraction strictly falls with cache capacity, plateaus unbounded",
+    );
+    let faults = figures::cache_sweep_faults();
+    println!("faults: {}", faults.describe());
+    let mut b = Bench::new("micro_cache");
+    let mut out = None;
+    b.once(
+        &format!(
+            "{}-job week x {} capacities",
+            figures::CACHE_SWEEP_JOBS,
+            figures::CACHE_SWEEP_CAPACITIES.len()
+        ),
+        || {
+            out = Some(figures::cache_economics_sweep(
+                figures::FAULTS_SWEEP_SEED,
+                figures::CACHE_SWEEP_JOBS,
+                &faults,
+            ));
+        },
+    );
+    let sweep = out.unwrap();
+    println!("\n{}", sweep.render());
+    let path = "BENCH_cache.json";
+    match std::fs::write(path, sweep.to_json().to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("write {path}: {e}"),
+    }
+    // Machine-checkable acceptance invariants.
+    let restarts = sweep.points[0].fault_restarts;
+    assert!(restarts > 0, "storm-tier sweep must fire restarts");
+    for p in &sweep.points {
+        assert_eq!(
+            p.fault_restarts, restarts,
+            "crash schedule must not depend on cache capacity ({})",
+            p.capacity
+        );
+    }
+    for w in sweep.points.windows(2) {
+        assert!(
+            w[1].wasted_fraction < w[0].wasted_fraction,
+            "knee must strictly fall: {} {} vs {} {}",
+            w[0].capacity,
+            w[0].wasted_fraction,
+            w[1].capacity,
+            w[1].wasted_fraction
+        );
+    }
+    let unbounded = sweep.point("unbounded");
+    assert_eq!(unbounded.evicted_bytes, 0, "unbounded cache never evicts");
+    assert!(
+        sweep.point("3g").hit_rate < unbounded.hit_rate,
+        "hit rate must rise from the smallest cache to unbounded"
+    );
+    b.finish();
+}

@@ -19,9 +19,62 @@
 //! every node of the allocation (the warm-restart case: all nodes of the
 //! restarted job kept their local state). All maps are `BTreeMap` so no
 //! iteration order can leak into simulation results.
+//!
+//! # Bounded caches & eviction
+//!
+//! By default the cache is **unbounded** — the assumption every PR up to
+//! the cache-economics sweep made, and the code path a default config
+//! still takes bit-for-bit. [`CacheState::with_capacity`] bounds it: the
+//! artifact-prefix bytes visible to any one node (shared layer + that
+//! node's layer) may never exceed the capacity. An insert that overflows
+//! trims victims chosen by a [`CachePolicy`] — LRU (least recently
+//! *inserted*; the cache has no read clock), size-aware GDSF, or LRU with
+//! the hot set pinned. Eviction is a **tail trim**: the victim keeps a
+//! shorter resident *prefix*, so the credit arithmetic in
+//! `startup::graph` charges a warm restart exactly the evicted bytes.
+//! Pinned entries are never chosen as victims; when every candidate is
+//! pinned, the *incoming* insert itself is trimmed (admission trim, not
+//! counted as eviction). Chunk-level (dedup) entries are an index over
+//! the same bytes and are not separately accounted. Every decision is a
+//! pure function of the insert sequence — no clock, no RNG — so bounded
+//! replays stay byte-identical at any thread count.
 
 use crate::artifact::manifest::ArtifactManifest;
+use crate::config::CachePolicy;
 use std::collections::BTreeMap;
+
+/// Scope key of the shared layer in the bounded-accounting entry table
+/// (per-node scopes use the node index).
+const SHARED_SCOPE: usize = usize::MAX;
+
+/// Bounded-mode bookkeeping for one `(scope, artifact)` entry.
+#[derive(Clone, Debug)]
+struct EntryMeta {
+    /// Mirror of the layer's resident prefix for this entry.
+    bytes: u64,
+    /// Last-insert sequence number (recency).
+    seq: u64,
+    /// Insert count (GDSF frequency).
+    inserts: u64,
+    pinned: bool,
+    /// GDSF priority at last insert: `inflation + inserts / size_mb`.
+    h: f64,
+}
+
+/// Capacity accounting of a bounded cache.
+#[derive(Clone, Debug)]
+struct Bound {
+    capacity: u64,
+    policy: CachePolicy,
+    /// Monotone insert clock (recency source; no wall time).
+    seq: u64,
+    /// GDSF aging term: priority of the last evicted entry.
+    inflation: f64,
+    /// Total bytes trimmed from *resident* entries (admission trims of
+    /// the insert being admitted are not eviction).
+    evicted: u64,
+    entries: BTreeMap<(usize, u64), EntryMeta>,
+}
 
 #[derive(Clone, Debug, Default)]
 struct Layer {
@@ -52,11 +105,98 @@ impl Layer {
 pub struct CacheState {
     shared: Layer,
     per_node: BTreeMap<usize, Layer>,
+    /// `None` (the default) is the unbounded legacy cache: inserts never
+    /// trim and none of the bounded bookkeeping below runs.
+    bound: Option<Bound>,
 }
 
 impl CacheState {
     pub fn new() -> CacheState {
         CacheState::default()
+    }
+
+    /// A cache bounded at `capacity_bytes` per node view (shared layer +
+    /// any one node's layer), trimming by `policy` on overflow.
+    /// `u64::MAX` means unbounded and returns the exact legacy
+    /// [`CacheState::new`] state — byte-identical behavior, no
+    /// bookkeeping.
+    pub fn with_capacity(capacity_bytes: u64, policy: CachePolicy) -> CacheState {
+        if capacity_bytes == u64::MAX {
+            return CacheState::new();
+        }
+        CacheState {
+            bound: Some(Bound {
+                capacity: capacity_bytes,
+                policy,
+                seq: 0,
+                inflation: 0.0,
+                evicted: 0,
+                entries: BTreeMap::new(),
+            }),
+            ..CacheState::default()
+        }
+    }
+
+    /// Capacity in bytes, or `None` when unbounded.
+    pub fn capacity_bytes(&self) -> Option<u64> {
+        self.bound.as_ref().map(|b| b.capacity)
+    }
+
+    /// Total bytes trimmed from previously resident entries (admission
+    /// trims of an oversized incoming insert do not count).
+    pub fn evicted_bytes(&self) -> u64 {
+        self.bound.as_ref().map_or(0, |b| b.evicted)
+    }
+
+    /// How hard this cache is churning, as evicted bytes over capacity,
+    /// clamped to `[0, 1]`. Unbounded caches report `0`. Swarm peer
+    /// admission uses this: a peer about to evict what it would serve is
+    /// not a useful peer.
+    pub fn eviction_pressure(&self) -> f64 {
+        match &self.bound {
+            Some(b) if b.capacity > 0 => {
+                (b.evicted as f64 / b.capacity as f64).clamp(0.0, 1.0)
+            }
+            Some(b) => {
+                if b.evicted > 0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Artifact-prefix bytes occupying `node`'s view of the cache
+    /// (shared layer + that node's layer).
+    pub fn used_bytes(&self, node: usize) -> u64 {
+        let shared: u64 = self.shared.artifacts.values().sum();
+        let local: u64 = self
+            .per_node
+            .get(&node)
+            .map_or(0, |l| l.artifacts.values().sum());
+        shared.saturating_add(local)
+    }
+
+    /// Pin a shared-layer artifact: never chosen as an eviction victim
+    /// (the `pin_hot_set` policy pins the image hot set this way). No-op
+    /// on unbounded caches and on entries not yet inserted.
+    pub fn pin_shared_artifact(&mut self, id: u64) {
+        self.pin(SHARED_SCOPE, id);
+    }
+
+    /// Pin a node-layer artifact. See [`Self::pin_shared_artifact`].
+    pub fn pin_node_artifact(&mut self, node: usize, id: u64) {
+        self.pin(node, id);
+    }
+
+    fn pin(&mut self, scope: usize, id: u64) {
+        if let Some(b) = &mut self.bound {
+            if let Some(m) = b.entries.get_mut(&(scope, id)) {
+                m.pinned = true;
+            }
+        }
     }
 
     /// Nothing resident anywhere?
@@ -70,6 +210,7 @@ impl CacheState {
     pub fn insert_shared_artifact(&mut self, id: u64, bytes: u64) {
         if bytes > 0 {
             self.shared.add_artifact(id, bytes);
+            self.bounded_insert(SHARED_SCOPE, id);
         }
     }
 
@@ -77,6 +218,7 @@ impl CacheState {
     pub fn insert_node_artifact(&mut self, node: usize, id: u64, bytes: u64) {
         if bytes > 0 {
             self.per_node.entry(node).or_default().add_artifact(id, bytes);
+            self.bounded_insert(node, id);
         }
     }
 
@@ -85,6 +227,7 @@ impl CacheState {
     pub fn insert_shared_chunks(&mut self, m: &ArtifactManifest) {
         self.shared.add_chunks(m);
         self.shared.add_artifact(m.id, m.total_bytes());
+        self.bounded_insert(SHARED_SCOPE, m.id);
     }
 
     /// Record every chunk of `m` resident on node `node`.
@@ -92,15 +235,171 @@ impl CacheState {
         let layer = self.per_node.entry(node).or_default();
         layer.add_chunks(m);
         layer.add_artifact(m.id, m.total_bytes());
+        self.bounded_insert(node, m.id);
     }
 
     /// Drop artifact `id` everywhere (eviction: a relocated restart, local
     /// disk reclaimed). Chunk-level entries inserted via `insert_*_chunks`
-    /// for other artifacts are unaffected.
+    /// for other artifacts are unaffected. Explicit drops are not counted
+    /// in [`Self::evicted_bytes`] — that tracks capacity pressure only.
     pub fn evict_artifact(&mut self, id: u64) {
         self.shared.artifacts.remove(&id);
         for layer in self.per_node.values_mut() {
             layer.artifacts.remove(&id);
+        }
+        if let Some(b) = &mut self.bound {
+            b.entries.retain(|(_, aid), _| *aid != id);
+        }
+    }
+
+    fn scope_artifact_bytes(&self, scope: usize, id: u64) -> u64 {
+        let layer = if scope == SHARED_SCOPE {
+            Some(&self.shared)
+        } else {
+            self.per_node.get(&scope)
+        };
+        layer
+            .and_then(|l| l.artifacts.get(&id))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Bounded-mode bookkeeping after a layer insert of `(scope, id)`:
+    /// refresh the entry's meta (recency, frequency, GDSF priority) and
+    /// trim victims until the capacity invariant holds again.
+    fn bounded_insert(&mut self, scope: usize, id: u64) {
+        if self.bound.is_none() {
+            return;
+        }
+        let total = self.scope_artifact_bytes(scope, id);
+        let b = self.bound.as_mut().unwrap();
+        b.seq += 1;
+        let seq = b.seq;
+        let inflation = b.inflation;
+        let e = b.entries.entry((scope, id)).or_insert(EntryMeta {
+            bytes: 0,
+            seq: 0,
+            inserts: 0,
+            pinned: false,
+            h: 0.0,
+        });
+        e.bytes = total;
+        e.seq = seq;
+        e.inserts += 1;
+        let size_mb = (total as f64 / 1e6).max(1e-6);
+        e.h = inflation + e.inserts as f64 / size_mb;
+        self.enforce((scope, id));
+    }
+
+    /// Trim victims until `shared + max-over-nodes ≤ capacity`. The victim
+    /// set is the shared layer plus the currently-worst node's layer;
+    /// pinned entries are skipped, and if nothing unpinned remains the
+    /// incoming entry itself is trimmed (admission trim). A victim is
+    /// tail-trimmed only as far as needed — partial eviction keeps a
+    /// shorter resident prefix.
+    fn enforce(&mut self, incoming: (usize, u64)) {
+        loop {
+            let Some(b) = self.bound.as_ref() else { return };
+            let cap = b.capacity;
+            let shared_sum: u64 = self.shared.artifacts.values().sum();
+            let mut worst = SHARED_SCOPE;
+            let mut worst_sum = 0u64;
+            for (n, l) in &self.per_node {
+                let s: u64 = l.artifacts.values().sum();
+                if s > worst_sum {
+                    worst = *n;
+                    worst_sum = s;
+                }
+            }
+            let used = shared_sum.saturating_add(worst_sum);
+            if used <= cap {
+                return;
+            }
+            let overflow = used - cap;
+            let Some(key) = self.pick_victim(worst, incoming) else {
+                return;
+            };
+            let have = self.scope_artifact_bytes(key.0, key.1);
+            let trim = overflow.min(have);
+            if trim == 0 {
+                return;
+            }
+            self.apply_trim(key, trim, incoming);
+        }
+    }
+
+    /// Lowest-priority unpinned entry among the shared layer and the worst
+    /// node's layer, or the incoming entry when everything else is pinned.
+    /// Ordering is total and data-structure-independent: ties break on
+    /// `(scope, id)`.
+    fn pick_victim(&self, worst: usize, incoming: (usize, u64)) -> Option<(usize, u64)> {
+        let b = self.bound.as_ref()?;
+        let mut best: Option<((u64, u64, usize, u64), (usize, u64))> = None;
+        for (&(scope, id), m) in &b.entries {
+            if scope != SHARED_SCOPE && scope != worst {
+                continue;
+            }
+            if m.pinned || m.bytes == 0 {
+                continue;
+            }
+            let key = match b.policy {
+                CachePolicy::Lru | CachePolicy::PinHotSet => (m.seq, 0u64, scope, id),
+                CachePolicy::Gdsf => (m.h.to_bits(), m.seq, scope, id),
+            };
+            let better = match &best {
+                None => true,
+                Some((k, _)) => key < *k,
+            };
+            if better {
+                best = Some((key, (scope, id)));
+            }
+        }
+        match best {
+            Some((_, k)) => Some(k),
+            // Everything unpinned is gone: trim the insert being admitted,
+            // if it still holds bytes in a victim scope.
+            None => {
+                let (scope, _) = incoming;
+                let in_scope = scope == SHARED_SCOPE || scope == worst;
+                if in_scope && self.scope_artifact_bytes(incoming.0, incoming.1) > 0 {
+                    Some(incoming)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    fn apply_trim(&mut self, key: (usize, u64), trim: u64, incoming: (usize, u64)) {
+        let (scope, id) = key;
+        let layer = if scope == SHARED_SCOPE {
+            &mut self.shared
+        } else {
+            self.per_node.get_mut(&scope).expect("victim layer exists")
+        };
+        let v = layer.artifacts.get_mut(&id).expect("victim entry exists");
+        *v -= trim;
+        if *v == 0 {
+            layer.artifacts.remove(&id);
+        }
+        let b = self.bound.as_mut().expect("bounded");
+        let h = {
+            let m = b.entries.get_mut(&key).expect("victim meta exists");
+            m.bytes -= trim;
+            let h = m.h;
+            if m.bytes == 0 {
+                b.entries.remove(&key);
+            }
+            h
+        };
+        if b.policy == CachePolicy::Gdsf {
+            // Classic GDSF aging: future priorities start from the
+            // evicted entry's priority, so long-resident entries decay
+            // relative to fresh traffic.
+            b.inflation = b.inflation.max(h);
+        }
+        if key != incoming {
+            b.evicted += trim;
         }
     }
 
@@ -291,5 +590,429 @@ mod tests {
         assert_eq!(c.resident_bytes(0, &man, false), 250);
         // Chunk walk agrees with prefix arithmetic.
         assert_eq!(c.resident_bytes(0, &man, true), 250);
+    }
+
+    // ---- bounded caches & eviction -------------------------------------
+
+    #[test]
+    fn unbounded_capacity_constructs_legacy_cache() {
+        let mut c = CacheState::with_capacity(u64::MAX, CachePolicy::Gdsf);
+        assert!(c.capacity_bytes().is_none());
+        let mut legacy = CacheState::new();
+        for (id, b) in [(1u64, 500u64), (2, 700), (1, 300)] {
+            c.insert_shared_artifact(id, b);
+            legacy.insert_shared_artifact(id, b);
+        }
+        let man = m(1, 2000);
+        assert_eq!(
+            c.resident_bytes(0, &man, false),
+            legacy.resident_bytes(0, &man, false)
+        );
+        assert_eq!(c.used_bytes(0), legacy.used_bytes(0));
+        assert_eq!(c.evicted_bytes(), 0);
+        assert_eq!(c.eviction_pressure(), 0.0);
+    }
+
+    #[test]
+    fn lru_trims_oldest_insert_first_and_partially() {
+        let mut c = CacheState::with_capacity(1000, CachePolicy::Lru);
+        c.insert_shared_artifact(1, 400);
+        c.insert_shared_artifact(2, 400);
+        c.insert_shared_artifact(3, 400);
+        // Overflow 200 tail-trims the oldest insert to a 200-byte prefix.
+        assert_eq!(c.resident_bytes(0, &m(1, 400), false), 200);
+        assert_eq!(c.resident_bytes(0, &m(2, 400), false), 400);
+        assert_eq!(c.resident_bytes(0, &m(3, 400), false), 400);
+        assert_eq!(c.evicted_bytes(), 200);
+        assert_eq!(c.used_bytes(0), 1000);
+        c.insert_shared_artifact(4, 600);
+        // 1 then 2 go entirely; 3 and 4 fit exactly.
+        assert_eq!(c.resident_bytes(0, &m(1, 400), false), 0);
+        assert_eq!(c.resident_bytes(0, &m(2, 400), false), 0);
+        assert_eq!(c.resident_bytes(0, &m(3, 400), false), 400);
+        assert_eq!(c.resident_bytes(0, &m(4, 600), false), 600);
+        assert_eq!(c.evicted_bytes(), 800);
+    }
+
+    #[test]
+    fn pinned_hot_set_survives_churn() {
+        let mut c = CacheState::with_capacity(1000, CachePolicy::PinHotSet);
+        c.insert_shared_artifact(10, 300); // hot set
+        c.pin_shared_artifact(10);
+        c.insert_shared_artifact(11, 200); // env snapshot
+        c.insert_shared_artifact(12, 900); // churn
+        // env evicted entirely, churn admission-trimmed to fit; the
+        // pinned hot set is untouched.
+        assert_eq!(c.resident_bytes(0, &m(10, 300), false), 300);
+        assert_eq!(c.resident_bytes(0, &m(11, 200), false), 0);
+        assert_eq!(c.resident_bytes(0, &m(12, 900), false), 700);
+        // Only env's 200 bytes count as eviction (churn's own trim is
+        // admission, not eviction).
+        assert_eq!(c.evicted_bytes(), 200);
+    }
+
+    #[test]
+    fn gdsf_prefers_the_large_cold_artifact() {
+        let mut c = CacheState::with_capacity(1000, CachePolicy::Gdsf);
+        for _ in 0..3 {
+            c.insert_shared_artifact(1, 50); // small & hot: high priority
+        }
+        c.insert_shared_artifact(2, 980); // big one-shot insert
+        // LRU would trim artifact 1 (older); GDSF trims the big cold one.
+        assert_eq!(c.resident_bytes(0, &m(1, 200), false), 150);
+        assert_eq!(c.resident_bytes(0, &m(2, 980), false), 850);
+        // The victim was the incoming insert itself: admission trim.
+        assert_eq!(c.evicted_bytes(), 0);
+    }
+
+    #[test]
+    fn admission_trim_caps_oversized_insert() {
+        let mut c = CacheState::with_capacity(500, CachePolicy::Lru);
+        c.insert_shared_artifact(1, 800);
+        assert_eq!(c.resident_bytes(0, &m(1, 800), false), 500);
+        assert_eq!(c.used_bytes(0), 500);
+        assert_eq!(c.evicted_bytes(), 0);
+        assert_eq!(c.eviction_pressure(), 0.0);
+    }
+
+    #[test]
+    fn eviction_pressure_tracks_churn() {
+        let mut c = CacheState::with_capacity(1000, CachePolicy::Lru);
+        c.insert_shared_artifact(1, 600);
+        c.insert_shared_artifact(2, 900);
+        // 500 bytes of artifact 1 evicted for artifact 2 → pressure 0.5.
+        assert_eq!(c.evicted_bytes(), 500);
+        assert!((c.eviction_pressure() - 0.5).abs() < 1e-12);
+        assert_eq!(CacheState::new().eviction_pressure(), 0.0);
+    }
+
+    #[test]
+    fn per_node_layers_bound_the_worst_node_view() {
+        let mut c = CacheState::with_capacity(1000, CachePolicy::Lru);
+        c.insert_shared_artifact(1, 400);
+        c.insert_node_artifact(0, 2, 500);
+        c.insert_node_artifact(1, 3, 500);
+        // Each node's view is 900 ≤ 1000: nothing trims, even though the
+        // total footprint across nodes exceeds the capacity.
+        assert_eq!(c.evicted_bytes(), 0);
+        assert_eq!(c.used_bytes(0), 900);
+        assert_eq!(c.used_bytes(1), 900);
+        // Growing node 1's layer past the bound trims within that view.
+        c.insert_node_artifact(1, 4, 300);
+        assert_eq!(c.used_bytes(1), 1000);
+        // The shared artifact was the oldest candidate; trimming it also
+        // shrinks every other node's view.
+        assert_eq!(c.resident_bytes(0, &m(1, 400), false), 200);
+        assert_eq!(c.used_bytes(0), 700);
+        assert_eq!(c.evicted_bytes(), 200);
+    }
+
+    #[test]
+    fn explicit_evict_clears_bounded_meta() {
+        let mut c = CacheState::with_capacity(1000, CachePolicy::Lru);
+        c.insert_shared_artifact(1, 600);
+        c.evict_artifact(1);
+        assert_eq!(c.evicted_bytes(), 0); // explicit drops aren't pressure
+        // The freed space is genuinely free again.
+        c.insert_shared_artifact(2, 1000);
+        assert_eq!(c.resident_bytes(0, &m(2, 1000), false), 1000);
+        assert_eq!(c.evicted_bytes(), 0);
+    }
+
+    // ---- property suite: bounded accounting vs. policy oracle ----------
+    //
+    // Same style as `sim::golden`: an independently-coded reference model
+    // (linear `Vec` scans, no `BTreeMap`) is driven through the identical
+    // op sequence and the full byte-state is compared after *every* op —
+    // which pins the eviction order, not just the end state.
+
+    #[derive(Clone)]
+    struct OEntry {
+        scope: usize,
+        id: u64,
+        bytes: u64,
+        seq: u64,
+        inserts: u64,
+        pinned: bool,
+        h: f64,
+    }
+
+    struct Oracle {
+        capacity: u64,
+        policy: CachePolicy,
+        seq: u64,
+        inflation: f64,
+        evicted: u64,
+        entries: Vec<OEntry>,
+    }
+
+    impl Oracle {
+        fn new(capacity: u64, policy: CachePolicy) -> Oracle {
+            Oracle {
+                capacity,
+                policy,
+                seq: 0,
+                inflation: 0.0,
+                evicted: 0,
+                entries: Vec::new(),
+            }
+        }
+
+        fn find(&mut self, scope: usize, id: u64) -> Option<&mut OEntry> {
+            self.entries
+                .iter_mut()
+                .find(|e| e.scope == scope && e.id == id)
+        }
+
+        fn bytes(&self, scope: usize, id: u64) -> u64 {
+            self.entries
+                .iter()
+                .find(|e| e.scope == scope && e.id == id)
+                .map_or(0, |e| e.bytes)
+        }
+
+        fn scope_sum(&self, scope: usize) -> u64 {
+            self.entries
+                .iter()
+                .filter(|e| e.scope == scope)
+                .map(|e| e.bytes)
+                .sum()
+        }
+
+        fn insert(&mut self, scope: usize, id: u64, bytes: u64) {
+            if bytes == 0 {
+                return;
+            }
+            self.seq += 1;
+            let (seq, inflation) = (self.seq, self.inflation);
+            if self.find(scope, id).is_none() {
+                self.entries.push(OEntry {
+                    scope,
+                    id,
+                    bytes: 0,
+                    seq: 0,
+                    inserts: 0,
+                    pinned: false,
+                    h: 0.0,
+                });
+            }
+            let e = self.find(scope, id).unwrap();
+            e.bytes = e.bytes.saturating_add(bytes);
+            e.seq = seq;
+            e.inserts += 1;
+            let size_mb = (e.bytes as f64 / 1e6).max(1e-6);
+            e.h = inflation + e.inserts as f64 / size_mb;
+            self.enforce((scope, id));
+        }
+
+        fn pin(&mut self, scope: usize, id: u64) {
+            if let Some(e) = self.find(scope, id) {
+                e.pinned = true;
+            }
+        }
+
+        fn evict(&mut self, id: u64) {
+            self.entries.retain(|e| e.id != id);
+        }
+
+        fn worst_node(&self) -> usize {
+            let mut nodes: Vec<usize> = self
+                .entries
+                .iter()
+                .filter(|e| e.scope != SHARED_SCOPE)
+                .map(|e| e.scope)
+                .collect();
+            nodes.sort_unstable();
+            nodes.dedup();
+            let mut worst = SHARED_SCOPE;
+            let mut worst_sum = 0u64;
+            for n in nodes {
+                let s = self.scope_sum(n);
+                if s > worst_sum {
+                    worst = n;
+                    worst_sum = s;
+                }
+            }
+            worst
+        }
+
+        fn enforce(&mut self, incoming: (usize, u64)) {
+            loop {
+                let worst = self.worst_node();
+                let used = self
+                    .scope_sum(SHARED_SCOPE)
+                    .saturating_add(if worst == SHARED_SCOPE {
+                        0
+                    } else {
+                        self.scope_sum(worst)
+                    });
+                if used <= self.capacity {
+                    return;
+                }
+                let overflow = used - self.capacity;
+                let Some(idx) = self.pick(worst, incoming) else {
+                    return;
+                };
+                let trim = overflow.min(self.entries[idx].bytes);
+                if trim == 0 {
+                    return;
+                }
+                let key = (self.entries[idx].scope, self.entries[idx].id);
+                let h = self.entries[idx].h;
+                self.entries[idx].bytes -= trim;
+                if self.entries[idx].bytes == 0 {
+                    self.entries.remove(idx);
+                }
+                if self.policy == CachePolicy::Gdsf {
+                    self.inflation = self.inflation.max(h);
+                }
+                if key != incoming {
+                    self.evicted += trim;
+                }
+            }
+        }
+
+        fn pick(&self, worst: usize, incoming: (usize, u64)) -> Option<usize> {
+            let mut best: Option<((u64, u64, usize, u64), usize)> = None;
+            for (i, e) in self.entries.iter().enumerate() {
+                if e.scope != SHARED_SCOPE && e.scope != worst {
+                    continue;
+                }
+                if e.pinned || e.bytes == 0 {
+                    continue;
+                }
+                let key = match self.policy {
+                    CachePolicy::Lru | CachePolicy::PinHotSet => {
+                        (e.seq, 0u64, e.scope, e.id)
+                    }
+                    CachePolicy::Gdsf => (e.h.to_bits(), e.seq, e.scope, e.id),
+                };
+                let better = match &best {
+                    None => true,
+                    Some((k, _)) => key < *k,
+                };
+                if better {
+                    best = Some((key, i));
+                }
+            }
+            match best {
+                Some((_, i)) => Some(i),
+                None => {
+                    if incoming.0 == SHARED_SCOPE || incoming.0 == worst {
+                        self.entries.iter().position(|e| {
+                            e.scope == incoming.0 && e.id == incoming.1 && e.bytes > 0
+                        })
+                    } else {
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_bounded_accounting_matches_policy_oracle() {
+        use crate::prop_assert;
+        use crate::util::prop::prop_check;
+        const SCOPES: [usize; 4] = [SHARED_SCOPE, 0, 1, 2];
+        prop_check(48, |g| {
+            let cap = g.u64_in(500, 4_000);
+            let policy = CachePolicy::ALL[g.usize_in(0, 2)];
+            let mut cache = CacheState::with_capacity(cap, policy);
+            let mut oracle = Oracle::new(cap, policy);
+            let n_ops = g.usize_in(10, 60);
+            for _ in 0..n_ops {
+                let roll = g.usize_in(0, 99);
+                let scope = SCOPES[g.usize_in(0, 3)];
+                let id = g.u64_in(1, 6);
+                // Snapshot pinned entries: nothing may shrink them except
+                // an op targeting that same entry.
+                let pinned_before: Vec<((usize, u64), u64)> = oracle
+                    .entries
+                    .iter()
+                    .filter(|e| e.pinned)
+                    .map(|e| ((e.scope, e.id), e.bytes))
+                    .collect();
+                let own_target: Option<(usize, u64)>;
+                let evicts_id: bool;
+                if roll < 55 {
+                    let bytes = g.u64_in(1, 1_200);
+                    match scope {
+                        SHARED_SCOPE => cache.insert_shared_artifact(id, bytes),
+                        n => cache.insert_node_artifact(n, id, bytes),
+                    }
+                    oracle.insert(scope, id, bytes);
+                    own_target = Some((scope, id));
+                    evicts_id = false;
+                } else if roll < 70 {
+                    // Dedup-path insert: chunked manifest, the artifact
+                    // total is what gets accounted.
+                    let total = g.u64_in(1, 9) * 100;
+                    let man = ArtifactManifest::synthetic(id, total, 100);
+                    match scope {
+                        SHARED_SCOPE => cache.insert_shared_chunks(&man),
+                        n => cache.insert_node_chunks(n, &man),
+                    }
+                    oracle.insert(scope, id, total);
+                    own_target = Some((scope, id));
+                    evicts_id = false;
+                } else if roll < 85 {
+                    match scope {
+                        SHARED_SCOPE => cache.pin_shared_artifact(id),
+                        n => cache.pin_node_artifact(n, id),
+                    }
+                    oracle.pin(scope, id);
+                    own_target = None;
+                    evicts_id = false;
+                } else {
+                    cache.evict_artifact(id);
+                    oracle.evict(id);
+                    own_target = None;
+                    evicts_id = true;
+                }
+                // Capacity invariant: no node's view ever exceeds cap.
+                for node in 0..3usize {
+                    prop_assert!(
+                        cache.used_bytes(node) <= cap,
+                        "node {} used {} > cap {}",
+                        node,
+                        cache.used_bytes(node),
+                        cap
+                    );
+                }
+                // Pinned entries only shrink via their own insert/evict.
+                for ((s, i), before) in pinned_before {
+                    if evicts_id && i == id {
+                        continue;
+                    }
+                    if own_target == Some((s, i)) {
+                        continue;
+                    }
+                    prop_assert!(
+                        cache.scope_artifact_bytes(s, i) >= before,
+                        "pinned ({s},{i}) shrank from {before}"
+                    );
+                }
+                // Full byte-state equality against the oracle — this is
+                // what pins the eviction *order* per policy.
+                prop_assert!(
+                    cache.evicted_bytes() == oracle.evicted,
+                    "evicted {} != oracle {}",
+                    cache.evicted_bytes(),
+                    oracle.evicted
+                );
+                for s in SCOPES {
+                    for i in 1..=6u64 {
+                        let got = cache.scope_artifact_bytes(s, i);
+                        let want = oracle.bytes(s, i);
+                        prop_assert!(
+                            got == want,
+                            "scope {s} id {i}: cache {got} != oracle {want}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -20,8 +20,11 @@
 //! overlapped prefetch are all just "what's already in [`CacheState`]".
 //! Cross-artifact dedup (`bootseer.artifact_dedup`) and delta checkpoint
 //! resume (`bootseer.delta_resume`) are transfer-plane features no
-//! per-subsystem byte channel could express. Design note:
-//! `docs/artifact_layer.md`.
+//! per-subsystem byte channel could express. Bounded per-node capacity
+//! with pluggable eviction ([`CacheState::with_capacity`]) and
+//! registry/cluster-cache load shedding ([`Admission`]) put fleet cache
+//! economics on top: what a restart storm costs when cached bytes can
+//! actually fall out. Design note: `docs/artifact_layer.md`.
 
 pub mod cache;
 pub mod manifest;
@@ -29,4 +32,4 @@ pub mod transfer;
 
 pub use cache::CacheState;
 pub use manifest::{ArtifactKind, ArtifactManifest, Chunk};
-pub use transfer::{ProviderTier, TransferPlanner};
+pub use transfer::{admitted_peers, Admission, ProviderTier, TransferPlanner};

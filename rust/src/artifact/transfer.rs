@@ -22,10 +22,42 @@
 //! The *local disk* tier is implicit: bytes already resident per
 //! [`crate::artifact::cache::CacheState`] are subtracted before `fetch` is
 //! ever called, and never cross the network again.
+//!
+//! # Load-shedding & retry backoff
+//!
+//! The registry and the cluster cache are *shared* services: a restart
+//! storm has every node of every restarting job hitting them at once.
+//! [`Admission`] models their finite concurrency: when fleet demand
+//! exceeds a tier's entitlement slots
+//! ([`crate::faults::FaultConfig::registry_slots`] /
+//! [`FaultConfig::cache_slots`](crate::faults::FaultConfig::cache_slots)),
+//! a fetch is *shed* with probability `(demand − slots) / demand` and
+//! retries after a seeded exponential backoff — the fetch itself then
+//! runs exactly once, just later, so no byte is ever moved (or counted)
+//! twice. The terminal attempt is always admitted: shedding delays, it
+//! never starves. Every decision is `mix64`-derived from
+//! `(seed, tier, artifact, node, attempt)` — never from simulator state —
+//! so the parallel replay stays byte-identical at any `--threads`, and a
+//! config without slot limits builds a planner with no admission at all
+//! (`Option::None`), laying down the exact historical task DAG.
 
+use crate::faults::FaultConfig;
 use crate::hdfs::fuse::{plan_read, ReadEngine};
 use crate::image::p2p::Swarm;
 use crate::sim::{ClusterSim, TaskId};
+use crate::util::rng::mix64;
+
+/// Domain-separation salts for admission decisions (fresh `0xA272` domain;
+/// faults use `0xFA0x`, manifests `0xA271_xxxx`).
+const SALT_SHED: u64 = 0xA272_0001;
+const SALT_BACKOFF: u64 = 0xA272_0002;
+const SALT_PEER: u64 = 0xA272_0003;
+
+/// Uniform in `[0, 1)` from a mixed word (the one unit-float idiom in the
+/// tree, cf. `util::rng`).
+fn unit(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
 
 /// Where a transfer pulls its bytes from (in preference order behind the
 /// implicit local-disk tier).
@@ -52,12 +84,167 @@ pub enum ProviderTier {
     HdfsStream(ReadEngine),
 }
 
+/// Deterministic load-shedding state for the shared registry and
+/// cluster-cache tiers during one startup. Copy-cheap: planners embed it
+/// by value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Admission {
+    registry_slots: u32,
+    cache_slots: u32,
+    /// Fleet-wide concurrently-starting nodes contending for the shared
+    /// services while this startup runs (from the replay's contention
+    /// profile — phase-1 data, identical at any thread count).
+    demand: u32,
+    backoff_s: f64,
+    max_retries: u32,
+    seed: u64,
+}
+
+impl Admission {
+    /// Admission control for one startup, or `None` when the fault config
+    /// leaves both tiers unlimited (or nothing contends) — the planner
+    /// then takes the exact historical code path.
+    pub fn from_faults(f: &FaultConfig, demand: u32, seed: u64) -> Option<Admission> {
+        if (f.registry_slots == u32::MAX && f.cache_slots == u32::MAX) || demand == 0 {
+            return None;
+        }
+        Some(Admission {
+            registry_slots: f.registry_slots,
+            cache_slots: f.cache_slots,
+            demand,
+            backoff_s: f.shed_backoff_s,
+            max_retries: f.shed_retries,
+            seed,
+        })
+    }
+
+    fn slots_for(&self, tier: ProviderTier) -> u32 {
+        match tier {
+            ProviderTier::Registry | ProviderTier::RegistrySwarm => self.registry_slots,
+            ProviderTier::ClusterCache | ProviderTier::CacheSwarm => self.cache_slots,
+            _ => u32::MAX,
+        }
+    }
+
+    /// Decision-stream tag of the *service* behind a tier: the swarm and
+    /// direct flavours of one service share a shed stream (it is the same
+    /// backend saying no).
+    fn service_salt(tier: ProviderTier) -> u64 {
+        match tier {
+            ProviderTier::Registry | ProviderTier::RegistrySwarm => 0x52,
+            ProviderTier::ClusterCache | ProviderTier::CacheSwarm => 0x43,
+            _ => 0,
+        }
+    }
+
+    /// Is `tier` backed by one of the governed shared services?
+    pub fn governs(tier: ProviderTier) -> bool {
+        Admission::service_salt(tier) != 0
+    }
+
+    /// The decision-stream seed (peer-admission streams derive from it).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Probability one fetch attempt against `tier` is shed:
+    /// `(demand − slots) / demand`, 0 when the tier keeps up.
+    pub fn shed_prob(&self, tier: ProviderTier) -> f64 {
+        let slots = self.slots_for(tier);
+        if slots == u32::MAX || self.demand <= slots {
+            return 0.0;
+        }
+        (self.demand - slots) as f64 / self.demand as f64
+    }
+
+    /// Is attempt `attempt` of `(artifact, node)` against `tier` shed?
+    /// The attempt at `shed_retries` is always admitted (delay, never
+    /// starvation). Pure in `(seed, tier, artifact, node, attempt)`.
+    pub fn sheds(&self, tier: ProviderTier, artifact: u64, node: usize, attempt: u32) -> bool {
+        if attempt >= self.max_retries {
+            return false;
+        }
+        let p = self.shed_prob(tier);
+        if p <= 0.0 {
+            return false;
+        }
+        let x = mix64(
+            self.seed
+                ^ SALT_SHED
+                ^ Admission::service_salt(tier).wrapping_mul(0xD6E8_FEB8_6659_FD93)
+                ^ artifact.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (node as u64).wrapping_mul(0xC2B2AE3D27D4EB4F)
+                ^ (attempt as u64).wrapping_mul(0x165667B19E3779F9),
+        );
+        unit(x) < p
+    }
+
+    /// Backoff before retry `attempt + 1`: `backoff_s · 2^attempt`,
+    /// jittered by a seeded factor in `[0.5, 1.5)` so shed retries don't
+    /// re-collide in phase.
+    pub fn backoff_s(&self, artifact: u64, node: usize, attempt: u32) -> f64 {
+        let x = mix64(
+            self.seed
+                ^ SALT_BACKOFF
+                ^ artifact.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (node as u64).wrapping_mul(0xC2B2AE3D27D4EB4F)
+                ^ (attempt as u64).wrapping_mul(0x165667B19E3779F9),
+        );
+        self.backoff_s * (1u64 << attempt.min(62)) as f64 * (0.5 + unit(x))
+    }
+
+    /// How many consecutive attempts of `(artifact, node)` are shed
+    /// before one is admitted (0 = admitted immediately; capped at
+    /// `shed_retries` by construction).
+    pub fn shed_attempts(&self, tier: ProviderTier, artifact: u64, node: usize) -> u32 {
+        let mut a = 0u32;
+        while self.sheds(tier, artifact, node, a) {
+            a += 1;
+        }
+        a
+    }
+
+    /// Total seconds `(artifact, node)` waits out in backoff before its
+    /// admitted attempt; 0 when the first attempt is admitted.
+    pub fn delay_before(&self, tier: ProviderTier, artifact: u64, node: usize) -> f64 {
+        let n = self.shed_attempts(tier, artifact, node);
+        let mut d = 0.0;
+        for a in 0..n {
+            d += self.backoff_s(artifact, node, a);
+        }
+        d
+    }
+}
+
+/// Swarm peers a cache under eviction pressure still fields: each peer
+/// keeps serving with probability `1 − pressure` (a peer about to evict
+/// the chunks it would serve is not a useful peer). Pure in
+/// `(seed, peer index)`; pressure 0 admits every peer — the historical
+/// swarm, byte-identical.
+pub fn admitted_peers(n_peers: u32, pressure: f64, seed: u64) -> u32 {
+    if pressure <= 0.0 || n_peers == 0 {
+        return n_peers;
+    }
+    let mut n = 0u32;
+    for i in 0..n_peers {
+        let x = mix64(seed ^ SALT_PEER ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        if unit(x) >= pressure {
+            n += 1;
+        }
+    }
+    n
+}
+
 /// A provider bound to a sim: swarm tiers carry their (scoped) pool, the
 /// rest resolve per fetch. Build once per artifact movement, fetch once
 /// per node.
 pub struct TransferPlanner {
     tier: ProviderTier,
     swarm: Option<Swarm>,
+    admission: Option<Admission>,
+    /// Identity of the artifact this planner moves, for the admission
+    /// decision streams.
+    artifact: u64,
 }
 
 impl TransferPlanner {
@@ -91,12 +278,30 @@ impl TransferPlanner {
             )),
             _ => None,
         };
-        TransferPlanner { tier, swarm }
+        TransferPlanner { tier, swarm, admission: None, artifact: 0 }
+    }
+
+    /// Attach admission control for `artifact`'s decision streams.
+    /// `None` (the default) admits everything immediately — the
+    /// historical DAG, bit for bit.
+    pub fn with_admission(mut self, admission: Option<Admission>, artifact: u64) -> Self {
+        self.admission = admission;
+        self.artifact = artifact;
+        self
     }
 
     /// The bound tier.
     pub fn tier(&self) -> ProviderTier {
         self.tier
+    }
+
+    /// Consecutive shed attempts `node`'s fetch rides out before being
+    /// admitted (0 without admission control — and then no extra task is
+    /// ever laid down).
+    pub fn shed_attempts(&self, node: usize) -> u32 {
+        self.admission
+            .as_ref()
+            .map_or(0, |a| a.shed_attempts(self.tier, self.artifact, node))
     }
 
     /// Move `bytes` onto `node` after `deps`; returns the completion task.
@@ -110,6 +315,22 @@ impl TransferPlanner {
         deps: &[TaskId],
         tag: u64,
     ) -> TaskId {
+        // Shed attempts surface as one backoff delay gating the single
+        // real fetch: the bytes move exactly once, just later. No shed →
+        // no extra task → byte-identical DAG.
+        let gated;
+        let deps = match &self.admission {
+            Some(adm) => {
+                let d = adm.delay_before(self.tier, self.artifact, node);
+                if d > 0.0 {
+                    gated = vec![cs.sim.delay(d, deps, 0)];
+                    &gated[..]
+                } else {
+                    deps
+                }
+            }
+            None => deps,
+        };
         match (self.tier, &self.swarm) {
             (ProviderTier::RegistrySwarm | ProviderTier::CacheSwarm, Some(sw)) => {
                 sw.download(&mut cs.sim, bytes, cs.node_nic[node], deps, tag)
@@ -247,5 +468,124 @@ mod tests {
         let t2 = cache.fetch(&mut b, 0, 50e9, &[], 1);
         b.sim.run();
         assert!(a.sim.finished_at(t) >= b.sim.finished_at(t2));
+    }
+
+    // ---- admission control (load shedding & retry backoff) -------------
+
+    fn storm_admission(demand: u32, seed: u64) -> Admission {
+        Admission::from_faults(&FaultConfig::storm(), demand, seed)
+            .expect("storm has finite slots")
+    }
+
+    #[test]
+    fn unlimited_slots_build_no_admission() {
+        assert_eq!(Admission::from_faults(&FaultConfig::off(), 500, 1), None);
+        assert_eq!(Admission::from_faults(&FaultConfig::paper(), 500, 1), None);
+        // Nothing contending → nothing to shed.
+        assert_eq!(Admission::from_faults(&FaultConfig::storm(), 0, 1), None);
+        // Demand within the entitlement → zero shed probability.
+        let adm = storm_admission(64, 1);
+        assert_eq!(adm.shed_prob(ProviderTier::Registry), 0.0);
+        assert!(!adm.sheds(ProviderTier::Registry, 9, 0, 0));
+        // Unshared tiers are never governed.
+        let adm = storm_admission(4096, 1);
+        assert_eq!(adm.shed_prob(ProviderTier::Scm), 0.0);
+        assert_eq!(adm.shed_prob(ProviderTier::Hdfs { nn_op: true }), 0.0);
+    }
+
+    #[test]
+    fn shed_then_retry_fetches_exactly_once_shifted_by_backoff() {
+        let adm = storm_admission(1024, 7);
+        let art = (0..256u64)
+            .find(|&a| adm.shed_attempts(ProviderTier::ClusterCache, a, 0) >= 1)
+            .expect("p = (1024-96)/1024: some artifact sheds");
+        let d = adm.delay_before(ProviderTier::ClusterCache, art, 0);
+        assert!(d > 0.0);
+        let mut a = sim(1);
+        let p = TransferPlanner::build(&mut a, "x", ProviderTier::ClusterCache, 0, 0)
+            .with_admission(Some(adm), art);
+        assert!(p.shed_attempts(0) >= 1);
+        let t = p.fetch(&mut a, 0, 1e9, &[], 1);
+        a.sim.run();
+        let mut b = sim(1);
+        let q = TransferPlanner::build(&mut b, "x", ProviderTier::ClusterCache, 0, 0);
+        let t2 = q.fetch(&mut b, 0, 1e9, &[], 1);
+        b.sim.run();
+        // One fetch, shifted by exactly the backoff: the flow itself is
+        // the same single task, so the bytes move (and count) once.
+        assert!(
+            (a.sim.finished_at(t) - (b.sim.finished_at(t2) + d)).abs() < 1e-9,
+            "shed fetch must be the unshifted fetch plus its backoff"
+        );
+    }
+
+    #[test]
+    fn admitted_first_try_is_bit_identical_to_no_admission() {
+        let adm = storm_admission(1024, 7);
+        let art = (0..256u64)
+            .find(|&a| adm.shed_attempts(ProviderTier::ClusterCache, a, 0) == 0)
+            .expect("some artifact is admitted immediately");
+        let mut a = sim(1);
+        let p = TransferPlanner::build(&mut a, "x", ProviderTier::ClusterCache, 0, 0)
+            .with_admission(Some(adm), art);
+        let t = p.fetch(&mut a, 0, 1e9, &[], 1);
+        a.sim.run();
+        let mut b = sim(1);
+        let q = TransferPlanner::build(&mut b, "x", ProviderTier::ClusterCache, 0, 0);
+        let t2 = q.fetch(&mut b, 0, 1e9, &[], 1);
+        b.sim.run();
+        assert_eq!(a.sim.finished_at(t).to_bits(), b.sim.finished_at(t2).to_bits());
+    }
+
+    #[test]
+    fn backoff_schedule_reproducible_and_bounded() {
+        let a = storm_admission(512, 11);
+        let b = storm_admission(512, 11);
+        let c = storm_admission(512, 12);
+        let mut differs = false;
+        for att in 0..4u32 {
+            let x = a.backoff_s(5, 3, att);
+            assert_eq!(x.to_bits(), b.backoff_s(5, 3, att).to_bits());
+            differs |= x.to_bits() != c.backoff_s(5, 3, att).to_bits();
+            let base = FaultConfig::storm().shed_backoff_s * (1u64 << att) as f64;
+            assert!(x >= base * 0.5 && x < base * 1.5, "attempt {att}: {x}");
+        }
+        assert!(differs, "the seed must key the schedule");
+        // delay_before is the sum of the shed attempts' backoffs.
+        let n = a.shed_attempts(ProviderTier::Registry, 5, 3);
+        let sum: f64 = (0..n).map(|k| a.backoff_s(5, 3, k)).sum();
+        assert_eq!(a.delay_before(ProviderTier::Registry, 5, 3).to_bits(), sum.to_bits());
+        // The terminal attempt is always admitted: delay, never
+        // starvation.
+        assert!(!a.sheds(ProviderTier::Registry, 5, 3, FaultConfig::storm().shed_retries));
+        assert!(n <= FaultConfig::storm().shed_retries);
+    }
+
+    #[test]
+    fn shed_rate_tracks_excess_demand() {
+        let adm = storm_admission(384, 3);
+        // Cache tier: p = (384 − 96) / 384 = 0.75.
+        let shed = (0..2000u64)
+            .filter(|&a| adm.sheds(ProviderTier::CacheSwarm, a, 0, 0))
+            .count() as f64
+            / 2000.0;
+        assert!((shed - 0.75).abs() < 0.05, "cache shed rate {shed}");
+        // Registry tier: p = (384 − 64) / 384 ≈ 0.833, an independent
+        // stream.
+        let reg = (0..2000u64)
+            .filter(|&a| adm.sheds(ProviderTier::Registry, a, 0, 0))
+            .count() as f64
+            / 2000.0;
+        assert!((reg - 320.0 / 384.0).abs() < 0.05, "registry shed rate {reg}");
+    }
+
+    #[test]
+    fn peer_admission_thins_the_swarm_under_pressure() {
+        assert_eq!(admitted_peers(8, 0.0, 9), 8);
+        assert_eq!(admitted_peers(8, 1.0, 9), 0);
+        assert_eq!(admitted_peers(0, 0.7, 9), 0);
+        let n = admitted_peers(64, 0.5, 9);
+        assert!(n > 8 && n < 56, "half pressure thins roughly half: {n}");
+        assert_eq!(n, admitted_peers(64, 0.5, 9));
     }
 }

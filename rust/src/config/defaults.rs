@@ -193,6 +193,34 @@ pub const CKPT_CHUNK_BYTES: u64 = 64 * MB;
 /// (`bootseer.delta_resume`) refetches only these.
 pub const CKPT_DELTA_CHANGED_FRACTION: f64 = 0.35;
 
+// ---- Bounded caches & registry load-shedding (cache economics) ----
+
+/// Per-node artifact-cache capacity (bytes). `u64::MAX` = unbounded, the
+/// assumption every figure before the cache-economics sweep made; the
+/// sweep bounds it and measures the knee.
+pub const CACHE_CAPACITY_BYTES: u64 = u64::MAX;
+/// Smallest foreign-churn artifact a node's bounded cache absorbs between
+/// two attempts of the same job (other tenants' images, datasets, logs
+/// landing on the shared local disk while the job was down).
+pub const CACHE_CHURN_MIN_BYTES: u64 = GB;
+/// Churn spread: churn bytes are log-uniform over
+/// `CACHE_CHURN_MIN_BYTES × 2^[0, CACHE_CHURN_DOUBLINGS)` — 1–32 GB, a
+/// heavy right tail against the ~2.3 GB hot-set + env working set, so
+/// sweeping capacity from a few GB to unbounded traces out a knee.
+pub const CACHE_CHURN_DOUBLINGS: f64 = 5.0;
+/// Backoff base for a load-shed artifact fetch (seconds); doubles per
+/// shed attempt with a seeded jitter (mirrors `SCM_BACKOFF_S`).
+pub const SHED_BACKOFF_S: f64 = 5.0;
+/// Attempts after which a fetch is always admitted regardless of
+/// overload (the terminal attempt never sheds).
+pub const SHED_MAX_RETRIES: u32 = 3;
+/// Registry concurrency slots under the `storm` fault preset, in node
+/// entitlements (cf. `FLEET_SERVICE_NODES`): restart storms exceed this,
+/// shedding and delaying image pulls.
+pub const STORM_REGISTRY_SLOTS: u32 = 64;
+/// Cluster-cache concurrency slots under the `storm` fault preset.
+pub const STORM_CACHE_SLOTS: u32 = 96;
+
 /// Traditional OCI pull decompress+unpack throughput per node (bytes/s).
 /// Layer extraction is CPU-bound and single-streamed in containerd — the
 /// dominant cost of the OCI strawman and the reason flattened block images

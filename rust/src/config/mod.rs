@@ -81,6 +81,49 @@ impl OverlapMode {
     }
 }
 
+/// Which victim a bounded per-node artifact cache trims first when an
+/// insert overflows `bootseer.cache_capacity_bytes` (see
+/// `artifact::cache` and `docs/artifact_layer.md` §Bounded caches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Least-recently-inserted artifact first (recency = insert order;
+    /// the cache has no read clock). The default.
+    Lru,
+    /// Greedy-Dual-Size-Frequency: victim with the lowest
+    /// `inflation + inserts / size_mb` priority — size-aware, so one huge
+    /// cold artifact is trimmed before many small hot ones.
+    Gdsf,
+    /// LRU, but the job's image hot set is pinned and never evicted —
+    /// churn lands on the env snapshot and checkpoint entries first.
+    PinHotSet,
+}
+
+impl CachePolicy {
+    pub const ALL: [CachePolicy; 3] = [CachePolicy::Lru, CachePolicy::Gdsf, CachePolicy::PinHotSet];
+
+    pub fn parse(s: &str) -> Option<CachePolicy> {
+        match s {
+            "lru" => Some(CachePolicy::Lru),
+            "gdsf" => Some(CachePolicy::Gdsf),
+            "pin" | "pin_hot_set" => Some(CachePolicy::PinHotSet),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePolicy::Lru => "lru",
+            CachePolicy::Gdsf => "gdsf",
+            CachePolicy::PinHotSet => "pin_hot_set",
+        }
+    }
+
+    /// Does this policy pin the image hot set on warm restarts?
+    pub fn pins_hot_set(&self) -> bool {
+        matches!(self, CachePolicy::PinHotSet)
+    }
+}
+
 /// Physical cluster + shared-service model.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -342,6 +385,13 @@ pub struct BootseerConfig {
     /// re-fetches only the resume-shard chunks rewritten since the
     /// resident copy, instead of the whole shard. Off by default.
     pub delta_resume: bool,
+    /// Per-node artifact-cache capacity in bytes. `u64::MAX` (the
+    /// default) models the unbounded cache every earlier PR assumed and
+    /// is byte-identical to it; a finite capacity makes warm restarts
+    /// compete with fleet churn for local disk (`artifact::cache`).
+    pub cache_capacity_bytes: u64,
+    /// Eviction policy of a bounded cache (ignored while unbounded).
+    pub cache_policy: CachePolicy,
 }
 
 impl BootseerConfig {
@@ -361,6 +411,8 @@ impl BootseerConfig {
             spec_prefetch_budget_bytes: d::SPEC_PREFETCH_BUDGET_BYTES,
             artifact_dedup: false,
             delta_resume: false,
+            cache_capacity_bytes: d::CACHE_CAPACITY_BYTES,
+            cache_policy: CachePolicy::Lru,
         }
     }
 
@@ -416,6 +468,19 @@ impl BootseerConfig {
                 .max(0) as u64,
             artifact_dedup: doc.bool_or("bootseer.artifact_dedup", base.artifact_dedup),
             delta_resume: doc.bool_or("bootseer.delta_resume", base.delta_resume),
+            // The unbounded default (`u64::MAX`) must not round-trip
+            // through i64; only an explicitly set key overrides it.
+            // Negative values clamp to 0 ("no cache"), not unbounded.
+            cache_capacity_bytes: doc
+                .get("bootseer.cache_capacity_bytes")
+                .and_then(|v| v.as_i64())
+                .map(|v| v.max(0) as u64)
+                .unwrap_or(base.cache_capacity_bytes),
+            cache_policy: doc
+                .get("bootseer.cache_policy")
+                .and_then(|v| v.as_str())
+                .and_then(CachePolicy::parse)
+                .unwrap_or(base.cache_policy),
         }
     }
 }
@@ -563,6 +628,42 @@ mod tests {
         let boot = BootseerConfig::from_doc(&doc);
         assert!(boot.artifact_dedup);
         assert!(boot.delta_resume);
+    }
+
+    #[test]
+    fn cache_policy_parse_roundtrip() {
+        for p in CachePolicy::ALL {
+            assert_eq!(CachePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(CachePolicy::parse("pin"), Some(CachePolicy::PinHotSet));
+        assert_eq!(CachePolicy::parse("nope"), None);
+        assert!(CachePolicy::PinHotSet.pins_hot_set());
+        assert!(!CachePolicy::Lru.pins_hot_set());
+    }
+
+    #[test]
+    fn cache_capacity_defaults_unbounded_and_parses() {
+        // Both paper configurations assume an unbounded local cache.
+        assert_eq!(BootseerConfig::baseline().cache_capacity_bytes, u64::MAX);
+        assert_eq!(BootseerConfig::bootseer().cache_capacity_bytes, u64::MAX);
+        assert_eq!(BootseerConfig::baseline().cache_policy, CachePolicy::Lru);
+        let doc = Doc::parse(
+            r#"
+            [bootseer]
+            cache_capacity_bytes = 4000000000
+            cache_policy = "gdsf"
+            "#,
+        )
+        .unwrap();
+        let boot = BootseerConfig::from_doc(&doc);
+        assert_eq!(boot.cache_capacity_bytes, 4_000_000_000);
+        assert_eq!(boot.cache_policy, CachePolicy::Gdsf);
+        // An absent key keeps the unbounded default (no i64 round-trip);
+        // a negative value clamps to 0, not to unbounded.
+        let neg = Doc::parse("[bootseer]\ncache_capacity_bytes = -5\n").unwrap();
+        assert_eq!(BootseerConfig::from_doc(&neg).cache_capacity_bytes, 0);
+        let absent = Doc::parse("[bootseer]\nenabled = true\n").unwrap();
+        assert_eq!(BootseerConfig::from_doc(&absent).cache_capacity_bytes, u64::MAX);
     }
 
     #[test]

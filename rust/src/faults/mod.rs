@@ -44,6 +44,7 @@
 //! ([`FaultConfig::off`]) short-circuit every draw, reproducing the
 //! fault-free replay bit-for-bit. Design note: `docs/faults.md`.
 
+use crate::config::defaults as d;
 use crate::scheduler::{ChainJob, FaultOracle, SegmentFate};
 use crate::util::rng::{mix64, Rng};
 use std::collections::HashMap;
@@ -99,6 +100,21 @@ pub struct FaultConfig {
     /// Retry cap per scripted segment (termination bound for the
     /// scheduler; the hazard itself makes long retry chains unlikely).
     pub max_retries: u32,
+    /// Concurrent-fetch entitlements the registry serves before shedding,
+    /// in nodes (cf. `defaults::FLEET_SERVICE_NODES`). `u32::MAX`
+    /// disables shedding entirely — the historical behaviour and the
+    /// `off`/`paper` default, byte-identical to the pre-shedding replay.
+    pub registry_slots: u32,
+    /// Concurrent-fetch entitlements of the cluster cache tier before
+    /// shedding, in nodes. `u32::MAX` disables.
+    pub cache_slots: u32,
+    /// Base backoff before a shed fetch retries, seconds (grows
+    /// geometrically per attempt with seeded ±50% jitter).
+    pub shed_backoff_s: f64,
+    /// Shed-retry cap per fetch: the attempt at this index is admitted
+    /// unconditionally, so a fetch is never starved — it fetches exactly
+    /// once, late.
+    pub shed_retries: u32,
 }
 
 impl FaultConfig {
@@ -115,6 +131,10 @@ impl FaultConfig {
             brownout_capacity_factor: 1.0,
             ckpt_interval_s: 1800.0,
             max_retries: 8,
+            registry_slots: u32::MAX,
+            cache_slots: u32::MAX,
+            shed_backoff_s: d::SHED_BACKOFF_S,
+            shed_retries: d::SHED_MAX_RETRIES,
         }
     }
 
@@ -136,12 +156,18 @@ impl FaultConfig {
             brownout_capacity_factor: 0.35,
             ckpt_interval_s: 1800.0,
             max_retries: 8,
+            registry_slots: u32::MAX,
+            cache_slots: u32::MAX,
+            shed_backoff_s: d::SHED_BACKOFF_S,
+            shed_retries: d::SHED_MAX_RETRIES,
         }
     }
 
     /// Restart-storm stress scenario: an order of magnitude more crashes,
-    /// most restarts rescheduled cold, long brownouts. For exercising the
-    /// scheduler's interruption path under pressure, not for calibration.
+    /// most restarts rescheduled cold, long brownouts, and finite
+    /// registry/cluster-cache entitlements so the concurrent restart wave
+    /// drives real shed/retry traffic. For exercising the scheduler's
+    /// interruption path under pressure, not for calibration.
     pub fn storm() -> FaultConfig {
         FaultConfig {
             hazard_per_gpu_hour: 2.0e-4,
@@ -149,6 +175,8 @@ impl FaultConfig {
             straggler_prob: 0.15,
             brownouts_per_week: 10.0,
             brownout_duration_s: 3600.0,
+            registry_slots: d::STORM_REGISTRY_SLOTS,
+            cache_slots: d::STORM_CACHE_SLOTS,
             ..FaultConfig::paper()
         }
     }
@@ -166,7 +194,10 @@ impl FaultConfig {
     /// comma-separated. A spec starting with an override applies it over
     /// `paper`. Keys: `hazard`, `relocate`, `straggler`,
     /// `straggler_severity`, `brownouts`, `brownout_s`, `brownout_cap`,
-    /// `ckpt_interval`, `max_retries`.
+    /// `ckpt_interval`, `max_retries`, `registry_slots`, `cache_slots`,
+    /// `shed_backoff`, `shed_retries`. Slot counts must be ≥ 1: a
+    /// zero-concurrency service could never admit anything, so it is a
+    /// config error, not a silent stall.
     ///
     /// ```
     /// use bootseer::faults::FaultConfig;
@@ -217,6 +248,26 @@ impl FaultConfig {
                 }
                 "ckpt_interval" | "ckpt_interval_s" => c.ckpt_interval_s = f.max(0.0),
                 "max_retries" => c.max_retries = f.max(0.0) as u32,
+                "registry_slots" => {
+                    if f < 1.0 {
+                        return Err(format!(
+                            "registry_slots must be >= 1 (got {val:?}); a \
+                             zero-concurrency registry can never admit a fetch"
+                        ));
+                    }
+                    c.registry_slots = f as u32;
+                }
+                "cache_slots" => {
+                    if f < 1.0 {
+                        return Err(format!(
+                            "cache_slots must be >= 1 (got {val:?}); a \
+                             zero-concurrency cache can never admit a fetch"
+                        ));
+                    }
+                    c.cache_slots = f as u32;
+                }
+                "shed_backoff" | "shed_backoff_s" => c.shed_backoff_s = f.max(0.0),
+                "shed_retries" => c.shed_retries = f.max(0.0) as u32,
                 _ => return Err(format!("unknown --faults key {key:?}")),
             }
         }
@@ -253,6 +304,15 @@ impl FaultConfig {
                 .clamp(0.0, 1.0),
             ckpt_interval_s: doc.f64_or("faults.ckpt_interval_s", base.ckpt_interval_s).max(0.0),
             max_retries: doc.i64_or("faults.max_retries", base.max_retries as i64).max(0) as u32,
+            // Slot counts clamp to ≥ 1 here (a plain struct, no Result);
+            // the CLI `parse` path rejects zero loudly.
+            registry_slots: doc
+                .i64_or("faults.registry_slots", base.registry_slots as i64)
+                .max(1) as u32,
+            cache_slots: doc.i64_or("faults.cache_slots", base.cache_slots as i64).max(1) as u32,
+            shed_backoff_s: doc.f64_or("faults.shed_backoff_s", base.shed_backoff_s).max(0.0),
+            shed_retries: doc.i64_or("faults.shed_retries", base.shed_retries as i64).max(0)
+                as u32,
         }
     }
 
@@ -604,6 +664,30 @@ mod tests {
         // Absent table → off.
         let empty = crate::config::toml::Doc::parse("").unwrap();
         assert_eq!(FaultConfig::from_doc(&empty), FaultConfig::off());
+    }
+
+    #[test]
+    fn shed_config_parses_and_rejects_zero_slots() {
+        let c = FaultConfig::parse("storm").unwrap();
+        assert_eq!(c.registry_slots, d::STORM_REGISTRY_SLOTS);
+        assert_eq!(c.cache_slots, d::STORM_CACHE_SLOTS);
+        let c =
+            FaultConfig::parse("paper,registry_slots=32,shed_backoff=2.5,shed_retries=5").unwrap();
+        assert_eq!(c.registry_slots, 32);
+        assert_eq!(c.cache_slots, u32::MAX);
+        assert_eq!(c.shed_backoff_s, 2.5);
+        assert_eq!(c.shed_retries, 5);
+        // A zero-concurrency limit can never admit anything: config error.
+        assert!(FaultConfig::parse("registry_slots=0").is_err());
+        assert!(FaultConfig::parse("cache_slots=0").is_err());
+        // off/paper keep shedding disabled entirely (the historical path).
+        assert_eq!(FaultConfig::off().registry_slots, u32::MAX);
+        assert_eq!(FaultConfig::off().cache_slots, u32::MAX);
+        assert_eq!(FaultConfig::paper().registry_slots, u32::MAX);
+        assert_eq!(FaultConfig::paper().cache_slots, u32::MAX);
+        // The doc path (no Result) clamps instead of erroring.
+        let doc = crate::config::toml::Doc::parse("[faults]\ncache_slots = 0\n").unwrap();
+        assert_eq!(FaultConfig::from_doc(&doc).cache_slots, 1);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!                                (requires the `pjrt` feature)
 //!   version
 
-use bootseer::config::{BootseerConfig, ClusterConfig, JobConfig, OverlapMode};
+use bootseer::config::{BootseerConfig, CachePolicy, ClusterConfig, JobConfig, OverlapMode};
 use bootseer::faults::FaultConfig;
 use bootseer::figures;
 use bootseer::startup::{run_startup, StartupKind, World};
@@ -37,6 +37,7 @@ fn main() {
                  \n          [--dedup] [--delta-resume] [--seed S]\
                  \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--bootseer] [--overlap M]\
                  \n          [--dedup] [--delta-resume] [--faults off|paper|storm|k=v,...] [--no-replay]\
+                 \n          [--cache-capacity BYTES|Ng|unbounded] [--cache-policy lru|gdsf|pin]\
                  \n  train   [--steps N] [--artifacts DIR] [--seed S]   (pjrt feature)"
             );
             2
@@ -60,6 +61,19 @@ fn overlap_opt(rest: &[String]) -> Result<OverlapMode, String> {
         Some(s) => OverlapMode::parse(&s)
             .ok_or_else(|| format!("bad --overlap {s:?} (sequential|overlapped|speculative)")),
     }
+}
+
+/// `--cache-capacity` value: raw bytes, `Ng`/`Ngb` gigabytes (decimal,
+/// 1 GB = 1e9 bytes), or `unbounded` (the default).
+fn parse_capacity(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    if t == "unbounded" {
+        return Some(u64::MAX);
+    }
+    if let Some(num) = t.strip_suffix("gb").or_else(|| t.strip_suffix('g')) {
+        return num.parse::<f64>().ok().filter(|v| *v >= 0.0).map(|v| (v * 1e9) as u64);
+    }
+    t.parse::<u64>().ok()
 }
 
 /// Artifact-layer feature flags shared by `startup` and `trace`:
@@ -130,6 +144,13 @@ fn cmd_figures(rest: &[String]) -> i32 {
     );
     println!("-- Fig 16: wasted GPU time under fault injection --\n{}", fw.render());
     save("fig16", fw.to_json());
+    let fc = figures::cache_economics_sweep(
+        figures::FAULTS_SWEEP_SEED,
+        figures::CACHE_SWEEP_JOBS,
+        &figures::cache_sweep_faults(),
+    );
+    println!("-- Cache-economics sweep (capacity knee) --\n{}", fc.render());
+    save("cache_econ", fc.to_json());
     0
 }
 
@@ -205,6 +226,26 @@ fn cmd_trace(rest: &[String]) -> i32 {
             }
         },
     };
+    let cache_capacity = match opt(rest, "--cache-capacity") {
+        None => None,
+        Some(s) => match parse_capacity(&s) {
+            Some(v) => Some(v),
+            None => {
+                eprintln!("bad --cache-capacity {s:?} (bytes, `Ng`/`Ngb`, or `unbounded`)");
+                return 2;
+            }
+        },
+    };
+    let cache_policy = match opt(rest, "--cache-policy") {
+        None => None,
+        Some(s) => match CachePolicy::parse(&s) {
+            Some(p) => Some(p),
+            None => {
+                eprintln!("bad --cache-policy {s:?} (lru|gdsf|pin)");
+                return 2;
+            }
+        },
+    };
     // Speculative staging needs warm state (hot-set records, env caches) to
     // know what to stage, i.e. the BootSeer feature set.
     let boot = flag(rest, "--bootseer");
@@ -243,10 +284,17 @@ fn cmd_trace(rest: &[String]) -> i32 {
     let t0 = std::time::Instant::now();
     let base = if boot { BootseerConfig::bootseer() } else { BootseerConfig::baseline() };
     let faults_on = faults.enabled();
+    let mut cfg = artifact_flags(rest, BootseerConfig { overlap, ..base });
+    if let Some(c) = cache_capacity {
+        cfg.cache_capacity_bytes = c;
+    }
+    if let Some(p) = cache_policy {
+        cfg.cache_policy = p;
+    }
     let r = replay_cluster(
         &t,
         &ClusterConfig::default(),
-        &artifact_flags(rest, BootseerConfig { overlap, ..base }),
+        &cfg,
         seed,
         &ReplayOptions { pool_gpus, threads, faults },
     );
@@ -272,6 +320,19 @@ fn cmd_trace(rest: &[String]) -> i32 {
             r.fault_restarts,
             r.lost_train_gpu_hours,
             100.0 * r.wasted_fraction()
+        );
+    }
+    if cfg.cache_capacity_bytes != u64::MAX || r.shed_checks > 0 {
+        println!(
+            "cache: {} policy, hit rate {:.1}% ({} / {} demanded) | evicted {} | shed rate {:.1}% ({}/{} governed fetches)",
+            cfg.cache_policy.name(),
+            100.0 * r.hit_rate(),
+            human::bytes(r.credited_bytes),
+            human::bytes(r.demanded_bytes),
+            human::bytes(r.evicted_bytes),
+            100.0 * r.shed_rate(),
+            r.shed_events,
+            r.shed_checks
         );
     }
     println!("replayed {} startups in {}", startups, human::secs(wall));

@@ -36,7 +36,7 @@
 
 use crate::artifact::cache::CacheState;
 use crate::artifact::manifest::ArtifactManifest;
-use crate::artifact::transfer::{ProviderTier, TransferPlanner};
+use crate::artifact::transfer::{admitted_peers, Admission, ProviderTier, TransferPlanner};
 use crate::config::OverlapMode;
 use crate::profiler::events::Stage;
 use crate::sim::{ClusterSim, TaskId};
@@ -169,6 +169,17 @@ pub struct CompiledGraph {
     /// Bytes moved by speculative staging flows during Allocation, across
     /// stages and nodes (0 outside `Speculative` mode).
     pub staged_bytes: u64,
+    /// Cache-resident bytes credited against credited artifacts' fetches,
+    /// across stages and nodes (the cache-hit numerator).
+    pub credited_bytes: u64,
+    /// Total bytes of credited artifacts the stages wanted on every node
+    /// (the cache-hit denominator; credited ≤ demanded).
+    pub demanded_bytes: u64,
+    /// Governed fetches shed at least once before admission.
+    pub shed_events: u64,
+    /// Governed fetches whose admission was evaluated (the shed-rate
+    /// denominator; 0 whenever no [`Admission`] is attached).
+    pub shed_checks: u64,
 }
 
 impl CompiledGraph {
@@ -193,11 +204,15 @@ pub struct StageGraph<'p> {
     /// Cross-artifact dedup: materialized manifests feed the run cache so
     /// later stages can credit shared content chunks.
     dedup: bool,
+    /// Registry/cluster-cache admission control for this startup's
+    /// governed fetches (`None` — the default — admits everything
+    /// immediately and lays down the exact historical DAG).
+    admission: Option<Admission>,
 }
 
 impl<'p> StageGraph<'p> {
     pub fn new(mode: OverlapMode, budget: u64) -> StageGraph<'p> {
-        StageGraph { planners: Vec::new(), mode, budget, dedup: false }
+        StageGraph { planners: Vec::new(), mode, budget, dedup: false, admission: None }
     }
 
     pub fn add(&mut self, planner: Box<dyn StagePlanner + 'p>) {
@@ -208,6 +223,12 @@ impl<'p> StageGraph<'p> {
     /// (`bootseer.artifact_dedup`).
     pub fn set_dedup(&mut self, on: bool) {
         self.dedup = on;
+    }
+
+    /// Attach admission control (load shedding + retry backoff) for the
+    /// registry/cluster-cache fetches this graph compiles.
+    pub fn set_admission(&mut self, admission: Option<Admission>) {
+        self.admission = admission;
     }
 
     /// Compile every stage onto the sim with nothing resident. `entry[i]`
@@ -259,6 +280,17 @@ impl<'p> StageGraph<'p> {
         // compile so downstream stages can credit shared content.
         let mut run_cache = cache.clone();
 
+        // Fleet cache economics: a cache under eviction pressure fields
+        // fewer useful swarm peers, and governed fetches may be shed.
+        // Both are no-ops (zero pressure, no admission) on default
+        // configs — bit-identical DAGs.
+        let pressure = cache.eviction_pressure();
+        let peer_seed = self.admission.as_ref().map_or(0x5EED, |a| a.seed());
+        let mut credited_bytes = 0u64;
+        let mut demanded_bytes = 0u64;
+        let mut shed_events = 0u64;
+        let mut shed_checks = 0u64;
+
         // ---- Speculative staging during Allocation ----
         // For each planner: (bytes staged per node, staging task per node).
         let mut staged: Vec<Option<(Vec<u64>, Vec<TaskId>)>> =
@@ -290,10 +322,27 @@ impl<'p> StageGraph<'p> {
                     }
                     // Only nodes with a nonzero staging share download
                     // through the pool; scope it to exactly that count so
-                    // its slot recycles after the staging wave.
+                    // its slot recycles after the staging wave. Peers
+                    // under eviction pressure drop out of the pool (they
+                    // are about to evict what they would serve).
                     let stagers = bytes_v.iter().filter(|&&b| b > 0).count() as u32;
+                    let peers = admitted_peers(n as u32, pressure, peer_seed);
                     let provider =
-                        TransferPlanner::build(cs, "spec.swarm", a.tier, n as u32, stagers);
+                        TransferPlanner::build(cs, "spec.swarm", a.tier, peers, stagers)
+                            .with_admission(self.admission, a.manifest.id);
+                    if let Some(adm) = &self.admission {
+                        if Admission::governs(a.tier) {
+                            for (i, &b) in bytes_v.iter().enumerate() {
+                                if b == 0 {
+                                    continue;
+                                }
+                                shed_checks += 1;
+                                if adm.shed_attempts(a.tier, a.manifest.id, i) > 0 {
+                                    shed_events += 1;
+                                }
+                            }
+                        }
+                    }
                     let task_v: Vec<TaskId> = (0..n)
                         .map(|i| {
                             if bytes_v[i] == 0 {
@@ -356,17 +405,48 @@ impl<'p> StageGraph<'p> {
             // image-shared prefix) — they must not be credited twice.
             let mut credit = vec![0u64; n];
             let mut any_credit = false;
+            // Per-node admission backoff accrued by this stage's governed
+            // foreground fetches (0 everywhere without shedding).
+            let mut shed_delay = vec![0.0f64; n];
             for a in decls[k].iter().filter(|a| a.credit) {
                 for (i, c) in credit.iter_mut().enumerate() {
-                    let skip = match &staged[k] {
-                        Some((bytes, _)) if a.stage_ahead => bytes[i],
-                        _ => 0,
+                    let (skip, staged_here) = match &staged[k] {
+                        Some((bytes, _)) if a.stage_ahead => (bytes[i], bytes[i] > 0),
+                        _ => (0, false),
                     };
                     let r = run_cache.resident_bytes_beyond(i, &a.manifest, skip, self.dedup);
+                    demanded_bytes += a.manifest.total_bytes();
+                    credited_bytes += r.min(a.manifest.total_bytes());
                     if r > 0 {
                         *c = c.saturating_add(r);
                         any_credit = true;
                     }
+                    // Shed the foreground fetch of a governed artifact:
+                    // the stage waits out the seeded backoff before its
+                    // (single) fetch runs. A node whose bytes are fully
+                    // resident never hits the service; a node with a
+                    // staging flow is gated inside that flow instead.
+                    if let Some(adm) = &self.admission {
+                        let remaining =
+                            a.manifest.total_bytes().saturating_sub(skip).saturating_sub(r);
+                        if Admission::governs(a.tier) && remaining > 0 && !staged_here {
+                            shed_checks += 1;
+                            let att = adm.shed_attempts(a.tier, a.manifest.id, i);
+                            if att > 0 {
+                                shed_events += 1;
+                                shed_delay[i] +=
+                                    adm.delay_before(a.tier, a.manifest.id, i);
+                            }
+                        }
+                    }
+                }
+            }
+            for i in 0..n {
+                if shed_delay[i] > 0.0 {
+                    let d = std::mem::take(&mut deps[i]);
+                    let gate = cs.sim.delay(shed_delay[i], &d, 0);
+                    deps[i] = vec![gate];
+                    begin_gate[i] = gate;
                 }
             }
 
@@ -426,7 +506,15 @@ impl<'p> StageGraph<'p> {
         }
 
         let done = cs.sim.barrier(prev_done.as_ref().expect("nonempty graph"), 0);
-        CompiledGraph { stages: compiled, done, staged_bytes: staged_bytes_total }
+        CompiledGraph {
+            stages: compiled,
+            done,
+            staged_bytes: staged_bytes_total,
+            credited_bytes,
+            demanded_bytes,
+            shed_events,
+            shed_checks,
+        }
     }
 }
 
@@ -620,6 +708,9 @@ mod tests {
             // Credit does not delay the stage: begin gate is the entry gate.
             assert_eq!(cs.sim.finished_at(c.stages[0].begin_gate[0]), 0.0);
             assert_eq!(c.staged_bytes, 0);
+            // The hit-rate counters see a fully warm demand.
+            assert_eq!(c.demanded_bytes, 1400, "{mode:?}");
+            assert_eq!(c.credited_bytes, 1400, "{mode:?}");
         }
     }
 
@@ -703,6 +794,63 @@ mod tests {
         };
         assert_eq!(run(false), Vec::<u64>::new());
         assert_eq!(run(true), vec![200]);
+    }
+
+    #[test]
+    fn admission_shed_delays_stage_entry_and_counts() {
+        use crate::faults::FaultConfig;
+        // Fleet demand far above storm's cache entitlement: most governed
+        // fetches shed at least once.
+        let adm = Admission::from_faults(&FaultConfig::storm(), 4096, 5).unwrap();
+        let art = (1..256u64)
+            .find(|&a| adm.shed_attempts(ProviderTier::ClusterCache, a, 0) >= 1)
+            .expect("some artifact sheds");
+        let build = |admission: Option<Admission>| {
+            let (mut cs, mut w) = setup(1);
+            let gate0 = cs.sim.delay(0.0, &[], 0);
+            let entry = vec![vec![gate0]];
+            let mut g = StageGraph::new(OverlapMode::Sequential, 0);
+            g.set_admission(admission);
+            g.add(Box::new(
+                FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![1.0])
+                    .with_artifact(art, 700, ProviderTier::ClusterCache),
+            ));
+            let c = g.compile(&mut cs, &mut w, &entry, None);
+            cs.sim.run();
+            (cs.sim.finished_at(c.done), c.shed_events, c.shed_checks)
+        };
+        let (base, e0, k0) = build(None);
+        assert_eq!((e0, k0), (0, 0));
+        let (shed, e1, k1) = build(Some(adm));
+        assert_eq!((e1, k1), (1, 1));
+        let d = adm.delay_before(ProviderTier::ClusterCache, art, 0);
+        assert!(d > 0.0);
+        // The stage runs once, shifted by exactly its backoff: shedding
+        // delays bytes, it never re-fetches them.
+        assert!((shed - (base + d)).abs() < 1e-9, "done {shed} vs base {base} + {d}");
+    }
+
+    #[test]
+    fn fully_resident_fetches_skip_admission() {
+        use crate::faults::FaultConfig;
+        let adm = Admission::from_faults(&FaultConfig::storm(), 4096, 5).unwrap();
+        let (mut cs, mut w) = setup(1);
+        let gate0 = cs.sim.delay(0.0, &[], 0);
+        let entry = vec![vec![gate0]];
+        let mut g = StageGraph::new(OverlapMode::Sequential, 0);
+        g.set_admission(Some(adm));
+        g.add(Box::new(
+            FixedStage::new(Stage::ImageLoading, EdgeKind::Entry, vec![1.0])
+                .with_artifact(0xA, 700, ProviderTier::ClusterCache),
+        ));
+        let mut cache = CacheState::new();
+        cache.insert_shared_artifact(0xA, 700);
+        let c = g.compile_cached(&mut cs, &mut w, &entry, None, &cache);
+        cs.sim.run();
+        // Every byte is local: the node never hits the service, so there
+        // is nothing to shed and nothing to delay.
+        assert_eq!((c.shed_events, c.shed_checks), (0, 0));
+        assert_eq!(cs.sim.finished_at(c.done), 1.0);
     }
 
     #[test]

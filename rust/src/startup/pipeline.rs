@@ -10,6 +10,7 @@
 //! byte-identical to the paper-faithful behaviour.
 
 use crate::artifact::cache::CacheState;
+use crate::artifact::Admission;
 use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ClusterConfig, ImageMode, JobConfig, OverlapMode};
 use crate::env::cache::EnvCacheRegistry;
@@ -76,6 +77,17 @@ pub struct StartupOutcome {
     /// foreground fetch plus speculative staging flows. Background
     /// cold-tail streaming is excluded (it never gates a stage).
     pub fetched_bytes: u64,
+    /// Bytes credited from cache residency against stage demand.
+    pub credited_bytes: u64,
+    /// Total bytes the stages demanded (denominator of the hit rate).
+    pub demanded_bytes: u64,
+    /// Governed fetches that were shed at least once before admission.
+    pub shed_events: u64,
+    /// Governed fetches evaluated against the admission limits.
+    pub shed_checks: u64,
+    /// Bytes the warm cache evicted under capacity pressure before this
+    /// startup ran (0 for unbounded or cold caches).
+    pub evicted_bytes: u64,
 }
 
 impl StartupOutcome {
@@ -116,6 +128,9 @@ pub struct StartupContext {
     pub queue_s: f64,
     pub alloc_s: f64,
     pub cache: CacheState,
+    /// Registry/cluster-cache admission limits for this startup (`None` —
+    /// the default — admits everything: historical behaviour).
+    pub admission: Option<Admission>,
 }
 
 /// Run one startup of `job` on a fresh allocation, mutating `world`
@@ -244,6 +259,7 @@ pub fn run_startup_with(
     // (hot update: container already runs, so no image stage)
     let mut graph = StageGraph::new(cfg.overlap, cfg.spec_prefetch_budget_bytes);
     graph.set_dedup(cfg.artifact_dedup);
+    graph.set_admission(ctx.admission);
     if kind == StartupKind::Full {
         graph.add(Box::new(ImageStage::new(&img, cfg)));
     }
@@ -369,6 +385,11 @@ pub fn run_startup_with(
         worker_phase_s: training_begin - worker_t0,
         stage_fetched,
         fetched_bytes,
+        credited_bytes: compiled.credited_bytes,
+        demanded_bytes: compiled.demanded_bytes,
+        shed_events: compiled.shed_events,
+        shed_checks: compiled.shed_checks,
+        evicted_bytes: ctx.cache.evicted_bytes(),
     }
 }
 
@@ -644,7 +665,7 @@ mod tests {
                 &mut w,
                 StartupKind::Full,
                 22,
-                StartupContext { queue_s: 10.0, alloc_s: 2.0, cache },
+                StartupContext { queue_s: 10.0, alloc_s: 2.0, cache, ..Default::default() },
             )
         };
         let cold = run_ctx(CacheState::new());
@@ -725,7 +746,7 @@ mod tests {
                 &mut w,
                 StartupKind::Full,
                 32,
-                StartupContext { queue_s: 0.0, alloc_s: 2.0, cache },
+                StartupContext { queue_s: 0.0, alloc_s: 2.0, cache, ..Default::default() },
             )
         };
         let mut warm = CacheState::new();

@@ -44,12 +44,24 @@
 //! (">3.5% of GPU time is wasted"), reproduced by
 //! [`crate::figures::wasted_gpu_time_sweep`].
 //!
+//! A fourth axis — **fleet cache economics**
+//! (`bootseer.cache_capacity_bytes` / `bootseer.cache_policy`) — bounds
+//! every warm restart's node cache: seeded log-uniform disk churn is
+//! inserted behind the warm artifacts and the eviction policy decides
+//! what survives, while finite registry / cluster-cache slots (the
+//! `storm` fault preset) shed and retry the re-fetch wave through
+//! [`crate::artifact::Admission`]. Both default off and are then
+//! byte-identical to the plain replay; [`ReplayResult::hit_rate`] and
+//! [`ReplayResult::shed_rate`] summarize the economics, and
+//! [`crate::figures::cache_economics_sweep`] sweeps the capacity knee.
+//!
 //! [`replay`] is the convenience wrapper with auto-sized pool and
 //! auto-detected threads; `bootseer trace --pool-gpus N --threads T`
 //! exposes both knobs.
 
 use crate::artifact::cache::CacheState;
 use crate::artifact::manifest::ArtifactManifest;
+use crate::artifact::Admission;
 use crate::ckpt::resume::retained_resume_bytes_per_node;
 use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
@@ -64,6 +76,12 @@ use crate::startup::{
 use crate::util::rng::{mix64, Rng};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Domain-separation salts for the trace-level cache-economics decisions
+/// (`0xA272_xxxx` — the artifact/transfer family; `_0001..=_0003` live in
+/// [`crate::artifact::transfer`]).
+const SALT_CHURN: u64 = 0xA272_0004;
+const SALT_ADMISSION: u64 = 0xA272_0005;
 
 /// One job in the synthetic week.
 #[derive(Clone, Debug)]
@@ -423,6 +441,18 @@ pub struct ReplayResult {
     /// Scheduler-derived queue wait of every full startup (job order, then
     /// attempt order) — the §3.2 distribution.
     pub queue_waits: Vec<f64>,
+    /// Bytes credited from cache residency against stage demand, summed
+    /// over every startup.
+    pub credited_bytes: u64,
+    /// Total bytes the startups' stages demanded (hit-rate denominator).
+    pub demanded_bytes: u64,
+    /// Governed registry / cluster-cache fetches shed at least once.
+    pub shed_events: u64,
+    /// Governed fetches evaluated against the admission limits.
+    pub shed_checks: u64,
+    /// Bytes evicted from bounded warm caches under capacity pressure
+    /// (0 with the unbounded default).
+    pub evicted_bytes: u64,
 }
 
 impl ReplayResult {
@@ -439,6 +469,24 @@ impl ReplayResult {
     /// Wasted share of all GPU time spent (training + waste).
     pub fn wasted_fraction(&self) -> f64 {
         self.wasted_gpu_hours() / (self.wasted_gpu_hours() + self.train_gpu_hours)
+    }
+
+    /// Cache hit rate: share of demanded bytes served from residency.
+    pub fn hit_rate(&self) -> f64 {
+        if self.demanded_bytes == 0 {
+            0.0
+        } else {
+            self.credited_bytes as f64 / self.demanded_bytes as f64
+        }
+    }
+
+    /// Shed rate: share of governed fetches shed at least once.
+    pub fn shed_rate(&self) -> f64 {
+        if self.shed_checks == 0 {
+            0.0
+        } else {
+            self.shed_events as f64 / self.shed_checks as f64
+        }
     }
 }
 
@@ -477,6 +525,10 @@ struct Unit {
     seg_len_s: f64,
     lost_train_s: f64,
     warm_local: bool,
+    /// Fleet-wide concurrently-starting node count over this unit's
+    /// interval (ceil of the phase-1 contention average) — the demand the
+    /// registry / cluster-cache admission limits are measured against.
+    demand: u32,
 }
 
 /// Per-startup effective service capacities: the seed per-job entitlement,
@@ -515,6 +567,11 @@ pub fn replay_cluster(
             fault_restarts: 0,
             pool_gpus: 0,
             queue_waits: Vec::new(),
+            credited_bytes: 0,
+            demanded_bytes: 0,
+            shed_events: 0,
+            shed_checks: 0,
+            evicted_bytes: 0,
         };
     }
 
@@ -585,6 +642,7 @@ pub fn replay_cluster(
                 seg_len_s: est,
                 lost_train_s: 0.0,
                 warm_local: false,
+                demand: 0,
             });
             continue;
         }
@@ -610,6 +668,7 @@ pub fn replay_cluster(
                 seg_len_s: s.end_s - s.start_s,
                 lost_train_s: s.lost_train_s,
                 warm_local,
+                demand: 0,
             });
             if s.interrupted {
                 retry += 1;
@@ -640,6 +699,7 @@ pub fn replay_cluster(
                 seg_len_s: 0.0,
                 lost_train_s: 0.0,
                 warm_local: false,
+                demand: 0,
             });
         }
     }
@@ -717,6 +777,7 @@ pub fn replay_cluster(
     let brownouts = BrownoutWindows::generate(&opts.faults, seed, horizon);
     for u in &mut units {
         let avg_active = (int_at(u.start_s + u.est_s) - int_at(u.start_s)) / u.est_s.max(1e-9);
+        u.demand = avg_active.ceil().max(0.0) as u32;
         u.eff_cluster = effective_cluster(cluster, nodes_of[u.job_idx], avg_active);
         if !brownouts.is_empty() {
             let f = brownouts.capacity_scale(u.start_s, u.start_s + u.est_s);
@@ -770,13 +831,23 @@ pub fn replay_cluster(
         // attempt materialized are still resident — expressed as cache
         // state, not per-subsystem byte fields. With delta resume, the
         // shard chunks not rewritten since the rollback point stay
-        // resident too.
-        let mut cache = CacheState::new();
+        // resident too. Under a bounded capacity the cache also carries
+        // the *churn* other tenants wrote to the node's disk since the
+        // previous attempt — inserted last, so the eviction policy must
+        // defend the warm artifacts against it. The unbounded default
+        // skips all of this and is byte-identical to the plain replay.
+        let bounded = cfg.cache_capacity_bytes != u64::MAX;
+        let mut cache = if bounded {
+            CacheState::with_capacity(cfg.cache_capacity_bytes, cfg.cache_policy)
+        } else {
+            CacheState::new()
+        };
         if u.warm_local {
-            cache.insert_shared_artifact(
-                ArtifactManifest::image_hot_id(u.digest),
-                job_hot_bytes[u.job_idx],
-            );
+            let hot_id = ArtifactManifest::image_hot_id(u.digest);
+            cache.insert_shared_artifact(hot_id, job_hot_bytes[u.job_idx]);
+            if bounded && cfg.cache_policy.pins_hot_set() {
+                cache.pin_shared_artifact(hot_id);
+            }
             cache.insert_shared_artifact(
                 ArtifactManifest::env_snapshot_id(u.env_sig),
                 job.env_cache_bytes,
@@ -787,7 +858,32 @@ pub fn replay_cluster(
                     retained_resume_bytes_per_node(job, &u.eff_cluster),
                 );
             }
+            if bounded {
+                // Log-uniform churn in [min, min·2^doublings), a pure
+                // function of (seed, job, attempt).
+                let h = mix64(
+                    seed
+                        ^ SALT_CHURN
+                        ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A),
+                );
+                let uf = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+                let churn =
+                    (d::CACHE_CHURN_MIN_BYTES as f64 * (d::CACHE_CHURN_DOUBLINGS * uf).exp2())
+                        as u64;
+                cache.insert_shared_artifact(mix64(h ^ SALT_CHURN), churn);
+            }
         }
+        let admission = Admission::from_faults(
+            &opts.faults,
+            u.demand,
+            mix64(
+                seed
+                    ^ SALT_ADMISSION
+                    ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A),
+            ),
+        );
         run_startup_with(
             tj.id,
             u.attempt,
@@ -797,7 +893,7 @@ pub fn replay_cluster(
             &mut world,
             u.kind,
             unit_seed,
-            StartupContext { queue_s, alloc_s, cache },
+            StartupContext { queue_s, alloc_s, cache, admission },
         )
     };
     let mut slots: Vec<Option<StartupOutcome>> = (0..units.len()).map(|_| None).collect();
@@ -843,6 +939,11 @@ pub fn replay_cluster(
     let mut lost_train_gpu_hours = 0.0;
     let mut fault_restarts = 0u64;
     let mut queue_waits = Vec::new();
+    let mut credited_bytes = 0u64;
+    let mut demanded_bytes = 0u64;
+    let mut shed_events = 0u64;
+    let mut shed_checks = 0u64;
+    let mut evicted_bytes = 0u64;
     for (j, tj) in trace.iter().enumerate() {
         svc.register_job(tj.id, tj.gpus);
         let alloc_s = d::ALLOC_BASE_S + 0.02 * nodes_of[j] as f64;
@@ -860,6 +961,11 @@ pub fn replay_cluster(
             let o = slots[ui].take().expect("unit replayed");
             startup_worker_s.push(o.worker_phase_s);
             startup_fetched_bytes.push(o.fetched_bytes);
+            credited_bytes += o.credited_bytes;
+            demanded_bytes += o.demanded_bytes;
+            shed_events += o.shed_events;
+            shed_checks += o.shed_checks;
+            evicted_bytes += o.evicted_bytes;
             if u.interrupted {
                 // The run ended at the failure instant: only the startup
                 // time actually spent before it counts as waste.
@@ -913,6 +1019,11 @@ pub fn replay_cluster(
         fault_restarts,
         pool_gpus: sched.pool_gpus,
         queue_waits,
+        credited_bytes,
+        demanded_bytes,
+        shed_events,
+        shed_checks,
+        evicted_bytes,
     }
 }
 
@@ -1571,5 +1682,208 @@ mod tests {
         assert!(burst.hdfs_datanodes < solo.hdfs_datanodes);
         // Solo equals the per-job entitlement (seed behaviour).
         assert_eq!(solo.registry_egress_bps, cluster.registry_egress_bps.max(16.0 * 0.5e9));
+    }
+
+    // ---- bounded caches & load shedding ----
+
+    /// The storm preset, scaled to a 30–60 job test trace: the production
+    /// hazard would barely fire a restart wave this small, so crashes are
+    /// hotter and most restarts land warm (where cache economics bite).
+    fn hot_storm() -> FaultConfig {
+        FaultConfig {
+            hazard_per_gpu_hour: 1.0e-3,
+            relocate_prob: 0.2,
+            ..FaultConfig::storm()
+        }
+    }
+
+    /// Satellite determinism pin: a bounded-cache replay under a restart
+    /// storm — evictions, churn, shedding and retry backoff all active —
+    /// stays bit-identical across thread counts in every overlap mode.
+    #[test]
+    fn bounded_storm_replay_bit_identical_across_threads_and_modes() {
+        use crate::config::{CachePolicy, OverlapMode};
+        let t = gen_trace(6, 30, 86400.0);
+        let cluster = ClusterConfig::default();
+        for mode in OverlapMode::ALL {
+            let cfg = BootseerConfig {
+                overlap: mode,
+                cache_capacity_bytes: 1_000_000_000,
+                cache_policy: CachePolicy::Lru,
+                ..BootseerConfig::bootseer()
+            };
+            let run = |threads: usize| {
+                replay_cluster(
+                    &t,
+                    &cluster,
+                    &cfg,
+                    11,
+                    &ReplayOptions { pool_gpus: None, threads, faults: hot_storm() },
+                )
+            };
+            let one = run(1);
+            let four = run(4);
+            assert!(one.fault_restarts > 0, "{mode:?}: storm fired");
+            assert!(one.evicted_bytes > 0, "{mode:?}: churn evicted warm bytes");
+            assert!(one.shed_checks > 0, "{mode:?}: finite slots governed fetches");
+            assert!(one.demanded_bytes > 0, "{mode:?}");
+            assert_eq!(
+                one.startup_gpu_hours.to_bits(),
+                four.startup_gpu_hours.to_bits(),
+                "{mode:?}: startup hours bit-equal across threads"
+            );
+            assert_eq!(
+                one.lost_train_gpu_hours.to_bits(),
+                four.lost_train_gpu_hours.to_bits(),
+                "{mode:?}"
+            );
+            assert_eq!(one.credited_bytes, four.credited_bytes, "{mode:?}");
+            assert_eq!(one.demanded_bytes, four.demanded_bytes, "{mode:?}");
+            assert_eq!(one.shed_events, four.shed_events, "{mode:?}");
+            assert_eq!(one.shed_checks, four.shed_checks, "{mode:?}");
+            assert_eq!(one.evicted_bytes, four.evicted_bytes, "{mode:?}");
+            for (a, b) in one.jobs.iter().zip(&four.jobs) {
+                assert_eq!(a.startup_worker_s, b.startup_worker_s, "{mode:?}");
+                assert_eq!(a.startup_fetched_bytes, b.startup_fetched_bytes, "{mode:?}");
+            }
+            // And reruns with the same seed reproduce the same bits.
+            let again = run(4);
+            assert_eq!(
+                again.wasted_gpu_hours().to_bits(),
+                four.wasted_gpu_hours().to_bits(),
+                "{mode:?}: rerun bit-equal"
+            );
+        }
+    }
+
+    /// The unbounded default takes exactly the legacy code paths, and a
+    /// finite capacity that never fills behaves identically: no churn
+    /// artifact is demanded by any stage, nothing is evicted, no peer is
+    /// dropped — every replayed number is bit-equal.
+    #[test]
+    fn unfilled_capacity_is_byte_identical_to_unbounded() {
+        use crate::config::CachePolicy;
+        let t = gen_trace(6, 30, 86400.0);
+        let cluster = ClusterConfig::default();
+        let run = |capacity: u64, policy: CachePolicy| {
+            let cfg = BootseerConfig {
+                cache_capacity_bytes: capacity,
+                cache_policy: policy,
+                ..BootseerConfig::bootseer()
+            };
+            replay_cluster(
+                &t,
+                &cluster,
+                &cfg,
+                11,
+                &ReplayOptions { pool_gpus: None, threads: 2, faults: hot_storm() },
+            )
+        };
+        let default = run(u64::MAX, CachePolicy::Lru);
+        // Policy is irrelevant while capacity is unbounded.
+        let unbounded_pin = run(u64::MAX, CachePolicy::PinHotSet);
+        // 10 TB never fills: warm set + churn tops out below 50 GB.
+        let huge = run(10_000_000_000_000, CachePolicy::Lru);
+        assert!(default.fault_restarts > 0);
+        assert_eq!(default.evicted_bytes, 0);
+        assert_eq!(huge.evicted_bytes, 0);
+        for other in [&unbounded_pin, &huge] {
+            assert_eq!(
+                default.startup_gpu_hours.to_bits(),
+                other.startup_gpu_hours.to_bits()
+            );
+            assert_eq!(
+                default.wasted_gpu_hours().to_bits(),
+                other.wasted_gpu_hours().to_bits()
+            );
+            assert_eq!(default.credited_bytes, other.credited_bytes);
+            assert_eq!(default.demanded_bytes, other.demanded_bytes);
+            assert_eq!(default.shed_events, other.shed_events);
+            assert_eq!(default.shed_checks, other.shed_checks);
+            for (a, b) in default.jobs.iter().zip(&other.jobs) {
+                assert_eq!(a.startup_worker_s, b.startup_worker_s);
+                assert_eq!(a.startup_fetched_bytes, b.startup_fetched_bytes);
+            }
+        }
+    }
+
+    /// Cross-segment eviction accounting (satellite): with the pin-hot-set
+    /// policy and a capacity of exactly hot set + env archive, every warm
+    /// restart's churn evicts the env archive (churn ≥ 1 GB > 270 MB) and
+    /// nothing else — the pinned hot set survives. The bounded replay must
+    /// therefore re-fetch *exactly* the evicted bytes on every restart:
+    /// strictly more than the unbounded warm replay, strictly less than a
+    /// cold (relocated) one.
+    #[test]
+    fn eviction_refetches_exactly_the_evicted_bytes_across_segments() {
+        use crate::config::CachePolicy;
+        let t = vec![TraceJob {
+            id: 1,
+            submit_s: 0.0,
+            gpus: 128,
+            full_startups: 1,
+            hot_updates: 0,
+            train_hours: 40.0,
+            priority: 1,
+            image_id: 7,
+        }];
+        let cluster = ClusterConfig::default();
+        let job = trace_job_config(&t[0]);
+        let img = ImageSpec::synth(
+            job.image_identity_seed(1),
+            job.image_bytes,
+            job.image_block_bytes,
+            job.image_hot_fraction,
+        );
+        let nodes = job.nodes(&cluster) as u64;
+        let run = |capacity: u64, policy: CachePolicy, relocate: f64| {
+            let faults = FaultConfig {
+                hazard_per_gpu_hour: 2.0e-3,
+                relocate_prob: relocate,
+                straggler_prob: 0.0,
+                brownouts_per_week: 0.0,
+                ..FaultConfig::paper()
+            };
+            let cfg = BootseerConfig {
+                cache_capacity_bytes: capacity,
+                cache_policy: policy,
+                ..BootseerConfig::bootseer()
+            };
+            replay_cluster(
+                &t,
+                &cluster,
+                &cfg,
+                11,
+                &ReplayOptions { pool_gpus: Some(256), threads: 1, faults },
+            )
+        };
+        let cap = img.hot_bytes() + job.env_cache_bytes;
+        let unbounded = run(u64::MAX, CachePolicy::PinHotSet, 0.0);
+        let bounded = run(cap, CachePolicy::PinHotSet, 0.0);
+        let cold = run(u64::MAX, CachePolicy::PinHotSet, 1.0);
+        assert!(unbounded.fault_restarts >= 1, "restarts fired");
+        // Capacity never reaches phase 1: identical crash schedules.
+        assert_eq!(unbounded.fault_restarts, bounded.fault_restarts);
+        assert_eq!(unbounded.fault_restarts, cold.fault_restarts);
+        let ub = &unbounded.jobs[0].startup_fetched_bytes;
+        let bd = &bounded.jobs[0].startup_fetched_bytes;
+        let cd = &cold.jobs[0].startup_fetched_bytes;
+        // Identical cold first start; every restart strictly between the
+        // fully-warm and fully-cold replays.
+        assert_eq!(ub[0], bd[0]);
+        for k in 1..ub.len() {
+            assert!(bd[k] > ub[k], "restart {k}: bounded {} vs warm {}", bd[k], ub[k]);
+            assert!(bd[k] < cd[k], "restart {k}: bounded {} vs cold {}", bd[k], cd[k]);
+        }
+        // Exactness: the extra bytes are the evicted env archive on every
+        // node, nothing more — the pinned hot set never fell out.
+        let extra: u64 = bd.iter().sum::<u64>() - ub.iter().sum::<u64>();
+        assert_eq!(
+            bounded.evicted_bytes,
+            unbounded.fault_restarts * job.env_cache_bytes,
+            "each warm restart evicted exactly the env archive"
+        );
+        assert_eq!(extra, nodes * bounded.evicted_bytes);
+        assert_eq!(unbounded.evicted_bytes, 0);
     }
 }
