@@ -1,56 +1,254 @@
-//! Parallel cluster-replay microbench: the two-phase contention-aware
-//! replay (scheduler + parallel startup simulation) at 1 thread vs all
-//! cores, verifying the speedup is real and the result identical.
+//! Fleet-scale replay microbench: the event-driven gang scheduler and the
+//! epoch-sharded two-phase replay, with the byte-identity guarantees
+//! asserted at bench scale.
+//!
+//! Cases:
+//!
+//! * `replay_*jobs_{1,N}thread` — the original week replay at 1 thread vs
+//!   all cores; results must be byte-identical.
+//! * `sched_*chains_{event,reference}` — the event-driven scheduler vs the
+//!   preserved round-grid [`reference`] engine on one synthetic chain
+//!   workload; outcomes bit-compared, and the runtime ratio lands in
+//!   `BENCH_replay.json` (`runtime_vs_reference_fraction`, lower is
+//!   better), regression-gated against
+//!   `benches/baselines/BENCH_replay.json` in CI.
+//! * `fleet_schedule_*jobs` — phase 1 alone over a 365-day trace at the
+//!   paper's fleet pool (131,072 GPUs; 2M jobs in full mode, 100k fast) —
+//!   the scale the round-grid scheduler could not reach in bench time.
+//! * `fleet_year_replay_*jobs` — the full two-phase replay over a 365-day
+//!   horizon, epoch-sharded one epoch per simulated day; byte-identity is
+//!   asserted across thread counts AND epoch counts (1 epoch ≡ the
+//!   pre-sharding replay).
 //!
 //!     cargo bench --bench micro_replay_parallel
 //!     BOOTSEER_BENCH_FAST=1 cargo bench --bench micro_replay_parallel
+//!
+//! [`reference`]: bootseer::scheduler::reference
 
+use bootseer::config::defaults::SCHED_ROUND_S;
 use bootseer::config::{BootseerConfig, ClusterConfig};
-use bootseer::trace::{gen_trace, replay_cluster, ReplayOptions};
+use bootseer::figures::fleet_replay;
+use bootseer::scheduler::reference::schedule_chains_reference;
+use bootseer::scheduler::{schedule_chains_with, ChainJob, ChainOutcome};
+use bootseer::trace::{gen_trace, replay_cluster, schedule_trace, ReplayOptions, ReplayResult};
 use bootseer::util::bench::{figure_header, Bench};
+use bootseer::util::json::Json;
+use bootseer::util::rng::mix64;
+use bootseer::util::stats;
+
+fn fold(h: u64, v: u64) -> u64 {
+    mix64(h ^ v)
+}
+
+/// Order-sensitive digest of a schedule — any bit of any segment differing
+/// between the two engines changes it.
+fn sched_digest(outs: &[ChainOutcome]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for o in outs {
+        h = fold(h, o.id);
+        h = fold(h, o.gpus as u64);
+        for s in &o.segments {
+            h = fold(h, s.start_s.to_bits());
+            h = fold(h, s.end_s.to_bits());
+            h = fold(h, s.queue_wait_s.to_bits());
+            h = fold(h, s.interrupted as u64);
+            h = fold(h, s.lost_train_s.to_bits());
+        }
+    }
+    h
+}
+
+/// Digest of a replay result: every queue wait plus all aggregate
+/// counters, bit-exact.
+fn replay_digest(r: &ReplayResult) -> u64 {
+    let mut h = 0x0100_0000_01b3u64;
+    for &w in &r.queue_waits {
+        h = fold(h, w.to_bits());
+    }
+    for v in [
+        r.startup_gpu_hours.to_bits(),
+        r.train_gpu_hours.to_bits(),
+        r.lost_train_gpu_hours.to_bits(),
+        r.fault_restarts,
+        r.pool_gpus as u64,
+        r.credited_bytes,
+        r.demanded_bytes,
+        r.shed_events,
+        r.shed_checks,
+        r.evicted_bytes,
+    ] {
+        h = fold(h, v);
+    }
+    h
+}
+
+/// Deterministic synthetic chain workload: power-of-two gang sizes skewed
+/// small, 1–3 segments, submits spread over a year. Sized so the pool sees
+/// real queueing (busy periods with a pending set for the reference
+/// engine's passes to rescan).
+fn synth_chains(n: usize) -> Vec<ChainJob> {
+    (0..n as u64)
+        .map(|i| {
+            let h = mix64(0xF1EE7 ^ i);
+            let gpus = 8u32 << (h % 6);
+            let submit_s = (mix64(h) % (365 * 86_400)) as f64;
+            let segs = 1 + (mix64(h ^ 1) % 3) as usize;
+            let hold_s = 1_800.0 + (mix64(h ^ 2) % 86_400) as f64;
+            ChainJob {
+                id: i,
+                submit_s,
+                gpus,
+                priority: ((h >> 32) % 4) as u32,
+                segments: vec![hold_s; segs],
+            }
+        })
+        .collect()
+}
 
 fn main() {
     figure_header(
-        "micro — parallel cluster replay",
-        "phase 2 scales across cores; results byte-identical at any thread count",
+        "micro — fleet-scale replay",
+        "event-driven scheduling + epoch-sharded replay reach fleet-year scale, byte-identical",
     );
     let fast = std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut b = Bench::new("micro_replay_parallel");
+
+    // ---- week replay: 1 thread vs all cores, byte-identical ----
     let n_jobs = if fast { 60 } else { 300 };
     let trace = gen_trace(1, n_jobs, 7.0 * 86400.0);
     let cluster = ClusterConfig::default();
     let cfg = BootseerConfig::baseline();
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-
-    let mut b = Bench::new("micro_replay_parallel");
-    let mut hours_seq = 0.0;
+    let week_opts = |threads: usize| ReplayOptions { threads, ..ReplayOptions::default() };
+    let mut dig_seq = 0u64;
     b.iter(&format!("replay_{n_jobs}jobs_1thread"), || {
-        let r = replay_cluster(
-            &trace,
-            &cluster,
-            &cfg,
-            1,
-            &ReplayOptions { pool_gpus: None, threads: 1, ..ReplayOptions::default() },
-        );
-        hours_seq = r.startup_gpu_hours;
-        r.startup_gpu_hours
+        let r = replay_cluster(&trace, &cluster, &cfg, 1, &week_opts(1));
+        dig_seq = replay_digest(&r);
+        dig_seq
     });
-    let mut hours_par = 0.0;
+    let mut dig_par = 0u64;
     b.iter(&format!("replay_{n_jobs}jobs_{cores}threads"), || {
-        let r = replay_cluster(
-            &trace,
-            &cluster,
-            &cfg,
-            1,
-            &ReplayOptions { pool_gpus: None, threads: 0, ..ReplayOptions::default() },
-        );
-        hours_par = r.startup_gpu_hours;
-        r.startup_gpu_hours
+        let r = replay_cluster(&trace, &cluster, &cfg, 1, &week_opts(0));
+        dig_par = replay_digest(&r);
+        dig_par
     });
-    assert_eq!(
-        hours_seq.to_bits(),
-        hours_par.to_bits(),
-        "parallel replay must be byte-identical to sequential"
+    assert_eq!(dig_seq, dig_par, "parallel replay must be byte-identical to sequential");
+
+    // ---- scheduler: event-driven vs round-grid reference ----
+    let n_chains = if fast { 8_000 } else { 50_000 };
+    let chains = synth_chains(n_chains);
+    let pool = (n_chains as u32 / 1_000).max(1) * 512;
+    let mut dig_new = 0u64;
+    let new_s = b.iter(&format!("sched_{n_chains}chains_event"), || {
+        let outs = schedule_chains_with(pool, &chains, SCHED_ROUND_S, None);
+        dig_new = sched_digest(&outs);
+        dig_new
+    });
+    let mut dig_ref = 0u64;
+    let ref_s = b.iter(&format!("sched_{n_chains}chains_reference"), || {
+        let outs = schedule_chains_reference(pool, &chains, SCHED_ROUND_S, None);
+        dig_ref = sched_digest(&outs);
+        dig_ref
+    });
+    assert_eq!(dig_new, dig_ref, "event-driven scheduler must match the reference bit-for-bit");
+    let speedup = ref_s / new_s;
+    println!(
+        "\nscheduler {n_chains} chains over {pool} GPUs: event {new_s:.3}s vs \
+         reference {ref_s:.3}s → {speedup:.1}x"
     );
-    println!("\ndeterminism check passed: {hours_seq} GPU-hours on both paths");
+
+    // ---- phase 1 alone at fleet scale (the pool the paper's fleet ran) ----
+    let n_fleet = if fast { 100_000 } else { 2_000_000 };
+    let fleet_trace = gen_trace(7, n_fleet, 365.0 * 86400.0);
+    let mut waits: Vec<f64> = Vec::new();
+    let mut segments = 0u64;
+    let sched_wall = b.once(&format!("fleet_schedule_{n_fleet}jobs"), || {
+        let s = schedule_trace(&fleet_trace, &cluster, Some(131_072));
+        waits = s
+            .outcomes
+            .iter()
+            .flat_map(|o| o.segments.iter().map(|seg| seg.queue_wait_s))
+            .collect();
+        segments = waits.len() as u64;
+        segments
+    });
+    let wait_median = stats::median(&waits);
+    println!(
+        "fleet schedule: {n_fleet} jobs / {segments} segments over 131072 GPUs in \
+         {sched_wall:.2}s wall (median queue wait {wait_median:.0}s)"
+    );
+
+    // ---- fleet-year two-phase replay, epoch-sharded ----
+    let n_year = if fast { 150 } else { 4_000 };
+    // Baseline: 1 thread, 1 epoch — structurally the pre-sharding replay.
+    let mut dig_base = 0u64;
+    b.once(&format!("fleet_year_replay_{n_year}jobs_presharding"), || {
+        dig_base = replay_digest(&fleet_replay(7, n_year, 1, 1));
+        dig_base
+    });
+    // Measured point: all cores, auto-sharded one epoch per simulated day.
+    let mut year = None;
+    let year_wall = b.once(&format!("fleet_year_replay_{n_year}jobs_epoched"), || {
+        let r = fleet_replay(7, n_year, 0, 0);
+        let d = replay_digest(&r);
+        year = Some(r);
+        d
+    });
+    let year = year.expect("measured fleet-year run");
+    assert_eq!(
+        replay_digest(&year),
+        dig_base,
+        "epoch-sharded parallel replay must be byte-identical to the pre-sharding replay"
+    );
+    // Odd epoch count, all cores — partition boundaries may not touch bits.
+    let dig_13 = replay_digest(&fleet_replay(7, n_year, 0, 13));
+    assert_eq!(dig_13, dig_base, "replay must be byte-identical at any epoch count");
+    println!(
+        "fleet-year replay: {n_year} jobs, 365-day horizon, daily epochs in {year_wall:.2}s \
+         wall — byte-identical across threads and epoch counts"
+    );
+
+    // ---- BENCH_replay.json (gated against benches/baselines/) ----
+    let mut ratio_case = Json::obj();
+    ratio_case
+        .set("chains", n_chains as u64)
+        .set("pool_gpus", pool as u64)
+        .set("speedup_x", speedup)
+        // The gated metric (lower is better): fraction of the reference
+        // engine's runtime the event-driven engine needs — machine-neutral.
+        .set("runtime_vs_reference_fraction", new_s / ref_s);
+    let mut sched_case = Json::obj();
+    sched_case
+        .set("jobs", n_fleet as u64)
+        .set("pool_gpus", 131_072u64)
+        .set("segments", segments)
+        .set("jobs_per_wallsec", n_fleet as f64 / sched_wall)
+        // Gated: simulated seconds, deterministic for a given seed/scale.
+        .set("queue_wait_median_s", wait_median);
+    let mut year_case = Json::obj();
+    year_case
+        .set("jobs", n_year as u64)
+        .set("horizon_days", 365u64)
+        .set("pool_gpus", year.pool_gpus as u64)
+        .set("jobs_per_wallsec", n_year as f64 / year_wall)
+        // Gated: overhead quantities of the simulated fleet year.
+        .set("startup_fraction", year.startup_fraction())
+        .set("startup_gpu_hours", year.startup_gpu_hours);
+    let mut j = Json::obj();
+    j.set("scheduler_ratio", ratio_case);
+    j.set("fleet_schedule", sched_case);
+    j.set("fleet_year_replay", year_case);
+    j.set("fast", fast);
+    let path = "BENCH_replay.json";
+    match std::fs::write(path, j.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("write {path}: {e}"),
+    }
+    // Sanity floor (the gate enforces the real bar via the baseline).
+    assert!(
+        new_s <= ref_s * 1.5,
+        "event-driven scheduler slower than the round-grid reference: \
+         {new_s:.3}s vs {ref_s:.3}s"
+    );
     b.finish();
 }

@@ -258,6 +258,18 @@ pub const POOL_TARGET_UTILIZATION: f64 = 0.70;
 /// per-job-isolated replay could not express).
 pub const FLEET_SERVICE_NODES: u32 = 256;
 
+/// Epoch span (seconds) the replay timeline auto-shards into when
+/// `ReplayOptions::epochs` is 0: one epoch per simulated day. Epochs bound
+/// the per-epoch prep memo tables and contention-scan subranges and give
+/// the parallel phase a locality-friendly issue order; the cross-epoch
+/// handoff fold keeps the result byte-identical at ANY epoch count, so
+/// this is purely a performance knob.
+pub const REPLAY_EPOCH_SPAN_S: f64 = 86_400.0;
+
+/// Upper bound on auto-derived replay epochs (a fleet-*year* horizon, plus
+/// one slack epoch for schedule overrun past day 365).
+pub const REPLAY_MAX_EPOCHS: usize = 366;
+
 #[cfg(test)]
 mod tests {
     use super::*;

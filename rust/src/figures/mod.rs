@@ -34,6 +34,15 @@ pub fn week_replay(seed: u64) -> ReplayResult {
     replay(&trace, &ClusterConfig::default(), &BootseerConfig::baseline(), seed)
 }
 
+/// Fleet-year replay: the same two-phase pipeline over a 365-day horizon.
+/// `epochs` is the replay-timeline shard count (0 auto-shards one epoch per
+/// simulated day) — a pure performance knob, byte-identical at any value.
+pub fn fleet_replay(seed: u64, jobs: usize, threads: usize, epochs: usize) -> ReplayResult {
+    let trace = gen_trace(seed, jobs, 365.0 * 86400.0);
+    let opts = ReplayOptions { pool_gpus: None, threads, faults: FaultConfig::off(), epochs };
+    replay_cluster(&trace, &ClusterConfig::default(), &BootseerConfig::baseline(), seed, &opts)
+}
+
 // ---------------------------------------------------------------- Fig 1 --
 
 pub struct Fig01 {

@@ -35,9 +35,9 @@ fn main() {
                  \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14,16) + overlap/artifact sweeps\
                  \n  startup --gpus N [--bootseer] [--hot-update] [--overlap sequential|overlapped|speculative]\
                  \n          [--dedup] [--delta-resume] [--seed S]\
-                 \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--bootseer] [--overlap M]\
-                 \n          [--dedup] [--delta-resume] [--faults off|paper|storm|k=v,...] [--no-replay]\
-                 \n          [--cache-capacity BYTES|Ng|unbounded] [--cache-policy lru|gdsf|pin]\
+                 \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--epochs E] [--bootseer]\
+                 \n          [--overlap M] [--dedup] [--delta-resume] [--faults off|paper|storm|k=v,...]\
+                 \n          [--no-replay] [--cache-capacity BYTES|Ng|unbounded] [--cache-policy lru|gdsf|pin]\
                  \n  train   [--steps N] [--artifacts DIR] [--seed S]   (pjrt feature)"
             );
             2
@@ -209,6 +209,9 @@ fn cmd_trace(rest: &[String]) -> i32 {
     let seed: u64 = opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(1);
     let pool_gpus: Option<u32> = opt(rest, "--pool-gpus").and_then(|s| s.parse().ok());
     let threads: usize = opt(rest, "--threads").and_then(|s| s.parse().ok()).unwrap_or(0);
+    // Replay-timeline epochs; 0 (default) auto-shards one epoch per
+    // simulated day. A pure performance knob — byte-identical output.
+    let epochs: usize = opt(rest, "--epochs").and_then(|s| s.parse().ok()).unwrap_or(0);
     let overlap = match overlap_opt(rest) {
         Ok(m) => m,
         Err(e) => {
@@ -296,7 +299,7 @@ fn cmd_trace(rest: &[String]) -> i32 {
         &ClusterConfig::default(),
         &cfg,
         seed,
-        &ReplayOptions { pool_gpus, threads, faults },
+        &ReplayOptions { pool_gpus, threads, faults, epochs },
     );
     let wall = t0.elapsed().as_secs_f64();
     if !r.queue_waits.is_empty() {

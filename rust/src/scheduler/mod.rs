@@ -14,31 +14,91 @@
 //!   under the same priority. Hot updates never appear here — they keep
 //!   their allocation, so they consume no scheduler events.
 //!
+//! # The event core
+//!
+//! The core processes exactly three first-class event kinds:
+//!
+//! * **Arrival** — a (chain, segment, retry) run enters the
+//!   pending queue, a priority structure ordered (priority, FIFO
+//!   submit, id).
+//! * **Release** — a running segment returns its GPUs to the indexed
+//!   free-pool. A *completion* release re-submits the chain's next
+//!   scripted segment at that instant; a *preemption* release (the failure
+//!   instant of an interrupted run) re-enqueues the **same** scripted
+//!   segment as `retry + 1` at the chain's retained priority, carrying the
+//!   oracle-assigned remaining hold.
+//! * **Gang admission** — armed (at most one in flight) whenever a release
+//!   or arrival makes the queue head admissible, quantized up to the round
+//!   grid. One admission event atomically starts the maximal multi-segment
+//!   front: it pops queue heads while they fit the free pool at trial
+//!   capacity, so admission does no rescanning — each pop is one ordered
+//!   lookup, and the first head that does not fit ends the gang (no
+//!   backfill past a blocked job, like the paper's quota scheduler).
+//!
+//! The pre-rewrite core — re-armed allocation passes that rescanned the
+//! pending set head-of-line — survives verbatim in [`reference`]; the
+//! tests pin the two bit-identical (oracle on and off) and
+//! `micro_replay_parallel` gates the speedup ratio through
+//! `BENCH_replay.json`.
+//!
 //! Allocation decisions are batched into periodic scheduling rounds
 //! (`round_s`; see `defaults::SCHED_ROUND_S`): even an uncontended job
-//! waits ~U[0, round] for the next pass, which is the structural source of
-//! the paper's ~100 s median queue wait. Contention — a hot pool, a huge
-//! job parked at the head of the queue with no backfill allowed — produces
-//! the hour-long tail. `round_s == 0` degenerates to continuous,
-//! allocate-immediately semantics (what [`schedule`] uses, and what the
-//! scheduler unit tests pin down).
+//! waits ~U[0, round] for the next admission, which is the structural
+//! source of the paper's ~100 s median queue wait. Contention — a hot
+//! pool, a huge job parked at the head of the queue with no backfill
+//! allowed — produces the hour-long tail. `round_s == 0` degenerates to
+//! continuous, allocate-immediately semantics (what [`schedule`] uses, and
+//! what the scheduler unit tests pin down). Time comparisons share two
+//! named constants: [`EVENT_COALESCE_S`] (event coalescing) and
+//! [`ROUND_GRID_REL`] (grid snapping slack in [`quantize_up`]).
 //!
 //! **Interruption path** ([`schedule_chains_with`]): an optional
-//! [`FaultOracle`] is consulted at every segment allocation and may declare
+//! [`FaultOracle`] is consulted at every segment admission and may declare
 //! the segment [`SegmentFate::Interrupt`]ed mid-hold — the failure instant
-//! ends the segment early, its GPUs return to the pool right there, and a
-//! *retry* of the same scripted segment re-enters the queue at that instant
-//! with the oracle-provided remaining hold, competing again under the
-//! chain's original priority. [`crate::faults`] provides the seeded
-//! hazard-based oracle the cluster replay drives this with; `None`
-//! reproduces the uninterrupted schedule bit-for-bit.
+//! becomes a preemption release: the segment ends early, its GPUs return
+//! to the pool right there, and a *retry* of the same scripted segment
+//! re-enters the queue at that instant with the oracle-provided remaining
+//! hold, competing again under the chain's original priority.
+//! [`crate::faults`] provides the seeded hazard-based oracle the cluster
+//! replay drives this with; `None` reproduces the uninterrupted schedule
+//! bit-for-bit.
 //!
 //! Consumed by [`crate::trace`]'s contention-aware replay (phase 1 of the
 //! two-phase design described in `docs/replay.md`); the queue waits it
 //! assigns flow into the profiler via [`crate::startup`]'s stage events.
 
+pub mod reference;
+
 use std::cmp::Reverse;
 use std::collections::{BTreeSet, BinaryHeap};
+
+/// Two timed events closer than this coalesce into one instant: releases
+/// and arrivals within the window are drained together, and an armed gang
+/// admission whose due time is within the window of `now` fires at `now`.
+/// Absolute, in seconds — replay times are O(weeks) ≈ 6e5 s, so this sits
+/// ~7 decimal orders below one ulp of a typical timestamp and only ever
+/// coalesces genuinely identical instants that differ by fp noise.
+pub const EVENT_COALESCE_S: f64 = 1e-12;
+
+/// Relative slack used by [`quantize_up`] when snapping a time up to the
+/// allocation-round grid: a time within `ROUND_GRID_REL` rounds *below* a
+/// grid point (i.e. `t/round_s` within 1e-9 of an integer from above) is
+/// treated as exactly on-grid rather than pushed a full round later.
+pub const ROUND_GRID_REL: f64 = 1e-9;
+
+/// Snaps `t` up to the next allocation-round grid point (`k * round_s`,
+/// minimal `k` such that the grid point is not more than [`ROUND_GRID_REL`]
+/// rounds below `t`). `round_s <= 0` is the continuous degenerate: `t`
+/// itself. Shared by the event core and its preserved [`reference`]
+/// implementation; `quantize_up_pins_round_grid_boundaries` is the
+/// regression test for the boundary behaviour.
+pub fn quantize_up(t: f64, round_s: f64) -> f64 {
+    if round_s <= 0.0 {
+        t
+    } else {
+        (t / round_s - ROUND_GRID_REL).ceil() * round_s
+    }
+}
 
 /// A job submitted to the scheduler.
 #[derive(Clone, Debug)]
@@ -164,23 +224,294 @@ struct PendKey {
     hold_bits: u64,
 }
 
-/// A timed scheduler event (arrival or completion), min-ordered by
-/// `(t, id, chain, seg, retry)` — the same tie-break order the
-/// pre-interruption tuples used, so the `None`-oracle schedule is
-/// bit-identical to the historical one.
+/// An arrival event: run (chain, seg, retry) (re-)enters the pending queue
+/// at `t`, carrying its own hold. Min-ordered by `(t, id, chain, seg,
+/// retry)` — the same tie-break order the pre-rewrite event tuples used,
+/// so the drained batch at every instant is identical.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-struct Ev {
+struct Arrival {
     t: F64Ord,
     id: u64,
     chain: usize,
     seg: usize,
     retry: u32,
-    /// Arrivals: the hold to queue with. Completions: the retry's hold
-    /// when `is_retry` (unused otherwise).
     hold: F64Ord,
-    /// Completions only: this completion is a failure instant and the same
-    /// scripted segment re-enters the queue as `retry + 1`.
-    is_retry: bool,
+}
+
+/// A release event: a running segment returns its GPUs at `t`. `preempt`
+/// marks a failure instant — the same scripted segment re-enters the queue
+/// as `retry + 1` with `retry_hold` (zero and unused for completions,
+/// which re-submit the chain's next scripted segment instead).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Release {
+    t: F64Ord,
+    id: u64,
+    chain: usize,
+    seg: usize,
+    retry: u32,
+    retry_hold: F64Ord,
+    preempt: bool,
+}
+
+/// The indexed free-pool: a GPU capacity ledger with O(1)
+/// `fits`/`allocate`/`release`. The gang-admission event consults it at
+/// trial capacity while popping queue heads, so admitting a front of `k`
+/// gangs costs `k` ordered pops — no rescan of the pending set. (GPUs are
+/// fungible here, so one counter *is* the fully-indexed structure: the
+/// fits-at-capacity query for any gang size is a single compare. A
+/// topology-aware pool would refine `fits` without touching the core.)
+struct FreePool {
+    capacity: u32,
+    free: u32,
+}
+
+impl FreePool {
+    fn new(capacity: u32) -> Self {
+        Self { capacity, free: capacity }
+    }
+    fn fits(&self, gpus: u32) -> bool {
+        gpus <= self.free
+    }
+    fn allocate(&mut self, gpus: u32) {
+        debug_assert!(gpus <= self.free, "free-pool underflow: {gpus} > {}", self.free);
+        self.free -= gpus;
+    }
+    fn release(&mut self, gpus: u32) {
+        self.free += gpus;
+        let cap = self.capacity;
+        debug_assert!(self.free <= cap, "free-pool overflow: {} > {cap}", self.free);
+    }
+}
+
+/// The pending queue: runs awaiting admission, ordered (priority, FIFO
+/// submit, id). `BTreeSet` keeps head peek and ordered pops at O(log n)
+/// without any full-queue rescan on the admission path.
+struct PendingQueue(BTreeSet<PendKey>);
+
+impl PendingQueue {
+    fn new() -> Self {
+        Self(BTreeSet::new())
+    }
+    fn insert(&mut self, key: PendKey) {
+        self.0.insert(key);
+    }
+    fn head(&self) -> Option<PendKey> {
+        self.0.iter().next().copied()
+    }
+    fn remove(&mut self, key: &PendKey) {
+        self.0.remove(key);
+    }
+}
+
+/// The event-driven scheduler core: arrival/release heaps, the pending
+/// queue, the free pool, and the (at most one) armed gang admission.
+struct EventCore<'a> {
+    chains: &'a [ChainJob],
+    round_s: f64,
+    arrivals: BinaryHeap<Reverse<Arrival>>,
+    releases: BinaryHeap<Reverse<Release>>,
+    pending: PendingQueue,
+    pool: FreePool,
+    /// Due time of the armed gang-admission event, if any.
+    next_admission: Option<f64>,
+}
+
+impl<'a> EventCore<'a> {
+    fn new(pool_gpus: u32, chains: &'a [ChainJob], round_s: f64) -> Self {
+        let initial: Vec<Reverse<Arrival>> = chains
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.gpus <= pool_gpus && !c.segments.is_empty())
+            .map(|(ci, c)| {
+                Reverse(Arrival {
+                    t: F64Ord(c.submit_s.max(0.0)),
+                    id: c.id,
+                    chain: ci,
+                    seg: 0,
+                    retry: 0,
+                    hold: F64Ord(c.segments[0]),
+                })
+            })
+            .collect();
+        Self {
+            chains,
+            round_s,
+            arrivals: BinaryHeap::from(initial),
+            releases: BinaryHeap::new(),
+            pending: PendingQueue::new(),
+            pool: FreePool::new(pool_gpus),
+            next_admission: None,
+        }
+    }
+
+    /// The next event instant: earliest arrival, release, or armed
+    /// admission. Infinite when the system has drained.
+    fn next_time(&self) -> f64 {
+        let mut now = f64::INFINITY;
+        if let Some(&Reverse(ev)) = self.arrivals.peek() {
+            now = now.min(ev.t.0);
+        }
+        if let Some(&Reverse(ev)) = self.releases.peek() {
+            now = now.min(ev.t.0);
+        }
+        if let Some(p) = self.next_admission {
+            now = now.min(p);
+        }
+        now
+    }
+
+    /// Drains every release coalesced with `now`: GPUs return to the pool;
+    /// a preemption re-enqueues the same scripted segment at `retry + 1`
+    /// (retained chain priority, oracle-assigned hold), a completion
+    /// re-submits the chain's next scripted segment. Returns whether
+    /// anything released.
+    fn drain_releases(&mut self, now: f64) -> bool {
+        let mut changed = false;
+        while let Some(&Reverse(ev)) = self.releases.peek() {
+            if ev.t.0 > now + EVENT_COALESCE_S {
+                break;
+            }
+            self.releases.pop();
+            self.pool.release(self.chains[ev.chain].gpus);
+            changed = true;
+            if ev.preempt {
+                self.arrivals.push(Reverse(Arrival {
+                    t: F64Ord(now),
+                    id: ev.id,
+                    chain: ev.chain,
+                    seg: ev.seg,
+                    retry: ev.retry + 1,
+                    hold: ev.retry_hold,
+                }));
+            } else if ev.seg + 1 < self.chains[ev.chain].segments.len() {
+                self.arrivals.push(Reverse(Arrival {
+                    t: F64Ord(now),
+                    id: ev.id,
+                    chain: ev.chain,
+                    seg: ev.seg + 1,
+                    retry: 0,
+                    hold: F64Ord(self.chains[ev.chain].segments[ev.seg + 1]),
+                }));
+            }
+        }
+        changed
+    }
+
+    /// Drains every arrival coalesced with `now` into the pending queue.
+    /// Returns whether anything arrived.
+    fn drain_arrivals(&mut self, now: f64) -> bool {
+        let mut changed = false;
+        while let Some(&Reverse(ev)) = self.arrivals.peek() {
+            if ev.t.0 > now + EVENT_COALESCE_S {
+                break;
+            }
+            self.arrivals.pop();
+            self.pending.insert(PendKey {
+                prio: self.chains[ev.chain].priority,
+                submit_bits: ev.t.0.to_bits(),
+                id: ev.id,
+                chain: ev.chain,
+                seg: ev.seg,
+                retry: ev.retry,
+                hold_bits: ev.hold.0.to_bits(),
+            });
+            changed = true;
+        }
+        changed
+    }
+
+    /// Arms a gang-admission event on the round grid iff the queue head
+    /// now fits the free pool. Skipping the arm when the head does not fit
+    /// is unobservable relative to arming unconditionally: free GPUs only
+    /// grow between an arm and its firing (allocation happens exclusively
+    /// inside admission events, which disarm), so a pass armed on a
+    /// blocked head would admit nothing and change no state; and every
+    /// event that could unblock or replace the head — a release growing
+    /// the pool, an arrival inserting a smaller head — re-runs this arm,
+    /// at a grid point no later than the skipped pass would have reached
+    /// it (`quantize_up` is monotone and fixes grid points). The
+    /// `*_matches_reference` tests pin this bit-for-bit.
+    fn arm_admission(&mut self, now: f64) {
+        let Some(head) = self.pending.head() else { return };
+        if !self.pool.fits(self.chains[head.chain].gpus) {
+            return;
+        }
+        let p = quantize_up(now, self.round_s);
+        self.next_admission = Some(match self.next_admission {
+            Some(q) => q.min(p),
+            None => p,
+        });
+    }
+
+    /// The gang-admission event: atomically starts the maximal admissible
+    /// front. Pops the queue head while it fits the pool at trial
+    /// capacity — in (priority, submit, id) order, so the first head that
+    /// does not fit blocks everything behind it (head-of-line, no
+    /// backfill) — consulting the oracle once per admitted run. A
+    /// completed run schedules a completion release at `now + hold`; an
+    /// interrupted run schedules a preemption release at the failure
+    /// instant. Disarms itself.
+    fn gang_admit(
+        &mut self,
+        now: f64,
+        oracle: Option<&dyn FaultOracle>,
+        out: &mut [ChainOutcome],
+    ) {
+        while let Some(key) = self.pending.head() {
+            let c = &self.chains[key.chain];
+            if !self.pool.fits(c.gpus) {
+                break; // head-of-line: no backfill past a blocked gang
+            }
+            self.pending.remove(&key);
+            self.pool.allocate(c.gpus);
+            let hold = f64::from_bits(key.hold_bits);
+            let submit = f64::from_bits(key.submit_bits);
+            let fate = match oracle {
+                Some(o) => o.fate(c, key.seg, key.retry, now, hold),
+                None => SegmentFate::Complete,
+            };
+            match fate {
+                SegmentFate::Complete => {
+                    out[key.chain].segments.push(SegmentOutcome {
+                        start_s: now,
+                        end_s: now + hold,
+                        queue_wait_s: now - submit,
+                        interrupted: false,
+                        lost_train_s: 0.0,
+                    });
+                    self.releases.push(Reverse(Release {
+                        t: F64Ord(now + hold),
+                        id: key.id,
+                        chain: key.chain,
+                        seg: key.seg,
+                        retry: key.retry,
+                        retry_hold: F64Ord(0.0),
+                        preempt: false,
+                    }));
+                }
+                SegmentFate::Interrupt { after_s, lost_train_s, retry_hold_s } => {
+                    let after = after_s.clamp(0.0, hold);
+                    out[key.chain].segments.push(SegmentOutcome {
+                        start_s: now,
+                        end_s: now + after,
+                        queue_wait_s: now - submit,
+                        interrupted: true,
+                        lost_train_s,
+                    });
+                    self.releases.push(Reverse(Release {
+                        t: F64Ord(now + after),
+                        id: key.id,
+                        chain: key.chain,
+                        seg: key.seg,
+                        retry: key.retry,
+                        retry_hold: F64Ord(retry_hold_s.max(0.0)),
+                        preempt: true,
+                    }));
+                }
+            }
+        }
+        self.next_admission = None;
+    }
 }
 
 /// Event-driven scheduler over a pool of `pool_gpus` (single-segment form).
@@ -211,7 +542,7 @@ pub fn schedule(pool_gpus: u32, jobs: &[SchedJob]) -> Vec<SchedOutcome> {
 
 /// Event-driven scheduler over a pool of `pool_gpus`, chain form: every
 /// completed segment releases its GPUs and re-submits the chain's next
-/// segment at the completion instant. Allocation passes run at multiples of
+/// segment at the completion instant. Gang admissions fire at multiples of
 /// `round_s` (0 = continuous). Strict priority order; within priority,
 /// FIFO; a job that does not fit blocks same-or-lower-priority jobs behind
 /// it (no backfill — conservative, like the paper's quota scheduler).
@@ -222,187 +553,41 @@ pub fn schedule_chains(pool_gpus: u32, chains: &[ChainJob], round_s: f64) -> Vec
 }
 
 /// [`schedule_chains`] with an optional fault oracle: at every segment
-/// allocation the oracle may declare the run interrupted mid-hold, in which
-/// case the segment ends (and releases its GPUs) at the failure instant and
-/// a retry with the oracle's remaining hold re-enters the queue right
-/// there, keeping the chain's priority. `None` is bit-identical to
-/// [`schedule_chains`].
+/// admission the oracle may declare the run interrupted mid-hold, in which
+/// case the segment ends (and releases its GPUs) at the failure instant —
+/// a preemption event — and a retry with the oracle's remaining hold
+/// re-enters the queue right there, keeping the chain's priority. `None`
+/// is bit-identical to [`schedule_chains`], and both are bit-identical to
+/// the preserved [`reference::schedule_chains_reference`].
 pub fn schedule_chains_with(
     pool_gpus: u32,
     chains: &[ChainJob],
     round_s: f64,
     oracle: Option<&dyn FaultOracle>,
 ) -> Vec<ChainOutcome> {
-    // Next allocation pass no earlier than `t`, quantized to the round grid.
-    let quantize_up = |t: f64| -> f64 {
-        if round_s <= 0.0 {
-            t
-        } else {
-            (t / round_s - 1e-9).ceil() * round_s
-        }
-    };
-
     let mut out: Vec<ChainOutcome> = chains
         .iter()
         .map(|c| ChainOutcome { id: c.id, gpus: c.gpus, segments: Vec::new() })
         .collect();
 
-    let mut arrivals: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
-    for (ci, c) in chains.iter().enumerate() {
-        if c.gpus > pool_gpus || c.segments.is_empty() {
-            continue; // can never run; outcome stays empty
-        }
-        arrivals.push(Reverse(Ev {
-            t: F64Ord(c.submit_s.max(0.0)),
-            id: c.id,
-            chain: ci,
-            seg: 0,
-            retry: 0,
-            hold: F64Ord(c.segments[0]),
-            is_retry: false,
-        }));
-    }
-    let mut completions: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
-    let mut pending: BTreeSet<PendKey> = BTreeSet::new();
-    let mut free = pool_gpus;
-    let mut next_pass: Option<f64> = None;
-
+    let mut core = EventCore::new(pool_gpus, chains, round_s);
     loop {
-        // Advance to the next event: arrival, completion, or scheduled pass.
-        let mut now = f64::INFINITY;
-        if let Some(Reverse(ev)) = arrivals.peek() {
-            now = now.min(ev.t.0);
-        }
-        if let Some(Reverse(ev)) = completions.peek() {
-            now = now.min(ev.t.0);
-        }
-        if let Some(p) = next_pass {
-            now = now.min(p);
-        }
+        let now = core.next_time();
         if !now.is_finite() {
             break;
         }
-
-        let mut changed = false;
-        // Completions free GPUs and re-submit the chain's next run: the
-        // retry of an interrupted segment, or the next scripted segment.
-        while let Some(Reverse(ev)) = completions.peek() {
-            if ev.t.0 > now + 1e-12 {
-                break;
-            }
-            let Reverse(ev) = completions.pop().unwrap();
-            free += chains[ev.chain].gpus;
-            changed = true;
-            if ev.is_retry {
-                arrivals.push(Reverse(Ev {
-                    t: F64Ord(now),
-                    retry: ev.retry + 1,
-                    is_retry: false,
-                    ..ev
-                }));
-            } else if ev.seg + 1 < chains[ev.chain].segments.len() {
-                arrivals.push(Reverse(Ev {
-                    t: F64Ord(now),
-                    seg: ev.seg + 1,
-                    retry: 0,
-                    hold: F64Ord(chains[ev.chain].segments[ev.seg + 1]),
-                    is_retry: false,
-                    ..ev
-                }));
-            }
+        // Releases before arrivals at a coalesced instant: re-submissions
+        // enter the arrival heap at `t = now` and are drained in the same
+        // iteration, so the interleave is unobservable — both drains only
+        // add to the pending set and grow the pool.
+        let released = core.drain_releases(now);
+        let arrived = core.drain_arrivals(now);
+        if released || arrived {
+            core.arm_admission(now);
         }
-        // Arrivals enter the pending queue.
-        while let Some(Reverse(ev)) = arrivals.peek() {
-            if ev.t.0 > now + 1e-12 {
-                break;
-            }
-            let Reverse(ev) = arrivals.pop().unwrap();
-            pending.insert(PendKey {
-                prio: chains[ev.chain].priority,
-                submit_bits: ev.t.0.to_bits(),
-                id: ev.id,
-                chain: ev.chain,
-                seg: ev.seg,
-                retry: ev.retry,
-                hold_bits: ev.hold.0.to_bits(),
-            });
-            changed = true;
-        }
-        // Any state change (re-)arms an allocation pass on the round grid.
-        if changed && !pending.is_empty() {
-            let p = quantize_up(now);
-            next_pass = Some(match next_pass {
-                Some(q) => q.min(p),
-                None => p,
-            });
-        }
-
-        // Allocation pass. Iteration is (priority, submit, id)-ordered, so
-        // the first job that does not fit blocks everything behind it.
-        if let Some(p) = next_pass {
-            if p <= now + 1e-12 {
-                let mut to_start: Vec<PendKey> = Vec::new();
-                let mut trial_free = free;
-                for &key in pending.iter() {
-                    let c = &chains[key.chain];
-                    if c.gpus <= trial_free {
-                        trial_free -= c.gpus;
-                        to_start.push(key);
-                    } else {
-                        break; // head-of-line: no backfill past a blocked job
-                    }
-                }
-                for key in to_start {
-                    pending.remove(&key);
-                    let c = &chains[key.chain];
-                    free -= c.gpus;
-                    let hold = f64::from_bits(key.hold_bits);
-                    let submit = f64::from_bits(key.submit_bits);
-                    let fate = match oracle {
-                        Some(o) => o.fate(c, key.seg, key.retry, now, hold),
-                        None => SegmentFate::Complete,
-                    };
-                    match fate {
-                        SegmentFate::Complete => {
-                            out[key.chain].segments.push(SegmentOutcome {
-                                start_s: now,
-                                end_s: now + hold,
-                                queue_wait_s: now - submit,
-                                interrupted: false,
-                                lost_train_s: 0.0,
-                            });
-                            completions.push(Reverse(Ev {
-                                t: F64Ord(now + hold),
-                                id: key.id,
-                                chain: key.chain,
-                                seg: key.seg,
-                                retry: key.retry,
-                                hold: F64Ord(0.0),
-                                is_retry: false,
-                            }));
-                        }
-                        SegmentFate::Interrupt { after_s, lost_train_s, retry_hold_s } => {
-                            let after = after_s.clamp(0.0, hold);
-                            out[key.chain].segments.push(SegmentOutcome {
-                                start_s: now,
-                                end_s: now + after,
-                                queue_wait_s: now - submit,
-                                interrupted: true,
-                                lost_train_s,
-                            });
-                            completions.push(Reverse(Ev {
-                                t: F64Ord(now + after),
-                                id: key.id,
-                                chain: key.chain,
-                                seg: key.seg,
-                                retry: key.retry,
-                                hold: F64Ord(retry_hold_s.max(0.0)),
-                                is_retry: true,
-                            }));
-                        }
-                    }
-                }
-                next_pass = None;
+        if let Some(p) = core.next_admission {
+            if p <= now + EVENT_COALESCE_S {
+                core.gang_admit(now, oracle, &mut out);
             }
         }
     }
@@ -564,6 +749,63 @@ mod tests {
             [ChainJob { id: 1, submit_s: 60.0, gpus: 10, priority: 1, segments: vec![4.0] }];
         let out = schedule_chains(100, &chains, 30.0);
         assert_eq!(out[0].segments[0].start_s, 60.0);
+    }
+
+    #[test]
+    fn quantize_up_pins_round_grid_boundaries() {
+        // The named epsilons are load-bearing schedule semantics: pin their
+        // values so a change is a deliberate, golden-breaking act.
+        assert_eq!(EVENT_COALESCE_S, 1e-12);
+        assert_eq!(ROUND_GRID_REL, 1e-9);
+        // Continuous degenerate: identity.
+        assert_eq!(quantize_up(7.25, 0.0), 7.25);
+        assert_eq!(quantize_up(7.25, -1.0), 7.25);
+        // Strictly inside a round: snap up to the next grid point.
+        assert_eq!(quantize_up(5.0, 30.0), 30.0);
+        assert_eq!(quantize_up(29.999, 30.0), 30.0);
+        // Exactly on-grid: served at that pass, not a round later.
+        assert_eq!(quantize_up(0.0, 30.0), 0.0);
+        assert_eq!(quantize_up(60.0, 30.0), 60.0);
+        // Within ROUND_GRID_REL rounds above a grid point: still treated
+        // as on-grid (fp noise from upstream arithmetic must not cost a
+        // whole round).
+        assert_eq!(quantize_up(200.0 * (1.0 + 0.5e-9), 200.0), 200.0);
+        // Beyond the slack: genuinely past the pass, wait for the next.
+        assert_eq!(quantize_up(200.0 * (1.0 + 2e-9), 200.0), 400.0);
+        // Epsilon-close submissions coalesce into the same admission.
+        let chains = [
+            ChainJob { id: 1, submit_s: 5.0, gpus: 50, priority: 1, segments: vec![4.0] },
+            ChainJob {
+                id: 2,
+                submit_s: 5.0 + 0.5 * EVENT_COALESCE_S,
+                gpus: 50,
+                priority: 1,
+                segments: vec![4.0],
+            },
+        ];
+        let out = schedule_chains(100, &chains, 30.0);
+        assert_eq!(out[0].segments[0].start_s, 30.0);
+        assert_eq!(out[1].segments[0].start_s, 30.0);
+    }
+
+    #[test]
+    fn gang_front_admits_atomically() {
+        // Three queued jobs that exactly fill the pool are one gang front:
+        // a single admission event starts all three at the same instant. A
+        // fourth (same priority, later submit) is blocked by capacity and
+        // waits for the release.
+        let chains = [
+            ChainJob { id: 1, submit_s: 1.0, gpus: 40, priority: 1, segments: vec![10.0] },
+            ChainJob { id: 2, submit_s: 2.0, gpus: 30, priority: 1, segments: vec![10.0] },
+            ChainJob { id: 3, submit_s: 3.0, gpus: 30, priority: 1, segments: vec![10.0] },
+            ChainJob { id: 4, submit_s: 4.0, gpus: 20, priority: 1, segments: vec![5.0] },
+        ];
+        let out = schedule_chains(100, &chains, 30.0);
+        for o in &out[..3] {
+            assert_eq!(o.segments[0].start_s, 30.0, "gang member starts at the front");
+        }
+        // Gang releases at t=40; next grid point is 60.
+        assert_eq!(out[3].segments[0].start_s, 60.0, "blocked job waits out the gang");
     }
 
     // ---- interruption path ----
@@ -780,6 +1022,102 @@ mod tests {
             for (_, d) in evs {
                 used += d;
                 prop_assert!(used <= pool as i64, "pool over-allocated: {used} > {pool}");
+            }
+            Ok(())
+        });
+    }
+
+    // ---- equivalence with the preserved reference core ----
+
+    /// Bit-exact `ChainOutcome` comparison: every f64 compared by IEEE bit
+    /// pattern, so even a -0.0/+0.0 or NaN-payload drift fails.
+    fn assert_outcomes_bit_identical(a: &[ChainOutcome], b: &[ChainOutcome], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: outcome count");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.id, y.id, "{ctx}: id");
+            assert_eq!(x.gpus, y.gpus, "{ctx}: gpus");
+            assert_eq!(x.segments.len(), y.segments.len(), "{ctx}: chain {} segment count", x.id);
+            for (s, t) in x.segments.iter().zip(&y.segments) {
+                assert_eq!(s.start_s.to_bits(), t.start_s.to_bits(), "{ctx}: chain {} start", x.id);
+                assert_eq!(s.end_s.to_bits(), t.end_s.to_bits(), "{ctx}: chain {} end", x.id);
+                assert_eq!(
+                    s.queue_wait_s.to_bits(),
+                    t.queue_wait_s.to_bits(),
+                    "{ctx}: chain {} wait",
+                    x.id
+                );
+                assert_eq!(s.interrupted, t.interrupted, "{ctx}: chain {} interrupted", x.id);
+                assert_eq!(
+                    s.lost_train_s.to_bits(),
+                    t.lost_train_s.to_bits(),
+                    "{ctx}: chain {} lost",
+                    x.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn event_core_matches_reference_on_seeded_storm() {
+        // The deterministic storm workload, oracle on, through both cores.
+        let chains: Vec<ChainJob> = (0..40)
+            .map(|i| ChainJob {
+                id: i + 1,
+                submit_s: (i as f64) * 0.5,
+                gpus: 20 + (i as u32 % 5) * 16,
+                priority: (i % 3) as u32,
+                segments: vec![30.0, 20.0],
+            })
+            .collect();
+        let oracle = ScriptedFaults { fails: 3, after_s: 1.0, lost: 0.5 };
+        for round in [0.0, 15.0, 200.0] {
+            let a = schedule_chains_with(256, &chains, round, Some(&oracle));
+            let b = reference::schedule_chains_reference(256, &chains, round, Some(&oracle));
+            assert_outcomes_bit_identical(&a, &b, &format!("storm round={round}"));
+        }
+    }
+
+    #[test]
+    fn prop_event_core_matches_reference() {
+        // Randomized workloads — oversized chains, ties, rounds on/off,
+        // oracle on/off — must be bit-identical between the event-driven
+        // core and the preserved pass-rescan reference.
+        prop_check(32, |g| {
+            let pool = g.u64_in(8, 512) as u32;
+            let n = g.usize_in(1, 30);
+            let round = if g.rng.chance(0.3) { 0.0 } else { g.f64_in(1.0, 60.0) };
+            let chains: Vec<ChainJob> = (0..n)
+                .map(|i| ChainJob {
+                    id: i as u64 + 1,
+                    submit_s: g.f64_in(0.0, 200.0),
+                    // Up to 2x the pool so some chains are oversized.
+                    gpus: g.u64_in(1, 2 * pool as u64) as u32,
+                    priority: g.u64_in(0, 3) as u32,
+                    segments: (0..g.usize_in(1, 4)).map(|_| g.f64_in(0.5, 40.0)).collect(),
+                })
+                .collect();
+            let with_oracle = g.rng.chance(0.5);
+            let oracle = ScriptedFaults {
+                fails: g.u64_in(0, 3) as u32,
+                after_s: g.f64_in(0.25, 10.0),
+                lost: 1.0,
+            };
+            let orc: Option<&dyn FaultOracle> = if with_oracle { Some(&oracle) } else { None };
+            let a = schedule_chains_with(pool, &chains, round, orc);
+            let b = reference::schedule_chains_reference(pool, &chains, round, orc);
+            prop_assert!(a.len() == b.len(), "outcome count");
+            for (x, y) in a.iter().zip(&b) {
+                prop_assert!(x.segments.len() == y.segments.len(), "segment count");
+                for (s, t) in x.segments.iter().zip(&y.segments) {
+                    prop_assert!(
+                        s.start_s.to_bits() == t.start_s.to_bits()
+                            && s.end_s.to_bits() == t.end_s.to_bits()
+                            && s.queue_wait_s.to_bits() == t.queue_wait_s.to_bits()
+                            && s.interrupted == t.interrupted
+                            && s.lost_train_s.to_bits() == t.lost_train_s.to_bits(),
+                        "segment drift vs reference"
+                    );
+                }
             }
             Ok(())
         });

@@ -1,0 +1,254 @@
+//! The pre-rewrite round-grid scheduler, preserved verbatim as a *golden
+//! reference*.
+//!
+//! [`schedule_chains_reference`] is `schedule_chains_with` exactly as it
+//! stood before the event-driven rewrite of the core in
+//! [`crate::scheduler`]: every arrival or completion re-arms a quantized
+//! allocation pass, and each pass rescans the `BTreeSet` pending queue
+//! from the head to find the admissible prefix. The rewrite replaced the
+//! pass rescans with first-class gang-admission and preemption events over
+//! an indexed free-pool, but the *semantics* — strict priority, FIFO
+//! within priority, head-of-line blocking with no backfill, round-grid
+//! quantization, interruption retries at retained priority — are pinned to
+//! this implementation bit-for-bit.
+//!
+//! Two things keep it around:
+//!
+//! * `scheduler::tests` drives both cores through identical seeded
+//!   workloads (fault oracle on and off) and asserts the `ChainOutcome`
+//!   streams are bit-identical.
+//! * `micro_replay_parallel` benchmarks the event-driven core's speedup
+//!   against it, and the recorded ratio is regression-gated through
+//!   `BENCH_replay.json`.
+//!
+//! Do not "fix" or optimize this file; it is a measurement baseline.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap};
+
+use super::{ChainJob, ChainOutcome, FaultOracle, SegmentFate, SegmentOutcome};
+
+/// Totally ordered f64 wrapper (times are finite and non-negative here).
+#[derive(Clone, Copy, PartialEq)]
+struct F64Ord(f64);
+impl Eq for F64Ord {}
+impl PartialOrd for F64Ord {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for F64Ord {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap()
+    }
+}
+
+/// Queue key: strict priority, then FIFO by (re-)submission time, then id.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct PendKey {
+    prio: u32,
+    submit_bits: u64,
+    id: u64,
+    chain: usize,
+    seg: usize,
+    retry: u32,
+    hold_bits: u64,
+}
+
+/// A timed scheduler event (arrival or completion), min-ordered by
+/// `(t, id, chain, seg, retry)`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Ev {
+    t: F64Ord,
+    id: u64,
+    chain: usize,
+    seg: usize,
+    retry: u32,
+    hold: F64Ord,
+    is_retry: bool,
+}
+
+/// The pre-rewrite `schedule_chains_with`: round-grid allocation passes
+/// re-armed on every arrival/completion, each rescanning the pending set.
+/// Kept only as the equivalence baseline for the event-driven core.
+pub fn schedule_chains_reference(
+    pool_gpus: u32,
+    chains: &[ChainJob],
+    round_s: f64,
+    oracle: Option<&dyn FaultOracle>,
+) -> Vec<ChainOutcome> {
+    // Next allocation pass no earlier than `t`, quantized to the round grid.
+    let quantize_up = |t: f64| -> f64 {
+        if round_s <= 0.0 {
+            t
+        } else {
+            (t / round_s - 1e-9).ceil() * round_s
+        }
+    };
+
+    let mut out: Vec<ChainOutcome> = chains
+        .iter()
+        .map(|c| ChainOutcome { id: c.id, gpus: c.gpus, segments: Vec::new() })
+        .collect();
+
+    let mut arrivals: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    for (ci, c) in chains.iter().enumerate() {
+        if c.gpus > pool_gpus || c.segments.is_empty() {
+            continue; // can never run; outcome stays empty
+        }
+        arrivals.push(Reverse(Ev {
+            t: F64Ord(c.submit_s.max(0.0)),
+            id: c.id,
+            chain: ci,
+            seg: 0,
+            retry: 0,
+            hold: F64Ord(c.segments[0]),
+            is_retry: false,
+        }));
+    }
+    let mut completions: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut pending: BTreeSet<PendKey> = BTreeSet::new();
+    let mut free = pool_gpus;
+    let mut next_pass: Option<f64> = None;
+
+    loop {
+        // Advance to the next event: arrival, completion, or scheduled pass.
+        let mut now = f64::INFINITY;
+        if let Some(Reverse(ev)) = arrivals.peek() {
+            now = now.min(ev.t.0);
+        }
+        if let Some(Reverse(ev)) = completions.peek() {
+            now = now.min(ev.t.0);
+        }
+        if let Some(p) = next_pass {
+            now = now.min(p);
+        }
+        if !now.is_finite() {
+            break;
+        }
+
+        let mut changed = false;
+        // Completions free GPUs and re-submit the chain's next run: the
+        // retry of an interrupted segment, or the next scripted segment.
+        while let Some(Reverse(ev)) = completions.peek() {
+            if ev.t.0 > now + 1e-12 {
+                break;
+            }
+            let Reverse(ev) = completions.pop().unwrap();
+            free += chains[ev.chain].gpus;
+            changed = true;
+            if ev.is_retry {
+                arrivals.push(Reverse(Ev {
+                    t: F64Ord(now),
+                    retry: ev.retry + 1,
+                    is_retry: false,
+                    ..ev
+                }));
+            } else if ev.seg + 1 < chains[ev.chain].segments.len() {
+                arrivals.push(Reverse(Ev {
+                    t: F64Ord(now),
+                    seg: ev.seg + 1,
+                    retry: 0,
+                    hold: F64Ord(chains[ev.chain].segments[ev.seg + 1]),
+                    is_retry: false,
+                    ..ev
+                }));
+            }
+        }
+        // Arrivals enter the pending queue.
+        while let Some(Reverse(ev)) = arrivals.peek() {
+            if ev.t.0 > now + 1e-12 {
+                break;
+            }
+            let Reverse(ev) = arrivals.pop().unwrap();
+            pending.insert(PendKey {
+                prio: chains[ev.chain].priority,
+                submit_bits: ev.t.0.to_bits(),
+                id: ev.id,
+                chain: ev.chain,
+                seg: ev.seg,
+                retry: ev.retry,
+                hold_bits: ev.hold.0.to_bits(),
+            });
+            changed = true;
+        }
+        // Any state change (re-)arms an allocation pass on the round grid.
+        if changed && !pending.is_empty() {
+            let p = quantize_up(now);
+            next_pass = Some(match next_pass {
+                Some(q) => q.min(p),
+                None => p,
+            });
+        }
+
+        // Allocation pass. Iteration is (priority, submit, id)-ordered, so
+        // the first job that does not fit blocks everything behind it.
+        if let Some(p) = next_pass {
+            if p <= now + 1e-12 {
+                let mut to_start: Vec<PendKey> = Vec::new();
+                let mut trial_free = free;
+                for &key in pending.iter() {
+                    let c = &chains[key.chain];
+                    if c.gpus <= trial_free {
+                        trial_free -= c.gpus;
+                        to_start.push(key);
+                    } else {
+                        break; // head-of-line: no backfill past a blocked job
+                    }
+                }
+                for key in to_start {
+                    pending.remove(&key);
+                    let c = &chains[key.chain];
+                    free -= c.gpus;
+                    let hold = f64::from_bits(key.hold_bits);
+                    let submit = f64::from_bits(key.submit_bits);
+                    let fate = match oracle {
+                        Some(o) => o.fate(c, key.seg, key.retry, now, hold),
+                        None => SegmentFate::Complete,
+                    };
+                    match fate {
+                        SegmentFate::Complete => {
+                            out[key.chain].segments.push(SegmentOutcome {
+                                start_s: now,
+                                end_s: now + hold,
+                                queue_wait_s: now - submit,
+                                interrupted: false,
+                                lost_train_s: 0.0,
+                            });
+                            completions.push(Reverse(Ev {
+                                t: F64Ord(now + hold),
+                                id: key.id,
+                                chain: key.chain,
+                                seg: key.seg,
+                                retry: key.retry,
+                                hold: F64Ord(0.0),
+                                is_retry: false,
+                            }));
+                        }
+                        SegmentFate::Interrupt { after_s, lost_train_s, retry_hold_s } => {
+                            let after = after_s.clamp(0.0, hold);
+                            out[key.chain].segments.push(SegmentOutcome {
+                                start_s: now,
+                                end_s: now + after,
+                                queue_wait_s: now - submit,
+                                interrupted: true,
+                                lost_train_s,
+                            });
+                            completions.push(Reverse(Ev {
+                                t: F64Ord(now + after),
+                                id: key.id,
+                                chain: key.chain,
+                                seg: key.seg,
+                                retry: key.retry,
+                                hold: F64Ord(retry_hold_s.max(0.0)),
+                                is_retry: true,
+                            }));
+                        }
+                    }
+                }
+                next_pass = None;
+            }
+        }
+    }
+    out
+}

@@ -27,7 +27,13 @@
 //!    (image hot-set records, environment caches) is served from a
 //!    [`SharedWorld`] registry keyed by image digest with virtual-time
 //!    visibility — so results are byte-identical regardless of thread
-//!    count.
+//!    count. The unit list is sharded into time **epochs**
+//!    ([`ReplayOptions::epochs`], CLI `--epochs`; 0 auto-shards daily):
+//!    per-unit prep amortizes per epoch and workers drain the units in
+//!    epoch-major order, while a pure, order-independent min-fold carries
+//!    warm-state availability across epoch boundaries (`timeline.rs`) —
+//!    so the epoch count is a pure performance knob, byte-identical at
+//!    every value.
 //!
 //! A third, optional axis layers **generated faults** over the replay
 //! ([`ReplayOptions::faults`], CLI `--faults`, config `[faults]`): the
@@ -76,6 +82,9 @@ use crate::startup::{
 use crate::util::rng::{mix64, Rng};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+mod timeline;
 
 /// Domain-separation salts for the trace-level cache-economics decisions
 /// (`0xA272_xxxx` — the artifact/transfer family; `_0001..=_0003` live in
@@ -358,14 +367,20 @@ fn schedule_trace_with(
 /// startup at virtual time `t` sees exactly the artifacts with
 /// `available_s <= t`. Visibility is a pure function of the schedule, never
 /// of thread interleaving — this is what makes the parallel replay
-/// byte-identical at any `--threads`.
+/// byte-identical at any `--threads`. The replay instantiates one per
+/// timeline epoch by prefix-folding per-epoch contributions
+/// (`timeline::fold_worlds`) — every producer visible to a query lives in
+/// an earlier-or-equal epoch, so each epoch's world answers its own units
+/// exactly like the global one would.
 pub struct SharedWorld {
     images: HashMap<u64, SharedImage>,
     envs: HashMap<u64, SharedEnv>,
 }
 
 struct SharedImage {
-    hot_blocks: Vec<u32>,
+    /// Shared via [`Arc`]: per-epoch worlds clone the map entry, not the
+    /// block list.
+    hot_blocks: Arc<Vec<u32>>,
     available_s: f64,
 }
 
@@ -503,6 +518,14 @@ pub struct ReplayOptions {
     /// ([`FaultConfig::off`] by default — byte-identical to the fault-free
     /// replay).
     pub faults: FaultConfig,
+    /// Phase-2 timeline epochs (time partitions with deterministic
+    /// cross-epoch handoff; see `timeline.rs`). 0 (the default)
+    /// auto-shards at one epoch per
+    /// [`crate::config::defaults::REPLAY_EPOCH_SPAN_S`] of schedule
+    /// horizon, capped at
+    /// [`crate::config::defaults::REPLAY_MAX_EPOCHS`]. Purely a
+    /// performance knob: the replay is byte-identical at every value.
+    pub epochs: usize,
 }
 
 /// One independent simulation unit of phase 2.
@@ -529,6 +552,10 @@ struct Unit {
     /// interval (ceil of the phase-1 contention average) — the demand the
     /// registry / cluster-cache admission limits are measured against.
     demand: u32,
+    /// Timeline epoch this unit's start falls in: selects the prefix-folded
+    /// [`SharedWorld`] it observes and its slot in the epoch-major issue
+    /// order.
+    epoch: usize,
 }
 
 /// Per-startup effective service capacities: the seed per-job entitlement,
@@ -591,7 +618,7 @@ pub fn replay_cluster(
     // digest + hot set + hot bytes per distinct image seed; signature per
     // distinct env seed. Both are pure functions of the job config,
     // computed once.
-    let mut img_idents: HashMap<u64, (u64, Vec<u32>, u64)> = HashMap::new();
+    let mut img_idents: HashMap<u64, (u64, Arc<Vec<u32>>, u64)> = HashMap::new();
     let mut env_idents: HashMap<u64, u64> = HashMap::new();
     let mut job_digest = Vec::with_capacity(trace.len());
     let mut job_hot_bytes = Vec::with_capacity(trace.len());
@@ -606,7 +633,8 @@ pub fn replay_cluster(
                 job.image_block_bytes,
                 job.image_hot_fraction,
             );
-            (img.digest, img.startup_access.clone(), img.hot_bytes())
+            let hot = img.hot_bytes();
+            (img.digest, Arc::new(img.startup_access), hot)
         });
         job_digest.push(*digest);
         job_hot_bytes.push(*hot_bytes);
@@ -643,6 +671,7 @@ pub fn replay_cluster(
                 lost_train_s: 0.0,
                 warm_local: false,
                 demand: 0,
+                epoch: 0,
             });
             continue;
         }
@@ -669,6 +698,7 @@ pub fn replay_cluster(
                 lost_train_s: s.lost_train_s,
                 warm_local,
                 demand: 0,
+                epoch: 0,
             });
             if s.interrupted {
                 retry += 1;
@@ -700,6 +730,7 @@ pub fn replay_cluster(
                 lost_train_s: 0.0,
                 warm_local: false,
                 demand: 0,
+                epoch: 0,
             });
         }
     }
@@ -711,88 +742,127 @@ pub fn replay_cluster(
         pts.push((u.start_s, n));
         pts.push((u.start_s + u.est_s, -n));
     }
-    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let mut times: Vec<f64> = Vec::with_capacity(pts.len());
-    let mut level: Vec<f64> = Vec::with_capacity(pts.len());
-    let mut pref: Vec<f64> = Vec::with_capacity(pts.len());
-    let mut cur = 0.0f64;
-    let mut acc = 0.0f64;
-    for &(t, dl) in &pts {
-        if let Some(&lt) = times.last() {
-            acc += cur * (t - lt);
-        }
-        times.push(t);
-        pref.push(acc);
-        cur += dl;
-        level.push(cur);
-    }
-    let int_at = |x: f64| -> f64 {
-        let i = times.partition_point(|&t| t <= x);
-        if i == 0 {
-            0.0
-        } else {
-            pref[i - 1] + level[i - 1] * (x - times[i - 1])
-        }
-    };
+    let contention = timeline::ContentionTimeline::build(pts);
 
-    // ---- Warm-state availability: earliest estimated end per identity ----
-    let mut img_avail: HashMap<u64, f64> = HashMap::new();
-    let mut env_avail: HashMap<u64, f64> = HashMap::new();
+    // ---- Epoch partition of the unit list ----
+    // Equal-width time slices over the schedule horizon; 0 auto-shards one
+    // epoch per REPLAY_EPOCH_SPAN_S (capped). Everything below folds per
+    // epoch and merges at the boundaries, so the count is a pure
+    // performance knob — the goldens pin byte-identity across epoch
+    // counts. `epochs: 1` *is* the pre-sharding replay: one partition,
+    // the original issue order, a fully folded world.
+    let horizon = units.iter().map(|u| u.start_s + u.est_s).fold(0.0f64, f64::max);
+    let n_epochs = if opts.epochs == 0 {
+        ((horizon / d::REPLAY_EPOCH_SPAN_S).ceil() as usize).clamp(1, d::REPLAY_MAX_EPOCHS)
+    } else {
+        opts.epochs
+    };
+    let tl = timeline::EpochTimeline::new(horizon, n_epochs);
+    let mut epoch_units: Vec<Vec<usize>> = vec![Vec::new(); tl.epochs];
+    for (i, u) in units.iter_mut().enumerate() {
+        u.epoch = tl.epoch_of(u.start_s);
+        epoch_units[u.epoch].push(i);
+    }
+
+    // ---- Warm-state availability: per-epoch handoff, prefix-folded ----
+    // Earliest estimated end per identity, noted in the producing unit's
+    // epoch and min-merged across epochs 0..=e into epoch e's
+    // [`SharedWorld`]. A producer whose end is visible to a query started
+    // strictly earlier (estimates are positive), so it lives in an
+    // earlier-or-equal epoch and the prefix fold answers exactly like the
+    // old global map (see timeline.rs for the argument).
+    let mut handoffs: Vec<timeline::EpochHandoff> =
+        vec![timeline::EpochHandoff::default(); tl.epochs];
     for u in &units {
         let end = u.start_s + u.est_s;
         if u.kind == StartupKind::Full {
-            let e = img_avail.entry(u.digest).or_insert(f64::INFINITY);
-            *e = e.min(end);
+            handoffs[u.epoch].note_image(u.digest, end);
         }
-        let e = env_avail.entry(u.env_sig).or_insert(f64::INFINITY);
-        *e = e.min(end);
+        handoffs[u.epoch].note_env(u.env_sig, end);
     }
-    let mut shared = SharedWorld { images: HashMap::new(), envs: HashMap::new() };
-    for (digest, blocks, _) in img_idents.values() {
-        if let Some(&avail) = img_avail.get(digest) {
-            shared
-                .images
-                .insert(*digest, SharedImage { hot_blocks: blocks.clone(), available_s: avail });
-        }
+    let img_blocks: HashMap<u64, Arc<Vec<u32>>> =
+        img_idents.values().map(|(dg, b, _)| (*dg, Arc::clone(b))).collect();
+    // First job in trace order defines an env signature's cache bytes —
+    // same tie-break as the old single-world build.
+    let mut env_bytes_of: HashMap<u64, u64> = HashMap::new();
+    for j in 0..trace.len() {
+        env_bytes_of.entry(job_env_sig[j]).or_insert(jobs_cfg[j].env_cache_bytes);
     }
-    for (j, _) in trace.iter().enumerate() {
-        let sig = job_env_sig[j];
-        if let Some(&avail) = env_avail.get(&sig) {
-            shared
-                .envs
-                .entry(sig)
-                .or_insert(SharedEnv {
-                    cache_bytes: jobs_cfg[j].env_cache_bytes,
-                    available_s: avail,
-                });
-        }
-    }
+    let worlds: Vec<SharedWorld> =
+        timeline::fold_worlds(&handoffs, &img_blocks, &env_bytes_of);
 
     // ---- Per-unit effective services + fault-injected degradation ----
     // Brownout windows are generated once from the seed over the whole
-    // horizon; injected stragglers are keyed by (job, attempt). Both are
-    // computed here, before the parallel phase, so thread interleaving can
-    // never observe them differently.
-    let horizon = units.iter().map(|u| u.start_s + u.est_s).fold(0.0f64, f64::max);
+    // horizon; injected stragglers are keyed by (job, attempt). All of it
+    // is computed here, before the parallel phase, so thread interleaving
+    // can never observe it differently. Per-unit work amortizes per epoch:
+    // the contention-integral search skips breakpoints strictly before the
+    // epoch's earliest unit (bit-identical — see timeline.rs), and the
+    // `effective_cluster` / brownout lookups are memoized on exact-bit
+    // keys, so the round-grid's batches of identical (nodes, interval)
+    // units hit instead of recomputing.
     let brownouts = BrownoutWindows::generate(&opts.faults, seed, horizon);
-    for u in &mut units {
-        let avg_active = (int_at(u.start_s + u.est_s) - int_at(u.start_s)) / u.est_s.max(1e-9);
-        u.demand = avg_active.ceil().max(0.0) as u32;
-        u.eff_cluster = effective_cluster(cluster, nodes_of[u.job_idx], avg_active);
-        if !brownouts.is_empty() {
-            let f = brownouts.capacity_scale(u.start_s, u.start_s + u.est_s);
-            if f < 1.0 {
-                u.eff_cluster.registry_egress_bps *= f;
-                u.eff_cluster.cluster_cache_egress_bps *= f;
-                u.eff_cluster.hdfs_datanode_egress_bps *= f;
+    for idxs in &epoch_units {
+        if idxs.is_empty() {
+            continue;
+        }
+        let min_start =
+            idxs.iter().map(|&i| units[i].start_s).fold(f64::INFINITY, f64::min);
+        let lo = contention.lower_bound(min_start);
+        let mut eff_memo: HashMap<(u32, u64), ClusterConfig> = HashMap::new();
+        let mut brown_memo: HashMap<(u64, u64), f64> = HashMap::new();
+        for &i in idxs {
+            let u = &mut units[i];
+            let end = u.start_s + u.est_s;
+            let avg_active = (contention.integral_at_from(lo, end)
+                - contention.integral_at_from(lo, u.start_s))
+                / u.est_s.max(1e-9);
+            u.demand = avg_active.ceil().max(0.0) as u32;
+            let nodes = nodes_of[u.job_idx];
+            u.eff_cluster = eff_memo
+                .entry((nodes, avg_active.to_bits()))
+                .or_insert_with(|| effective_cluster(cluster, nodes, avg_active))
+                .clone();
+            if !brownouts.is_empty() {
+                let f = *brown_memo
+                    .entry((u.start_s.to_bits(), end.to_bits()))
+                    .or_insert_with(|| brownouts.capacity_scale(u.start_s, end));
+                if f < 1.0 {
+                    u.eff_cluster.registry_egress_bps *= f;
+                    u.eff_cluster.cluster_cache_egress_bps *= f;
+                    u.eff_cluster.hdfs_datanode_egress_bps *= f;
+                }
+            }
+            if u.kind == StartupKind::Full && fengine.straggler(trace[u.job_idx].id, u.attempt)
+            {
+                let tail = u.eff_cluster.straggler_tail_prob;
+                u.eff_cluster.straggler_tail_prob =
+                    (tail * opts.faults.straggler_severity).min(0.9);
             }
         }
-        if u.kind == StartupKind::Full && fengine.straggler(trace[u.job_idx].id, u.attempt) {
-            let tail = u.eff_cluster.straggler_tail_prob;
-            u.eff_cluster.straggler_tail_prob =
-                (tail * opts.faults.straggler_severity).min(0.9);
-        }
     }
+
+    // ---- Per-job warm-restart carry, hoisted out of the unit hot path ----
+    // The delta-shard bytes use the seed cluster: `effective_cluster`
+    // never changes `gpus_per_node`, the only cluster field the resume
+    // share depends on, so this is bit-identical to the old per-unit
+    // derivation from `eff_cluster`.
+    let carries: Vec<timeline::WarmCarry> = (0..trace.len())
+        .map(|j| timeline::WarmCarry {
+            hot_id: ArtifactManifest::image_hot_id(job_digest[j]),
+            hot_bytes: job_hot_bytes[j],
+            env_id: ArtifactManifest::env_snapshot_id(job_env_sig[j]),
+            env_bytes: jobs_cfg[j].env_cache_bytes,
+            delta: if cfg.delta_resume {
+                Some((
+                    ArtifactManifest::ckpt_shard_id(&jobs_cfg[j]),
+                    retained_resume_bytes_per_node(&jobs_cfg[j], cluster),
+                ))
+            } else {
+                None
+            },
+        })
+        .collect();
 
     // ---- Phase 2: replay every unit, in parallel across threads ----
     let n_threads = if opts.threads == 0 {
@@ -802,10 +872,11 @@ pub fn replay_cluster(
     };
     let blocks_of: HashMap<u64, &[u32]> =
         img_idents.values().map(|(d, b, _)| (*d, b.as_slice())).collect();
+    let bounded = cfg.cache_capacity_bytes != u64::MAX;
     let run_unit = |u: &Unit| -> StartupOutcome {
         let tj = &trace[u.job_idx];
         let job = &jobs_cfg[u.job_idx];
-        let mut world = shared.world_at(u.digest, u.env_sig, u.start_s);
+        let mut world = worlds[u.epoch].world_at(u.digest, u.env_sig, u.start_s);
         if u.warm_local {
             // Restart on its previous nodes: the job's own prior attempt
             // guarantees a record + cache regardless of cluster-level
@@ -829,51 +900,18 @@ pub fn replay_cluster(
         };
         // Warm restart on its previous nodes: the artifacts the failed
         // attempt materialized are still resident — expressed as cache
-        // state, not per-subsystem byte fields. With delta resume, the
-        // shard chunks not rewritten since the rollback point stay
-        // resident too. Under a bounded capacity the cache also carries
-        // the *churn* other tenants wrote to the node's disk since the
-        // previous attempt — inserted last, so the eviction policy must
-        // defend the warm artifacts against it. The unbounded default
-        // skips all of this and is byte-identical to the plain replay.
-        let bounded = cfg.cache_capacity_bytes != u64::MAX;
-        let mut cache = if bounded {
+        // state, not per-subsystem byte fields, seeded from the per-job
+        // [`timeline::WarmCarry`] (hot set → pin → env snapshot → delta
+        // shard → churn, the exact pre-sharding insert order and churn
+        // arithmetic). The unbounded default with a cold start skips all
+        // of this and is byte-identical to the plain replay.
+        let cache = if u.warm_local {
+            timeline::seed_warm_cache(cfg, &carries[u.job_idx], seed, tj.id, u.attempt)
+        } else if bounded {
             CacheState::with_capacity(cfg.cache_capacity_bytes, cfg.cache_policy)
         } else {
             CacheState::new()
         };
-        if u.warm_local {
-            let hot_id = ArtifactManifest::image_hot_id(u.digest);
-            cache.insert_shared_artifact(hot_id, job_hot_bytes[u.job_idx]);
-            if bounded && cfg.cache_policy.pins_hot_set() {
-                cache.pin_shared_artifact(hot_id);
-            }
-            cache.insert_shared_artifact(
-                ArtifactManifest::env_snapshot_id(u.env_sig),
-                job.env_cache_bytes,
-            );
-            if cfg.delta_resume {
-                cache.insert_shared_artifact(
-                    ArtifactManifest::ckpt_shard_id(job),
-                    retained_resume_bytes_per_node(job, &u.eff_cluster),
-                );
-            }
-            if bounded {
-                // Log-uniform churn in [min, min·2^doublings), a pure
-                // function of (seed, job, attempt).
-                let h = mix64(
-                    seed
-                        ^ SALT_CHURN
-                        ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                        ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A),
-                );
-                let uf = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
-                let churn =
-                    (d::CACHE_CHURN_MIN_BYTES as f64 * (d::CACHE_CHURN_DOUBLINGS * uf).exp2())
-                        as u64;
-                cache.insert_shared_artifact(mix64(h ^ SALT_CHURN), churn);
-            }
-        }
         let admission = Admission::from_faults(
             &opts.faults,
             u.demand,
@@ -896,10 +934,17 @@ pub fn replay_cluster(
             StartupContext { queue_s, alloc_s, cache, admission },
         )
     };
+    // Epoch-major issue order: workers drain epoch 0's units first, then
+    // epoch 1's, and so on. Epochs *pipeline* across threads — no barrier
+    // at the boundary (the handoff fold already ran), but consecutive
+    // pulls share an epoch's world and prep locality. Each unit is still
+    // an independent pure function, so the claim order never touches the
+    // bits.
+    let order: Vec<usize> = epoch_units.iter().flatten().copied().collect();
     let mut slots: Vec<Option<StartupOutcome>> = (0..units.len()).map(|_| None).collect();
     if n_threads <= 1 || units.len() <= 1 {
-        for (i, u) in units.iter().enumerate() {
-            slots[i] = Some(run_unit(u));
+        for &i in &order {
+            slots[i] = Some(run_unit(&units[i]));
         }
     } else {
         let next = AtomicUsize::new(0);
@@ -907,15 +952,17 @@ pub fn replay_cluster(
             let mut handles = Vec::with_capacity(n_threads);
             for _ in 0..n_threads {
                 let next = &next;
+                let order = &order;
                 let units = &units;
                 let run_unit = &run_unit;
                 handles.push(scope.spawn(move || {
                     let mut local = Vec::new();
                     loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= units.len() {
+                        let k = next.fetch_add(1, Ordering::Relaxed);
+                        if k >= order.len() {
                             break;
                         }
+                        let i = order[k];
                         local.push((i, run_unit(&units[i])));
                     }
                     local
@@ -1041,6 +1088,12 @@ pub fn replay(
 mod tests {
     use super::*;
     use crate::util::stats;
+
+    /// [`ReplayOptions`] with explicit pool/threads/faults and the default
+    /// (auto) epoch count.
+    fn opts(pool_gpus: Option<u32>, threads: usize, faults: FaultConfig) -> ReplayOptions {
+        ReplayOptions { pool_gpus, threads, faults, epochs: 0 }
+    }
 
     #[test]
     fn trace_marginals() {
@@ -1168,22 +1221,25 @@ mod tests {
     /// Golden-schedule determinism for the cluster replay: the full
     /// per-job `(worker_phase_s, total_s)` streams — the replay-level
     /// `(finished_at, tag)` capture — must be bit-identical across thread
-    /// counts for every overlap mode, with faults off *and* with the
-    /// `paper` preset on. This is the acceptance pin for the engine
-    /// refactor: any nondeterminism or cross-thread divergence the new
-    /// heap/free-list machinery could introduce lands here as a bit flip.
+    /// counts AND epoch counts for every overlap mode, with faults off,
+    /// the `paper` preset, and the shedding `storm` preset. The
+    /// `(threads: 1, epochs: 1)` baseline is structurally the pre-sharding
+    /// replay (one partition, original issue order, fully folded world),
+    /// so this also pins byte-identity to the pre-epoch engine; any
+    /// nondeterminism in the handoff fold, the per-epoch prep memos, or
+    /// the epoch-major claim order lands here as a bit flip.
     #[test]
     fn golden_week_replay_bit_identical_across_threads_modes_and_faults() {
         use crate::config::OverlapMode;
         let t = gen_trace(6, 30, 86400.0);
         let cluster = ClusterConfig::default();
-        let capture = |mode: OverlapMode, faults: FaultConfig, threads: usize| {
+        let capture = |mode: OverlapMode, faults: FaultConfig, threads: usize, epochs| {
             let r = replay_cluster(
                 &t,
                 &cluster,
                 &BootseerConfig { overlap: mode, ..BootseerConfig::bootseer() },
                 11,
-                &ReplayOptions { pool_gpus: None, threads, faults },
+                &ReplayOptions { pool_gpus: None, threads, faults, epochs },
             );
             let mut stream: Vec<u64> = vec![
                 r.startup_gpu_hours.to_bits(),
@@ -1199,14 +1255,18 @@ mod tests {
             stream
         };
         for mode in OverlapMode::ALL {
-            for faults in [FaultConfig::off(), FaultConfig::paper()] {
-                let one = capture(mode, faults.clone(), 1);
-                let many = capture(mode, faults.clone(), 4);
-                assert_eq!(
-                    one, many,
-                    "replay diverged across threads: mode={mode:?} hazard={}",
-                    faults.hazard_per_gpu_hour
-                );
+            for faults in [FaultConfig::off(), FaultConfig::paper(), hot_storm()] {
+                let baseline = capture(mode, faults.clone(), 1, 1);
+                // threads × epochs, including the auto-derived count (0).
+                for (threads, epochs) in [(4, 1), (1, 4), (8, 13), (4, 0)] {
+                    let other = capture(mode, faults.clone(), threads, epochs);
+                    assert_eq!(
+                        baseline, other,
+                        "replay diverged: mode={mode:?} hazard={} threads={threads} \
+                         epochs={epochs}",
+                        faults.hazard_per_gpu_hour
+                    );
+                }
             }
         }
     }
@@ -1245,6 +1305,65 @@ mod tests {
         for (_, dl) in evs {
             used += dl;
             assert!(used <= s.pool_gpus as i64, "pool over-allocated: {used}");
+        }
+    }
+
+    /// Phase 1 on a real seeded week (trace → chains → scheduler) must
+    /// match the preserved pre-rewrite round-grid scheduler bit-for-bit,
+    /// fault oracle off and on — the workload-level complement of the
+    /// synthetic equivalence suite in `scheduler::tests`.
+    #[test]
+    fn week_schedule_matches_reference_scheduler() {
+        use crate::scheduler::reference::schedule_chains_reference;
+        let t = gen_trace(1, 150, 7.0 * 86400.0);
+        let cluster = ClusterConfig::default();
+        let jobs_cfg: Vec<JobConfig> = t.iter().map(trace_job_config).collect();
+        let ests: Vec<f64> =
+            jobs_cfg.iter().map(|j| estimate_startup_s(j, &cluster)).collect();
+        let chains: Vec<ChainJob> = t
+            .iter()
+            .zip(&ests)
+            .map(|(tj, &est)| {
+                let slice = tj.train_hours * 3600.0 / tj.full_startups.max(1) as f64;
+                ChainJob {
+                    id: tj.id,
+                    submit_s: tj.submit_s,
+                    gpus: tj.gpus,
+                    priority: tj.priority,
+                    segments: vec![est + slice; tj.full_startups.max(1) as usize],
+                }
+            })
+            .collect();
+        let pool = pool_from_demand(&t, &ests);
+        let id_ests: Vec<(u64, f64)> =
+            t.iter().zip(&ests).map(|(tj, &e)| (tj.id, e)).collect();
+        for faults in [FaultConfig::off(), hot_faults()] {
+            let engine = FaultEngine::new(faults.clone(), 5, &id_ests);
+            let oracle: Option<&dyn FaultOracle> =
+                if faults.hazard_per_gpu_hour > 0.0 { Some(&engine) } else { None };
+            let new = schedule_chains_with(pool, &chains, d::SCHED_ROUND_S, oracle);
+            let old = schedule_chains_reference(pool, &chains, d::SCHED_ROUND_S, oracle);
+            assert_eq!(new.len(), old.len());
+            for (a, b) in new.iter().zip(&old) {
+                assert_eq!(a.segments.len(), b.segments.len(), "job {}", a.id);
+                for (x, y) in a.segments.iter().zip(&b.segments) {
+                    assert_eq!(x.start_s.to_bits(), y.start_s.to_bits(), "job {}", a.id);
+                    assert_eq!(x.end_s.to_bits(), y.end_s.to_bits(), "job {}", a.id);
+                    assert_eq!(
+                        x.queue_wait_s.to_bits(),
+                        y.queue_wait_s.to_bits(),
+                        "job {}",
+                        a.id
+                    );
+                    assert_eq!(x.interrupted, y.interrupted, "job {}", a.id);
+                    assert_eq!(
+                        x.lost_train_s.to_bits(),
+                        y.lost_train_s.to_bits(),
+                        "job {}",
+                        a.id
+                    );
+                }
+            }
         }
     }
 
@@ -1360,7 +1479,7 @@ mod tests {
             &cluster,
             &cfg,
             5,
-            &ReplayOptions { pool_gpus: None, threads: 2, faults: FaultConfig::off() },
+            &opts(None, 2, FaultConfig::off()),
         );
         assert_eq!(plain.startup_gpu_hours.to_bits(), off.startup_gpu_hours.to_bits());
         assert_eq!(plain.queue_waits, off.queue_waits);
@@ -1425,7 +1544,7 @@ mod tests {
                     &cluster,
                     &cfg,
                     7,
-                    &ReplayOptions { pool_gpus: None, threads, faults: hot_faults() },
+                    &opts(None, threads, hot_faults()),
                 )
             };
             let one = run(1);
@@ -1488,7 +1607,7 @@ mod tests {
                 &cluster,
                 &cfg,
                 11,
-                &ReplayOptions { pool_gpus: Some(256), threads: 1, faults },
+                &opts(Some(256), 1, faults),
             )
         };
         let warm = run(0.0);
@@ -1536,7 +1655,7 @@ mod tests {
                 &cluster,
                 &cfg,
                 11,
-                &ReplayOptions { pool_gpus: Some(256), threads: 1, faults },
+                &opts(Some(256), 1, faults),
             )
         };
         let warm = run(0.0);
@@ -1601,11 +1720,7 @@ mod tests {
                 &cluster,
                 &cfg,
                 11,
-                &ReplayOptions {
-                    pool_gpus: Some(256),
-                    threads: 1,
-                    faults: faults.clone(),
-                },
+                &opts(Some(256), 1, faults.clone()),
             )
         };
         let plain = run(false);
@@ -1712,17 +1827,19 @@ mod tests {
                 cache_policy: CachePolicy::Lru,
                 ..BootseerConfig::bootseer()
             };
-            let run = |threads: usize| {
+            let run = |threads: usize, epochs: usize| {
                 replay_cluster(
                     &t,
                     &cluster,
                     &cfg,
                     11,
-                    &ReplayOptions { pool_gpus: None, threads, faults: hot_storm() },
+                    &ReplayOptions { pool_gpus: None, threads, faults: hot_storm(), epochs },
                 )
             };
-            let one = run(1);
-            let four = run(4);
+            // Eviction/churn/shedding state crossed with epoch sharding:
+            // (1 thread, 1 epoch) is the pre-sharding baseline.
+            let one = run(1, 1);
+            let four = run(4, 13);
             assert!(one.fault_restarts > 0, "{mode:?}: storm fired");
             assert!(one.evicted_bytes > 0, "{mode:?}: churn evicted warm bytes");
             assert!(one.shed_checks > 0, "{mode:?}: finite slots governed fetches");
@@ -1747,7 +1864,7 @@ mod tests {
                 assert_eq!(a.startup_fetched_bytes, b.startup_fetched_bytes, "{mode:?}");
             }
             // And reruns with the same seed reproduce the same bits.
-            let again = run(4);
+            let again = run(4, 13);
             assert_eq!(
                 again.wasted_gpu_hours().to_bits(),
                 four.wasted_gpu_hours().to_bits(),
@@ -1776,7 +1893,7 @@ mod tests {
                 &cluster,
                 &cfg,
                 11,
-                &ReplayOptions { pool_gpus: None, threads: 2, faults: hot_storm() },
+                &opts(None, 2, hot_storm()),
             )
         };
         let default = run(u64::MAX, CachePolicy::Lru);
@@ -1854,7 +1971,7 @@ mod tests {
                 &cluster,
                 &cfg,
                 11,
-                &ReplayOptions { pool_gpus: Some(256), threads: 1, faults },
+                &opts(Some(256), 1, faults),
             )
         };
         let cap = img.hot_bytes() + job.env_cache_bytes;

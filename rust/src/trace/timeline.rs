@@ -1,0 +1,386 @@
+//! Epoch-sharded replay timeline: time partitioning, cross-epoch handoff,
+//! contention-integral subranges, and warm-cache carry for
+//! [`super::replay_cluster`]'s phase 1.5/2.
+//!
+//! The unit list is partitioned into `E` equal-width time epochs by start
+//! time. Everything a unit observes from *other* units — shared image /
+//! env availability ([`super::SharedWorld`]) and the fleet contention
+//! integral — is folded per epoch and merged at epoch boundaries by pure,
+//! order-independent min-folds, so the partitioned replay is byte-identical
+//! to the unpartitioned one at any epoch count:
+//!
+//! * **Availability** ([`EpochHandoff`]): an identity's availability is the
+//!   min estimated end over the startups producing it. A contributor with
+//!   `end ≤ t` necessarily *started* before `t` (estimates are positive),
+//!   and epoch assignment is monotone in start time — so the prefix fold of
+//!   epochs `0..=e` answers every query from epoch `e` exactly as the
+//!   global map would. Min-merge is commutative, associative and
+//!   idempotent, so the fold is order-independent.
+//! * **Contention** ([`ContentionTimeline`]): the step-function integral is
+//!   queried only at `t ≥` the querying unit's start, so each epoch's
+//!   queries can skip the strictly-earlier prefix of the breakpoint array.
+//!   The skip is anchored on the epoch's *actual* minimum unit start (not
+//!   the nominal boundary), which makes it exact under any floating-point
+//!   quirk of the epoch division.
+//! * **Warm carry** ([`WarmCarry`] / [`seed_warm_cache`]): the per-job
+//!   constants a warm restart seeds its bounded [`CacheState`] from,
+//!   hoisted out of the per-unit hot path. Insert order (hot set → pin →
+//!   env snapshot → delta shard → churn) and the churn arithmetic are
+//!   preserved exactly — the eviction-order goldens in `super::tests` pin
+//!   them.
+
+use crate::artifact::cache::CacheState;
+use crate::config::defaults as d;
+use crate::config::BootseerConfig;
+use crate::util::rng::mix64;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::{SharedEnv, SharedImage, SharedWorld};
+
+/// Equal-width partition of `[0, horizon]` into `epochs` time slices.
+pub(crate) struct EpochTimeline {
+    pub epochs: usize,
+    width_s: f64,
+}
+
+impl EpochTimeline {
+    pub fn new(horizon_s: f64, epochs: usize) -> EpochTimeline {
+        let epochs = epochs.max(1);
+        EpochTimeline {
+            epochs,
+            width_s: (horizon_s / epochs as f64).max(f64::MIN_POSITIVE),
+        }
+    }
+
+    /// Epoch index of a start time — monotone in `start_s` (this is what
+    /// the handoff-prefix argument above relies on), clamped into range so
+    /// schedule overrun past the nominal horizon stays total.
+    pub fn epoch_of(&self, start_s: f64) -> usize {
+        (((start_s / self.width_s).floor()) as usize).min(self.epochs - 1)
+    }
+}
+
+/// One epoch's contribution to shared warm-state availability: earliest
+/// estimated end per image digest / env signature among the epoch's units.
+///
+/// [`EpochHandoff::absorb`] is a min-merge — commutative, associative,
+/// idempotent — so folding contributions in any order (or more than once)
+/// yields the same map; the replay folds them as a prefix over epochs.
+#[derive(Default, Clone)]
+pub(crate) struct EpochHandoff {
+    img_avail: HashMap<u64, f64>,
+    env_avail: HashMap<u64, f64>,
+}
+
+impl EpochHandoff {
+    /// Record a full startup of image `digest` estimated to end at `end_s`.
+    pub fn note_image(&mut self, digest: u64, end_s: f64) {
+        let e = self.img_avail.entry(digest).or_insert(f64::INFINITY);
+        *e = e.min(end_s);
+    }
+
+    /// Record a startup of env signature `sig` estimated to end at `end_s`.
+    pub fn note_env(&mut self, sig: u64, end_s: f64) {
+        let e = self.env_avail.entry(sig).or_insert(f64::INFINITY);
+        *e = e.min(end_s);
+    }
+
+    /// Min-merge another epoch's contribution into this one.
+    pub fn absorb(&mut self, other: &EpochHandoff) {
+        for (&k, &v) in &other.img_avail {
+            let e = self.img_avail.entry(k).or_insert(f64::INFINITY);
+            *e = e.min(v);
+        }
+        for (&k, &v) in &other.env_avail {
+            let e = self.env_avail.entry(k).or_insert(f64::INFINITY);
+            *e = e.min(v);
+        }
+    }
+}
+
+/// Fold per-epoch handoffs into one [`SharedWorld`] per epoch: epoch `e`'s
+/// world is the merge of contributions from epochs `0..=e`. Hot-block lists
+/// are shared by [`Arc`], so `E` worlds cost `E` map clones, not `E` copies
+/// of every image's block list.
+pub(crate) fn fold_worlds(
+    handoffs: &[EpochHandoff],
+    img_blocks: &HashMap<u64, Arc<Vec<u32>>>,
+    env_bytes: &HashMap<u64, u64>,
+) -> Vec<SharedWorld> {
+    let mut acc = EpochHandoff::default();
+    handoffs
+        .iter()
+        .map(|h| {
+            acc.absorb(h);
+            let images = acc
+                .img_avail
+                .iter()
+                .filter_map(|(&digest, &avail)| {
+                    img_blocks.get(&digest).map(|blocks| {
+                        let img =
+                            SharedImage { hot_blocks: Arc::clone(blocks), available_s: avail };
+                        (digest, img)
+                    })
+                })
+                .collect();
+            let envs = acc
+                .env_avail
+                .iter()
+                .filter_map(|(&sig, &avail)| {
+                    env_bytes
+                        .get(&sig)
+                        .map(|&cb| (sig, SharedEnv { cache_bytes: cb, available_s: avail }))
+                })
+                .collect();
+            SharedWorld { images, envs }
+        })
+        .collect()
+}
+
+/// The fleet contention step function `A(t)` (concurrently-starting nodes)
+/// as breakpoint arrays with a prefix integral, supporting exact subrange
+/// queries so per-epoch scans skip the strictly-earlier breakpoints.
+pub(crate) struct ContentionTimeline {
+    times: Vec<f64>,
+    level: Vec<f64>,
+    pref: Vec<f64>,
+}
+
+impl ContentionTimeline {
+    /// Build from `(time, node-delta)` events. Sorting and the prefix
+    /// accumulation reproduce the pre-sharding sweep exactly (stable sort,
+    /// same accumulation order).
+    pub fn build(mut pts: Vec<(f64, f64)>) -> ContentionTimeline {
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut times: Vec<f64> = Vec::with_capacity(pts.len());
+        let mut level: Vec<f64> = Vec::with_capacity(pts.len());
+        let mut pref: Vec<f64> = Vec::with_capacity(pts.len());
+        let mut cur = 0.0f64;
+        let mut acc = 0.0f64;
+        for &(t, dl) in &pts {
+            if let Some(&lt) = times.last() {
+                acc += cur * (t - lt);
+            }
+            times.push(t);
+            pref.push(acc);
+            cur += dl;
+            level.push(cur);
+        }
+        ContentionTimeline { times, level, pref }
+    }
+
+    /// Index of the first breakpoint `≥ t_lo`: every query at `x ≥ t_lo`
+    /// may start its search here instead of at 0.
+    pub fn lower_bound(&self, t_lo: f64) -> usize {
+        self.times.partition_point(|&t| t < t_lo)
+    }
+
+    /// `∫₀ˣ A(t) dt`, searching only breakpoints `≥ lo` (from
+    /// [`Self::lower_bound`]). Bit-identical to the full-range query for
+    /// every `x` at or above the bound's time: the skipped prefix is
+    /// strictly below it, so the located interval — and hence the float
+    /// arithmetic — is the same.
+    pub fn integral_at_from(&self, lo: usize, x: f64) -> f64 {
+        debug_assert!(lo == 0 || self.times[lo - 1] <= x, "query below subrange anchor");
+        let i = lo + self.times[lo..].partition_point(|&t| t <= x);
+        if i == 0 {
+            0.0
+        } else {
+            self.pref[i - 1] + self.level[i - 1] * (x - self.times[i - 1])
+        }
+    }
+
+    /// Full-range `∫₀ˣ A(t) dt`.
+    #[cfg(test)]
+    pub fn integral_at(&self, x: f64) -> f64 {
+        self.integral_at_from(0, x)
+    }
+}
+
+/// Per-job constants a warm local restart seeds its node cache from,
+/// computed once per job instead of once per unit. The delta-shard bytes
+/// (`retained_resume_bytes_per_node`) depend only on the job's parallelism
+/// and the cluster's `gpus_per_node` — which `effective_cluster` never
+/// changes — so hoisting them from the per-unit effective cluster to the
+/// per-job seed cluster is bit-identical.
+pub(crate) struct WarmCarry {
+    /// Image hot-set artifact: (manifest id, bytes).
+    pub hot_id: u64,
+    pub hot_bytes: u64,
+    /// Env snapshot artifact: (manifest id, bytes).
+    pub env_id: u64,
+    pub env_bytes: u64,
+    /// Retained checkpoint shard `(manifest id, bytes)`; `None` when delta
+    /// resume is off.
+    pub delta: Option<(u64, u64)>,
+}
+
+/// Build the [`CacheState`] a warm local restart starts from. Preserves the
+/// pre-sharding insert order exactly — hot set, optional pin, env snapshot,
+/// optional delta shard, then (bounded only) the log-uniform churn other
+/// tenants wrote to the node's disk, inserted *last* so the eviction policy
+/// must defend the warm artifacts against it.
+pub(crate) fn seed_warm_cache(
+    cfg: &BootseerConfig,
+    carry: &WarmCarry,
+    seed: u64,
+    job_id: u64,
+    attempt: u32,
+) -> CacheState {
+    let bounded = cfg.cache_capacity_bytes != u64::MAX;
+    let mut cache = if bounded {
+        CacheState::with_capacity(cfg.cache_capacity_bytes, cfg.cache_policy)
+    } else {
+        CacheState::new()
+    };
+    cache.insert_shared_artifact(carry.hot_id, carry.hot_bytes);
+    if bounded && cfg.cache_policy.pins_hot_set() {
+        cache.pin_shared_artifact(carry.hot_id);
+    }
+    cache.insert_shared_artifact(carry.env_id, carry.env_bytes);
+    if let Some((id, bytes)) = carry.delta {
+        cache.insert_shared_artifact(id, bytes);
+    }
+    if bounded {
+        // Log-uniform churn in [min, min·2^doublings), a pure function of
+        // (seed, job, attempt).
+        let h = mix64(
+            seed ^ super::SALT_CHURN
+                ^ job_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A),
+        );
+        let uf = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let churn =
+            (d::CACHE_CHURN_MIN_BYTES as f64 * (d::CACHE_CHURN_DOUBLINGS * uf).exp2()) as u64;
+        cache.insert_shared_artifact(mix64(h ^ super::SALT_CHURN), churn);
+    }
+    cache
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CachePolicy;
+
+    #[test]
+    fn epoch_of_is_monotone_and_clamped() {
+        let tl = EpochTimeline::new(10.0, 5);
+        assert_eq!(tl.epoch_of(0.0), 0);
+        assert_eq!(tl.epoch_of(1.999), 0);
+        assert_eq!(tl.epoch_of(2.0), 1);
+        assert_eq!(tl.epoch_of(9.999), 4);
+        // Clamped: the nominal horizon boundary and schedule overrun land
+        // in the last epoch instead of indexing out of range.
+        assert_eq!(tl.epoch_of(10.0), 4);
+        assert_eq!(tl.epoch_of(1.0e9), 4);
+        // Monotone in start time (the handoff-prefix invariant).
+        let mut last = 0;
+        for i in 0..1000 {
+            let e = tl.epoch_of(i as f64 * 0.0123);
+            assert!(e >= last, "epoch_of not monotone at {i}");
+            last = e;
+        }
+        // Degenerate inputs stay total.
+        assert_eq!(EpochTimeline::new(0.0, 4).epoch_of(0.0), 0);
+        assert_eq!(EpochTimeline::new(100.0, 0).epochs, 1);
+    }
+
+    #[test]
+    fn handoff_fold_is_order_independent() {
+        let mut a = EpochHandoff::default();
+        a.note_image(1, 50.0);
+        a.note_image(2, 70.0);
+        a.note_env(9, 40.0);
+        let mut b = EpochHandoff::default();
+        b.note_image(1, 30.0);
+        b.note_env(9, 90.0);
+        b.note_env(8, 15.0);
+        let mut c = EpochHandoff::default();
+        c.note_image(2, 65.0);
+        c.note_image(3, 5.0);
+
+        let fold = |order: &[&EpochHandoff]| {
+            let mut acc = EpochHandoff::default();
+            for h in order {
+                acc.absorb(h);
+            }
+            let mut img: Vec<(u64, u64)> =
+                acc.img_avail.iter().map(|(&k, &v)| (k, v.to_bits())).collect();
+            let mut env: Vec<(u64, u64)> =
+                acc.env_avail.iter().map(|(&k, &v)| (k, v.to_bits())).collect();
+            img.sort_unstable();
+            env.sort_unstable();
+            (img, env)
+        };
+        let abc = fold(&[&a, &b, &c]);
+        assert_eq!(abc, fold(&[&c, &b, &a]), "commutative");
+        assert_eq!(abc, fold(&[&b, &a, &c]));
+        assert_eq!(abc, fold(&[&a, &a, &b, &c, &b]), "idempotent");
+        assert_eq!(abc.0.iter().find(|&&(k, _)| k == 1).unwrap().1, 30.0f64.to_bits());
+        assert_eq!(abc.1.iter().find(|&&(k, _)| k == 9).unwrap().1, 40.0f64.to_bits());
+    }
+
+    #[test]
+    fn subrange_integral_matches_full_scan_bitwise() {
+        // Irregular steps, including duplicate breakpoint times.
+        let mut pts = Vec::new();
+        for i in 0..200u64 {
+            let t = (mix64(i) % 10_000) as f64 * 0.37;
+            let n = (1 + mix64(i ^ 0xABCD) % 64) as f64;
+            pts.push((t, n));
+            pts.push((t + 150.0 + (i % 7) as f64 * 33.3, -n));
+        }
+        let tl = ContentionTimeline::build(pts);
+        // For several anchors, every query at or above the anchor must be
+        // bit-identical through the subrange search.
+        for &t0 in &[0.0, 11.1, 370.0, 1234.5, 3600.0, 9999.0] {
+            let lo = tl.lower_bound(t0);
+            for k in 0..50 {
+                let x = t0 + k as f64 * 77.7;
+                assert_eq!(
+                    tl.integral_at_from(lo, x).to_bits(),
+                    tl.integral_at(x).to_bits(),
+                    "t0={t0} x={x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_seed_insert_order_feeds_churn_last() {
+        let carry = WarmCarry {
+            hot_id: 0xAA,
+            hot_bytes: 600_000_000,
+            env_id: 0xBB,
+            env_bytes: 250_000_000,
+            delta: None,
+        };
+        // Capacity exactly hot + env with the pinning policy: churn (≥1 GB,
+        // inserted last) must evict exactly the env snapshot — the pinned
+        // hot set survives. This pins the insert order; the trace goldens
+        // pin the downstream bytes.
+        let cfg = BootseerConfig {
+            cache_capacity_bytes: carry.hot_bytes + carry.env_bytes,
+            cache_policy: CachePolicy::PinHotSet,
+            ..BootseerConfig::bootseer()
+        };
+        let cache = seed_warm_cache(&cfg, &carry, 7, 1, 1);
+        assert_eq!(cache.evicted_bytes(), carry.env_bytes);
+        // A capacity that never fills evicts nothing, and the same
+        // (seed, job, attempt) reproduces the same cache bit-for-bit.
+        let huge = BootseerConfig {
+            cache_capacity_bytes: 1 << 60,
+            ..cfg.clone()
+        };
+        let a = seed_warm_cache(&huge, &carry, 7, 1, 1);
+        let b = seed_warm_cache(&huge, &carry, 7, 1, 1);
+        assert_eq!(a.evicted_bytes(), 0);
+        assert_eq!(a.used_bytes(0), b.used_bytes(0));
+        // The unbounded default carries no churn at all.
+        let unbounded =
+            BootseerConfig { cache_capacity_bytes: u64::MAX, ..BootseerConfig::bootseer() };
+        let u = seed_warm_cache(&unbounded, &carry, 7, 1, 1);
+        assert_eq!(u.used_bytes(0), carry.hot_bytes + carry.env_bytes);
+    }
+}
