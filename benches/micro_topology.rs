@@ -1,0 +1,60 @@
+//! Placement-fragmentation sweep: the warm 128-GPU startup re-run with its
+//! 16 nodes spread over 1, 2, 4, 8, and 16 racks of a 16-rack / 4-spine
+//! tree whose spine core is oversubscribed 10x against the node NICs (rack
+//! uplinks stay inert so only the cross-rack share of the swarm traffic
+//! binds). Emits `BENCH_topology.json` so the fragmentation tax — startup
+//! time vs gang spread — is tracked across PRs (CI diffs it against
+//! `benches/baselines/`).
+//!
+//! Headline: warm startup time strictly increases with the number of racks
+//! the gang spans, because each extra rack converts in-rack swarm peers
+//! into cross-spine peers that share the oversubscribed core tier.
+//!
+//!     cargo bench --bench micro_topology
+//!     BOOTSEER_BENCH_FAST=1 cargo bench --bench micro_topology
+
+use bootseer::figures;
+use bootseer::util::bench::{figure_header, Bench};
+
+/// Seed shared with the `fragmentation_sweep_strictly_increases_and_reproduces`
+/// unit test and the `figures` subcommand, so all three emit the same curve.
+const SWEEP_SEED: u64 = 7;
+
+fn main() {
+    figure_header(
+        "topology: fragmentation tax at 128 GPUs",
+        "warm startup strictly slows as the gang spreads across racks",
+    );
+    let mut b = Bench::new("micro_topology");
+    let mut out = None;
+    b.once(
+        &format!("128-GPU warm startup x {} spreads", figures::FRAG_SWEEP_RACKS.len()),
+        || {
+            out = Some(figures::fragmentation_sweep(SWEEP_SEED));
+        },
+    );
+    let sweep = out.unwrap();
+    println!("\n{}", sweep.render());
+    let path = "BENCH_topology.json";
+    match std::fs::write(path, sweep.to_json().to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("write {path}: {e}"),
+    }
+    // Machine-checkable acceptance invariants.
+    assert_eq!(sweep.points.len(), figures::FRAG_SWEEP_RACKS.len());
+    let first = &sweep.points[0];
+    let last = &sweep.points[sweep.points.len() - 1];
+    assert_eq!(first.cross_frac, 0.0, "one rack means zero cross-spine peers");
+    assert_eq!(last.cross_frac, 1.0, "16 racks means every peer is cross-spine");
+    for w in sweep.points.windows(2) {
+        assert!(
+            w[1].worker_s > w[0].worker_s && w[1].total_s > w[0].total_s,
+            "fragmentation tax must be strictly increasing: {} racks {:.3}s vs {} racks {:.3}s",
+            w[0].racks_spanned,
+            w[0].total_s,
+            w[1].racks_spanned,
+            w[1].total_s
+        );
+    }
+    b.finish();
+}

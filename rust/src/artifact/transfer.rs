@@ -23,6 +23,20 @@
 //! [`crate::artifact::cache::CacheState`] are subtracted before `fetch` is
 //! ever called, and never cross the network again.
 //!
+//! # Topology awareness
+//!
+//! On a non-flat cluster (`ClusterConfig::racks > 1`) every service-backed
+//! fetch additionally traverses the node's tree tiers
+//! ([`ClusterSim::tier_path`]: spine core + rack uplink — the services live
+//! outside the racks), and the swarm tiers split each fetch by peer
+//! locality: the in-rack share of the bytes stays under the ToR while the
+//! cross-rack share (the fraction of the allocation's peers in *other*
+//! racks, [`crate::sim::Topology::in_rack_peers`]) crosses the
+//! oversubscribed tiers. A fragmented placement therefore pushes strictly
+//! more swarm bytes through the spine — the monotonicity
+//! `figures::fragmentation_sweep` measures. The flat default adds no path
+//! elements and lays down the exact pre-topology task DAG.
+//!
 //! # Load-shedding & retry backoff
 //!
 //! The registry and the cluster cache are *shared* services: a restart
@@ -44,7 +58,7 @@
 use crate::faults::FaultConfig;
 use crate::hdfs::fuse::{plan_read, ReadEngine};
 use crate::image::p2p::Swarm;
-use crate::sim::{ClusterSim, TaskId};
+use crate::sim::{ClusterSim, NodeHandle, TaskId};
 use crate::util::rng::mix64;
 
 /// Domain-separation salts for admission decisions (fresh `0xA272` domain;
@@ -251,7 +265,8 @@ impl TransferPlanner {
     /// Bind `tier` to the sim. Swarm tiers register a *scoped* pool named
     /// `name` that retires after exactly `uses` fetches (`n_peers` sizes
     /// its steady-state capacity); every other tier ignores the three
-    /// parameters.
+    /// parameters. On a non-flat topology each swarm fetch splits into an
+    /// in-rack and a cross-rack flow, so the pool's use budget doubles.
     pub fn build(
         cs: &mut ClusterSim,
         name: &str,
@@ -259,6 +274,7 @@ impl TransferPlanner {
         n_peers: u32,
         uses: u32,
     ) -> TransferPlanner {
+        let pool_uses = if cs.topo.is_flat() { uses } else { uses * 2 };
         let swarm = match tier {
             ProviderTier::RegistrySwarm => Some(Swarm::build_scoped(
                 &mut cs.sim,
@@ -266,7 +282,7 @@ impl TransferPlanner {
                 cs.cfg.registry_egress_bps,
                 n_peers,
                 cs.cfg.node_nic_bps,
-                uses,
+                pool_uses,
             )),
             ProviderTier::CacheSwarm => Some(Swarm::build_scoped(
                 &mut cs.sim,
@@ -274,7 +290,7 @@ impl TransferPlanner {
                 cs.cfg.cluster_cache_egress_bps,
                 n_peers,
                 cs.cfg.node_nic_bps,
-                uses,
+                pool_uses,
             )),
             _ => None,
         };
@@ -298,10 +314,10 @@ impl TransferPlanner {
     /// Consecutive shed attempts `node`'s fetch rides out before being
     /// admitted (0 without admission control — and then no extra task is
     /// ever laid down).
-    pub fn shed_attempts(&self, node: usize) -> u32 {
+    pub fn shed_attempts(&self, node: NodeHandle) -> u32 {
         self.admission
             .as_ref()
-            .map_or(0, |a| a.shed_attempts(self.tier, self.artifact, node))
+            .map_or(0, |a| a.shed_attempts(self.tier, self.artifact, node.index()))
     }
 
     /// Move `bytes` onto `node` after `deps`; returns the completion task.
@@ -310,18 +326,19 @@ impl TransferPlanner {
     pub fn fetch(
         &self,
         cs: &mut ClusterSim,
-        node: usize,
+        node: NodeHandle,
         bytes: f64,
         deps: &[TaskId],
         tag: u64,
     ) -> TaskId {
+        let i = node.index();
         // Shed attempts surface as one backoff delay gating the single
         // real fetch: the bytes move exactly once, just later. No shed →
         // no extra task → byte-identical DAG.
         let gated;
         let deps = match &self.admission {
             Some(adm) => {
-                let d = adm.delay_before(self.tier, self.artifact, node);
+                let d = adm.delay_before(self.tier, self.artifact, i);
                 if d > 0.0 {
                     gated = vec![cs.sim.delay(d, deps, 0)];
                     &gated[..]
@@ -333,21 +350,48 @@ impl TransferPlanner {
         };
         match (self.tier, &self.swarm) {
             (ProviderTier::RegistrySwarm | ProviderTier::CacheSwarm, Some(sw)) => {
-                sw.download(&mut cs.sim, bytes, cs.node_nic[node], deps, tag)
+                if cs.topo.is_flat() {
+                    return sw.download(&mut cs.sim, bytes, cs.node_nic[i], deps, tag);
+                }
+                // Split by peer locality: the in-rack share stays under
+                // the ToR, the cross-rack share crosses the tree tiers.
+                // Both flows are always laid down (a zero-byte flow
+                // completes instantly) so the scoped pool's doubled use
+                // budget is consumed exactly.
+                let peers = cs.nodes().saturating_sub(1);
+                let cross_frac = if peers == 0 {
+                    0.0
+                } else {
+                    (peers - cs.topo.in_rack_peers(node)) as f64 / peers as f64
+                };
+                let local = sw.download(
+                    &mut cs.sim,
+                    bytes * (1.0 - cross_frac),
+                    cs.node_nic[i],
+                    deps,
+                    tag,
+                );
+                let mut cross_path = vec![sw.pool, cs.node_nic[i]];
+                cross_path.extend(cs.tier_path(node));
+                let cross = cs.sim.flow(bytes * cross_frac, cross_path, deps, tag);
+                cs.sim.barrier(&[local, cross], tag)
             }
             (ProviderTier::RegistrySwarm | ProviderTier::CacheSwarm, None) => {
                 unreachable!("swarm tiers always carry a pool")
             }
             (ProviderTier::ClusterCache, _) => {
-                let path = vec![cs.cache, cs.node_nic[node]];
+                let mut path = vec![cs.cache, cs.node_nic[i]];
+                path.extend(cs.tier_path(node));
                 cs.sim.flow(bytes, path, deps, tag)
             }
             (ProviderTier::Registry, _) => {
-                let path = vec![cs.registry, cs.node_nic[node], cs.node_disk[node]];
+                let mut path = vec![cs.registry, cs.node_nic[i], cs.node_disk[i]];
+                path.extend(cs.tier_path(node));
                 cs.sim.flow(bytes, path, deps, tag)
             }
             (ProviderTier::Scm, _) => {
-                let path = vec![cs.scm, cs.node_nic[node]];
+                let mut path = vec![cs.scm, cs.node_nic[i]];
+                path.extend(cs.tier_path(node));
                 cs.sim.flow(bytes, path, deps, tag)
             }
             (ProviderTier::Hdfs { nn_op }, _) => {
@@ -357,7 +401,9 @@ impl TransferPlanner {
                 } else {
                     deps.to_vec()
                 };
-                cs.sim.flow(bytes, vec![group, cs.node_nic[node]], &gate, tag)
+                let mut path = vec![group, cs.node_nic[i]];
+                path.extend(cs.tier_path(node));
+                cs.sim.flow(bytes, path, &gate, tag)
             }
             (ProviderTier::HdfsStream(_), _) => {
                 panic!("HdfsStream reads whole-byte shards; use fetch_u64")
@@ -370,13 +416,15 @@ impl TransferPlanner {
     pub fn fetch_u64(
         &self,
         cs: &mut ClusterSim,
-        node: usize,
+        node: NodeHandle,
         bytes: u64,
         deps: &[TaskId],
         tag: u64,
     ) -> TaskId {
         match self.tier {
-            ProviderTier::HdfsStream(engine) => plan_read(cs, node, bytes, engine, deps, tag),
+            ProviderTier::HdfsStream(engine) => {
+                plan_read(cs, node.index(), bytes, engine, deps, tag)
+            }
             _ => self.fetch(cs, node, bytes as f64, deps, tag),
         }
     }
@@ -392,13 +440,17 @@ mod tests {
         ClusterSim::build(&ClusterConfig::with_nodes(nodes), 42)
     }
 
+    fn n0() -> NodeHandle {
+        NodeHandle::new(0)
+    }
+
     #[test]
     fn cache_tier_matches_direct_flow() {
         // The planner's flow must be indistinguishable from the bespoke
         // path the loaders used to build.
         let mut a = sim(1);
         let p = TransferPlanner::build(&mut a, "x", ProviderTier::ClusterCache, 0, 0);
-        let t = p.fetch(&mut a, 0, 1_000_000_000.0, &[], 1);
+        let t = p.fetch(&mut a, n0(), 1_000_000_000.0, &[], 1);
         a.sim.run();
         let mut b = sim(1);
         let path = vec![b.cache, b.node_nic[0]];
@@ -414,7 +466,7 @@ mod tests {
         let p = TransferPlanner::build(&mut cs, "t.swarm", ProviderTier::CacheSwarm, 4, 4);
         assert_eq!(cs.sim.resource_slots(), before + 1);
         for i in 0..4 {
-            p.fetch(&mut cs, i, 1000.0, &[], 0);
+            p.fetch(&mut cs, NodeHandle::new(i), 1000.0, &[], 0);
         }
         cs.sim.run();
         // Scoped: the pool slot recycles after its declared uses.
@@ -426,12 +478,12 @@ mod tests {
     fn hdfs_tier_charges_nn_op_only_when_asked() {
         let mut a = sim(1);
         let with_nn = TransferPlanner::build(&mut a, "x", ProviderTier::Hdfs { nn_op: true }, 0, 0);
-        let t = with_nn.fetch(&mut a, 0, 0.0, &[], 1);
+        let t = with_nn.fetch(&mut a, n0(), 0.0, &[], 1);
         a.sim.run();
         let mut b = sim(1);
         let without =
             TransferPlanner::build(&mut b, "x", ProviderTier::Hdfs { nn_op: false }, 0, 0);
-        let t2 = without.fetch(&mut b, 0, 0.0, &[], 1);
+        let t2 = without.fetch(&mut b, n0(), 0.0, &[], 1);
         b.sim.run();
         assert!(a.sim.finished_at(t) > b.sim.finished_at(t2));
         assert_eq!(b.sim.finished_at(t2), 0.0);
@@ -447,7 +499,7 @@ mod tests {
             0,
             0,
         );
-        let t = p.fetch_u64(&mut a, 0, 2_000_000, &[], 1);
+        let t = p.fetch_u64(&mut a, n0(), 2_000_000, &[], 1);
         a.sim.run();
         let mut b = sim(1);
         let t2 = plan_read(&mut b, 0, 2_000_000, ReadEngine::Striped, &[], 1);
@@ -461,13 +513,57 @@ mod tests {
         // disk leg and the smaller registry egress both bind.
         let mut a = sim(1);
         let reg = TransferPlanner::build(&mut a, "x", ProviderTier::Registry, 0, 0);
-        let t = reg.fetch(&mut a, 0, 50e9, &[], 1);
+        let t = reg.fetch(&mut a, n0(), 50e9, &[], 1);
         a.sim.run();
         let mut b = sim(1);
         let cache = TransferPlanner::build(&mut b, "x", ProviderTier::ClusterCache, 0, 0);
-        let t2 = cache.fetch(&mut b, 0, 50e9, &[], 1);
+        let t2 = cache.fetch(&mut b, n0(), 50e9, &[], 1);
         b.sim.run();
         assert!(a.sim.finished_at(t) >= b.sim.finished_at(t2));
+    }
+
+    #[test]
+    fn fragmented_swarm_pays_the_spine_core() {
+        // Same swarm fetch, same bytes: a fully in-rack placement never
+        // touches the tight spine core, a one-node-per-rack placement
+        // sends every byte through it.
+        let cfg = ClusterConfig {
+            racks: 4,
+            spines: 2,
+            spine_core_bps: crate::config::defaults::NODE_NIC_BPS / 10.0,
+            ..ClusterConfig::with_nodes(4)
+        };
+        let run = |placement: &[u32]| {
+            let mut cs = ClusterSim::build_placed(&cfg, 42, Some(placement));
+            let p = TransferPlanner::build(&mut cs, "x", ProviderTier::CacheSwarm, 3, 1);
+            let t = p.fetch(&mut cs, n0(), 1e9, &[], 1);
+            cs.sim.run();
+            cs.sim.finished_at(t)
+        };
+        let packed = run(&[0, 0, 0, 0]);
+        let fragmented = run(&[0, 1, 2, 3]);
+        assert!(
+            fragmented > packed,
+            "cross-rack swarm bytes must bind on the core: {fragmented} vs {packed}"
+        );
+    }
+
+    #[test]
+    fn generous_tree_matches_flat_service_time() {
+        // With auto-sized (non-blocking) uplinks and a 1.0 oversub core,
+        // a single service fetch sees the same bottleneck as the flat
+        // star — the tree changes the path, not the rate.
+        let flat_cfg = ClusterConfig::with_nodes(4);
+        let mut flat = sim(4);
+        let p = TransferPlanner::build(&mut flat, "x", ProviderTier::ClusterCache, 0, 0);
+        let t = p.fetch(&mut flat, n0(), 1e9, &[], 1);
+        flat.sim.run();
+        let tree_cfg = ClusterConfig { racks: 2, spines: 2, ..flat_cfg };
+        let mut tree = ClusterSim::build(&tree_cfg, 42);
+        let q = TransferPlanner::build(&mut tree, "x", ProviderTier::ClusterCache, 0, 0);
+        let t2 = q.fetch(&mut tree, n0(), 1e9, &[], 1);
+        tree.sim.run();
+        assert_eq!(flat.sim.finished_at(t), tree.sim.finished_at(t2));
     }
 
     // ---- admission control (load shedding & retry backoff) -------------
@@ -504,12 +600,12 @@ mod tests {
         let mut a = sim(1);
         let p = TransferPlanner::build(&mut a, "x", ProviderTier::ClusterCache, 0, 0)
             .with_admission(Some(adm), art);
-        assert!(p.shed_attempts(0) >= 1);
-        let t = p.fetch(&mut a, 0, 1e9, &[], 1);
+        assert!(p.shed_attempts(n0()) >= 1);
+        let t = p.fetch(&mut a, n0(), 1e9, &[], 1);
         a.sim.run();
         let mut b = sim(1);
         let q = TransferPlanner::build(&mut b, "x", ProviderTier::ClusterCache, 0, 0);
-        let t2 = q.fetch(&mut b, 0, 1e9, &[], 1);
+        let t2 = q.fetch(&mut b, n0(), 1e9, &[], 1);
         b.sim.run();
         // One fetch, shifted by exactly the backoff: the flow itself is
         // the same single task, so the bytes move (and count) once.
@@ -528,11 +624,11 @@ mod tests {
         let mut a = sim(1);
         let p = TransferPlanner::build(&mut a, "x", ProviderTier::ClusterCache, 0, 0)
             .with_admission(Some(adm), art);
-        let t = p.fetch(&mut a, 0, 1e9, &[], 1);
+        let t = p.fetch(&mut a, n0(), 1e9, &[], 1);
         a.sim.run();
         let mut b = sim(1);
         let q = TransferPlanner::build(&mut b, "x", ProviderTier::ClusterCache, 0, 0);
-        let t2 = q.fetch(&mut b, 0, 1e9, &[], 1);
+        let t2 = q.fetch(&mut b, n0(), 1e9, &[], 1);
         b.sim.run();
         assert_eq!(a.sim.finished_at(t).to_bits(), b.sim.finished_at(t2).to_bits());
     }

@@ -10,7 +10,7 @@ use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
 use crate::hdfs::fuse::ReadEngine;
 use crate::image::loader::staged_of;
-use crate::sim::{ClusterSim, TaskId};
+use crate::sim::{ClusterSim, NodeHandle, TaskId};
 
 /// Planned Model Initialization stage.
 pub struct ModelInitPlan {
@@ -90,23 +90,24 @@ pub fn plan_model_init_with(
     let mut node_done = Vec::with_capacity(n);
     let mut fetched = 0u64;
     for i in 0..n {
+        let h = NodeHandle::new(i);
         let gate: &[TaskId] = if deps.is_empty() { &[] } else { &deps[i] };
         let read_bytes = per_node.saturating_sub(staged_of(prestaged, i));
         fetched += read_bytes;
         // Rank launch + parallel-group construction + RDMA setup.
-        let base = cs.cpu_time(i, d::MODEL_INIT_BASE_S) + d::model_init_sync_s(n);
+        let base = cs.cpu_time(h, d::MODEL_INIT_BASE_S) + d::model_init_sync_s(n);
         let launched = cs.sim.delay(base, gate, 0);
         let done = match read_gates {
             // Checkpoint resumption through HDFS-FUSE, after launch.
             None => {
-                let resumed = provider.fetch_u64(cs, i, read_bytes, &[launched], 0);
+                let resumed = provider.fetch_u64(cs, h, read_bytes, &[launched], 0);
                 cs.sim.barrier(&[resumed], tag)
             }
             // Overlapped: the resume read streams from the early gate into
             // the page cache; the stage completes when launch AND read are
             // done (launch-side consumption of a cached file is free).
             Some(gates) => {
-                let resumed = provider.fetch_u64(cs, i, read_bytes, &[gates[i]], 0);
+                let resumed = provider.fetch_u64(cs, h, read_bytes, &[gates[i]], 0);
                 cs.sim.barrier(&[launched, resumed], tag)
             }
         };

@@ -258,6 +258,14 @@ pub const POOL_TARGET_UTILIZATION: f64 = 0.70;
 /// per-job-isolated replay could not express).
 pub const FLEET_SERVICE_NODES: u32 = 256;
 
+/// Cost of relocating a warm restart across the full cluster diameter
+/// (seconds): re-registering with the far rack's ToR, rebinding RDMA
+/// endpoints and re-mounting node-local state. The per-restart charge is
+/// this scaled by the placement distance fraction
+/// (`scheduler::placement_distance / nodes`), so an in-place restart pays
+/// nothing and a whole-job migration across racks pays the full cost.
+pub const RELOCATION_COST_S: f64 = 15.0;
+
 /// Epoch span (seconds) the replay timeline auto-shards into when
 /// `ReplayOptions::epochs` is 0: one epoch per simulated day. Epochs bound
 /// the per-epoch prep memo tables and contention-scan subranges and give

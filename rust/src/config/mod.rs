@@ -155,6 +155,27 @@ pub struct ClusterConfig {
     /// registry/cache/HDFS bandwidth among concurrently starting jobs once
     /// their aggregate node count exceeds this.
     pub fleet_service_nodes: u32,
+    /// Rack count of the node → rack → spine tree. `1` (the default) is
+    /// the flat star topology every figure before the topology layer used:
+    /// no rack-uplink or spine-core pipes are created and startup traffic
+    /// is byte-identical to the pre-topology pipeline.
+    pub racks: u32,
+    /// Spine-block count; racks are assigned to spines contiguously.
+    pub spines: u32,
+    /// Per-rack uplink (ToR → spine) capacity, bytes/s. `0.0` auto-sizes
+    /// to `rack_size × node_nic_bps` (a non-blocking ToR).
+    pub rack_uplink_bps: f64,
+    /// Spine-core oversubscription ratio (≥ 1.0): the core carries
+    /// `racks × rack_uplink / spine_oversub` when `spine_core_bps` is
+    /// auto-sized.
+    pub spine_oversub: f64,
+    /// Spine-core (cross-rack aggregate) capacity, bytes/s. `0.0`
+    /// auto-sizes from the rack uplinks and `spine_oversub`.
+    pub spine_core_bps: f64,
+    /// Relocation cost of a warm restart moved across the full cluster
+    /// diameter, seconds (scaled by placement distance; see
+    /// `defaults::RELOCATION_COST_S`).
+    pub relocation_cost_s: f64,
 }
 
 impl Default for ClusterConfig {
@@ -182,6 +203,12 @@ impl Default for ClusterConfig {
             straggler_tail_alpha: 1.2,
             straggler_cap: 4.0,
             fleet_service_nodes: d::FLEET_SERVICE_NODES,
+            racks: 1,
+            spines: 1,
+            rack_uplink_bps: 0.0,
+            spine_oversub: 1.0,
+            spine_core_bps: 0.0,
+            relocation_cost_s: d::RELOCATION_COST_S,
         }
     }
 }
@@ -235,6 +262,14 @@ impl ClusterConfig {
             fleet_service_nodes: doc
                 .i64_or("cluster.fleet_service_nodes", base.fleet_service_nodes as i64)
                 as u32,
+            racks: (doc.i64_or("cluster.racks", base.racks as i64) as u32).max(1),
+            spines: (doc.i64_or("cluster.spines", base.spines as i64) as u32).max(1),
+            rack_uplink_bps: doc.f64_or("cluster.rack_uplink_bps", base.rack_uplink_bps),
+            spine_oversub: doc.f64_or("cluster.spine_oversub", base.spine_oversub).max(1.0),
+            spine_core_bps: doc.f64_or("cluster.spine_core_bps", base.spine_core_bps),
+            relocation_cost_s: doc
+                .f64_or("cluster.relocation_cost_s", base.relocation_cost_s)
+                .max(0.0),
         }
     }
 }
@@ -664,6 +699,38 @@ mod tests {
         assert_eq!(BootseerConfig::from_doc(&neg).cache_capacity_bytes, 0);
         let absent = Doc::parse("[bootseer]\nenabled = true\n").unwrap();
         assert_eq!(BootseerConfig::from_doc(&absent).cache_capacity_bytes, u64::MAX);
+    }
+
+    #[test]
+    fn topology_defaults_flat_and_parses() {
+        let base = ClusterConfig::default();
+        assert_eq!(base.racks, 1);
+        assert_eq!(base.spines, 1);
+        assert_eq!(base.rack_uplink_bps, 0.0);
+        assert_eq!(base.spine_oversub, 1.0);
+        assert_eq!(base.spine_core_bps, 0.0);
+        assert!(base.relocation_cost_s > 0.0);
+        let doc = Doc::parse(
+            r#"
+            [cluster]
+            racks = 4
+            spines = 2
+            rack_uplink_bps = 5.0e9
+            spine_oversub = 4.0
+            "#,
+        )
+        .unwrap();
+        let cluster = ClusterConfig::from_doc(&doc);
+        assert_eq!(cluster.racks, 4);
+        assert_eq!(cluster.spines, 2);
+        assert_eq!(cluster.rack_uplink_bps, 5.0e9);
+        assert_eq!(cluster.spine_oversub, 4.0);
+        // Degenerate values clamp to the flat/neutral floor.
+        let bad = Doc::parse("[cluster]\nracks = 0\nspines = 0\nspine_oversub = 0.5\n").unwrap();
+        let c = ClusterConfig::from_doc(&bad);
+        assert_eq!(c.racks, 1);
+        assert_eq!(c.spines, 1);
+        assert_eq!(c.spine_oversub, 1.0);
     }
 
     #[test]

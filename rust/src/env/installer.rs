@@ -16,7 +16,7 @@ use crate::config::{BootseerConfig, JobConfig};
 use crate::env::cache::EnvCacheRegistry;
 use crate::env::packages::PackageSet;
 use crate::image::loader::staged_of;
-use crate::sim::{ClusterSim, TaskId};
+use crate::sim::{ClusterSim, NodeHandle, TaskId};
 
 /// Planned Environment Setup stage.
 pub struct EnvSetupPlan {
@@ -103,6 +103,7 @@ pub fn plan_env_setup_with(
     let mut fetched = 0u64;
 
     for i in 0..n {
+        let h = NodeHandle::new(i);
         let gate: &[TaskId] = if deps.is_empty() { &[] } else { &deps[i] };
         let start = cs.sim.barrier(gate, 0);
 
@@ -113,9 +114,9 @@ pub fn plan_env_setup_with(
             let staged = staged_of(prestaged, i);
             let dl_bytes = entry.compressed_bytes.saturating_sub(staged);
             fetched += dl_bytes;
-            let dl = restore.fetch(cs, i, dl_bytes as f64, &[start], 0);
+            let dl = restore.fetch(cs, h, dl_bytes as f64, &[start], 0);
             let unpack_s =
-                cs.cpu_time(i, entry.compressed_bytes as f64 / d::ENV_CACHE_UNPACK_BPS);
+                cs.cpu_time(h, entry.compressed_bytes as f64 / d::ENV_CACHE_UNPACK_BPS);
             cs.sim.delay(unpack_s, &[dl], 0)
         } else {
             // Install script: sequential per-package admission → download →
@@ -126,10 +127,10 @@ pub fn plan_env_setup_with(
                     let backoff = cs.cfg.scm_backoff_s * (1.0 + 2.0 * rng.f64());
                     prev = cs.sim.delay(backoff, &[prev], 0);
                 }
-                let admit = cs.sim.delay(cs.cpu_time(i, admit_s), &[prev], 0);
+                let admit = cs.sim.delay(cs.cpu_time(h, admit_s), &[prev], 0);
                 fetched += p.bytes;
-                let dl = scm.fetch(cs, i, p.bytes as f64, &[admit], 0);
-                prev = cs.sim.delay(cs.cpu_time(i, p.install_cpu_s), &[dl], 0);
+                let dl = scm.fetch(cs, h, p.bytes as f64, &[admit], 0);
+                prev = cs.sim.delay(cs.cpu_time(h, p.install_cpu_s), &[dl], 0);
             }
             prev
         };
@@ -141,22 +142,21 @@ pub fn plan_env_setup_with(
         // does not gate this node's own stage completion.
         if cfg.env_cache && !hit && i == 0 {
             let pack_s =
-                cs.cpu_time(0, job.env_cache_bytes as f64 / d::ENV_CACHE_PACK_BPS);
+                cs.cpu_time(h, job.env_cache_bytes as f64 / d::ENV_CACHE_PACK_BPS);
             let packed = cs.sim.delay(pack_s, &[installed_end], 0);
             let group = cs.hdfs_groups[0];
-            let up = cs.sim.flow(
-                job.env_cache_bytes as f64,
-                vec![cs.node_nic[0], group],
-                &[packed],
-                0,
-            );
+            // The upload leaves node 0's rack for the HDFS tier, so it
+            // crosses the tree on a non-flat topology.
+            let mut path = vec![cs.node_nic[0], group];
+            path.extend(cs.tier_path(h));
+            let up = cs.sim.flow(job.env_cache_bytes as f64, path, &[packed], 0);
             cache_capture_done = Some(up);
         }
 
         // Daemons + health checks; the synchronization component grows with
         // job scale (§5.3's 64→128 GPU bump), the base part runs at node
         // speed.
-        let daemon_s = cs.cpu_time(i, d::ENV_DAEMON_BASE_S) + d::env_daemon_sync_s(n);
+        let daemon_s = cs.cpu_time(h, d::ENV_DAEMON_BASE_S) + d::env_daemon_sync_s(n);
         node_done.push(cs.sim.delay(daemon_s, &[installed_end], tag));
     }
 

@@ -115,6 +115,14 @@ pub struct FaultConfig {
     /// unconditionally, so a fetch is never starved — it fetches exactly
     /// once, late.
     pub shed_retries: u32,
+    /// Rack scope of a brownout window: the fraction of racks each window
+    /// browns out (ToR / rack-level power or network events). `0.0` — the
+    /// default and every preset — keeps windows fleet-wide (the historical
+    /// behaviour, byte-identical); `(0, 1)` draws a seeded per-window rack
+    /// set and only startups with nodes in affected racks slow down;
+    /// `1.0` is fleet-wide again. Only meaningful on a multi-rack
+    /// topology (`cluster.racks > 1`).
+    pub brownout_rack_frac: f64,
 }
 
 impl FaultConfig {
@@ -135,6 +143,7 @@ impl FaultConfig {
             cache_slots: u32::MAX,
             shed_backoff_s: d::SHED_BACKOFF_S,
             shed_retries: d::SHED_MAX_RETRIES,
+            brownout_rack_frac: 0.0,
         }
     }
 
@@ -160,6 +169,7 @@ impl FaultConfig {
             cache_slots: u32::MAX,
             shed_backoff_s: d::SHED_BACKOFF_S,
             shed_retries: d::SHED_MAX_RETRIES,
+            brownout_rack_frac: 0.0,
         }
     }
 
@@ -194,8 +204,8 @@ impl FaultConfig {
     /// comma-separated. A spec starting with an override applies it over
     /// `paper`. Keys: `hazard`, `relocate`, `straggler`,
     /// `straggler_severity`, `brownouts`, `brownout_s`, `brownout_cap`,
-    /// `ckpt_interval`, `max_retries`, `registry_slots`, `cache_slots`,
-    /// `shed_backoff`, `shed_retries`. Slot counts must be ≥ 1: a
+    /// `brownout_racks`, `ckpt_interval`, `max_retries`, `registry_slots`,
+    /// `cache_slots`, `shed_backoff`, `shed_retries`. Slot counts must be ≥ 1: a
     /// zero-concurrency service could never admit anything, so it is a
     /// config error, not a silent stall.
     ///
@@ -245,6 +255,9 @@ impl FaultConfig {
                 "brownout_s" | "brownout_duration_s" => c.brownout_duration_s = f.max(0.0),
                 "brownout_cap" | "brownout_capacity_factor" => {
                     c.brownout_capacity_factor = f.clamp(0.0, 1.0)
+                }
+                "brownout_racks" | "brownout_rack_frac" => {
+                    c.brownout_rack_frac = f.clamp(0.0, 1.0)
                 }
                 "ckpt_interval" | "ckpt_interval_s" => c.ckpt_interval_s = f.max(0.0),
                 "max_retries" => c.max_retries = f.max(0.0) as u32,
@@ -313,6 +326,9 @@ impl FaultConfig {
             shed_backoff_s: doc.f64_or("faults.shed_backoff_s", base.shed_backoff_s).max(0.0),
             shed_retries: doc.i64_or("faults.shed_retries", base.shed_retries as i64).max(0)
                 as u32,
+            brownout_rack_frac: doc
+                .f64_or("faults.brownout_rack_frac", base.brownout_rack_frac)
+                .clamp(0.0, 1.0),
         }
     }
 
@@ -321,12 +337,18 @@ impl FaultConfig {
         if !self.enabled() {
             return "off".to_string();
         }
+        let scope = if self.brownout_rack_frac > 0.0 && self.brownout_rack_frac < 1.0 {
+            format!(" ({:.0}% of racks)", 100.0 * self.brownout_rack_frac)
+        } else {
+            String::new()
+        };
         format!(
-            "hazard {:.1e}/GPU-h, relocate {:.0}%, straggler {:.0}%, {} brownouts/wk, ckpt {}s",
+            "hazard {:.1e}/GPU-h, relocate {:.0}%, straggler {:.0}%, {} brownouts/wk{}, ckpt {}s",
             self.hazard_per_gpu_hour,
             100.0 * self.relocate_prob,
             100.0 * self.straggler_prob,
             self.brownouts_per_week,
+            scope,
             self.ckpt_interval_s
         )
     }
@@ -434,6 +456,13 @@ impl FaultOracle for FaultEngine {
 pub struct BrownoutWindows {
     windows: Vec<(f64, f64)>,
     capacity_factor: f64,
+    /// Fraction of racks each window affects (`FaultConfig::
+    /// brownout_rack_frac`); 0 or 1 → fleet-wide.
+    rack_frac: f64,
+    /// Seed the per-window rack memberships are derived from (pure, no
+    /// stored sets — the parallel replay re-derives identical memberships
+    /// from any thread).
+    seed: u64,
 }
 
 impl BrownoutWindows {
@@ -448,7 +477,36 @@ impl BrownoutWindows {
                 t += cfg.brownout_duration_s + rng.exponential(rate);
             }
         }
-        BrownoutWindows { windows, capacity_factor: cfg.brownout_capacity_factor }
+        BrownoutWindows {
+            windows,
+            capacity_factor: cfg.brownout_capacity_factor,
+            rack_frac: cfg.brownout_rack_frac,
+            seed,
+        }
+    }
+
+    /// Are windows rack-scoped (a strict subset of racks per window)?
+    /// `false` → every window is fleet-wide and
+    /// [`Self::capacity_scale_racks`] degenerates to
+    /// [`Self::capacity_scale`].
+    pub fn scoped(&self) -> bool {
+        self.rack_frac > 0.0 && self.rack_frac < 1.0
+    }
+
+    /// Does window `k` brown out rack `rack`? Pure in `(seed, k, rack)` —
+    /// a seeded Bernoulli draw at `rack_frac`; fleet-wide configurations
+    /// affect every rack.
+    pub fn window_affects_rack(&self, k: usize, rack: u32) -> bool {
+        if !self.scoped() {
+            return true;
+        }
+        let mut rng = Rng::seeded(mix64(
+            self.seed
+                ^ SALT_BROWNOUT
+                ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (rack as u64 + 1).wrapping_mul(0xC2B2AE3D27D4EB4F),
+        ));
+        rng.chance(self.rack_frac)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -475,6 +533,33 @@ impl BrownoutWindows {
     /// brownouts, down to `capacity_factor` when fully inside one.
     pub fn capacity_scale(&self, a: f64, b: f64) -> f64 {
         let f = self.overlap_fraction(a, b);
+        1.0 - f * (1.0 - self.capacity_factor)
+    }
+
+    /// [`Self::capacity_scale`] for a startup whose allocation spans
+    /// `racks` (deduplicated rack ids): each overlapping window is
+    /// weighted by the fraction of the startup's racks it browns out, so
+    /// a ToR-scoped event that misses the allocation entirely costs
+    /// nothing and one that covers every rack costs exactly the fleet-wide
+    /// amount. Un-scoped windows or an empty rack list reproduce
+    /// [`Self::capacity_scale`] bit-for-bit.
+    pub fn capacity_scale_racks(&self, a: f64, b: f64, racks: &[u32]) -> f64 {
+        if !self.scoped() || racks.is_empty() {
+            return self.capacity_scale(a, b);
+        }
+        if b <= a || self.windows.is_empty() {
+            return 1.0;
+        }
+        let mut covered = 0.0;
+        for (k, &(w0, w1)) in self.windows.iter().enumerate() {
+            let ov = (b.min(w1) - a.max(w0)).max(0.0);
+            if ov <= 0.0 {
+                continue;
+            }
+            let hit = racks.iter().filter(|&&r| self.window_affects_rack(k, r)).count();
+            covered += ov * hit as f64 / racks.len() as f64;
+        }
+        let f = (covered / (b - a)).min(1.0);
         1.0 - f * (1.0 - self.capacity_factor)
     }
 }
@@ -620,6 +705,8 @@ mod tests {
         let w = BrownoutWindows {
             windows: vec![(100.0, 200.0), (400.0, 500.0)],
             capacity_factor: 0.25,
+            rack_frac: 0.0,
+            seed: 0,
         };
         assert_eq!(w.overlap_fraction(0.0, 100.0), 0.0);
         assert_eq!(w.overlap_fraction(100.0, 200.0), 1.0);
@@ -688,6 +775,66 @@ mod tests {
         // The doc path (no Result) clamps instead of erroring.
         let doc = crate::config::toml::Doc::parse("[faults]\ncache_slots = 0\n").unwrap();
         assert_eq!(FaultConfig::from_doc(&doc).cache_slots, 1);
+    }
+
+    #[test]
+    fn rack_scoped_brownouts_weight_by_affected_racks() {
+        let mk = |frac: f64| BrownoutWindows {
+            windows: vec![(100.0, 200.0)],
+            capacity_factor: 0.25,
+            rack_frac: frac,
+            seed: 42,
+        };
+        // Un-scoped (0 or 1) degenerates to the fleet-wide math for any
+        // rack set, bit-for-bit.
+        for frac in [0.0, 1.0] {
+            let w = mk(frac);
+            assert!(!w.scoped());
+            assert_eq!(
+                w.capacity_scale_racks(100.0, 200.0, &[0, 1, 2]).to_bits(),
+                w.capacity_scale(100.0, 200.0).to_bits()
+            );
+            assert!(w.window_affects_rack(0, 7));
+        }
+        let w = mk(0.5);
+        assert!(w.scoped());
+        // Membership is a pure function of (seed, window, rack).
+        let hits: Vec<bool> = (0..64).map(|r| w.window_affects_rack(0, r)).collect();
+        assert_eq!(hits, (0..64).map(|r| w.window_affects_rack(0, r)).collect::<Vec<_>>());
+        let affected: Vec<u32> =
+            (0..64).filter(|&r| w.window_affects_rack(0, r)).collect();
+        let missed: Vec<u32> =
+            (0..64).filter(|&r| !w.window_affects_rack(0, r)).collect();
+        assert!(!affected.is_empty() && !missed.is_empty(), "0.5 splits 64 racks");
+        // Fully-inside window: all-affected racks pay the full factor,
+        // all-missed racks pay nothing, a 50/50 mix pays half the slowdown.
+        assert_eq!(w.capacity_scale_racks(100.0, 200.0, &affected[..2]), 0.25);
+        assert_eq!(w.capacity_scale_racks(100.0, 200.0, &missed[..2]), 1.0);
+        let half = w.capacity_scale_racks(100.0, 200.0, &[affected[0], missed[0]]);
+        assert!((half - (1.0 - 0.5 * 0.75)).abs() < 1e-12, "half-affected {half}");
+        // Outside every window nothing changes.
+        assert_eq!(w.capacity_scale_racks(0.0, 50.0, &affected), 1.0);
+    }
+
+    #[test]
+    fn rack_frac_parses_and_defaults_off() {
+        assert_eq!(FaultConfig::off().brownout_rack_frac, 0.0);
+        assert_eq!(FaultConfig::paper().brownout_rack_frac, 0.0);
+        assert_eq!(FaultConfig::storm().brownout_rack_frac, 0.0);
+        let c = FaultConfig::parse("storm,brownout_racks=0.25").unwrap();
+        assert_eq!(c.brownout_rack_frac, 0.25);
+        let c = FaultConfig::parse("brownout_rack_frac=2").unwrap();
+        assert_eq!(c.brownout_rack_frac, 1.0);
+        let doc = crate::config::toml::Doc::parse(
+            "[faults]\npreset = \"storm\"\nbrownout_rack_frac = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(FaultConfig::from_doc(&doc).brownout_rack_frac, 0.5);
+        let w = BrownoutWindows::generate(&c, 9, 7.0 * 86400.0);
+        // paper + rack_frac=1.0 clamps to fleet-wide (not scoped).
+        assert!(!w.scoped());
+        let d = FaultConfig::parse("storm,brownout_racks=0.25").unwrap().describe();
+        assert!(d.contains("25% of racks"), "{d}");
     }
 
     #[test]

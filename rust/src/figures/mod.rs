@@ -2,16 +2,20 @@
 //! producing the measured series (plus a rendered table and JSON export).
 //! Benches and the CLI are thin wrappers over these.
 
+use crate::config::defaults as d;
 use crate::config::{BootseerConfig, CachePolicy, ClusterConfig, JobConfig, OverlapMode};
 use crate::faults::FaultConfig;
 use crate::profiler::Stage;
-use crate::startup::{run_startup, StartupKind, StartupOutcome, World};
+use crate::startup::{
+    run_startup, run_startup_with, StartupContext, StartupKind, StartupOutcome, World,
+};
 use crate::trace::{
     bucket_of, gen_trace, replay, replay_cluster, ReplayOptions, ReplayResult, SCALE_BUCKETS,
 };
 use crate::util::human;
 use crate::util::json::Json;
 use crate::util::stats::{self, BoxSummary, Histogram};
+use std::sync::Arc;
 
 /// Jobs in the default synthetic week (the paper's week saw 28k; we default
 /// lower and scale — override with BOOTSEER_TRACE_JOBS).
@@ -39,7 +43,7 @@ pub fn week_replay(seed: u64) -> ReplayResult {
 /// simulated day) — a pure performance knob, byte-identical at any value.
 pub fn fleet_replay(seed: u64, jobs: usize, threads: usize, epochs: usize) -> ReplayResult {
     let trace = gen_trace(seed, jobs, 365.0 * 86400.0);
-    let opts = ReplayOptions { pool_gpus: None, threads, faults: FaultConfig::off(), epochs };
+    let opts = ReplayOptions::new().with_threads(threads).with_epochs(epochs);
     replay_cluster(&trace, &ClusterConfig::default(), &BootseerConfig::baseline(), seed, &opts)
 }
 
@@ -1027,6 +1031,141 @@ impl CacheSweep {
     }
 }
 
+// ------------------------------------------------ topology fragmentation --
+
+/// One fragmentation point: the warm 128-GPU startup with its 16 nodes
+/// spread over `racks_spanned` racks of the topology tree.
+pub struct TopologyPoint {
+    pub racks_spanned: u32,
+    /// Warm startup end-to-end (alloc + worker phases), simulated seconds.
+    pub total_s: f64,
+    /// Worker phase only (image + env + model init), simulated seconds.
+    pub worker_s: f64,
+    /// Share of each node's swarm peers that sit across the spine — pure
+    /// placement arithmetic, the monotone x-axis of the figure.
+    pub cross_frac: f64,
+}
+
+/// The fragmentation sweep (`BENCH_topology.json`): warm 128-GPU startup
+/// time vs how many racks the gang's 16 nodes span, on a 16-rack tree
+/// whose spine core is oversubscribed 10× against the node NICs while the
+/// rack uplinks stay inert. Startup time must increase strictly with
+/// fragmentation — the invariant the `micro_topology` bench and CI gate.
+pub struct TopologySweep {
+    pub points: Vec<TopologyPoint>,
+    pub seed: u64,
+}
+
+/// Rack counts swept: 1 (whole gang in one rack, zero spine traffic) up
+/// to 16 (every node alone in its rack, all swarm traffic cross-spine).
+pub const FRAG_SWEEP_RACKS: [u32; 5] = [1, 2, 4, 8, 16];
+
+/// Sweep placement fragmentation at the paper's flagship 128-GPU scale:
+/// a cold startup records the image hot set + env cache, then the
+/// measured warm startup swarm-fetches from its peers — and the placement
+/// decides how much of that traffic crosses the oversubscribed spine.
+pub fn fragmentation_sweep(seed: u64) -> TopologySweep {
+    let job = JobConfig::paper_moe(128);
+    let cluster = ClusterConfig {
+        racks: 16,
+        spines: 4,
+        // Fat rack uplinks: only the spine core binds, so the sweep
+        // isolates the cross-rack share of the swarm traffic.
+        rack_uplink_bps: 1.0e15,
+        spine_core_bps: d::NODE_NIC_BPS / 10.0,
+        ..ClusterConfig::default()
+    };
+    let cfg = BootseerConfig::bootseer();
+    let nodes = job.nodes(&cluster) as usize;
+    let points = FRAG_SWEEP_RACKS
+        .iter()
+        .map(|&f| {
+            let placement: Vec<u32> =
+                (0..nodes).map(|i| (i as u32 * f) / nodes as u32).collect();
+            let ctx = || StartupContext {
+                alloc_s: d::ALLOC_BASE_S + 0.02 * nodes as f64,
+                placement: Some(Arc::new(placement.clone())),
+                ..StartupContext::default()
+            };
+            let mut world = World::new();
+            run_startup_with(
+                1,
+                0,
+                &cluster,
+                &job,
+                &cfg,
+                &mut world,
+                StartupKind::Full,
+                seed,
+                ctx(),
+            );
+            let warm = run_startup_with(
+                1,
+                1,
+                &cluster,
+                &job,
+                &cfg,
+                &mut world,
+                StartupKind::Full,
+                seed.wrapping_add(1),
+                ctx(),
+            );
+            let in_rack = nodes as f64 / f as f64 - 1.0;
+            let peers = (nodes - 1) as f64;
+            TopologyPoint {
+                racks_spanned: f,
+                total_s: warm.total_s,
+                worker_s: warm.worker_phase_s,
+                cross_frac: (peers - in_rack) / peers,
+            }
+        })
+        .collect();
+    TopologySweep { points, seed }
+}
+
+impl TopologySweep {
+    pub fn render(&self) -> String {
+        let mut rows = vec![vec![
+            "racks".to_string(),
+            "cross peers".to_string(),
+            "warm worker s".to_string(),
+            "warm total s".to_string(),
+        ]];
+        for p in &self.points {
+            rows.push(vec![
+                p.racks_spanned.to_string(),
+                format!("{:.1}%", 100.0 * p.cross_frac),
+                format!("{:.2}", p.worker_s),
+                format!("{:.2}", p.total_s),
+            ]);
+        }
+        let mono = self.points.windows(2).all(|w| w[1].worker_s > w[0].worker_s);
+        format!(
+            "{}fragmentation tax (startup strictly slows as the gang spreads): {}\n",
+            human::table(&rows),
+            if mono { "holds" } else { "VIOLATED — see table" }
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("racks_spanned", p.racks_spanned)
+                    .set("cross_frac", p.cross_frac)
+                    .set("worker_s", p.worker_s)
+                    .set("total_s", p.total_s);
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("points", Json::Arr(arr)).set("seed", self.seed);
+        j
+    }
+}
+
 // -------------------------------------------------------------- Fig 14 --
 
 pub struct Fig14 {
@@ -1493,6 +1632,32 @@ mod tests {
             assert!(p.delta_bytes_fraction() < p.warm_bytes_fraction());
         }
         assert!(!f.render().is_empty());
+    }
+
+    #[test]
+    fn fragmentation_sweep_strictly_increases_and_reproduces() {
+        let f = fragmentation_sweep(7);
+        assert_eq!(f.points.len(), FRAG_SWEEP_RACKS.len());
+        assert_eq!(f.points[0].cross_frac, 0.0, "one rack → no spine traffic");
+        assert!((f.points.last().unwrap().cross_frac - 1.0).abs() < 1e-12);
+        for w in f.points.windows(2) {
+            assert!(w[1].cross_frac > w[0].cross_frac);
+            assert!(
+                w[1].worker_s > w[0].worker_s,
+                "fragmentation must slow the warm startup: {} racks {} vs {} racks {}",
+                w[0].racks_spanned,
+                w[0].worker_s,
+                w[1].racks_spanned,
+                w[1].worker_s
+            );
+            assert!(w[1].total_s > w[0].total_s);
+        }
+        assert!(!f.render().is_empty());
+        let again = fragmentation_sweep(7);
+        for (a, b) in f.points.iter().zip(again.points.iter()) {
+            assert_eq!(a.worker_s.to_bits(), b.worker_s.to_bits());
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use crate::config::defaults as d;
 use crate::hdfs::layout::StripeLayout;
 use crate::sim::engine::Capacity;
-use crate::sim::{ClusterSim, TaskId};
+use crate::sim::{ClusterSim, NodeHandle, TaskId};
 
 /// How a node reads a (checkpoint) file out of HDFS.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,23 +57,22 @@ fn plan_read_sequential(
     // per-read stream-cap resource plus a representative group. The stream
     // resource lives exactly as long as its one flow (scoped), so a long
     // simulation's resource table doesn't accrete one slot per read.
+    let h = NodeHandle::new(node);
     let nn = cs.sim.delay(cs.cfg.hdfs_nn_op_s, deps, 0);
     let stream = cs.sim.add_resource_scoped(
         &format!("hdfs.stream.n{node}"),
         Capacity::Fixed(d::HDFS_STREAM_BPS),
         1,
     );
-    let group = cs.hdfs_group_of(node);
-    // Download to local disk...
-    let dl = cs.sim.flow(
-        bytes as f64,
-        vec![stream, group, cs.node_nic[node], cs.node_disk[node]],
-        &[nn],
-        0,
-    );
+    let group = cs.hdfs_group_of(h);
+    // Download to local disk (traversing the tree tiers on a non-flat
+    // topology — the DataNodes live outside the racks)...
+    let mut path = vec![stream, group, cs.node_nic[node], cs.node_disk[node]];
+    path.extend(cs.tier_path(h));
+    let dl = cs.sim.flow(bytes as f64, path, &[nn], 0);
     // ...then load from disk into the training process.
     let load = bytes as f64 / cs.cfg.node_disk_read_bps;
-    cs.sim.delay(cs.cpu_time(node, load), &[dl], tag)
+    cs.sim.delay(cs.cpu_time(h, load), &[dl], tag)
 }
 
 fn plan_read_striped(
@@ -119,12 +118,9 @@ fn plan_read_striped(
         let gi = (node * n_streams as usize + s as usize) % touched.len();
         let group = cs.hdfs_groups[touched[gi] as usize];
         // Streamed directly into the process (no local-disk staging pass).
-        parts.push(cs.sim.flow(
-            per_stream,
-            vec![stream, group, cs.node_nic[node]],
-            &[nn],
-            0,
-        ));
+        let mut path = vec![stream, group, cs.node_nic[node]];
+        path.extend(cs.tier_path(NodeHandle::new(node)));
+        parts.push(cs.sim.flow(per_stream, path, &[nn], 0));
     }
     cs.sim.barrier(&parts, tag)
 }
@@ -154,7 +150,9 @@ pub fn plan_write(
             1,
         );
         let group = cs.hdfs_groups[(node + s as usize) % n_groups];
-        parts.push(cs.sim.flow(per, vec![cs.node_nic[node], stream, group], &[nn], 0));
+        let mut path = vec![cs.node_nic[node], stream, group];
+        path.extend(cs.tier_path(NodeHandle::new(node)));
+        parts.push(cs.sim.flow(per, path, &[nn], 0));
     }
     cs.sim.barrier(&parts, tag)
 }

@@ -24,7 +24,7 @@ use crate::config::defaults as d;
 use crate::config::{BootseerConfig, ImageMode};
 use crate::image::access::HotSetRegistry;
 use crate::image::spec::ImageSpec;
-use crate::sim::{ClusterSim, TaskId};
+use crate::sim::{ClusterSim, NodeHandle, TaskId};
 
 /// Result of planning the image-loading stage.
 pub struct ImageLoadPlan {
@@ -118,16 +118,17 @@ fn plan_oci_full(
     let tier = if cfg.p2p { ProviderTier::RegistrySwarm } else { ProviderTier::Registry };
     let provider = TransferPlanner::build(cs, "img.swarm", tier, n as u32, n as u32);
     for i in 0..n {
+        let h = NodeHandle::new(i);
         let gate = dep_of(deps, i);
         let bytes = img.total_bytes.saturating_sub(staged_of(prestaged, i));
         fetched += bytes;
-        let dl = provider.fetch(cs, i, bytes as f64, gate, 0);
+        let dl = provider.fetch(cs, h, bytes as f64, gate, 0);
         // Layered-OCI decompress + unpack: CPU-bound, ~180 MB/s per node
         // (always over the full image; staged bytes still need unpacking).
         let unpack = cs
             .sim
-            .delay(cs.cpu_time(i, img.total_bytes as f64 / d::OCI_UNPACK_BPS), &[dl], 0);
-        let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), &[unpack], tag);
+            .delay(cs.cpu_time(h, img.total_bytes as f64 / d::OCI_UNPACK_BPS), &[dl], 0);
+        let start = cs.sim.delay(cs.cpu_time(h, d::CONTAINER_START_S), &[unpack], tag);
         node_done.push(start);
     }
     ImageLoadPlan {
@@ -171,14 +172,15 @@ fn plan_lazy(
         };
         fetched += hot_total.saturating_sub(staged_of(prestaged, i));
         // Container starts immediately against the lazy mount...
-        let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), dep_of(deps, i), 0);
+        let h = NodeHandle::new(i);
+        let start = cs.sim.delay(cs.cpu_time(h, d::CONTAINER_START_S), dep_of(deps, i), 0);
         // ...then faults in the hot set: `batches` sequential miss bursts.
         let mut prev = start;
         for _ in 0..batches {
             let miss_lat =
-                cs.cpu_time(i, d::LAZY_MISS_LATENCY_S) * blocks_per_batch * contention * frac;
+                cs.cpu_time(h, d::LAZY_MISS_LATENCY_S) * blocks_per_batch * contention * frac;
             let lat = cs.sim.delay(miss_lat, &[prev], 0);
-            prev = provider.fetch(cs, i, bytes_per_batch * frac, &[lat], 0);
+            prev = provider.fetch(cs, h, bytes_per_batch * frac, &[lat], 0);
         }
         // Stage ends when startup reads are all served.
         node_done.push(cs.sim.barrier(&[prev], tag));
@@ -215,11 +217,12 @@ fn plan_prefetch(
     let mut background = Vec::with_capacity(n);
     let mut fetched = 0u64;
     for i in 0..n {
+        let h = NodeHandle::new(i);
         let gate = dep_of(deps, i);
         let fg_bytes = hot_bytes.saturating_sub(staged_of(prestaged, i));
         fetched += fg_bytes;
-        let prefetch = provider.fetch(cs, i, fg_bytes as f64, gate, 0);
-        let start = cs.sim.delay(cs.cpu_time(i, d::CONTAINER_START_S), &[prefetch], tag);
+        let prefetch = provider.fetch(cs, h, fg_bytes as f64, gate, 0);
+        let start = cs.sim.delay(cs.cpu_time(h, d::CONTAINER_START_S), &[prefetch], tag);
         node_done.push(start);
         // Cold blocks stream in the background after container start. The
         // thread count bounds per-node background rate: 8 threads ≈ 8
@@ -227,7 +230,7 @@ fn plan_prefetch(
         // rate the fair-share engine bounds via pool + NIC. It must NOT
         // gate `node_done`.
         if cold_bytes > 0 {
-            background.push(provider.fetch(cs, i, cold_bytes as f64, &[start], 0));
+            background.push(provider.fetch(cs, h, cold_bytes as f64, &[start], 0));
         }
     }
     ImageLoadPlan {

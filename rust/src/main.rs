@@ -38,6 +38,7 @@ fn main() {
                  \n  trace   [--jobs N] [--seed S] [--pool-gpus G] [--threads T] [--epochs E] [--bootseer]\
                  \n          [--overlap M] [--dedup] [--delta-resume] [--faults off|paper|storm|k=v,...]\
                  \n          [--no-replay] [--cache-capacity BYTES|Ng|unbounded] [--cache-policy lru|gdsf|pin]\
+                 \n          [--racks R] [--spine-oversub F]\
                  \n  train   [--steps N] [--artifacts DIR] [--seed S]   (pjrt feature)"
             );
             2
@@ -144,6 +145,9 @@ fn cmd_figures(rest: &[String]) -> i32 {
     );
     println!("-- Fig 16: wasted GPU time under fault injection --\n{}", fw.render());
     save("fig16", fw.to_json());
+    let ft = figures::fragmentation_sweep(7);
+    println!("-- Topology fragmentation sweep (startup vs gang spread) --\n{}", ft.render());
+    save("topology", ft.to_json());
     let fc = figures::cache_economics_sweep(
         figures::FAULTS_SWEEP_SEED,
         figures::CACHE_SWEEP_JOBS,
@@ -249,6 +253,10 @@ fn cmd_trace(rest: &[String]) -> i32 {
             }
         },
     };
+    // Hierarchical-topology overrides (see docs/topology.md): both default
+    // to the config's flat values, where the tree is inert.
+    let racks: Option<u32> = opt(rest, "--racks").and_then(|s| s.parse().ok());
+    let spine_oversub: Option<f64> = opt(rest, "--spine-oversub").and_then(|s| s.parse().ok());
     // Speculative staging needs warm state (hot-set records, env caches) to
     // know what to stage, i.e. the BootSeer feature set.
     let boot = flag(rest, "--bootseer");
@@ -287,20 +295,25 @@ fn cmd_trace(rest: &[String]) -> i32 {
     let t0 = std::time::Instant::now();
     let base = if boot { BootseerConfig::bootseer() } else { BootseerConfig::baseline() };
     let faults_on = faults.enabled();
-    let mut cfg = artifact_flags(rest, BootseerConfig { overlap, ..base });
-    if let Some(c) = cache_capacity {
-        cfg.cache_capacity_bytes = c;
+    let cfg = artifact_flags(rest, BootseerConfig { overlap, ..base });
+    // One override path: every CLI knob folds into the ReplayOptions
+    // builder, and `replay_cluster` resolves it against the configs once.
+    let mut opts = ReplayOptions::new()
+        .with_pool_gpus(pool_gpus)
+        .with_threads(threads)
+        .with_faults(faults)
+        .with_epochs(epochs);
+    opts.cache_capacity = cache_capacity;
+    opts.cache_policy = cache_policy;
+    if let Some(r) = racks {
+        opts = opts.with_racks(r);
     }
-    if let Some(p) = cache_policy {
-        cfg.cache_policy = p;
+    if let Some(f) = spine_oversub {
+        opts = opts.with_spine_oversub(f);
     }
-    let r = replay_cluster(
-        &t,
-        &ClusterConfig::default(),
-        &cfg,
-        seed,
-        &ReplayOptions { pool_gpus, threads, faults, epochs },
-    );
+    let cluster = ClusterConfig::default();
+    let (_, eff_cfg) = opts.resolve(&cluster, &cfg);
+    let r = replay_cluster(&t, &cluster, &cfg, seed, &opts);
     let wall = t0.elapsed().as_secs_f64();
     if !r.queue_waits.is_empty() {
         println!(
@@ -325,10 +338,10 @@ fn cmd_trace(rest: &[String]) -> i32 {
             100.0 * r.wasted_fraction()
         );
     }
-    if cfg.cache_capacity_bytes != u64::MAX || r.shed_checks > 0 {
+    if eff_cfg.cache_capacity_bytes != u64::MAX || r.shed_checks > 0 {
         println!(
             "cache: {} policy, hit rate {:.1}% ({} / {} demanded) | evicted {} | shed rate {:.1}% ({}/{} governed fetches)",
-            cfg.cache_policy.name(),
+            eff_cfg.cache_policy.name(),
             100.0 * r.hit_rate(),
             human::bytes(r.credited_bytes),
             human::bytes(r.demanded_bytes),

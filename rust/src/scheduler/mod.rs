@@ -594,6 +594,142 @@ pub fn schedule_chains_with(
     out
 }
 
+// ---------------------------------------------------------------------------
+// Gang placement over the rack tree
+// ---------------------------------------------------------------------------
+
+/// Free-GPU accounting per rack, used by the replay to place each admitted
+/// gang onto the topology tree (`cluster.racks`).
+///
+/// Placement is deliberately simple and deterministic:
+///
+/// 1. **Best-fit single rack** — among racks whose free GPUs cover the
+///    whole gang, pick the one with the *least* free capacity (ties break
+///    toward the lowest rack id). A gang that fits one rack never pays the
+///    spine.
+/// 2. **Greedy spill** — otherwise fill racks in descending free order
+///    (ties toward the lowest id), taking what each has, until the gang is
+///    covered. This is the contiguous-rack preference: the fewest racks
+///    that can hold the job.
+///
+/// The pool is *total*: if the gang exceeds the free GPUs (the scheduler
+/// already admitted it, so this only happens when rack accounting drifts
+/// from the scheduler's scalar pool under retries), the remainder lands on
+/// rack 0 and [`RackPool::release`] clamps frees back to capacity.
+#[derive(Clone, Debug)]
+pub struct RackPool {
+    cap: Vec<u32>,
+    free: Vec<u32>,
+}
+
+impl RackPool {
+    /// A pool of `pool_gpus` split evenly over `racks` racks (the last
+    /// rack absorbs the rounding remainder, mirroring
+    /// [`crate::sim::Topology`]'s contiguous node→rack map).
+    pub fn new(pool_gpus: u32, racks: u32) -> RackPool {
+        let racks = racks.max(1);
+        let per = ((pool_gpus + racks - 1) / racks).max(1);
+        let mut cap = Vec::with_capacity(racks as usize);
+        let mut left = pool_gpus;
+        for _ in 0..racks {
+            let c = per.min(left);
+            cap.push(c);
+            left -= c;
+        }
+        RackPool { free: cap.clone(), cap }
+    }
+
+    /// Number of racks in the pool.
+    pub fn racks(&self) -> u32 {
+        self.cap.len() as u32
+    }
+
+    /// Free GPUs currently available in rack `r`.
+    pub fn free_in(&self, r: u32) -> u32 {
+        self.free[r as usize]
+    }
+
+    /// Place a gang of `gpus` GPUs and return the rack of each of its
+    /// nodes (`gpus_per_node` GPUs each; node `j` gets the rack covering
+    /// GPU block `j * gpus_per_node` of the allocation). The returned
+    /// vector is exactly what [`crate::sim::ClusterSim::build_placed`]
+    /// takes as a placement.
+    pub fn place(&mut self, gpus: u32, gpus_per_node: u32) -> Vec<u32> {
+        let gpn = gpus_per_node.max(1);
+        let nodes = ((gpus + gpn - 1) / gpn).max(1) as usize;
+        // 1. Best fit: the fullest single rack that still covers the gang.
+        let mut best: Option<(u32, usize)> = None;
+        for (r, &f) in self.free.iter().enumerate() {
+            if f >= gpus && best.map_or(true, |(bf, _)| f < bf) {
+                best = Some((f, r));
+            }
+        }
+        if let Some((_, r)) = best {
+            self.free[r] -= gpus;
+            return vec![r as u32; nodes];
+        }
+        // 2. Greedy spill over racks in descending free order.
+        let mut order: Vec<usize> = (0..self.free.len()).collect();
+        order.sort_by_key(|&r| (Reverse(self.free[r]), r));
+        let mut gpu_rack: Vec<u32> = Vec::with_capacity(gpus as usize);
+        let mut remaining = gpus;
+        for &r in &order {
+            if remaining == 0 {
+                break;
+            }
+            let take = self.free[r].min(remaining);
+            self.free[r] -= take;
+            remaining -= take;
+            gpu_rack.extend(std::iter::repeat(r as u32).take(take as usize));
+        }
+        // Total allocation: any remainder (rack drift under retries) lands
+        // on rack 0; release() clamps the books back.
+        gpu_rack.extend(std::iter::repeat(0).take(remaining as usize));
+        (0..nodes).map(|j| gpu_rack[(j * gpn as usize).min(gpu_rack.len() - 1)]).collect()
+    }
+
+    /// Re-pin a gang onto a known `placement` (a warm restart landing
+    /// back on its previous racks): decrement each placed rack's free
+    /// GPUs, saturating at zero — the fault oracle already decided the
+    /// restart lands warm, so the pin always succeeds even if the books
+    /// drifted while the gang sat in the queue.
+    pub fn take(&mut self, placement: &[u32], gpus: u32, gpus_per_node: u32) {
+        let gpn = gpus_per_node.max(1);
+        let mut left = gpus;
+        for &r in placement {
+            let grab = gpn.min(left);
+            left -= grab;
+            let r = r as usize;
+            self.free[r] = self.free[r].saturating_sub(grab);
+        }
+    }
+
+    /// Return a gang's GPUs to its racks. `placement` is what
+    /// [`RackPool::place`] returned; each node gives back `gpus_per_node`
+    /// (the last node gives back the gang's remainder). Frees are clamped
+    /// to rack capacity, so over-placed remainders never inflate the pool.
+    pub fn release(&mut self, placement: &[u32], gpus: u32, gpus_per_node: u32) {
+        let gpn = gpus_per_node.max(1);
+        let mut left = gpus;
+        for &r in placement {
+            let give = gpn.min(left);
+            left -= give;
+            let r = r as usize;
+            self.free[r] = (self.free[r] + give).min(self.cap[r]);
+        }
+    }
+}
+
+/// Distance between two gang placements: the number of node slots whose
+/// rack changed (length mismatches count as moved). Scaled by the node
+/// count, this is the relocation-cost fraction a warm restart pays
+/// (`cluster.relocation_cost_s`): 0 when the restart lands back on its
+/// racks, 1 when every node moved.
+pub fn placement_distance(a: &[u32], b: &[u32]) -> u32 {
+    let n = a.len().max(b.len());
+    (0..n).filter(|&i| a.get(i) != b.get(i)).count() as u32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1121,5 +1257,63 @@ mod tests {
             }
             Ok(())
         });
+    }
+    #[test]
+    fn rack_pool_best_fit_prefers_fullest_single_rack() {
+        // 4 racks x 32 GPUs; rack 2 drained to 16 free. A 16-GPU gang
+        // best-fits rack 2 (smallest free that still covers it).
+        let mut pool = RackPool::new(128, 4);
+        let p0 = pool.place(16, 8);
+        assert_eq!(p0, vec![0, 0]); // all racks tie at 32 free -> lowest id
+        let p1 = pool.place(16, 8);
+        assert_eq!(p1, vec![0, 0]); // rack 0 now 16 free: tightest fit
+        assert_eq!(pool.free_in(0), 0);
+        let p2 = pool.place(16, 8);
+        assert_eq!(p2, vec![1, 1]);
+    }
+
+    #[test]
+    fn rack_pool_spills_across_racks_when_no_single_rack_fits() {
+        let mut pool = RackPool::new(128, 4);
+        // 64-GPU gang: no 32-GPU rack covers it; greedy fills two racks.
+        let p = pool.place(64, 8);
+        assert_eq!(p, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        assert_eq!((pool.free_in(0), pool.free_in(1)), (0, 0));
+        pool.release(&p, 64, 8);
+        assert_eq!((pool.free_in(0), pool.free_in(1)), (32, 32));
+    }
+
+    #[test]
+    fn rack_pool_overflow_is_total_and_release_clamps() {
+        let mut pool = RackPool::new(16, 2);
+        let a = pool.place(16, 8);
+        // Pool is empty; an over-admitted gang still gets a placement.
+        let b = pool.place(16, 8);
+        assert_eq!(b, vec![0, 0]);
+        pool.release(&b, 16, 8);
+        pool.release(&a, 16, 8);
+        // Clamped: frees never exceed capacity.
+        assert_eq!((pool.free_in(0), pool.free_in(1)), (8, 8));
+    }
+
+    #[test]
+    fn rack_pool_is_deterministic() {
+        let run = || {
+            let mut pool = RackPool::new(256, 8);
+            let mut got = Vec::new();
+            for g in [48u32, 96, 16, 64, 32] {
+                got.push(pool.place(g, 8));
+            }
+            got
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn placement_distance_counts_moved_nodes() {
+        assert_eq!(placement_distance(&[0, 0, 1], &[0, 0, 1]), 0);
+        assert_eq!(placement_distance(&[0, 0, 1], &[0, 1, 1]), 1);
+        assert_eq!(placement_distance(&[0, 0], &[1, 1, 2]), 3);
+        assert_eq!(placement_distance(&[], &[]), 0);
     }
 }

@@ -1,18 +1,175 @@
 //! Cluster resource layout over the fluid engine.
 //!
-//! Instantiates the star topology the paper's startup traffic flows over:
-//! every worker node has a frontend NIC and a local disk; shared services
-//! (container registry, cluster block cache, SCM/package backend, HDFS
-//! DataNode groups) have aggregate egress capacities. Per-node heterogeneity
-//! (the straggler source) is a sampled slowdown multiplier applied to CPU
-//! work on that node.
+//! Instantiates the topology the paper's startup traffic flows over. The
+//! default is the flat star of the original model: every worker node has a
+//! frontend NIC and a local disk; shared services (container registry,
+//! cluster block cache, SCM/package backend, HDFS DataNode groups) have
+//! aggregate egress capacities. With `ClusterConfig::racks > 1` the star
+//! becomes a node → rack → spine tree: each rack gets a ToR uplink pipe and
+//! the racks share one (possibly oversubscribed) spine-core pipe, and
+//! service traffic to a node traverses both (`ClusterSim::tier_path`). The
+//! flat default creates **zero** topology resources, so every pre-topology
+//! figure and golden stays byte-identical.
+//!
+//! Per-node heterogeneity (the straggler source) is a sampled slowdown
+//! multiplier applied to CPU work on that node.
+//!
+//! The query surface is typed: [`NodeHandle`] identifies a node,
+//! [`Topology`] answers rack/spine membership and [`PathBetween`] relation
+//! queries, and the accessors (`nic`, `disk`, `cpu_time`, `hdfs_group_of`,
+//! `tier_path`) take handles — no subsystem reconstructs rack membership by
+//! index arithmetic.
 
 use crate::config::ClusterConfig;
 use crate::sim::engine::{Capacity, FluidSim, ResourceId};
 use crate::util::rng::{Rng, TailedSlowdown};
 
-/// Identifies a worker node within a job's allocation.
+/// Identifies a worker node within a job's allocation by position.
+///
+/// Superseded by the typed [`NodeHandle`] API; kept as a documented alias
+/// for the low-level planners (`hdfs::fuse`) that index the per-node
+/// resource vectors directly.
 pub type NodeIdx = usize;
+
+/// Typed handle to a worker node within a job's allocation.
+///
+/// A thin newtype over the node's position: cheap to copy, and the only
+/// currency the cluster accessors accept, so rack/spine membership always
+/// comes from [`Topology`] rather than ad-hoc index arithmetic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NodeHandle(usize);
+
+impl NodeHandle {
+    /// Handle to the node at position `i` in the allocation.
+    pub fn new(i: usize) -> NodeHandle {
+        NodeHandle(i)
+    }
+
+    /// The node's position (index into the per-node resource vectors).
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// Identifies a rack (ToR domain) within the topology tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RackId(pub u32);
+
+/// Identifies a spine block within the topology tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SpineId(pub u32);
+
+/// Network relation between two nodes in the node → rack → spine tree:
+/// which shared tiers a transfer between them must traverse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PathBetween {
+    /// Same node: loopback, no shared fabric.
+    SameNode,
+    /// Same rack: traffic stays under one ToR.
+    SameRack,
+    /// Different racks under the same spine block: both rack uplinks.
+    SameSpine,
+    /// Different spine blocks: both rack uplinks plus the spine core.
+    CrossSpine,
+}
+
+/// The node → rack → spine tree: per-node rack membership plus the tier
+/// shape. Built from a [`ClusterConfig`] (contiguous rack blocks) or from
+/// an explicit per-node placement (a fragmented allocation handed back by
+/// the gang scheduler).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    /// Rack of each node, by node position.
+    rack_of: Vec<u32>,
+    racks: u32,
+    spines: u32,
+    /// Contiguous racks per spine block.
+    racks_per_spine: u32,
+}
+
+impl Topology {
+    /// Default placement for `cfg`: nodes fill racks in contiguous blocks
+    /// of `ceil(nodes / racks)`.
+    pub fn of(cfg: &ClusterConfig) -> Topology {
+        let racks = cfg.racks.max(1);
+        let rack_size = ((cfg.nodes + racks - 1) / racks).max(1);
+        let rack_of = (0..cfg.nodes).map(|i| (i / rack_size).min(racks - 1)).collect();
+        Topology::from_rack_of(rack_of, racks, cfg.spines.max(1))
+    }
+
+    /// Explicit placement: `placement[i]` is the rack of node `i` (values
+    /// clamp into `0..cfg.racks`). Used by the replay to rebuild a job's
+    /// cluster view over the allocation the gang scheduler actually chose.
+    pub fn placed(cfg: &ClusterConfig, placement: &[u32]) -> Topology {
+        let racks = cfg.racks.max(1);
+        let rack_of = placement.iter().map(|&r| r.min(racks - 1)).collect();
+        Topology::from_rack_of(rack_of, racks, cfg.spines.max(1))
+    }
+
+    fn from_rack_of(rack_of: Vec<u32>, racks: u32, spines: u32) -> Topology {
+        let spines = spines.min(racks).max(1);
+        let racks_per_spine = ((racks + spines - 1) / spines).max(1);
+        Topology { rack_of, racks, spines, racks_per_spine }
+    }
+
+    /// Is this the flat star (single rack)? Flat topologies add no tree
+    /// resources and are byte-identical to the pre-topology model.
+    pub fn is_flat(&self) -> bool {
+        self.racks <= 1
+    }
+
+    /// Rack count of the tree.
+    pub fn racks(&self) -> u32 {
+        self.racks
+    }
+
+    /// Spine-block count of the tree.
+    pub fn spines(&self) -> u32 {
+        self.spines
+    }
+
+    /// The rack node `n` lives in.
+    pub fn rack_of(&self, n: NodeHandle) -> RackId {
+        RackId(self.rack_of[n.index()])
+    }
+
+    /// The spine block node `n`'s rack hangs off.
+    pub fn spine_of(&self, n: NodeHandle) -> SpineId {
+        SpineId(self.rack_of[n.index()] / self.racks_per_spine)
+    }
+
+    /// Network relation between two nodes (which shared tiers a transfer
+    /// between them traverses).
+    pub fn path_between(&self, a: NodeHandle, b: NodeHandle) -> PathBetween {
+        if a == b {
+            PathBetween::SameNode
+        } else if self.rack_of(a) == self.rack_of(b) {
+            PathBetween::SameRack
+        } else if self.spine_of(a) == self.spine_of(b) {
+            PathBetween::SameSpine
+        } else {
+            PathBetween::CrossSpine
+        }
+    }
+
+    /// Hop distance of [`path_between`](Self::path_between): 0 loopback,
+    /// 1 in-rack, 2 rack-to-rack under one spine, 3 across spine blocks.
+    pub fn distance(&self, a: NodeHandle, b: NodeHandle) -> u32 {
+        match self.path_between(a, b) {
+            PathBetween::SameNode => 0,
+            PathBetween::SameRack => 1,
+            PathBetween::SameSpine => 2,
+            PathBetween::CrossSpine => 3,
+        }
+    }
+
+    /// How many *other* nodes of the allocation share node `n`'s rack —
+    /// the swarm peers reachable without crossing the ToR uplink.
+    pub fn in_rack_peers(&self, n: NodeHandle) -> usize {
+        let r = self.rack_of[n.index()];
+        self.rack_of.iter().filter(|&&x| x == r).count().saturating_sub(1)
+    }
+}
 
 /// The simulated cluster: a FluidSim plus the resource ids of every pipe.
 pub struct ClusterSim {
@@ -35,12 +192,27 @@ pub struct ClusterSim {
     pub slowdown: Vec<f64>,
     /// RNG stream for pipeline-level randomness (retries, placement).
     pub rng: Rng,
+    /// The node → rack → spine tree this allocation is placed over.
+    pub topo: Topology,
+    /// Per-rack ToR uplink pipes; empty on a flat topology.
+    pub rack_up: Vec<ResourceId>,
+    /// Spine-core pipe shared by cross-rack traffic; `None` when flat.
+    pub spine_core: Option<ResourceId>,
 }
 
 impl ClusterSim {
-    /// Build a cluster of `cfg.nodes` nodes; `seed` fixes all sampled
-    /// heterogeneity.
+    /// Build a cluster of `cfg.nodes` nodes with the default contiguous
+    /// rack placement; `seed` fixes all sampled heterogeneity.
     pub fn build(cfg: &ClusterConfig, seed: u64) -> ClusterSim {
+        ClusterSim::build_placed(cfg, seed, None)
+    }
+
+    /// Build a cluster over an explicit per-node rack `placement` (the
+    /// allocation the gang scheduler chose); `None` is the contiguous
+    /// default. The placement changes only topology pipes and membership —
+    /// node resources, service pipes and sampled slowdowns are identical
+    /// for a given `(cfg, seed)` regardless of placement.
+    pub fn build_placed(cfg: &ClusterConfig, seed: u64, placement: Option<&[u32]>) -> ClusterSim {
         let mut sim = FluidSim::new();
         let mut rng = Rng::seeded(seed);
         let slow_model = TailedSlowdown {
@@ -87,6 +259,34 @@ impl ClusterSim {
                 )
             })
             .collect();
+        // Topology pipes come last so the flat default (which creates
+        // none) leaves every pre-existing ResourceId — and therefore the
+        // deterministic bottleneck tie-break — untouched.
+        let topo = match placement {
+            Some(p) => Topology::placed(cfg, p),
+            None => Topology::of(cfg),
+        };
+        let mut rack_up = Vec::new();
+        let mut spine_core = None;
+        if !topo.is_flat() {
+            let rack_size = ((cfg.nodes + topo.racks() - 1) / topo.racks()).max(1);
+            let uplink_bps = if cfg.rack_uplink_bps > 0.0 {
+                cfg.rack_uplink_bps
+            } else {
+                // Auto: a non-blocking ToR for a full rack of nodes.
+                rack_size as f64 * cfg.node_nic_bps
+            };
+            for r in 0..topo.racks() {
+                rack_up
+                    .push(sim.add_resource(&format!("rack{r}.up"), Capacity::Fixed(uplink_bps)));
+            }
+            let core_bps = if cfg.spine_core_bps > 0.0 {
+                cfg.spine_core_bps
+            } else {
+                topo.racks() as f64 * uplink_bps / cfg.spine_oversub.max(1.0)
+            };
+            spine_core = Some(sim.add_resource("spine.core", Capacity::Fixed(core_bps)));
+        }
         ClusterSim {
             sim,
             cfg: cfg.clone(),
@@ -98,24 +298,61 @@ impl ClusterSim {
             hdfs_groups,
             slowdown,
             rng,
+            topo,
+            rack_up,
+            spine_core,
         }
     }
 
+    /// Node count of the allocation.
     pub fn nodes(&self) -> usize {
         self.node_nic.len()
     }
 
-    /// The DataNode group node `i`'s single-stream HDFS traffic lands on
+    /// Typed handle to node `i` (position in the allocation).
+    pub fn node(&self, i: usize) -> NodeHandle {
+        debug_assert!(i < self.nodes(), "node {i} out of range");
+        NodeHandle::new(i)
+    }
+
+    /// Handles to every node of the allocation, in position order.
+    pub fn handles(&self) -> Vec<NodeHandle> {
+        (0..self.nodes()).map(NodeHandle::new).collect()
+    }
+
+    /// Node `n`'s frontend NIC pipe.
+    pub fn nic(&self, n: NodeHandle) -> ResourceId {
+        self.node_nic[n.index()]
+    }
+
+    /// Node `n`'s local-disk pipe.
+    pub fn disk(&self, n: NodeHandle) -> ResourceId {
+        self.node_disk[n.index()]
+    }
+
+    /// The tree tiers a transfer between node `n` and the shared services
+    /// (registry, cluster cache, SCM, HDFS — all outside the racks)
+    /// traverses: the spine core plus `n`'s rack uplink. Empty on a flat
+    /// topology, so appending it to a flow path is a no-op there.
+    pub fn tier_path(&self, n: NodeHandle) -> Vec<ResourceId> {
+        match self.spine_core {
+            Some(core) => vec![core, self.rack_up[self.topo.rack_of(n).0 as usize]],
+            None => Vec::new(),
+        }
+    }
+
+    /// The DataNode group node `n`'s single-stream HDFS traffic lands on
     /// (round-robin by node — one definition shared by the FUSE planner,
     /// the env-cache restore and the speculative stager, so they can never
     /// disagree about placement).
-    pub fn hdfs_group_of(&self, node: NodeIdx) -> ResourceId {
-        self.hdfs_groups[node % self.hdfs_groups.len()]
+    pub fn hdfs_group_of(&self, n: NodeHandle) -> ResourceId {
+        self.hdfs_groups[n.index() % self.hdfs_groups.len()]
     }
 
-    /// CPU time for `nominal` seconds of work on `node` (slowdown applied).
-    pub fn cpu_time(&self, node: NodeIdx, nominal: f64) -> f64 {
-        nominal * self.slowdown[node]
+    /// CPU time for `nominal` seconds of work on node `n` (slowdown
+    /// applied).
+    pub fn cpu_time(&self, n: NodeHandle, nominal: f64) -> f64 {
+        nominal * self.slowdown[n.index()]
     }
 
     /// Aggregate HDFS egress capacity (all groups).
@@ -166,7 +403,7 @@ mod tests {
     fn cpu_time_scales_with_slowdown() {
         let cfg = ClusterConfig::with_nodes(2);
         let c = ClusterSim::build(&cfg, 11);
-        assert!((c.cpu_time(0, 10.0) - 10.0 * c.slowdown[0]).abs() < 1e-12);
+        assert!((c.cpu_time(c.node(0), 10.0) - 10.0 * c.slowdown[0]).abs() < 1e-12);
     }
 
     #[test]
@@ -189,5 +426,89 @@ mod tests {
             prop_assert!(c.slowdown.iter().all(|&s| s > 0.0 && s <= cfg.straggler_cap));
             Ok(())
         });
+    }
+
+    #[test]
+    fn flat_topology_creates_no_tree_resources() {
+        // The flat default must leave the resource table — and therefore
+        // every ResourceId and bottleneck tie-break — exactly as before
+        // the topology layer existed.
+        let cfg = ClusterConfig::with_nodes(8);
+        let flat = ClusterSim::build(&cfg, 5);
+        assert!(flat.topo.is_flat());
+        assert!(flat.rack_up.is_empty());
+        assert!(flat.spine_core.is_none());
+        assert!(flat.tier_path(flat.node(3)).is_empty());
+        let one_rack = ClusterConfig { racks: 1, spines: 1, ..cfg.clone() };
+        let explicit = ClusterSim::build(&one_rack, 5);
+        assert_eq!(flat.sim.resource_slots(), explicit.sim.resource_slots());
+        assert_eq!(flat.slowdown, explicit.slowdown);
+    }
+
+    #[test]
+    fn tree_membership_and_path_relations() {
+        let cfg = ClusterConfig { racks: 4, spines: 2, ..ClusterConfig::with_nodes(8) };
+        let c = ClusterSim::build(&cfg, 1);
+        assert!(!c.topo.is_flat());
+        assert_eq!(c.rack_up.len(), 4);
+        assert!(c.spine_core.is_some());
+        // Contiguous blocks of 2: nodes 0-1 rack 0, 2-3 rack 1, ...
+        assert_eq!(c.topo.rack_of(c.node(0)), RackId(0));
+        assert_eq!(c.topo.rack_of(c.node(3)), RackId(1));
+        assert_eq!(c.topo.rack_of(c.node(7)), RackId(3));
+        assert_eq!(c.topo.spine_of(c.node(0)), SpineId(0));
+        assert_eq!(c.topo.spine_of(c.node(7)), SpineId(1));
+        assert_eq!(c.topo.path_between(c.node(0), c.node(0)), PathBetween::SameNode);
+        assert_eq!(c.topo.path_between(c.node(0), c.node(1)), PathBetween::SameRack);
+        assert_eq!(c.topo.path_between(c.node(0), c.node(2)), PathBetween::SameSpine);
+        assert_eq!(c.topo.path_between(c.node(0), c.node(7)), PathBetween::CrossSpine);
+        assert_eq!(c.topo.distance(c.node(0), c.node(7)), 3);
+        assert_eq!(c.topo.in_rack_peers(c.node(0)), 1);
+        // tier_path lists the core then the node's own rack uplink.
+        let path = c.tier_path(c.node(5));
+        assert_eq!(path, vec![c.spine_core.unwrap(), c.rack_up[2]]);
+    }
+
+    #[test]
+    fn placed_topology_overrides_contiguous_blocks() {
+        let cfg = ClusterConfig { racks: 2, ..ClusterConfig::with_nodes(4) };
+        // Striped placement: alternate racks instead of contiguous halves.
+        let c = ClusterSim::build_placed(&cfg, 9, Some(&[0, 1, 0, 1]));
+        assert_eq!(c.topo.rack_of(c.node(1)), RackId(1));
+        assert_eq!(c.topo.rack_of(c.node(2)), RackId(0));
+        assert_eq!(c.topo.in_rack_peers(c.node(0)), 1);
+        // Placement never perturbs sampled heterogeneity.
+        let default = ClusterSim::build(&cfg, 9);
+        assert_eq!(c.slowdown, default.slowdown);
+        // Out-of-range racks clamp instead of panicking.
+        let clamped = Topology::placed(&cfg, &[0, 99]);
+        assert_eq!(clamped.rack_of(NodeHandle::new(1)), RackId(1));
+    }
+
+    #[test]
+    fn cross_spine_flow_respects_oversubscription_exactly() {
+        // Auto-sized core = racks x uplink / oversub. With the NIC and
+        // uplinks non-binding, a single service flow must finish in
+        // exactly bytes / core_bps.
+        let cfg = ClusterConfig {
+            racks: 4,
+            spines: 2,
+            node_nic_bps: 1.0e15,
+            rack_uplink_bps: 1.0e12,
+            spine_oversub: 8.0,
+            ..ClusterConfig::with_nodes(8)
+        };
+        let mut c = ClusterSim::build(&cfg, 1);
+        let core_bps = 4.0 * 1.0e12 / 8.0;
+        match c.sim.capacity(c.spine_core.unwrap()) {
+            Capacity::Fixed(b) => assert_eq!(*b, core_bps),
+            other => panic!("spine core must be a fixed pipe, got {other:?}"),
+        }
+        let n = c.node(0);
+        let mut path = vec![c.nic(n)];
+        path.extend(c.tier_path(n));
+        let t = c.sim.flow(8.0e12, path, &[], 0);
+        c.sim.run();
+        assert_eq!(c.sim.finished_at(t), 8.0e12 / core_bps);
     }
 }

@@ -8,5 +8,5 @@ pub mod engine;
 pub mod golden;
 pub mod reference;
 
-pub use cluster::ClusterSim;
+pub use cluster::{ClusterSim, NodeHandle, PathBetween, RackId, SpineId, Topology};
 pub use engine::{Capacity, Completion, FluidSim, ResourceId, TaskId, Work};

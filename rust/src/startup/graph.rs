@@ -39,7 +39,7 @@ use crate::artifact::manifest::ArtifactManifest;
 use crate::artifact::transfer::{admitted_peers, Admission, ProviderTier, TransferPlanner};
 use crate::config::OverlapMode;
 use crate::profiler::events::Stage;
-use crate::sim::{ClusterSim, TaskId};
+use crate::sim::{ClusterSim, NodeHandle, TaskId};
 use crate::startup::World;
 
 /// How a stage's per-node tasks attach to the stage before it.
@@ -350,7 +350,13 @@ impl<'p> StageGraph<'p> {
                                 // never joined (the join checks bytes > 0).
                                 return grants[i];
                             }
-                            provider.fetch(cs, i, bytes_v[i] as f64, &[grants[i]], 0)
+                            provider.fetch(
+                                cs,
+                                NodeHandle::new(i),
+                                bytes_v[i] as f64,
+                                &[grants[i]],
+                                0,
+                            )
                         })
                         .collect();
                     staged_bytes_total += bytes_v.iter().sum::<u64>();

@@ -131,6 +131,13 @@ pub struct StartupContext {
     /// Registry/cluster-cache admission limits for this startup (`None` —
     /// the default — admits everything: historical behaviour).
     pub admission: Option<Admission>,
+    /// Rack of each node of the allocation, as assigned by the replay's
+    /// gang placement over the topology tree
+    /// ([`crate::scheduler::RackPool`]). `None` — the default — uses the
+    /// cluster config's contiguous node→rack map, which on a flat
+    /// topology (`racks <= 1`) is byte-identical to the pre-topology
+    /// pipeline.
+    pub placement: Option<std::sync::Arc<Vec<u32>>>,
 }
 
 /// Run one startup of `job` on a fresh allocation, mutating `world`
@@ -181,7 +188,11 @@ pub fn run_startup_with(
 ) -> StartupOutcome {
     let nodes = job.nodes(cluster_cfg);
     let cluster = ClusterConfig { nodes, ..cluster_cfg.clone() };
-    let mut cs = ClusterSim::build(&cluster, seed ^ job_id.wrapping_mul(0x9E37_79B9));
+    let mut cs = ClusterSim::build_placed(
+        &cluster,
+        seed ^ job_id.wrapping_mul(0x9E37_79B9),
+        ctx.placement.as_ref().map(|p| p.as_slice()),
+    );
 
     let img = ImageSpec::synth(
         // Image identity: shared across jobs when the caller assigns one

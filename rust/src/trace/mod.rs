@@ -61,6 +61,18 @@
 //! [`ReplayResult::shed_rate`] summarize the economics, and
 //! [`crate::figures::cache_economics_sweep`] sweeps the capacity knee.
 //!
+//! A fifth axis — the **hierarchical topology** (`cluster.racks` /
+//! `cluster.spines` / `cluster.spine_oversub`; CLI `--racks`,
+//! `--spine-oversub`) — places every scheduled gang onto the rack tree
+//! with a chronological [`RackPool`] walk over phase 1's segments:
+//! best-fit single rack, greedy spill across the spine otherwise. Warm
+//! restarts re-pin their previous racks; relocated restarts pay
+//! `cluster.relocation_cost_s` scaled by how many nodes moved; and
+//! rack-scoped brownout windows (`faults.brownout_rack_frac`) only brown
+//! out the racks a gang actually spans. The flat default (`racks = 1`)
+//! takes none of these paths and replays byte-identically to the
+//! pre-topology engine; `docs/topology.md` has the design note.
+//!
 //! [`replay`] is the convenience wrapper with auto-sized pool and
 //! auto-detected threads; `bootseer trace --pool-gpus N --threads T`
 //! exposes both knobs.
@@ -70,12 +82,16 @@ use crate::artifact::manifest::ArtifactManifest;
 use crate::artifact::Admission;
 use crate::ckpt::resume::retained_resume_bytes_per_node;
 use crate::config::defaults as d;
-use crate::config::{BootseerConfig, ClusterConfig, JobConfig};
+use crate::config::{
+    BootseerConfig, CachePolicy, ClusterConfig, JobConfig, OverlapMode, RunConfig,
+};
 use crate::env::packages::PackageSet;
 use crate::faults::{BrownoutWindows, FaultConfig, FaultEngine};
 use crate::image::spec::ImageSpec;
 use crate::profiler::StageAnalysisService;
-use crate::scheduler::{schedule_chains_with, ChainJob, ChainOutcome, FaultOracle};
+use crate::scheduler::{
+    placement_distance, schedule_chains_with, ChainJob, ChainOutcome, FaultOracle, RackPool,
+};
 use crate::startup::{
     run_startup_with, StartupContext, StartupKind, StartupOutcome, World,
 };
@@ -526,6 +542,127 @@ pub struct ReplayOptions {
     /// [`crate::config::defaults::REPLAY_MAX_EPOCHS`]. Purely a
     /// performance knob: the replay is byte-identical at every value.
     pub epochs: usize,
+    /// Override the replayed [`BootseerConfig`]'s overlap mode; `None`
+    /// keeps the config's value. Applied once by
+    /// [`ReplayOptions::resolve`] at the top of [`replay_cluster`].
+    pub overlap: Option<OverlapMode>,
+    /// Override `bootseer.cache_capacity_bytes`; `None` keeps the config.
+    pub cache_capacity: Option<u64>,
+    /// Override `bootseer.cache_policy`; `None` keeps the config.
+    pub cache_policy: Option<CachePolicy>,
+    /// Override `cluster.racks` — the topology tree's rack count; `None`
+    /// keeps the config. Clamped to ≥ 1.
+    pub racks: Option<u32>,
+    /// Override `cluster.spine_oversub`; `None` keeps the config. Clamped
+    /// to ≥ 1.
+    pub spine_oversub: Option<f64>,
+}
+
+impl ReplayOptions {
+    /// The defaults (auto pool, auto threads, faults off, auto epochs, no
+    /// config overrides); chain the `with_*` setters from here.
+    pub fn new() -> ReplayOptions {
+        ReplayOptions::default()
+    }
+
+    /// Seed the options from a resolved [`RunConfig`]: the `[faults]`
+    /// table becomes the replayed fault processes, everything else keeps
+    /// its default. This is the single config → replay path; CLI flags
+    /// layer on top through the `with_*` setters, so an explicit flag
+    /// always beats the file.
+    pub fn from_config(rc: &RunConfig) -> ReplayOptions {
+        ReplayOptions { faults: rc.faults.clone(), ..ReplayOptions::default() }
+    }
+
+    /// GPU pool the scheduler allocates from (`None` → demand-sized).
+    pub fn with_pool_gpus(mut self, pool_gpus: Option<u32>) -> ReplayOptions {
+        self.pool_gpus = pool_gpus;
+        self
+    }
+
+    /// Worker threads for the parallel replay (0 → one per core).
+    pub fn with_threads(mut self, threads: usize) -> ReplayOptions {
+        self.threads = threads;
+        self
+    }
+
+    /// Fault-injection processes layered over the replay.
+    pub fn with_faults(mut self, faults: FaultConfig) -> ReplayOptions {
+        self.faults = faults;
+        self
+    }
+
+    /// Phase-2 timeline epochs (0 → auto-shard daily).
+    pub fn with_epochs(mut self, epochs: usize) -> ReplayOptions {
+        self.epochs = epochs;
+        self
+    }
+
+    /// Override the replayed overlap mode.
+    pub fn with_overlap(mut self, overlap: OverlapMode) -> ReplayOptions {
+        self.overlap = Some(overlap);
+        self
+    }
+
+    /// Override the bounded-cache economics knobs.
+    pub fn with_cache(mut self, capacity_bytes: u64, policy: CachePolicy) -> ReplayOptions {
+        self.cache_capacity = Some(capacity_bytes);
+        self.cache_policy = Some(policy);
+        self
+    }
+
+    /// Override the topology's rack count (CLI `--racks`).
+    pub fn with_racks(mut self, racks: u32) -> ReplayOptions {
+        self.racks = Some(racks);
+        self
+    }
+
+    /// Override the spine oversubscription factor (CLI `--spine-oversub`).
+    pub fn with_spine_oversub(mut self, oversub: f64) -> ReplayOptions {
+        self.spine_oversub = Some(oversub);
+        self
+    }
+
+    /// Apply the overrides to the configs the replay was handed and
+    /// return the effective pair. All-`None` options return bit-equal
+    /// clones and the application is idempotent; [`replay_cluster`] calls
+    /// this once at its top, so callers never need to.
+    pub fn resolve(
+        &self,
+        cluster: &ClusterConfig,
+        cfg: &BootseerConfig,
+    ) -> (ClusterConfig, BootseerConfig) {
+        let mut cl = cluster.clone();
+        if let Some(r) = self.racks {
+            cl.racks = r.max(1);
+        }
+        if let Some(o) = self.spine_oversub {
+            cl.spine_oversub = o.max(1.0);
+        }
+        let mut bc = cfg.clone();
+        if let Some(m) = self.overlap {
+            bc.overlap = m;
+        }
+        if let Some(c) = self.cache_capacity {
+            bc.cache_capacity_bytes = c;
+        }
+        if let Some(p) = self.cache_policy {
+            bc.cache_policy = p;
+        }
+        (cl, bc)
+    }
+
+    /// Pre-builder positional constructor, kept as a thin shim; new code
+    /// should chain [`ReplayOptions::new`] with the `with_*` setters.
+    #[deprecated(note = "use ReplayOptions::new() and the with_* builder setters")]
+    pub fn from_parts(
+        pool_gpus: Option<u32>,
+        threads: usize,
+        faults: FaultConfig,
+        epochs: usize,
+    ) -> ReplayOptions {
+        ReplayOptions { pool_gpus, threads, faults, epochs, ..ReplayOptions::default() }
+    }
 }
 
 /// One independent simulation unit of phase 2.
@@ -556,6 +693,15 @@ struct Unit {
     /// [`SharedWorld`] it observes and its slot in the epoch-major issue
     /// order.
     epoch: usize,
+    /// Rack of each node of this startup's gang, assigned by the
+    /// chronological [`RackPool`] walk over phase 1's segments. `None` on
+    /// a flat topology — the placement-free (pre-topology) pipeline.
+    placement: Option<Arc<Vec<u32>>>,
+    /// Relocation cost a rescheduled restart pays
+    /// (`cluster.relocation_cost_s` × moved-node fraction), folded into
+    /// its allocation phase. 0 on flat topologies, on cold first starts,
+    /// and on warm restarts that kept their racks.
+    relocation_s: f64,
 }
 
 /// Per-startup effective service capacities: the seed per-job entitlement,
@@ -584,6 +730,10 @@ pub fn replay_cluster(
     seed: u64,
     opts: &ReplayOptions,
 ) -> ReplayResult {
+    // Single config → replay override path: builder / CLI overrides fold
+    // into the effective configs exactly once, here.
+    let resolved = opts.resolve(cluster, cfg);
+    let (cluster, cfg) = (&resolved.0, &resolved.1);
     if trace.is_empty() {
         return ReplayResult {
             svc: StageAnalysisService::new(),
@@ -672,6 +822,8 @@ pub fn replay_cluster(
                 warm_local: false,
                 demand: 0,
                 epoch: 0,
+                placement: None,
+                relocation_s: 0.0,
             });
             continue;
         }
@@ -699,6 +851,8 @@ pub fn replay_cluster(
                 warm_local,
                 demand: 0,
                 epoch: 0,
+                placement: None,
+                relocation_s: 0.0,
             });
             if s.interrupted {
                 retry += 1;
@@ -731,7 +885,79 @@ pub fn replay_cluster(
                 warm_local: false,
                 demand: 0,
                 epoch: 0,
+                placement: None,
+                relocation_s: 0.0,
             });
+        }
+    }
+
+    // ---- Topology-aware gang placement over the rack tree ----
+    // Phase 1 fixed every full startup's interval; a chronological walk
+    // over those segments assigns each gang racks from a shared
+    // [`RackPool`] (best-fit single rack, greedy spill across the spine
+    // otherwise). Warm restarts re-pin their previous racks; relocated
+    // restarts pay `cluster.relocation_cost_s` scaled by how many nodes
+    // moved; hot updates inherit the job's allocation. On a flat topology
+    // (`racks <= 1`) none of this runs and every placement stays `None` —
+    // byte-identical to the placement-free replay.
+    if cluster.racks > 1 {
+        let mut pool = RackPool::new(sched.pool_gpus, cluster.racks);
+        let mut full: Vec<usize> =
+            (0..units.len()).filter(|&i| units[i].kind == StartupKind::Full).collect();
+        full.sort_by(|&a, &b| {
+            units[a]
+                .start_s
+                .total_cmp(&units[b].start_s)
+                .then(units[a].job_idx.cmp(&units[b].job_idx))
+                .then(units[a].attempt.cmp(&units[b].attempt))
+        });
+        // Gangs currently holding racks, keyed by segment end.
+        let mut active: Vec<(f64, usize)> = Vec::new();
+        let mut prev_of: Vec<Option<Arc<Vec<u32>>>> = vec![None; trace.len()];
+        for &i in &full {
+            let now = units[i].start_s;
+            // Return every gang whose segment ended by `now`.
+            let mut still = Vec::with_capacity(active.len());
+            for (end, ui) in active.drain(..) {
+                if end <= now {
+                    if let Some(p) = &units[ui].placement {
+                        pool.release(p, trace[units[ui].job_idx].gpus, cluster.gpus_per_node);
+                    }
+                } else {
+                    still.push((end, ui));
+                }
+            }
+            active = still;
+            let j = units[i].job_idx;
+            let gpus = trace[j].gpus;
+            let placement = match (&prev_of[j], units[i].warm_local) {
+                (Some(prev), true) => {
+                    // The fault oracle already ruled this restart lands
+                    // back on its nodes: re-pin the previous racks.
+                    let prev = Arc::clone(prev);
+                    pool.take(&prev, gpus, cluster.gpus_per_node);
+                    prev
+                }
+                (prev, _) => {
+                    let placed = Arc::new(pool.place(gpus, cluster.gpus_per_node));
+                    if units[i].retry > 0 {
+                        if let Some(prev) = prev {
+                            let moved = placement_distance(prev, &placed) as f64;
+                            units[i].relocation_s =
+                                cluster.relocation_cost_s * moved / placed.len().max(1) as f64;
+                        }
+                    }
+                    placed
+                }
+            };
+            prev_of[j] = Some(Arc::clone(&placement));
+            units[i].placement = Some(placement);
+            active.push((units[i].start_s + units[i].seg_len_s, i));
+        }
+        for u in units.iter_mut() {
+            if u.kind == StartupKind::HotUpdate {
+                u.placement = prev_of[u.job_idx].clone();
+            }
         }
     }
 
@@ -824,9 +1050,19 @@ pub fn replay_cluster(
                 .or_insert_with(|| effective_cluster(cluster, nodes, avg_active))
                 .clone();
             if !brownouts.is_empty() {
-                let f = *brown_memo
-                    .entry((u.start_s.to_bits(), end.to_bits()))
-                    .or_insert_with(|| brownouts.capacity_scale(u.start_s, end));
+                let f = if let (true, Some(p)) = (brownouts.scoped(), &u.placement) {
+                    // Rack-scoped windows weigh in by the racks this gang
+                    // actually spans; the key is per-placement, so skip
+                    // the interval memo and compute directly.
+                    let mut racks: Vec<u32> = p.iter().copied().collect();
+                    racks.sort_unstable();
+                    racks.dedup();
+                    brownouts.capacity_scale_racks(u.start_s, end, &racks)
+                } else {
+                    *brown_memo
+                        .entry((u.start_s.to_bits(), end.to_bits()))
+                        .or_insert_with(|| brownouts.capacity_scale(u.start_s, end))
+                };
                 if f < 1.0 {
                     u.eff_cluster.registry_egress_bps *= f;
                     u.eff_cluster.cluster_cache_egress_bps *= f;
@@ -894,7 +1130,10 @@ pub fn replay_cluster(
             ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
             ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A);
         let (queue_s, alloc_s) = if u.kind == StartupKind::Full {
-            (u.queue_s, d::ALLOC_BASE_S + 0.02 * nodes_of[u.job_idx] as f64)
+            // A relocated restart pays its placement-distance cost in the
+            // allocation phase; `relocation_s` is 0.0 everywhere else, so
+            // the flat replay stays bit-identical.
+            (u.queue_s, d::ALLOC_BASE_S + 0.02 * nodes_of[u.job_idx] as f64 + u.relocation_s)
         } else {
             (0.0, 0.0)
         };
@@ -931,7 +1170,13 @@ pub fn replay_cluster(
             &mut world,
             u.kind,
             unit_seed,
-            StartupContext { queue_s, alloc_s, cache, admission },
+            StartupContext {
+                queue_s,
+                alloc_s,
+                cache,
+                admission,
+                placement: u.placement.clone(),
+            },
         )
     };
     // Epoch-major issue order: workers drain epoch 0's units first, then
@@ -1092,7 +1337,7 @@ mod tests {
     /// [`ReplayOptions`] with explicit pool/threads/faults and the default
     /// (auto) epoch count.
     fn opts(pool_gpus: Option<u32>, threads: usize, faults: FaultConfig) -> ReplayOptions {
-        ReplayOptions { pool_gpus, threads, faults, epochs: 0 }
+        ReplayOptions::new().with_pool_gpus(pool_gpus).with_threads(threads).with_faults(faults)
     }
 
     #[test]
@@ -1239,7 +1484,7 @@ mod tests {
                 &cluster,
                 &BootseerConfig { overlap: mode, ..BootseerConfig::bootseer() },
                 11,
-                &ReplayOptions { pool_gpus: None, threads, faults, epochs },
+                &ReplayOptions::new().with_threads(threads).with_faults(faults).with_epochs(epochs),
             );
             let mut stream: Vec<u64> = vec![
                 r.startup_gpu_hours.to_bits(),
@@ -1833,7 +2078,10 @@ mod tests {
                     &cluster,
                     &cfg,
                     11,
-                    &ReplayOptions { pool_gpus: None, threads, faults: hot_storm(), epochs },
+                    &ReplayOptions::new()
+                        .with_threads(threads)
+                        .with_faults(hot_storm())
+                        .with_epochs(epochs),
                 )
             };
             // Eviction/churn/shedding state crossed with epoch sharding:
@@ -2002,5 +2250,223 @@ mod tests {
         );
         assert_eq!(extra, nodes * bounded.evicted_bytes);
         assert_eq!(unbounded.evicted_bytes, 0);
+    }
+
+    // ---- hierarchical topology ----
+
+    /// Flat-topology byte-identity golden: a cluster that *sets* every
+    /// tree knob but keeps `racks = 1` replays bit-identically to the
+    /// default flat cluster across every overlap mode and fault preset —
+    /// the knobs must be completely inert until a second rack exists.
+    #[test]
+    fn flat_topology_replay_is_byte_identical() {
+        use crate::config::OverlapMode;
+        let t = gen_trace(6, 30, 86400.0);
+        let plain = ClusterConfig::default();
+        let knobbed = ClusterConfig {
+            racks: 1,
+            spines: 1,
+            rack_uplink_bps: 40.0e9 / 8.0,
+            spine_oversub: 8.0,
+            relocation_cost_s: 99.0,
+            ..ClusterConfig::default()
+        };
+        for mode in OverlapMode::ALL {
+            let cfg = BootseerConfig { overlap: mode, ..BootseerConfig::bootseer() };
+            for faults in [FaultConfig::off(), hot_faults(), hot_storm()] {
+                let a = replay_cluster(&t, &plain, &cfg, 11, &opts(None, 2, faults.clone()));
+                let b = replay_cluster(&t, &knobbed, &cfg, 11, &opts(None, 2, faults.clone()));
+                assert_eq!(
+                    a.startup_gpu_hours.to_bits(),
+                    b.startup_gpu_hours.to_bits(),
+                    "{mode:?}: flat tree knobs must be inert"
+                );
+                assert_eq!(
+                    a.wasted_gpu_hours().to_bits(),
+                    b.wasted_gpu_hours().to_bits(),
+                    "{mode:?}"
+                );
+                for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                    assert_eq!(x.startup_worker_s, y.startup_worker_s, "{mode:?}");
+                    assert_eq!(x.startup_fetched_bytes, y.startup_fetched_bytes, "{mode:?}");
+                }
+            }
+        }
+        // The builder's override path resolves to the same bits as the
+        // config it overrides.
+        let cfg = BootseerConfig::bootseer();
+        let via_opts = replay_cluster(
+            &t,
+            &knobbed,
+            &cfg,
+            11,
+            &ReplayOptions::new().with_racks(1).with_spine_oversub(8.0).with_threads(2),
+        );
+        let direct = replay_cluster(&t, &knobbed, &cfg, 11, &opts(None, 2, FaultConfig::off()));
+        assert_eq!(
+            via_opts.startup_gpu_hours.to_bits(),
+            direct.startup_gpu_hours.to_bits(),
+            "ReplayOptions overrides must equal the same values set in the config"
+        );
+    }
+
+    /// Thread / epoch / rerun determinism of the topology-aware replay:
+    /// placements, relocation costs and rack-scoped brownout scales are
+    /// all computed before the parallel phase, so a 4-rack replay stays
+    /// bit-identical at every (threads, epochs) and across reruns.
+    #[test]
+    fn topology_replay_deterministic_across_threads_and_epochs() {
+        let t = gen_trace(6, 30, 86400.0);
+        let cluster =
+            ClusterConfig { racks: 4, spines: 2, spine_oversub: 4.0, ..ClusterConfig::default() };
+        let cfg = BootseerConfig::bootseer();
+        let faults = FaultConfig { brownout_rack_frac: 0.5, ..hot_storm() };
+        let run = |threads: usize, epochs: usize| {
+            replay_cluster(
+                &t,
+                &cluster,
+                &cfg,
+                11,
+                &ReplayOptions::new()
+                    .with_threads(threads)
+                    .with_faults(faults.clone())
+                    .with_epochs(epochs),
+            )
+        };
+        let one = run(1, 1);
+        let four = run(4, 13);
+        assert!(one.fault_restarts > 0, "storm fired");
+        assert_eq!(one.startup_gpu_hours.to_bits(), four.startup_gpu_hours.to_bits());
+        assert_eq!(one.lost_train_gpu_hours.to_bits(), four.lost_train_gpu_hours.to_bits());
+        assert_eq!(one.queue_waits, four.queue_waits);
+        for (a, b) in one.jobs.iter().zip(&four.jobs) {
+            assert_eq!(a.startup_worker_s, b.startup_worker_s);
+            assert_eq!(a.startup_fetched_bytes, b.startup_fetched_bytes);
+        }
+        let again = run(4, 13);
+        assert_eq!(again.wasted_gpu_hours().to_bits(), four.wasted_gpu_hours().to_bits());
+    }
+
+    /// Rack-scoped brownouts are strictly gentler than fleet-wide ones on
+    /// a multi-rack cluster (each window only browns out a subset of the
+    /// racks a gang spans) and never cheaper than no brownouts at all.
+    #[test]
+    fn rack_scoped_brownouts_are_gentler_than_fleet_wide() {
+        let t = gen_trace(8, 20, 43200.0);
+        let cluster = ClusterConfig { racks: 8, ..ClusterConfig::default() };
+        let cfg = BootseerConfig::baseline();
+        let brown = |rack_frac: f64| FaultConfig {
+            brownouts_per_week: 2000.0,
+            brownout_duration_s: 7200.0,
+            brownout_capacity_factor: 0.15,
+            brownout_rack_frac: rack_frac,
+            hazard_per_gpu_hour: 0.0,
+            straggler_prob: 0.0,
+            ..FaultConfig::paper()
+        };
+        let calm = replay_cluster(&t, &cluster, &cfg, 3, &opts(None, 2, FaultConfig::off()));
+        let fleet = replay_cluster(&t, &cluster, &cfg, 3, &opts(None, 2, brown(0.0)));
+        let scoped = replay_cluster(&t, &cluster, &cfg, 3, &opts(None, 2, brown(0.3)));
+        assert!(
+            scoped.startup_gpu_hours < fleet.startup_gpu_hours,
+            "scoping to 30% of racks must soften the brownout: {} vs {}",
+            scoped.startup_gpu_hours,
+            fleet.startup_gpu_hours
+        );
+        assert!(
+            scoped.startup_gpu_hours >= calm.startup_gpu_hours,
+            "scoped brownouts still cost something: {} vs {}",
+            scoped.startup_gpu_hours,
+            calm.startup_gpu_hours
+        );
+        // Identical schedules throughout: brownouts never crash jobs.
+        assert_eq!(scoped.queue_waits, fleet.queue_waits);
+        assert_eq!(scoped.fault_restarts, 0);
+    }
+
+    /// On a multi-rack cluster, forcing every restart to relocate (cold
+    /// caches + placement-distance cost) wastes strictly more GPU-time
+    /// than letting every restart land warm on its previous racks, under
+    /// the same crash schedule.
+    #[test]
+    fn relocated_restarts_waste_more_on_a_multi_rack_cluster() {
+        let t = vec![TraceJob {
+            id: 1,
+            submit_s: 0.0,
+            gpus: 128,
+            full_startups: 1,
+            hot_updates: 0,
+            train_hours: 40.0,
+            priority: 1,
+            image_id: 7,
+        }];
+        let cluster = ClusterConfig { racks: 4, ..ClusterConfig::default() };
+        let run = |relocate: f64| {
+            let faults = FaultConfig {
+                hazard_per_gpu_hour: 2.0e-3,
+                relocate_prob: relocate,
+                straggler_prob: 0.0,
+                brownouts_per_week: 0.0,
+                ..FaultConfig::paper()
+            };
+            let cfg = BootseerConfig::bootseer();
+            replay_cluster(&t, &cluster, &cfg, 11, &opts(Some(256), 1, faults))
+        };
+        let warm = run(0.0);
+        let cold = run(1.0);
+        assert!(warm.fault_restarts >= 1, "restarts fired: {}", warm.fault_restarts);
+        assert_eq!(warm.fault_restarts, cold.fault_restarts, "same crash schedule");
+        assert!(
+            cold.startup_gpu_hours > warm.startup_gpu_hours,
+            "relocation must cost: {} vs {}",
+            cold.startup_gpu_hours,
+            warm.startup_gpu_hours
+        );
+    }
+
+    // ---- ReplayOptions builder ----
+
+    #[test]
+    fn resolve_applies_overrides_and_is_idempotent() {
+        use crate::config::{CachePolicy, OverlapMode};
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::baseline();
+        let o = ReplayOptions::new()
+            .with_racks(8)
+            .with_spine_oversub(4.0)
+            .with_overlap(OverlapMode::Speculative)
+            .with_cache(1_000_000_000, CachePolicy::PinHotSet);
+        let (cl, bc) = o.resolve(&cluster, &cfg);
+        assert_eq!(cl.racks, 8);
+        assert_eq!(cl.spine_oversub, 4.0);
+        assert_eq!(bc.overlap, OverlapMode::Speculative);
+        assert_eq!(bc.cache_capacity_bytes, 1_000_000_000);
+        assert_eq!(bc.cache_policy, CachePolicy::PinHotSet);
+        let (cl2, bc2) = o.resolve(&cl, &bc);
+        assert_eq!(cl2.racks, cl.racks);
+        assert_eq!(cl2.spine_oversub.to_bits(), cl.spine_oversub.to_bits());
+        assert_eq!(bc2.cache_capacity_bytes, bc.cache_capacity_bytes);
+        // No overrides → bit-equal clones of the inputs.
+        let (cl3, bc3) = ReplayOptions::new().resolve(&cluster, &cfg);
+        assert_eq!(cl3.racks, cluster.racks);
+        assert_eq!(cl3.spine_core_bps.to_bits(), cluster.spine_core_bps.to_bits());
+        assert_eq!(bc3.cache_capacity_bytes, cfg.cache_capacity_bytes);
+        assert_eq!(bc3.overlap, cfg.overlap);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_from_parts_matches_the_builder() {
+        let a = ReplayOptions::from_parts(Some(64), 3, FaultConfig::off(), 7);
+        let b = ReplayOptions::new()
+            .with_pool_gpus(Some(64))
+            .with_threads(3)
+            .with_faults(FaultConfig::off())
+            .with_epochs(7);
+        assert_eq!(a.pool_gpus, b.pool_gpus);
+        assert_eq!(a.threads, b.threads);
+        assert_eq!(a.epochs, b.epochs);
+        assert!(a.racks.is_none() && b.racks.is_none());
+        assert!(a.overlap.is_none() && a.cache_capacity.is_none());
     }
 }
