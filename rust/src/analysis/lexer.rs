@@ -1,0 +1,366 @@
+//! Minimal Rust lexer for the detlint pass.
+//!
+//! Deliberately not a full Rust grammar: the rules in
+//! [`crate::analysis::rules`] need identifier/number/punct tokens with line
+//! numbers, comments (for suppression directives and doc detection),
+//! and `#[cfg(test)] mod … { }` region boundaries — nothing more. String
+//! and char literals are consumed and *dropped* so rule vocabulary can
+//! never match text inside a string; comments are kept on a separate
+//! channel. Kept in lockstep with the Python twin used to verify the
+//! tree-clean state in toolchain-less containers (see `docs/detlint.md`).
+
+/// Token kind. `Life` is a lifetime tick (`'a`), kept distinct so char
+/// literals and lifetimes can't be confused downstream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Punct,
+    Life,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: TokKind,
+    pub text: String,
+}
+
+/// One comment (line or block) with its starting line. `doc` marks
+/// `///` / `//!` / `/**` / `/*!` forms; `trailing` marks a comment with
+/// code earlier on the same line (a trailing suppression directive applies
+/// to its own line, a standalone one to the next code line).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+    pub doc: bool,
+    pub trailing: bool,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Does a raw/byte-raw string literal start at `i` (`r"`, `r#"`,
+/// `br##"` …)? Returns the index just past the opening quote and the hash
+/// count.
+fn raw_string_open(src: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if src.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if src.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while src.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if src.get(j) == Some(&b'"') {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Lex `src` into (tokens, comments). Never fails: unknown bytes become
+/// single-char punct tokens, unterminated literals consume to EOF.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut line_had_code = false;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            line_had_code = false;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if b[i..].starts_with(b"//") {
+            let j = src[i..].find('\n').map(|k| i + k).unwrap_or(n);
+            let text = &src[i..j];
+            let doc = text.starts_with("///") || text.starts_with("//!");
+            comments.push(Comment { line, text: text.to_string(), doc, trailing: line_had_code });
+            i = j;
+            continue;
+        }
+        // Block comment (nested).
+        if b[i..].starts_with(b"/*") {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if b[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            let text = &src[i..j];
+            let doc = text.starts_with("/**") || text.starts_with("/*!");
+            comments.push(Comment {
+                line: start_line,
+                text: text.to_string(),
+                doc,
+                trailing: line_had_code,
+            });
+            i = j;
+            continue;
+        }
+        // Raw / byte-raw string.
+        if let Some((body, hashes)) = raw_string_open(b, i) {
+            let mut close = String::with_capacity(1 + hashes);
+            close.push('"');
+            for _ in 0..hashes {
+                close.push('#');
+            }
+            let j = match src[body..].find(&close) {
+                Some(k) => body + k + close.len(),
+                None => n,
+            };
+            line += src[i..j].matches('\n').count() as u32;
+            line_had_code = true;
+            i = j;
+            continue;
+        }
+        // Plain / byte string.
+        if c == b'"' || b[i..].starts_with(b"b\"") {
+            let mut j = i + if c == b'"' { 1 } else { 2 };
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'"' {
+                    j += 1;
+                    break;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            line_had_code = true;
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            // `'ident` NOT followed by a closing quote is a lifetime.
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                let mut j = i + 2;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                if b.get(j) != Some(&b'\'') {
+                    toks.push(Tok { line, kind: TokKind::Life, text: src[i..j].to_string() });
+                    line_had_code = true;
+                    i = j;
+                    continue;
+                }
+            }
+            // Char literal: escape form or any single (possibly multi-byte)
+            // char up to the closing quote.
+            let mut j = i + 1;
+            if j < n && b[j] == b'\\' {
+                j += 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                j += 1;
+            } else {
+                j = match src[j..].find('\'') {
+                    Some(k) => j + k + 1,
+                    None => n,
+                };
+            }
+            line_had_code = true;
+            i = j.min(n);
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok { line, kind: TokKind::Ident, text: src[i..j].to_string() });
+            line_had_code = true;
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n
+                && (b[j].is_ascii_alphanumeric() || b[j] == b'_' || b[j] == b'.')
+            {
+                j += 1;
+            }
+            let mut text = &src[i..j];
+            // Trim trailing range dots: `0..n` lexes as `0`, `.`, `.`, `n`.
+            if let Some(k) = text.find("..") {
+                text = &text[..k];
+            }
+            toks.push(Tok { line, kind: TokKind::Num, text: text.to_string() });
+            line_had_code = true;
+            i += text.len();
+            continue;
+        }
+        toks.push(Tok { line, kind: TokKind::Punct, text: (c as char).to_string() });
+        line_had_code = true;
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// Line ranges covered by `#[cfg(test)] mod … { … }` blocks. Rules that
+/// guard runtime determinism (R1, R4, R5) skip these; test-only scaffolding
+/// may hash and cast freely.
+pub fn test_regions(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    let n = toks.len();
+    while i < n {
+        let is_cfg_test = toks[i].text == "#"
+            && i + 6 < n
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+            && toks[i + 5].text == ")"
+            && toks[i + 6].text == "]";
+        if is_cfg_test {
+            // `mod` must follow within a few tokens (other attrs allowed).
+            let j = i + 7;
+            let mut found = None;
+            let mut k = j;
+            while k < (j + 24).min(n) {
+                if toks[k].text == "mod" {
+                    found = Some(k);
+                    break;
+                }
+                k += 1;
+            }
+            if let Some(m) = found {
+                let mut bidx = m;
+                while bidx < n && toks[bidx].text != "{" {
+                    bidx += 1;
+                }
+                let mut depth = 0usize;
+                let mut e = bidx;
+                while e < n {
+                    if toks[e].text == "{" {
+                        depth += 1;
+                    } else if toks[e].text == "}" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    e += 1;
+                }
+                if bidx < n {
+                    let end_line =
+                        if e < n { toks[e].line } else { toks[n - 1].line };
+                    regions.push((toks[bidx].line, end_line));
+                }
+                i = e + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    regions
+}
+
+/// Is `line` inside any of `regions`?
+pub fn in_regions(regions: &[(u32, u32)], line: u32) -> bool {
+    regions.iter().any(|&(lo, hi)| lo <= line && line <= hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src).0.into_iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_chars_are_dropped() {
+        let src = r#"let x = "Instant inside a string"; let c = 'h'; let l: &'a str = y;"#;
+        let ids = idents(src);
+        assert!(!ids.contains(&"Instant".to_string()), "{ids:?}");
+        assert!(ids.contains(&"x".to_string()));
+        // The lifetime is a Life token, not an Ident and not a char.
+        let (toks, _) = lex(src);
+        assert!(toks.iter().any(|t| t.kind == TokKind::Life && t.text == "'a"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let src = "let a = r#\"HashMap \" inside\"#; let b = \"esc \\\" quote\"; let q = '\\'';";
+        assert!(!idents(src).contains(&"HashMap".to_string()));
+        assert!(idents(src).contains(&"q".to_string()));
+    }
+
+    #[test]
+    fn comments_keep_channel_and_trailing_flag() {
+        let src = "let x = 1; // detlint::allow(a, \"b\")\n// standalone\nlet y = 2;\n";
+        let (_, comments) = lex(src);
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].trailing);
+        assert!(!comments[1].trailing);
+        assert_eq!(comments[1].line, 2);
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let src = "/* outer /* inner */ still */\nlet z = 3;\n";
+        let (toks, comments) = lex(src);
+        assert_eq!(comments.len(), 1);
+        assert!(toks.iter().any(|t| t.text == "z" && t.line == 2));
+    }
+
+    #[test]
+    fn numbers_stop_at_range_dots() {
+        let (toks, _) = lex("for i in 0..n { let h = 0xA272_0001; }");
+        let nums: Vec<&str> =
+            toks.iter().filter(|t| t.kind == TokKind::Num).map(|t| t.text.as_str()).collect();
+        assert_eq!(nums, ["0", "0xA272_0001"]);
+    }
+
+    #[test]
+    fn test_region_brace_matching() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n fn b() { let x = 1; }\n}\nfn c() {}\n";
+        let (toks, _) = lex(src);
+        let regions = test_regions(&toks);
+        assert_eq!(regions.len(), 1);
+        assert!(in_regions(&regions, 4));
+        assert!(!in_regions(&regions, 6));
+    }
+}

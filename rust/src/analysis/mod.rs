@@ -1,0 +1,490 @@
+//! `detlint` — in-tree determinism & accounting static analysis.
+//!
+//! The replay core promises that every simulated quantity is a pure
+//! function of (seed, identity). That promise is easy to break silently:
+//! a `HashMap` iteration order reaching a result, a wall-clock read, a
+//! salt constant duplicated under two names, a float sum over unordered
+//! iteration, or a quiet `as` truncation in byte accounting. This module
+//! scans the repo's own Rust sources for those patterns with a lightweight
+//! lexer ([`lexer`]) and a small rule engine ([`rules`]), and the
+//! `detlint` binary (`tools/detlint.rs`) gates CI on the result.
+//!
+//! Structure: [`Analyzer`] accumulates per-file scans (so fixtures can
+//! feed sources directly) plus tree-wide salt state; [`Analyzer::finish`]
+//! runs the cross-file passes and yields a [`Report`] that renders as
+//! human text or JSON. [`run_tree`] walks `rust/src`, `tools`, `benches`,
+//! and `examples` in sorted order.
+//!
+//! A dependency-free Python twin of the lexer + rules is kept in lockstep
+//! for pre-verifying the tree in containers without a Rust toolchain; see
+//! `docs/detlint.md`.
+
+pub mod lexer;
+pub mod rules;
+
+use crate::util::json::Json;
+use rules::{all_rules, finish_salts, parse_allows, FileCtx, Finding, SaltDecl, RULE_IDS};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Incremental scan state: feed files with [`scan_source`], then call
+/// [`finish`] for the cross-file passes and the final [`Report`].
+///
+/// [`scan_source`]: Analyzer::scan_source
+/// [`finish`]: Analyzer::finish
+pub struct Analyzer {
+    rules: Vec<Box<dyn rules::Rule>>,
+    salts: Vec<SaltDecl>,
+    findings: Vec<Finding>,
+    files: usize,
+}
+
+impl Default for Analyzer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Analyzer {
+    pub fn new() -> Analyzer {
+        Analyzer { rules: all_rules(), salts: Vec::new(), findings: Vec::new(), files: 0 }
+    }
+
+    /// Scan one file. `path` must be repo-relative with `/` separators —
+    /// rule scoping (registry file, R3 allowlist, `rust/src/` gating) keys
+    /// off it.
+    pub fn scan_source(&mut self, path: &str, src: &str) {
+        self.files += 1;
+        let (toks, comments) = lexer::lex(src);
+        let tests = lexer::test_regions(&toks);
+        let mut allows = parse_allows(path, &comments, &toks, &mut self.findings);
+        let ctx = FileCtx {
+            path,
+            toks: &toks,
+            comments: &comments,
+            tests: &tests,
+            is_src: path.starts_with("rust/src/"),
+        };
+        let mut raw = Vec::new();
+        for rule in &self.rules {
+            rule.check(&ctx, &mut self.salts, &mut raw);
+        }
+        // Suppression pass: an allow matches on (rule, target line) and
+        // covers every finding of that rule on the line.
+        for mut f in raw {
+            if let Some(a) =
+                allows.iter_mut().find(|a| a.rule == f.rule && a.target == f.line)
+            {
+                a.used = true;
+                f.suppressed = Some(a.reason.clone());
+            }
+            self.findings.push(f);
+        }
+        // Allow audit: unknown rule ids and allows that suppress nothing.
+        for a in &allows {
+            if !RULE_IDS.contains(&a.rule.as_str()) {
+                let msg = format!("allow names unknown rule `{}`", a.rule);
+                self.findings.push(audit(path, a.line, msg));
+            } else if !a.used {
+                let msg = format!("allow({}) suppresses nothing", a.rule);
+                self.findings.push(audit(path, a.line, msg));
+            }
+        }
+    }
+
+    /// Run the tree-wide passes (salt uniqueness/documentation) and return
+    /// the report.
+    pub fn finish(mut self) -> Report {
+        finish_salts(&self.salts, &mut self.findings);
+        Report { findings: self.findings, files: self.files }
+    }
+}
+
+fn audit(path: &str, line: u32, message: String) -> Finding {
+    Finding {
+        rule: "allow-audit",
+        file: path.to_string(),
+        line,
+        message,
+        suggestion: rules::suggestion_for("allow-audit"),
+        suppressed: None,
+    }
+}
+
+/// The outcome of a scan: all findings (suppressed ones carry their
+/// reason) plus the file count.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+}
+
+impl Report {
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_none())
+    }
+
+    pub fn unsuppressed_count(&self) -> usize {
+        self.unsuppressed().count()
+    }
+
+    pub fn suppressed_count(&self) -> usize {
+        self.findings.len() - self.unsuppressed_count()
+    }
+
+    /// Human-readable report: one `file:line: [rule] message` block per
+    /// unsuppressed finding (with a remediation hint), then a summary line.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in self.unsuppressed() {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+            if !f.suggestion.is_empty() {
+                out.push_str(&format!("  hint: {}\n", f.suggestion));
+            }
+        }
+        out.push_str(&format!(
+            "-- {} unsuppressed, {} suppressed, {} files\n",
+            self.unsuppressed_count(),
+            self.suppressed_count(),
+            self.files
+        ));
+        out
+    }
+
+    /// Machine-readable report (the CI artifact). Schema documented in
+    /// `docs/detlint.md`.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("version", 1u64);
+        root.set("files_scanned", self.files);
+        root.set("unsuppressed", self.unsuppressed_count());
+        root.set("suppressed", self.suppressed_count());
+        root.set("rules", RULE_IDS.to_vec());
+        let mut arr = Vec::with_capacity(self.findings.len());
+        for f in &self.findings {
+            let mut o = Json::obj();
+            o.set("rule", f.rule)
+                .set("file", f.file.as_str())
+                .set("line", u64::from(f.line))
+                .set("message", f.message.as_str())
+                .set("suggestion", f.suggestion);
+            if let Some(reason) = &f.suppressed {
+                o.set("suppressed", reason.as_str());
+            }
+            arr.push(o);
+        }
+        root.set("findings", arr);
+        root
+    }
+}
+
+/// Scan roots, relative to the repo root.
+pub const SCAN_ROOTS: [&str; 4] = ["rust/src", "tools", "benches", "examples"];
+
+fn collect(dir: &Path, rel: &str, files: &mut Vec<(String, PathBuf)>) -> io::Result<()> {
+    let mut names: Vec<(bool, String)> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let is_dir = entry.file_type()?.is_dir();
+        if let Ok(name) = entry.file_name().into_string() {
+            names.push((is_dir, name));
+        }
+    }
+    names.sort();
+    // Files of this directory first (sorted), then subdirectories — the
+    // same order the Python twin's os.walk produces.
+    for (_, name) in names.iter().filter(|(d, _)| !d) {
+        if name.ends_with(".rs") {
+            files.push((format!("{rel}/{name}"), dir.join(name)));
+        }
+    }
+    for (_, name) in names.iter().filter(|(d, _)| *d) {
+        collect(&dir.join(name), &format!("{rel}/{name}"), files)?;
+    }
+    Ok(())
+}
+
+/// Walk the scan roots under `root` and analyze every `.rs` file.
+pub fn run_tree(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for rel in SCAN_ROOTS {
+        let dir = root.join(rel);
+        if dir.is_dir() {
+            collect(&dir, rel, &mut files)?;
+        }
+    }
+    let mut an = Analyzer::new();
+    for (rel, abs) in &files {
+        let src = std::fs::read_to_string(abs)?;
+        an.scan_source(rel, &src);
+    }
+    Ok(an.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_one(path: &str, src: &str) -> Report {
+        let mut an = Analyzer::new();
+        an.scan_source(path, src);
+        an.finish()
+    }
+
+    fn rules_of(report: &Report) -> Vec<&'static str> {
+        report.unsuppressed().map(|f| f.rule).collect()
+    }
+
+    // ---- R1 hash-container ----
+
+    #[test]
+    fn r1_flags_hash_containers_in_src() {
+        let r = scan_one(
+            "rust/src/x.rs",
+            "fn f() { let m: HashMap<u32, u32> = HashMap::new(); }",
+        );
+        assert_eq!(rules_of(&r), ["hash-container", "hash-container"]);
+        assert_eq!(r.findings[0].line, 1);
+    }
+
+    #[test]
+    fn r1_ignores_use_statements_tests_and_non_src() {
+        let grouped_use = "use std::collections::{BTreeMap, HashMap};\nfn f() {}\n";
+        assert_eq!(scan_one("rust/src/x.rs", grouped_use).unsuppressed_count(), 0);
+        let in_test =
+            "#[cfg(test)]\nmod tests {\n fn f() { let m = HashMap::new(); }\n}\n";
+        assert_eq!(scan_one("rust/src/x.rs", in_test).unsuppressed_count(), 0);
+        let tool = "fn f() { let m = HashMap::new(); }";
+        assert_eq!(scan_one("tools/x.rs", tool).unsuppressed_count(), 0);
+    }
+
+    #[test]
+    fn r1_trailing_allow_suppresses_and_is_consumed() {
+        let src = "fn f() { let m = HashMap::new(); } \
+                   // detlint::allow(hash-container, \"keyed access only\")\n";
+        let r = scan_one("rust/src/x.rs", src);
+        assert_eq!(r.unsuppressed_count(), 0);
+        assert_eq!(r.suppressed_count(), 1);
+        assert_eq!(r.findings[0].suppressed.as_deref(), Some("keyed access only"));
+    }
+
+    #[test]
+    fn r1_standalone_allow_covers_next_code_line() {
+        let src = "// detlint::allow(hash-container, \"scratch only\")\n\
+                   fn f() { let m = HashMap::new(); }\n";
+        let r = scan_one("rust/src/x.rs", src);
+        assert_eq!(r.unsuppressed_count(), 0);
+        assert_eq!(r.suppressed_count(), 1);
+    }
+
+    // ---- R2 salt-registry ----
+
+    #[test]
+    fn r2_flags_salt_const_outside_registry() {
+        let r = scan_one("rust/src/x.rs", "const SALT_FOO: u64 = 0x1234;\n");
+        assert_eq!(rules_of(&r), ["salt-registry"]);
+        assert!(r.findings[0].message.contains("declared outside"));
+    }
+
+    #[test]
+    fn r2_flags_salt_family_literal_outside_registry() {
+        let r = scan_one("rust/src/x.rs", "fn f() -> u64 { 0xA272_0009 }\n");
+        assert_eq!(rules_of(&r), ["salt-registry"]);
+        assert!(r.findings[0].message.contains("salt-family literal"));
+    }
+
+    #[test]
+    fn r2_duplicate_values_reported_for_each_decl() {
+        let r = scan_one(
+            "rust/src/x.rs",
+            "const SALT_A: u64 = 0x7;\nconst SALT_B: u64 = 0x7;\n",
+        );
+        // Two outside-registry findings plus two duplicate-value findings.
+        let dups: Vec<_> = r
+            .unsuppressed()
+            .filter(|f| f.message.contains("duplicate salt value 0x7"))
+            .collect();
+        assert_eq!(dups.len(), 2);
+    }
+
+    #[test]
+    fn r2_registry_entry_requires_doc_comment() {
+        let undocumented = "SALT_X = 0x9;\n";
+        let r = scan_one(rules::REGISTRY_PATH, undocumented);
+        assert_eq!(rules_of(&r), ["salt-registry"]);
+        assert!(r.findings[0].message.contains("no doc comment"));
+        let documented = "/// Domain: fixture.\nSALT_X = 0x9;\n";
+        assert_eq!(scan_one(rules::REGISTRY_PATH, documented).unsuppressed_count(), 0);
+    }
+
+    // ---- R3 wall-clock ----
+
+    #[test]
+    fn r3_flags_clock_and_entropy_tokens() {
+        let r = scan_one("rust/src/x.rs", "fn f() { let t = Instant::now(); }\n");
+        assert_eq!(rules_of(&r), ["wall-clock"]);
+        // R3 applies inside test modules too: timing asserts flake.
+        let in_test = "#[cfg(test)]\nmod tests {\n fn f() { let t = SystemTime::now(); }\n}\n";
+        assert_eq!(scan_one("rust/src/x.rs", in_test).unsuppressed_count(), 1);
+    }
+
+    #[test]
+    fn r3_allowlists_harness_files_and_dirs() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(scan_one("rust/src/util/bench.rs", src).unsuppressed_count(), 0);
+        assert_eq!(scan_one("rust/src/main.rs", src).unsuppressed_count(), 0);
+        assert_eq!(scan_one("tools/x.rs", src).unsuppressed_count(), 0);
+        assert_eq!(scan_one("benches/x.rs", src).unsuppressed_count(), 0);
+        assert_eq!(scan_one("examples/x.rs", src).unsuppressed_count(), 0);
+    }
+
+    // ---- R4 unordered-float-reduction ----
+
+    #[test]
+    fn r4_flags_float_sum_over_hash_iteration() {
+        let src =
+            "fn f(m: HashMap<u64, f64>) -> f64 {\n    let s: f64 = m.values().sum();\n    s\n}\n";
+        let r = scan_one("rust/src/x.rs", src);
+        // R1 fires on the HashMap type too; look for the R4 finding.
+        assert!(rules_of(&r).contains(&"unordered-float-reduction"));
+        let f = r
+            .unsuppressed()
+            .find(|f| f.rule == "unordered-float-reduction")
+            .unwrap();
+        assert_eq!(f.line, 2);
+        assert!(f.message.contains("`m`"));
+    }
+
+    #[test]
+    fn r4_ignores_ordered_containers_and_non_reductions() {
+        let vec_sum = "fn f(v: Vec<f64>) -> f64 { v.iter().sum() }\n";
+        assert_eq!(scan_one("rust/src/x.rs", vec_sum).unsuppressed_count(), 0);
+        let let_bound = "fn f() { let mut m = HashMap::new(); m.insert(1u32, 2u32); } \
+                         // detlint::allow(hash-container, \"fixture\")\n";
+        let r = scan_one("rust/src/x.rs", let_bound);
+        assert!(!rules_of(&r).contains(&"unordered-float-reduction"));
+    }
+
+    // ---- R5 unchecked-cast ----
+
+    #[test]
+    fn r5_flags_as_cast_near_accounting_vocab() {
+        let src = "fn f(x: f64) -> u64 { let total_bytes = x as u64; total_bytes }\n";
+        let r = scan_one("rust/src/x.rs", src);
+        assert_eq!(rules_of(&r), ["unchecked-cast"]);
+        assert!(r.findings[0].message.contains("total_bytes"));
+    }
+
+    #[test]
+    fn r5_ignores_non_vocab_float_targets_tests_and_cast_module() {
+        assert_eq!(
+            scan_one("rust/src/x.rs", "fn f(x: f64) -> u64 { x as u64 }\n").unsuppressed_count(),
+            0
+        );
+        assert_eq!(
+            scan_one("rust/src/x.rs", "fn f(n_bytes: u64) -> f64 { n_bytes as f64 }\n")
+                .unsuppressed_count(),
+            0
+        );
+        let in_test =
+            "#[cfg(test)]\nmod tests {\n fn f(n_bytes: f64) { let x = n_bytes as u64; }\n}\n";
+        assert_eq!(scan_one("rust/src/x.rs", in_test).unsuppressed_count(), 0);
+        assert_eq!(
+            scan_one(rules::CAST_MODULE, "fn f(n_bytes: f64) -> u64 { n_bytes as u64 }\n")
+                .unsuppressed_count(),
+            0
+        );
+    }
+
+    #[test]
+    fn r5_suppressible_with_reason() {
+        let src = "// detlint::allow(unchecked-cast, \"index, bounded by construction\")\n\
+                   fn f(n_bytes: u64) -> usize { n_bytes as usize }\n";
+        let r = scan_one("rust/src/x.rs", src);
+        assert_eq!(r.unsuppressed_count(), 0);
+        assert_eq!(r.suppressed_count(), 1);
+    }
+
+    // ---- allow-audit ----
+
+    #[test]
+    fn audit_flags_unknown_rule_names() {
+        let src = "// detlint::allow(no-such-rule, \"why\")\nfn f() {}\n";
+        let r = scan_one("rust/src/x.rs", src);
+        assert_eq!(rules_of(&r), ["allow-audit"]);
+        assert!(r.findings[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn audit_flags_unused_allows() {
+        let src = "// detlint::allow(wall-clock, \"stale\")\nfn f() {}\n";
+        let r = scan_one("rust/src/x.rs", src);
+        assert_eq!(rules_of(&r), ["allow-audit"]);
+        assert!(r.findings[0].message.contains("suppresses nothing"));
+    }
+
+    #[test]
+    fn audit_flags_empty_reasons_and_malformed_directives() {
+        let empty = "fn f() { let m = HashMap::new(); } // detlint::allow(hash-container, \"\")\n";
+        let r = scan_one("rust/src/x.rs", empty);
+        // The empty-reason allow is discarded, so the R1 finding stays too.
+        let audits: Vec<_> =
+            r.unsuppressed().filter(|f| f.rule == "allow-audit").collect();
+        assert_eq!(audits.len(), 1);
+        assert!(audits[0].message.contains("empty reason"));
+        assert!(rules_of(&r).contains(&"hash-container"));
+
+        let malformed = "// detlint::allow(hash-container)\nfn f() {}\n";
+        let r2 = scan_one("rust/src/x.rs", malformed);
+        assert_eq!(rules_of(&r2), ["allow-audit"]);
+        assert!(r2.findings[0].message.contains("malformed"));
+    }
+
+    // ---- report plumbing ----
+
+    #[test]
+    fn json_report_shape() {
+        let r = scan_one("rust/src/x.rs", "fn f() { let t = Instant::now(); }\n");
+        let j = r.to_json();
+        assert_eq!(j.get("version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("unsuppressed").and_then(Json::as_f64), Some(1.0));
+        let findings = j.get("findings").and_then(Json::as_arr).unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(
+            findings[0].get("rule").and_then(Json::as_str),
+            Some("wall-clock")
+        );
+        assert!(findings[0].get("suggestion").and_then(Json::as_str).is_some());
+        // Round-trips through the in-tree parser.
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn human_report_mentions_file_line_and_rule() {
+        let r = scan_one("rust/src/x.rs", "fn f() { let t = Instant::now(); }\n");
+        let text = r.render_human();
+        assert!(text.contains("rust/src/x.rs:1: [wall-clock]"));
+        assert!(text.contains("-- 1 unsuppressed, 0 suppressed, 1 files"));
+    }
+
+    // ---- the gate itself ----
+
+    #[test]
+    fn repo_tree_is_clean() {
+        // cargo test runs with the package root as cwd, so `.` is the repo.
+        let report = run_tree(Path::new(".")).expect("scan repo tree");
+        assert!(report.files > 50, "expected to scan the whole tree, got {}", report.files);
+        let residue: Vec<String> = report
+            .unsuppressed()
+            .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect();
+        assert!(residue.is_empty(), "detlint findings:\n{}", residue.join("\n"));
+        // The two deliberate suppressions (blockstore + profiler) stay
+        // honest: each carries a written reason.
+        assert!(report.suppressed_count() >= 2);
+        for f in &report.findings {
+            if let Some(reason) = &f.suppressed {
+                assert!(!reason.trim().is_empty());
+            }
+        }
+    }
+}

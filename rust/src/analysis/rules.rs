@@ -1,0 +1,630 @@
+//! detlint rule set: determinism & accounting checks over lexed tokens.
+//!
+//! Five rules (R1–R5) plus the `allow-audit` meta-rule emitted by the
+//! directive parser and the engine:
+//!
+//! | id                          | guards                                        |
+//! |-----------------------------|-----------------------------------------------|
+//! | `hash-container`            | no HashMap/HashSet on the replay/result path  |
+//! | `salt-registry`             | RNG salts live in `util::salts`, documented,  |
+//! |                             | globally unique                               |
+//! | `wall-clock`                | no Instant/SystemTime/ambient RNG in sim code |
+//! | `unordered-float-reduction` | no float sum/fold over hash iteration         |
+//! | `unchecked-cast`            | no bare `as` casts in byte/bandwidth/GPU-hour |
+//! |                             | accounting (use `util::cast`)                 |
+//! | `allow-audit`               | every suppression is well-formed, reasoned,   |
+//! |                             | names a real rule, and suppresses something   |
+//!
+//! Suppression: an `allow(rule-id, "reason")` comment directive with the
+//! `detlint::` prefix — trailing on the offending line, or standalone on
+//! the line immediately above (applies to the next code line). See
+//! `docs/detlint.md` for the full catalog and exact syntax.
+//!
+//! The semantics here are mirrored by a dependency-free Python twin used to
+//! pre-verify the tree in containers without a Rust toolchain; behavioural
+//! changes must land in both.
+
+use super::lexer::{in_regions, Comment, Tok, TokKind};
+
+/// Every valid rule id, in report order. Allow directives naming anything
+/// else are themselves findings.
+pub const RULE_IDS: [&str; 6] = [
+    "hash-container",
+    "salt-registry",
+    "wall-clock",
+    "unordered-float-reduction",
+    "unchecked-cast",
+    "allow-audit",
+];
+
+/// The one file allowed to define RNG salt constants (R2).
+pub const REGISTRY_PATH: &str = "rust/src/util/salts.rs";
+/// The one module allowed to contain `as` casts in accounting code (R5) —
+/// it wraps them in debug-asserted helpers.
+pub const CAST_MODULE: &str = "rust/src/util/cast.rs";
+/// Files allowed to touch wall clocks / ambient entropy (R3): the bench
+/// harness measures real elapsed time, and the CLI seeds from the
+/// environment on request.
+pub const R3_ALLOW: [&str; 2] = ["rust/src/util/bench.rs", "rust/src/main.rs"];
+/// Directory prefixes with the same R3 exemption (harness/driver code).
+pub const R3_ALLOW_DIRS: [&str; 3] = ["tools/", "benches/", "examples/"];
+
+const INT_TYPES: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+/// Accounting vocabulary: an `as <int>` cast whose statement mentions an
+/// identifier containing one of these substrings is accounting arithmetic.
+const VOCAB: [&str; 3] = ["bytes", "bps", "gpu_hour"];
+const CLOCK_TOKENS: [&str; 6] =
+    ["Instant", "SystemTime", "UNIX_EPOCH", "thread_rng", "OsRng", "from_entropy"];
+
+/// Salt-family hex literal (`0xA271_…`, `0xA272_…`, `0xFA0…`), case
+/// insensitive. Matching literals may only appear in the registry.
+fn is_salt_family(text: &str) -> bool {
+    let u = text.to_ascii_uppercase();
+    u.starts_with("0XA271_") || u.starts_with("0XA272_") || u.starts_with("0XFA0")
+}
+
+/// One lint finding. `suppressed` carries the written reason when an
+/// allow directive covered it.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    pub suggestion: &'static str,
+    pub suppressed: Option<String>,
+}
+
+impl Finding {
+    fn new(rule: &'static str, file: &str, line: u32, message: String) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line,
+            message,
+            suggestion: suggestion_for(rule),
+            suppressed: None,
+        }
+    }
+}
+
+/// Per-rule remediation hint, attached to every finding.
+pub fn suggestion_for(rule: &str) -> &'static str {
+    match rule {
+        "hash-container" => {
+            "use BTreeMap/BTreeSet (or an indexed Vec), or annotate why hash \
+             order cannot reach a result"
+        }
+        "salt-registry" => {
+            "define the salt once in util::salts with a doc comment and a \
+             unique value, and import it"
+        }
+        "wall-clock" => {
+            "derive times from the simulated clock and randomness from the \
+             seeded util::rng stream"
+        }
+        "unordered-float-reduction" => {
+            "collect into a sorted container (or switch the map to BTreeMap) \
+             before reducing floats"
+        }
+        "unchecked-cast" => "use the debug-asserted helpers in util::cast",
+        "allow-audit" => {
+            "write detlint::allow(rule-id, \"reason\") with a real rule id \
+             and a non-empty reason, and delete stale allows"
+        }
+        _ => "",
+    }
+}
+
+/// A parsed allow directive: which rule it suppresses, on which line, why.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+    /// Line this allow suppresses: its own line for a trailing comment, the
+    /// next code line for a standalone one (0 = nothing follows).
+    pub target: u32,
+    pub used: bool,
+}
+
+/// A salt constant declaration, collected tree-wide for the R2 finish pass.
+#[derive(Clone, Debug)]
+pub struct SaltDecl {
+    pub file: String,
+    pub line: u32,
+    pub name: String,
+    pub value: Option<String>,
+    pub registry: bool,
+    pub doc: bool,
+}
+
+/// Everything a per-file rule pass needs.
+pub struct FileCtx<'a> {
+    pub path: &'a str,
+    pub toks: &'a [Tok],
+    pub comments: &'a [Comment],
+    pub tests: &'a [(u32, u32)],
+    pub is_src: bool,
+}
+
+/// One lint rule. `check` runs per file; `salts` is the tree-wide R2
+/// accumulator (only the salt-registry rule writes it).
+pub trait Rule {
+    fn id(&self) -> &'static str;
+    fn description(&self) -> &'static str;
+    fn check(&self, ctx: &FileCtx<'_>, salts: &mut Vec<SaltDecl>, out: &mut Vec<Finding>);
+}
+
+/// The full rule set, in report order.
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(HashContainer),
+        Box::new(SaltRegistry),
+        Box::new(WallClock),
+        Box::new(UnorderedFloatReduction),
+        Box::new(UncheckedCast),
+    ]
+}
+
+/// Token index range of the statement-ish context around `idx`: from the
+/// token after the nearest preceding `;`/`{`/`}` to the nearest following
+/// one (inclusive).
+fn stmt_bounds(toks: &[Tok], idx: usize) -> (usize, usize) {
+    let mut lo = idx;
+    while lo > 0 && !is_stmt_edge(&toks[lo - 1].text) {
+        lo -= 1;
+    }
+    let mut hi = idx;
+    let n = toks.len();
+    while hi < n - 1 && !is_stmt_edge(&toks[hi].text) {
+        hi += 1;
+    }
+    (lo, hi)
+}
+
+fn is_stmt_edge(text: &str) -> bool {
+    text == ";" || text == "{" || text == "}"
+}
+
+/// Is the token at `idx` part of a `use` statement? Scans back to the
+/// previous `;` only — a use-group's `{` must not truncate the search, and
+/// every use statement ends in `;`, so the scan can never leak across one
+/// into an expression context.
+fn in_use_stmt(toks: &[Tok], idx: usize) -> bool {
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        if toks[j].text == ";" {
+            return false;
+        }
+        if toks[j].text == "use" {
+            return true;
+        }
+    }
+    false
+}
+
+/// Parse one `(rule, "reason")` suffix starting at byte `j` (just past an
+/// occurrence of the directive needle). Whitespace is allowed everywhere
+/// the grammar shows it; the reason may not contain a quote.
+fn parse_allow_after(b: &[u8], mut j: usize) -> Option<(String, String)> {
+    if b.get(j) != Some(&b'(') {
+        return None;
+    }
+    j += 1;
+    while b.get(j).is_some_and(|c| c.is_ascii_whitespace()) {
+        j += 1;
+    }
+    let rule_start = j;
+    while b
+        .get(j)
+        .is_some_and(|c| c.is_ascii_alphanumeric() || *c == b'_' || *c == b'-')
+    {
+        j += 1;
+    }
+    if j == rule_start {
+        return None;
+    }
+    let rule = String::from_utf8_lossy(&b[rule_start..j]).into_owned();
+    while b.get(j).is_some_and(|c| c.is_ascii_whitespace()) {
+        j += 1;
+    }
+    if b.get(j) != Some(&b',') {
+        return None;
+    }
+    j += 1;
+    while b.get(j).is_some_and(|c| c.is_ascii_whitespace()) {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'"') {
+        return None;
+    }
+    j += 1;
+    let reason_start = j;
+    while j < b.len() && b[j] != b'"' {
+        j += 1;
+    }
+    if j >= b.len() {
+        return None;
+    }
+    let reason = String::from_utf8_lossy(&b[reason_start..j]).into_owned();
+    j += 1;
+    while b.get(j).is_some_and(|c| c.is_ascii_whitespace()) {
+        j += 1;
+    }
+    if b.get(j) != Some(&b')') {
+        return None;
+    }
+    Some((rule, reason))
+}
+
+/// Extract allow directives from a file's comments. Malformed and
+/// empty-reason directives become `allow-audit` findings immediately.
+pub fn parse_allows(
+    path: &str,
+    comments: &[Comment],
+    toks: &[Tok],
+    findings: &mut Vec<Finding>,
+) -> Vec<Allow> {
+    let mut code_lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+    code_lines.sort_unstable();
+    code_lines.dedup();
+    let mut allows = Vec::new();
+    const NEEDLE: &str = "detlint::allow";
+    for c in comments {
+        if !c.text.contains(NEEDLE) {
+            continue;
+        }
+        let b = c.text.as_bytes();
+        let mut parsed = Vec::new();
+        let mut raw_count = 0usize;
+        let mut pos = 0usize;
+        while let Some(k) = c.text[pos..].find(NEEDLE) {
+            let at = pos + k;
+            raw_count += 1;
+            if let Some(pair) = parse_allow_after(b, at + NEEDLE.len()) {
+                parsed.push(pair);
+            }
+            pos = at + NEEDLE.len();
+        }
+        if parsed.len() != raw_count {
+            findings.push(Finding::new(
+                "allow-audit",
+                path,
+                c.line,
+                "malformed detlint::allow directive (expected detlint::allow(rule-id, \
+                 \"reason\"))"
+                    .to_string(),
+            ));
+        }
+        for (rule, reason) in parsed {
+            if reason.trim().is_empty() {
+                findings.push(Finding::new(
+                    "allow-audit",
+                    path,
+                    c.line,
+                    format!("allow({rule}) carries an empty reason"),
+                ));
+                continue;
+            }
+            let target = if c.trailing {
+                c.line
+            } else {
+                code_lines.iter().copied().find(|&l| l > c.line).unwrap_or(0)
+            };
+            allows.push(Allow { line: c.line, rule, reason, target, used: false });
+        }
+    }
+    allows
+}
+
+/// R1: HashMap/HashSet on the replay/result path.
+pub struct HashContainer;
+
+impl Rule for HashContainer {
+    fn id(&self) -> &'static str {
+        "hash-container"
+    }
+    fn description(&self) -> &'static str {
+        "hash containers have a randomized-feeling (build-dependent) iteration \
+         order; replay/result code must use ordered containers"
+    }
+    fn check(&self, ctx: &FileCtx<'_>, _salts: &mut Vec<SaltDecl>, out: &mut Vec<Finding>) {
+        if !ctx.is_src {
+            return;
+        }
+        for (i, t) in ctx.toks.iter().enumerate() {
+            if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+                if in_regions(ctx.tests, t.line) || in_use_stmt(ctx.toks, i) {
+                    continue;
+                }
+                out.push(Finding::new(
+                    self.id(),
+                    ctx.path,
+                    t.line,
+                    format!("{} on the replay/result path", t.text),
+                ));
+            }
+        }
+    }
+}
+
+/// R2: RNG salt constants live in the registry, once each.
+pub struct SaltRegistry;
+
+impl Rule for SaltRegistry {
+    fn id(&self) -> &'static str {
+        "salt-registry"
+    }
+    fn description(&self) -> &'static str {
+        "RNG domain-separation salts are declared once, documented, and \
+         globally unique in util::salts"
+    }
+    fn check(&self, ctx: &FileCtx<'_>, salts: &mut Vec<SaltDecl>, out: &mut Vec<Finding>) {
+        let toks = ctx.toks;
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || !t.text.starts_with("SALT_") {
+                continue;
+            }
+            if i >= 1 && toks[i - 1].text == "const" {
+                let mut val = None;
+                for tj in toks.iter().take((i + 8).min(toks.len())).skip(i + 1) {
+                    if tj.kind == TokKind::Num {
+                        val = Some(tj.text.clone());
+                        break;
+                    }
+                }
+                salts.push(SaltDecl {
+                    file: ctx.path.to_string(),
+                    line: t.line,
+                    name: t.text.clone(),
+                    value: val,
+                    registry: ctx.path == REGISTRY_PATH,
+                    doc: false,
+                });
+                if ctx.path != REGISTRY_PATH {
+                    out.push(Finding::new(
+                        self.id(),
+                        ctx.path,
+                        t.line,
+                        format!("salt constant {} declared outside util::salts", t.text),
+                    ));
+                }
+            } else if ctx.path == REGISTRY_PATH
+                && i + 2 < toks.len()
+                && toks[i + 1].text == "="
+                && toks[i + 2].kind == TokKind::Num
+            {
+                // Registry macro entry `SALT_X = <num>`: doc comment required
+                // on the immediately preceding line.
+                let doc = ctx.comments.iter().any(|c| c.doc && c.line + 1 == t.line);
+                salts.push(SaltDecl {
+                    file: ctx.path.to_string(),
+                    line: t.line,
+                    name: t.text.clone(),
+                    value: Some(toks[i + 2].text.clone()),
+                    registry: true,
+                    doc,
+                });
+            }
+        }
+        if ctx.path != REGISTRY_PATH {
+            for t in toks {
+                if t.kind == TokKind::Num && is_salt_family(&t.text) {
+                    out.push(Finding::new(
+                        self.id(),
+                        ctx.path,
+                        t.line,
+                        format!("salt-family literal {} outside util::salts", t.text),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// R3: wall-clock reads and ambient entropy in simulation code.
+pub struct WallClock;
+
+impl Rule for WallClock {
+    fn id(&self) -> &'static str {
+        "wall-clock"
+    }
+    fn description(&self) -> &'static str {
+        "simulation results must be a pure function of (seed, identity); real \
+         clocks and OS entropy belong only to the bench/driver harness"
+    }
+    fn check(&self, ctx: &FileCtx<'_>, _salts: &mut Vec<SaltDecl>, out: &mut Vec<Finding>) {
+        if R3_ALLOW.contains(&ctx.path) || R3_ALLOW_DIRS.iter().any(|d| ctx.path.starts_with(d)) {
+            return;
+        }
+        for t in ctx.toks {
+            if t.kind == TokKind::Ident && CLOCK_TOKENS.contains(&t.text.as_str()) {
+                out.push(Finding::new(
+                    self.id(),
+                    ctx.path,
+                    t.line,
+                    format!("{}: wall-clock/ambient entropy in a sim path", t.text),
+                ));
+            }
+        }
+    }
+}
+
+/// R4: float reductions over unordered (hash) iteration.
+pub struct UnorderedFloatReduction;
+
+impl Rule for UnorderedFloatReduction {
+    fn id(&self) -> &'static str {
+        "unordered-float-reduction"
+    }
+    fn description(&self) -> &'static str {
+        "float addition is not associative; summing over hash-order iteration \
+         makes the result build-dependent"
+    }
+    fn check(&self, ctx: &FileCtx<'_>, _salts: &mut Vec<SaltDecl>, out: &mut Vec<Finding>) {
+        if !ctx.is_src {
+            return;
+        }
+        let toks = ctx.toks;
+        // Pass 1: names bound to hash containers in this file, via
+        // `let [mut] NAME … HashMap` or `NAME: HashMap<..>` ascriptions.
+        let mut hash_idents: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+                continue;
+            }
+            let (lo, hi) = stmt_bounds(toks, i);
+            if toks[lo].text == "let" {
+                let mut k = lo + 1;
+                if k <= hi && toks[k].text == "mut" {
+                    k += 1;
+                }
+                if k <= hi && toks[k].kind == TokKind::Ident {
+                    hash_idents.insert(toks[k].text.clone());
+                }
+            } else if i >= 1 {
+                let stop = lo.max(1);
+                let mut j = i - 1;
+                while j >= stop {
+                    if toks[j].text == ":" && j - 1 >= lo && toks[j - 1].kind == TokKind::Ident {
+                        hash_idents.insert(toks[j - 1].text.clone());
+                        break;
+                    }
+                    j -= 1;
+                }
+            }
+        }
+        // Pass 2: NAME.values()/keys()/iter() … sum/product/fold before `;`.
+        for (i, t) in toks.iter().enumerate() {
+            let calls_iter = t.kind == TokKind::Ident
+                && hash_idents.contains(&t.text)
+                && i + 2 < toks.len()
+                && toks[i + 1].text == "."
+                && matches!(toks[i + 2].text.as_str(), "values" | "keys" | "iter");
+            if !calls_iter || in_regions(ctx.tests, t.line) {
+                continue;
+            }
+            let mut j = i + 2;
+            while j < toks.len() && toks[j].text != ";" {
+                if toks[j].kind == TokKind::Ident
+                    && matches!(toks[j].text.as_str(), "sum" | "product" | "fold")
+                {
+                    out.push(Finding::new(
+                        self.id(),
+                        ctx.path,
+                        t.line,
+                        format!("float reduction over unordered iteration of `{}`", t.text),
+                    ));
+                    break;
+                }
+                j += 1;
+            }
+        }
+    }
+}
+
+/// R5: bare `as` casts in accounting arithmetic.
+pub struct UncheckedCast;
+
+impl Rule for UncheckedCast {
+    fn id(&self) -> &'static str {
+        "unchecked-cast"
+    }
+    fn description(&self) -> &'static str {
+        "`as` silently truncates/wraps; byte, bandwidth, and GPU-hour \
+         arithmetic must go through the debug-asserted util::cast helpers"
+    }
+    fn check(&self, ctx: &FileCtx<'_>, _salts: &mut Vec<SaltDecl>, out: &mut Vec<Finding>) {
+        if !ctx.is_src || ctx.path == CAST_MODULE {
+            return;
+        }
+        let toks = ctx.toks;
+        for (i, t) in toks.iter().enumerate() {
+            let is_int_cast = t.kind == TokKind::Ident
+                && t.text == "as"
+                && i + 1 < toks.len()
+                && INT_TYPES.contains(&toks[i + 1].text.as_str());
+            if !is_int_cast || in_regions(ctx.tests, t.line) {
+                continue;
+            }
+            let (lo, hi) = stmt_bounds(toks, i);
+            let mut vocab_hit = None;
+            for tj in &toks[lo..=hi] {
+                if tj.kind == TokKind::Ident {
+                    let lower = tj.text.to_ascii_lowercase();
+                    if VOCAB.iter().any(|v| lower.contains(v)) {
+                        vocab_hit = Some(tj.text.clone());
+                        break;
+                    }
+                }
+            }
+            if let Some(hit) = vocab_hit {
+                out.push(Finding::new(
+                    self.id(),
+                    ctx.path,
+                    t.line,
+                    format!("`as {}` in accounting arithmetic (near `{hit}`)", toks[i + 1].text),
+                ));
+            }
+        }
+    }
+}
+
+fn parse_int(s: &str) -> Option<u128> {
+    let t: String = s.chars().filter(|&c| c != '_').collect();
+    if let Some(h) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        u128::from_str_radix(h, 16).ok()
+    } else if let Some(o) = t.strip_prefix("0o") {
+        u128::from_str_radix(o, 8).ok()
+    } else if let Some(b2) = t.strip_prefix("0b") {
+        u128::from_str_radix(b2, 2).ok()
+    } else {
+        t.parse().ok()
+    }
+}
+
+/// Tree-wide R2 finish pass: duplicate salt values and undocumented
+/// registry entries. Groups keep first-seen order so reports are stable.
+pub fn finish_salts(salts: &[SaltDecl], findings: &mut Vec<Finding>) {
+    let mut vals: Vec<u128> = Vec::new();
+    let mut groups: Vec<Vec<&SaltDecl>> = Vec::new();
+    for d in salts {
+        let v = match d.value.as_deref().and_then(parse_int) {
+            Some(v) => v,
+            None => continue,
+        };
+        match vals.iter().position(|&x| x == v) {
+            Some(k) => groups[k].push(d),
+            None => {
+                vals.push(v);
+                groups.push(vec![d]);
+            }
+        }
+    }
+    for (v, ds) in vals.iter().zip(&groups) {
+        if ds.len() > 1 {
+            for d in ds {
+                findings.push(Finding::new(
+                    "salt-registry",
+                    &d.file,
+                    d.line,
+                    format!("duplicate salt value {v:#x} ({})", d.name),
+                ));
+            }
+        }
+    }
+    for d in salts {
+        if d.registry && !d.doc {
+            findings.push(Finding::new(
+                "salt-registry",
+                &d.file,
+                d.line,
+                format!("registry salt {} has no doc comment", d.name),
+            ));
+        }
+    }
+}

@@ -14,15 +14,11 @@
 use crate::config::defaults as d;
 use crate::config::JobConfig;
 use crate::image::spec::ImageSpec;
+use crate::util::cast::{u64_from_usize, usize_from_u32, usize_from_u64};
 use crate::util::rng::mix64;
-
-/// Domain-separation salts for artifact ids and synthesized chunk digests.
-const SALT_IMG_HOT: u64 = 0xA271_0001;
-const SALT_IMG_COLD: u64 = 0xA271_0002;
-const SALT_ENV: u64 = 0xA271_0003;
-const SALT_ENV_CHUNK: u64 = 0xA271_0004;
-const SALT_CKPT: u64 = 0xA271_0005;
-const SALT_CKPT_CHUNK: u64 = 0xA271_0006;
+use crate::util::salts::{
+    SALT_CKPT, SALT_CKPT_CHUNK, SALT_ENV, SALT_ENV_CHUNK, SALT_IMG_COLD, SALT_IMG_HOT,
+};
 
 /// What kind of content a manifest describes (the four artifact classes
 /// the startup pipeline moves).
@@ -66,13 +62,13 @@ pub struct ArtifactManifest {
 /// arithmetic every typed builder uses.
 fn split(total: u64, chunk_bytes: u64, digest_of: impl Fn(usize) -> u64) -> Vec<Chunk> {
     assert!(chunk_bytes > 0);
-    let n = ((total + chunk_bytes - 1) / chunk_bytes) as usize;
+    let n = usize_from_u64((total + chunk_bytes - 1) / chunk_bytes);
     (0..n)
         .map(|k| {
-            let len = if (k + 1) as u64 * chunk_bytes <= total {
+            let len = if u64_from_usize(k + 1) * chunk_bytes <= total {
                 chunk_bytes
             } else {
-                total - k as u64 * chunk_bytes
+                total - u64_from_usize(k) * chunk_bytes
             };
             Chunk { digest: digest_of(k), bytes: len }
         })
@@ -122,7 +118,7 @@ impl ArtifactManifest {
         mix64(
             SALT_CKPT
                 ^ job.ckpt_bytes.wrapping_mul(0x9E3779B97F4A7C15)
-                ^ ((job.pp as u64) << 32)
+                ^ (u64::from(job.pp) << 32)
                 ^ job.image_seed.unwrap_or(0),
         )
     }
@@ -133,7 +129,7 @@ impl ArtifactManifest {
     pub fn image_hot_set(img: &ImageSpec, hot: &[u32]) -> ArtifactManifest {
         let chunks = hot
             .iter()
-            .map(|&b| Chunk { digest: img.block_digests[b as usize], bytes: img.block_len(b) })
+            .map(|&b| Chunk { digest: img.block_digests[usize_from_u32(b)], bytes: img.block_len(b) })
             .collect();
         Self::build(Self::image_hot_id(img.digest), ArtifactKind::ImageHotSet, chunks)
     }
@@ -143,7 +139,7 @@ impl ArtifactManifest {
         let hot_set: std::collections::BTreeSet<u32> = hot.iter().copied().collect();
         let chunks = (0..img.n_blocks())
             .filter(|b| !hot_set.contains(b))
-            .map(|b| Chunk { digest: img.block_digests[b as usize], bytes: img.block_len(b) })
+            .map(|b| Chunk { digest: img.block_digests[usize_from_u32(b)], bytes: img.block_len(b) })
             .collect();
         Self::build(Self::image_cold_id(img.digest), ArtifactKind::ImageColdTail, chunks)
     }
@@ -163,7 +159,7 @@ impl ArtifactManifest {
         shared_with: Option<&ArtifactManifest>,
     ) -> ArtifactManifest {
         let chunk = d::ENV_SNAPSHOT_CHUNK_BYTES;
-        let n = ((bytes + chunk - 1) / chunk) as usize;
+        let n = usize_from_u64((bytes + chunk - 1) / chunk);
         let shared_n = match shared_with {
             Some(m) => ((n as f64 * d::ENV_IMAGE_SHARED_FRACTION) as usize).min(m.chunks.len()),
             None => 0,
@@ -172,7 +168,7 @@ impl ArtifactManifest {
             if k < shared_n {
                 shared_with.expect("shared_n > 0 implies Some").chunks[k].digest
             } else {
-                mix64(SALT_ENV_CHUNK ^ sig ^ (k as u64).wrapping_mul(0xC2B2AE3D27D4EB4F))
+                mix64(SALT_ENV_CHUNK ^ sig ^ u64_from_usize(k).wrapping_mul(0xC2B2AE3D27D4EB4F))
             }
         });
         Self::build(Self::env_snapshot_id(sig), ArtifactKind::EnvSnapshot, chunks)
@@ -185,7 +181,7 @@ impl ArtifactManifest {
     pub fn ckpt_shard(job: &JobConfig, per_node_bytes: u64) -> ArtifactManifest {
         let id = Self::ckpt_shard_id(job);
         let chunks = split(per_node_bytes, d::CKPT_CHUNK_BYTES, |k| {
-            mix64(SALT_CKPT_CHUNK ^ id ^ (k as u64).wrapping_mul(0x165667B19E3779F9))
+            mix64(SALT_CKPT_CHUNK ^ id ^ u64_from_usize(k).wrapping_mul(0x165667B19E3779F9))
         });
         Self::build(id, ArtifactKind::CkptShard, chunks)
     }
@@ -193,7 +189,7 @@ impl ArtifactManifest {
     /// A synthetic manifest for tests and benches: `total` bytes in
     /// `chunk_bytes` chunks, digests keyed by `id`.
     pub fn synthetic(id: u64, total: u64, chunk_bytes: u64) -> ArtifactManifest {
-        let chunks = split(total, chunk_bytes, |k| mix64(id ^ ((k as u64) << 17)));
+        let chunks = split(total, chunk_bytes, |k| mix64(id ^ (u64_from_usize(k) << 17)));
         Self::build(id, ArtifactKind::Synthetic, chunks)
     }
 }

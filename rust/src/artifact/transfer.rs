@@ -60,12 +60,7 @@ use crate::hdfs::fuse::{plan_read, ReadEngine};
 use crate::image::p2p::Swarm;
 use crate::sim::{ClusterSim, NodeHandle, TaskId};
 use crate::util::rng::mix64;
-
-/// Domain-separation salts for admission decisions (fresh `0xA272` domain;
-/// faults use `0xFA0x`, manifests `0xA271_xxxx`).
-const SALT_SHED: u64 = 0xA272_0001;
-const SALT_BACKOFF: u64 = 0xA272_0002;
-const SALT_PEER: u64 = 0xA272_0003;
+use crate::util::salts::{SALT_BACKOFF, SALT_PEER, SALT_SHED};
 
 /// Uniform in `[0, 1)` from a mixed word (the one unit-float idiom in the
 /// tree, cf. `util::rng`).

@@ -7,6 +7,7 @@
 //! models is also exercised with real data in the e2e example.
 
 use crate::hdfs::local::LocalStore;
+use crate::util::cast::{u64_from_usize, usize_from_u64};
 use crate::util::json::{self, Json};
 use crate::bail;
 use crate::util::error::{Context, Result};
@@ -56,7 +57,7 @@ impl Checkpoint {
     }
 
     pub fn total_bytes(&self) -> u64 {
-        (self.payload.len() * 4) as u64
+        u64_from_usize(self.payload.len() * 4)
     }
 
     fn manifest(&self) -> Json {
@@ -83,7 +84,7 @@ impl Checkpoint {
         let manifest = self.manifest().to_string();
         let mut out = Vec::with_capacity(16 + manifest.len() + self.payload.len() * 4);
         out.extend_from_slice(b"BSCKPT01");
-        out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+        out.extend_from_slice(&u64_from_usize(manifest.len()).to_le_bytes());
         out.extend_from_slice(manifest.as_bytes());
         for x in &self.payload {
             out.extend_from_slice(&x.to_le_bytes());
@@ -101,7 +102,7 @@ impl Checkpoint {
         if &data[..8] != b"BSCKPT01" {
             bail!("bad checkpoint magic");
         }
-        let mlen = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+        let mlen = usize_from_u64(u64::from_le_bytes(data[8..16].try_into().unwrap()));
         // `saturating_sub` keeps the bound total even for absurd lengths.
         if mlen > data.len().saturating_sub(16) {
             bail!("truncated checkpoint manifest");

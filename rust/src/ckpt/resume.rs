@@ -29,7 +29,7 @@ pub struct ModelInitPlan {
 pub fn resume_bytes_per_node(job: &JobConfig, cluster: &ClusterConfig) -> u64 {
     let nodes_per_replica =
         ((job.pp * job.tp + cluster.gpus_per_node - 1) / cluster.gpus_per_node).max(1);
-    job.ckpt_bytes / nodes_per_replica as u64
+    job.ckpt_bytes / u64::from(nodes_per_replica)
 }
 
 /// Resume-shard bytes still valid on a node after a rollback: the chunks

@@ -227,8 +227,8 @@ impl ClusterConfig {
     pub fn from_doc(doc: &Doc) -> ClusterConfig {
         let base = ClusterConfig::default();
         ClusterConfig {
-            nodes: doc.i64_or("cluster.nodes", base.nodes as i64) as u32,
-            gpus_per_node: doc.i64_or("cluster.gpus_per_node", base.gpus_per_node as i64) as u32,
+            nodes: doc.u32_or("cluster.nodes", base.nodes),
+            gpus_per_node: doc.u32_or("cluster.gpus_per_node", base.gpus_per_node),
             node_nic_bps: doc.f64_or("cluster.node_nic_bps", base.node_nic_bps),
             node_disk_write_bps: doc
                 .f64_or("cluster.node_disk_write_bps", base.node_disk_write_bps),
@@ -239,19 +239,16 @@ impl ClusterConfig {
                 .f64_or("cluster.cluster_cache_egress_bps", base.cluster_cache_egress_bps),
             scm_egress_bps: doc.f64_or("cluster.scm_egress_bps", base.scm_egress_bps),
             scm_throttle_concurrency: doc
-                .i64_or("cluster.scm_throttle_concurrency", base.scm_throttle_concurrency as i64)
-                as u32,
+                .u32_or("cluster.scm_throttle_concurrency", base.scm_throttle_concurrency),
             scm_throttle_penalty: doc
                 .f64_or("cluster.scm_throttle_penalty", base.scm_throttle_penalty),
             scm_reject_prob: doc.f64_or("cluster.scm_reject_prob", base.scm_reject_prob),
             scm_backoff_s: doc.f64_or("cluster.scm_backoff_s", base.scm_backoff_s),
-            hdfs_datanodes: doc.i64_or("cluster.hdfs_datanodes", base.hdfs_datanodes as i64) as u32,
+            hdfs_datanodes: doc.u32_or("cluster.hdfs_datanodes", base.hdfs_datanodes),
             hdfs_datanode_egress_bps: doc
                 .f64_or("cluster.hdfs_datanode_egress_bps", base.hdfs_datanode_egress_bps),
-            hdfs_block_bytes: doc.i64_or("cluster.hdfs_block_bytes", base.hdfs_block_bytes as i64)
-                as u64,
-            hdfs_replication: doc.i64_or("cluster.hdfs_replication", base.hdfs_replication as i64)
-                as u32,
+            hdfs_block_bytes: doc.u64_or("cluster.hdfs_block_bytes", base.hdfs_block_bytes),
+            hdfs_replication: doc.u32_or("cluster.hdfs_replication", base.hdfs_replication),
             hdfs_nn_op_s: doc.f64_or("cluster.hdfs_nn_op_s", base.hdfs_nn_op_s),
             straggler_tail_prob: doc
                 .f64_or("cluster.straggler_tail_prob", base.straggler_tail_prob),
@@ -259,11 +256,9 @@ impl ClusterConfig {
             straggler_tail_alpha: doc
                 .f64_or("cluster.straggler_tail_alpha", base.straggler_tail_alpha),
             straggler_cap: doc.f64_or("cluster.straggler_cap", base.straggler_cap),
-            fleet_service_nodes: doc
-                .i64_or("cluster.fleet_service_nodes", base.fleet_service_nodes as i64)
-                as u32,
-            racks: (doc.i64_or("cluster.racks", base.racks as i64) as u32).max(1),
-            spines: (doc.i64_or("cluster.spines", base.spines as i64) as u32).max(1),
+            fleet_service_nodes: doc.u32_or("cluster.fleet_service_nodes", base.fleet_service_nodes),
+            racks: doc.u32_or("cluster.racks", base.racks).max(1),
+            spines: doc.u32_or("cluster.spines", base.spines).max(1),
             rack_uplink_bps: doc.f64_or("cluster.rack_uplink_bps", base.rack_uplink_bps),
             spine_oversub: doc.f64_or("cluster.spine_oversub", base.spine_oversub).max(1.0),
             spine_core_bps: doc.f64_or("cluster.spine_core_bps", base.spine_core_bps),
@@ -369,22 +364,20 @@ impl JobConfig {
         let base = JobConfig::default();
         JobConfig {
             name: doc.str_or("job.name", &base.name),
-            gpus: doc.i64_or("job.gpus", base.gpus as i64) as u32,
-            image_bytes: doc.i64_or("job.image_bytes", base.image_bytes as i64) as u64,
+            gpus: doc.u32_or("job.gpus", base.gpus),
+            image_bytes: doc.u64_or("job.image_bytes", base.image_bytes),
             image_hot_fraction: doc.f64_or("job.image_hot_fraction", base.image_hot_fraction),
-            image_block_bytes: doc.i64_or("job.image_block_bytes", base.image_block_bytes as i64)
-                as u64,
-            env_packages: doc.i64_or("job.env_packages", base.env_packages as i64) as u32,
-            env_pkg_mean_bytes: doc.i64_or("job.env_pkg_mean_bytes", base.env_pkg_mean_bytes as i64)
-                as u64,
+            image_block_bytes: doc.u64_or("job.image_block_bytes", base.image_block_bytes),
+            env_packages: doc.u32_or("job.env_packages", base.env_packages),
+            env_pkg_mean_bytes: doc.u64_or("job.env_pkg_mean_bytes", base.env_pkg_mean_bytes),
             env_pkg_sigma: doc.f64_or("job.env_pkg_sigma", base.env_pkg_sigma),
             env_install_cpu_mean_s: doc
                 .f64_or("job.env_install_cpu_mean_s", base.env_install_cpu_mean_s),
-            env_cache_bytes: doc.i64_or("job.env_cache_bytes", base.env_cache_bytes as i64) as u64,
-            ckpt_bytes: doc.i64_or("job.ckpt_bytes", base.ckpt_bytes as i64) as u64,
-            pp: doc.i64_or("job.pp", base.pp as i64) as u32,
-            dp: doc.i64_or("job.dp", base.dp as i64) as u32,
-            tp: doc.i64_or("job.tp", base.tp as i64) as u32,
+            env_cache_bytes: doc.u64_or("job.env_cache_bytes", base.env_cache_bytes),
+            ckpt_bytes: doc.u64_or("job.ckpt_bytes", base.ckpt_bytes),
+            pp: doc.u32_or("job.pp", base.pp),
+            dp: doc.u32_or("job.dp", base.dp),
+            tp: doc.u32_or("job.tp", base.tp),
             image_seed: base.image_seed,
             env_seed: base.env_seed,
         }
@@ -482,35 +475,27 @@ impl BootseerConfig {
             env_cache: doc.bool_or("bootseer.env_cache", base.env_cache),
             ckpt_striped: doc.bool_or("bootseer.ckpt_striped", base.ckpt_striped),
             record_window_s: doc.f64_or("bootseer.record_window_s", base.record_window_s),
-            prefetch_threads: doc.i64_or("bootseer.prefetch_threads", base.prefetch_threads as i64)
-                as u32,
-            stripe_chunk_bytes: doc
-                .i64_or("bootseer.stripe_chunk_bytes", base.stripe_chunk_bytes as i64)
-                as u64,
-            stripe_width: doc.i64_or("bootseer.stripe_width", base.stripe_width as i64) as u32,
+            prefetch_threads: doc.u32_or("bootseer.prefetch_threads", base.prefetch_threads),
+            stripe_chunk_bytes: doc.u64_or("bootseer.stripe_chunk_bytes", base.stripe_chunk_bytes),
+            stripe_width: doc.u32_or("bootseer.stripe_width", base.stripe_width),
             overlap: doc
                 .get("bootseer.overlap")
                 .and_then(|v| v.as_str())
                 .and_then(OverlapMode::parse)
                 .unwrap_or(base.overlap),
-            // Clamp at 0: a negative value must not wrap into an
-            // effectively unlimited budget.
-            spec_prefetch_budget_bytes: doc
-                .i64_or(
-                    "bootseer.spec_prefetch_budget_bytes",
-                    base.spec_prefetch_budget_bytes as i64,
-                )
-                .max(0) as u64,
+            // `u64_or` clamps a present negative value at 0 (it must not
+            // wrap into an effectively unlimited budget) and passes an
+            // absent key's default through untouched — which also keeps
+            // the unbounded `u64::MAX` cache sentinel out of any i64
+            // round-trip.
+            spec_prefetch_budget_bytes: doc.u64_or(
+                "bootseer.spec_prefetch_budget_bytes",
+                base.spec_prefetch_budget_bytes,
+            ),
             artifact_dedup: doc.bool_or("bootseer.artifact_dedup", base.artifact_dedup),
             delta_resume: doc.bool_or("bootseer.delta_resume", base.delta_resume),
-            // The unbounded default (`u64::MAX`) must not round-trip
-            // through i64; only an explicitly set key overrides it.
-            // Negative values clamp to 0 ("no cache"), not unbounded.
             cache_capacity_bytes: doc
-                .get("bootseer.cache_capacity_bytes")
-                .and_then(|v| v.as_i64())
-                .map(|v| v.max(0) as u64)
-                .unwrap_or(base.cache_capacity_bytes),
+                .u64_or("bootseer.cache_capacity_bytes", base.cache_capacity_bytes),
             cache_policy: doc
                 .get("bootseer.cache_policy")
                 .and_then(|v| v.as_str())

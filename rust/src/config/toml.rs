@@ -124,6 +124,26 @@ impl Doc {
         self.get(key).and_then(Value::as_i64).unwrap_or(default)
     }
 
+    /// Unsigned byte/size quantity: a present key is clamped at 0 (a
+    /// negative byte count must never wrap into an effectively unlimited
+    /// one); an absent key passes `default` through untouched, so
+    /// `u64::MAX` sentinels like the unbounded cache capacity survive.
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        match self.get(key).and_then(Value::as_i64) {
+            Some(v) => crate::util::cast::u64_from_i64_clamped(v),
+            None => default,
+        }
+    }
+
+    /// Unsigned count: a present key is clamped into `0..=u32::MAX`
+    /// instead of bit-truncated; an absent key passes `default` through.
+    pub fn u32_or(&self, key: &str, default: u32) -> u32 {
+        match self.get(key).and_then(Value::as_i64) {
+            Some(v) => crate::util::cast::u32_from_i64_clamped(v),
+            None => default,
+        }
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(Value::as_f64).unwrap_or(default)
     }

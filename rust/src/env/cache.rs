@@ -13,6 +13,7 @@
 //! cache entries. The simulator models the *time* of these operations; the
 //! e2e example and tests run them for real.
 
+use crate::util::cast::{u32_from_usize, u64_from_usize, usize_from_u32, usize_from_u64};
 use crate::util::compress::{compress, decompress};
 use crate::util::error::{Context, Result};
 use crate::util::sha256::Sha256;
@@ -85,9 +86,9 @@ pub fn pack(root: &Path, files: &[PathBuf], level: i32) -> Result<Vec<u8>> {
         let abs = root.join(rel);
         let data = fs::read(&abs).with_context(|| format!("read {abs:?}"))?;
         let p = rel.to_string_lossy();
-        raw.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        raw.extend_from_slice(&u32_from_usize(p.len()).to_le_bytes());
         raw.extend_from_slice(p.as_bytes());
-        raw.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        raw.extend_from_slice(&u64_from_usize(data.len()).to_le_bytes());
         raw.extend_from_slice(&data);
     }
     Ok(compress(&raw, level))
@@ -106,7 +107,7 @@ pub fn unpack(archive: &[u8], dest: &Path) -> Result<Vec<PathBuf>> {
         if i + 4 > raw.len() {
             bail!("truncated archive (path len)");
         }
-        let plen = u32::from_le_bytes(raw[i..i + 4].try_into().unwrap()) as usize;
+        let plen = usize_from_u32(u32::from_le_bytes(raw[i..i + 4].try_into().unwrap()));
         i += 4;
         if i + plen > raw.len() {
             bail!("truncated archive (path)");
@@ -121,7 +122,7 @@ pub fn unpack(archive: &[u8], dest: &Path) -> Result<Vec<PathBuf>> {
         if i + 8 > raw.len() {
             bail!("truncated archive (data len)");
         }
-        let dlen = u64::from_le_bytes(raw[i..i + 8].try_into().unwrap()) as usize;
+        let dlen = usize_from_u64(u64::from_le_bytes(raw[i..i + 8].try_into().unwrap()));
         i += 8;
         if i + dlen > raw.len() {
             bail!("truncated archive (data)");
@@ -161,7 +162,7 @@ impl CacheCapture {
 /// Simulation-level registry of cache entries: job signature → entry.
 #[derive(Clone, Debug, Default)]
 pub struct EnvCacheRegistry {
-    entries: std::collections::HashMap<u64, CacheEntry>,
+    entries: std::collections::BTreeMap<u64, CacheEntry>,
 }
 
 #[derive(Clone, Copy, Debug)]

@@ -8,6 +8,7 @@
 //! invalidates it when job parameters change.
 
 use crate::config::JobConfig;
+use crate::util::cast::bytes_from_f64;
 use crate::util::rng::Rng;
 
 /// One runtime dependency.
@@ -40,7 +41,7 @@ impl PackageSet {
         let mu = (job.env_pkg_mean_bytes as f64).ln() - sigma * sigma / 2.0;
         let packages = (0..job.env_packages)
             .map(|i| {
-                let bytes = rng.lognormal(mu, sigma).max(50_000.0) as u64;
+                let bytes = bytes_from_f64(rng.lognormal(mu, sigma).max(50_000.0));
                 // Install CPU time loosely correlates with size.
                 let size_factor = (bytes as f64 / job.env_pkg_mean_bytes as f64).powf(0.35);
                 let install_cpu_s =

@@ -47,13 +47,8 @@
 use crate::config::defaults as d;
 use crate::scheduler::{ChainJob, FaultOracle, SegmentFate};
 use crate::util::rng::{mix64, Rng};
-use std::collections::HashMap;
-
-/// Domain-separation salts for the per-decision seed streams.
-const SALT_CRASH: u64 = 0xFA01;
-const SALT_RELOCATE: u64 = 0xFA02;
-const SALT_STRAGGLER: u64 = 0xFA03;
-const SALT_BROWNOUT: u64 = 0xFA04;
+use crate::util::salts::{SALT_BROWNOUT, SALT_CRASH, SALT_RELOCATE, SALT_STRAGGLER};
+use std::collections::BTreeMap;
 
 /// The seed of the decision stream for `(job, seg, retry)` under `salt`.
 /// Pure — the replay and the scheduler oracle derive identical decisions
@@ -316,16 +311,13 @@ impl FaultConfig {
                 .f64_or("faults.brownout_capacity_factor", base.brownout_capacity_factor)
                 .clamp(0.0, 1.0),
             ckpt_interval_s: doc.f64_or("faults.ckpt_interval_s", base.ckpt_interval_s).max(0.0),
-            max_retries: doc.i64_or("faults.max_retries", base.max_retries as i64).max(0) as u32,
+            max_retries: doc.u32_or("faults.max_retries", base.max_retries),
             // Slot counts clamp to ≥ 1 here (a plain struct, no Result);
             // the CLI `parse` path rejects zero loudly.
-            registry_slots: doc
-                .i64_or("faults.registry_slots", base.registry_slots as i64)
-                .max(1) as u32,
-            cache_slots: doc.i64_or("faults.cache_slots", base.cache_slots as i64).max(1) as u32,
+            registry_slots: doc.u32_or("faults.registry_slots", base.registry_slots).max(1),
+            cache_slots: doc.u32_or("faults.cache_slots", base.cache_slots).max(1),
             shed_backoff_s: doc.f64_or("faults.shed_backoff_s", base.shed_backoff_s).max(0.0),
-            shed_retries: doc.i64_or("faults.shed_retries", base.shed_retries as i64).max(0)
-                as u32,
+            shed_retries: doc.u32_or("faults.shed_retries", base.shed_retries),
             brownout_rack_frac: doc
                 .f64_or("faults.brownout_rack_frac", base.brownout_rack_frac)
                 .clamp(0.0, 1.0),
@@ -368,7 +360,7 @@ impl Default for FaultConfig {
 pub struct FaultEngine {
     cfg: FaultConfig,
     seed: u64,
-    est_by_id: HashMap<u64, f64>,
+    est_by_id: BTreeMap<u64, f64>,
 }
 
 impl FaultEngine {

@@ -1405,8 +1405,8 @@ impl ArtifactSweep {
             .iter()
             .map(|p| {
                 let mut o = Json::obj();
-                o.set("nodes", p.nodes as u64)
-                    .set("gpus", p.gpus as u64)
+                o.set("nodes", u64::from(p.nodes))
+                    .set("gpus", u64::from(p.gpus))
                     .set("cold_s", p.cold_s)
                     .set("warm_s", p.warm_s)
                     .set("delta_s", p.delta_s)

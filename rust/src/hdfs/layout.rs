@@ -233,7 +233,7 @@ mod tests {
             let width = g.u64_in(1, 8) as u32;
             let block = chunk * g.u64_in(1, 600);
             let l = StripeLayout::new(bytes, chunk, width, block);
-            let mut seen = std::collections::HashSet::new();
+            let mut seen = std::collections::BTreeSet::new();
             for c in 0..l.n_chunks() {
                 let loc = l.locate(c);
                 prop_assert!(loc.file < width);

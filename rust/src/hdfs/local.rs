@@ -10,6 +10,7 @@
 //! output buffer). Checkpoint save/resume in the e2e example runs on this.
 
 use crate::hdfs::layout::StripeLayout;
+use crate::util::cast::{u64_from_usize, usize_from_u64};
 use crate::util::json::{self, Json};
 use crate::bail;
 use crate::util::error::{Context, Result};
@@ -54,7 +55,7 @@ impl LocalStore {
         width: u32,
     ) -> Result<StripeLayout> {
         let layout =
-            StripeLayout::new(data.len() as u64, chunk_bytes, width, u64::MAX / 4);
+            StripeLayout::new(u64_from_usize(data.len()), chunk_bytes, width, u64::MAX / 4);
         // One buffered writer per stripe file; walk chunks in logical order.
         let mut writers: Vec<std::io::BufWriter<File>> = (0..width)
             .map(|f| {
@@ -66,17 +67,17 @@ impl LocalStore {
             .collect::<Result<_>>()?;
         for c in 0..layout.n_chunks() {
             let loc = layout.locate(c);
-            let start = (c * chunk_bytes) as usize;
-            let end = (start as u64 + layout.chunk_len(c)) as usize;
+            let start = usize_from_u64(c * chunk_bytes);
+            let end = usize_from_u64(u64_from_usize(start) + layout.chunk_len(c));
             writers[loc.file as usize].write_all(&data[start..end])?;
         }
         for mut w in writers {
             w.flush()?;
         }
         let mut m = Json::obj();
-        m.set("logical_bytes", data.len() as u64)
+        m.set("logical_bytes", u64_from_usize(data.len()))
             .set("chunk_bytes", chunk_bytes)
-            .set("width", width as u64);
+            .set("width", u64::from(width));
         fs::write(self.manifest_path(name), m.to_string())?;
         Ok(layout)
     }
@@ -120,13 +121,13 @@ impl LocalStore {
         let mut files: Vec<File> = (0..layout.width)
             .map(|f| File::open(self.stripe_path(name, f)).map_err(Into::into))
             .collect::<Result<_>>()?;
-        let mut out = vec![0u8; layout.logical_bytes as usize];
+        let mut out = vec![0u8; usize_from_u64(layout.logical_bytes)];
         for c in 0..layout.n_chunks() {
             let loc = layout.locate(c);
             let fh = &mut files[loc.file as usize];
             fh.seek(SeekFrom::Start(loc.index_in_file * layout.chunk_bytes))?;
-            let start = (c * layout.chunk_bytes) as usize;
-            let end = start + layout.chunk_len(c) as usize;
+            let start = usize_from_u64(c * layout.chunk_bytes);
+            let end = start + usize_from_u64(layout.chunk_len(c));
             fh.read_exact(&mut out[start..end])?;
         }
         Ok(out)
@@ -137,7 +138,7 @@ impl LocalStore {
     /// regions by round-robin ownership).
     pub fn read_striped_parallel(&self, name: &str) -> Result<Vec<u8>> {
         let layout = self.layout(name)?;
-        let mut out = vec![0u8; layout.logical_bytes as usize];
+        let mut out = vec![0u8; usize_from_u64(layout.logical_bytes)];
         let ptr = SendPtr(out.as_mut_ptr());
         let chunk = layout.chunk_bytes;
         let errs: Vec<String> = std::thread::scope(|scope| {

@@ -7,7 +7,7 @@
 //! the union of blocks observed within the record window — and prefetch
 //! exactly those before container start.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// One recorded block access.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -73,13 +73,13 @@ pub struct HotSetRecord {
 /// from).
 #[derive(Clone, Debug, Default)]
 pub struct HotSetRegistry {
-    records: HashMap<u64, HotSetRecord>,
+    records: BTreeMap<u64, HotSetRecord>,
     pub window_s: f64,
 }
 
 impl HotSetRegistry {
     pub fn new(window_s: f64) -> HotSetRegistry {
-        HotSetRegistry { records: HashMap::new(), window_s }
+        HotSetRegistry { records: BTreeMap::new(), window_s }
     }
 
     /// Upload one node's trace for `image_digest`.

@@ -7,6 +7,7 @@
 //! env-cache packer, and `micro_blockstore` — plus the dedup accounting the
 //! simulator reads.
 
+use crate::util::cast::u64_from_usize;
 use crate::util::sha256::Sha256;
 use std::collections::HashMap;
 
@@ -32,6 +33,7 @@ pub fn digest_of(data: &[u8]) -> BlockDigest {
 /// In-memory content-addressed store with refcounts and dedup statistics.
 #[derive(Default)]
 pub struct BlockStore {
+    // detlint::allow(hash-container, "keyed get/insert/remove/len only; iteration order is never observed, and the real-byte store is off the replay path")
     blocks: HashMap<BlockDigest, (Vec<u8>, u64)>,
     /// Logical bytes put (before dedup).
     pub logical_bytes: u64,
@@ -47,11 +49,11 @@ impl BlockStore {
     /// Insert a block; returns its digest. Duplicate content costs nothing.
     pub fn put(&mut self, data: &[u8]) -> BlockDigest {
         let d = digest_of(data);
-        self.logical_bytes += data.len() as u64;
+        self.logical_bytes += u64_from_usize(data.len());
         match self.blocks.get_mut(&d) {
             Some((_, rc)) => *rc += 1,
             None => {
-                self.physical_bytes += data.len() as u64;
+                self.physical_bytes += u64_from_usize(data.len());
                 self.blocks.insert(d, (data.to_vec(), 1));
             }
         }
@@ -67,7 +69,7 @@ impl BlockStore {
         let Some((data, rc)) = self.blocks.get_mut(d) else {
             return false;
         };
-        let len = data.len() as u64;
+        let len = u64_from_usize(data.len());
         self.logical_bytes -= len;
         if *rc > 1 {
             *rc -= 1;

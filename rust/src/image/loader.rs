@@ -25,6 +25,7 @@ use crate::config::{BootseerConfig, ImageMode};
 use crate::image::access::HotSetRegistry;
 use crate::image::spec::ImageSpec;
 use crate::sim::{ClusterSim, NodeHandle, TaskId};
+use crate::util::cast::u32_from_usize;
 
 /// Result of planning the image-loading stage.
 pub struct ImageLoadPlan {
@@ -210,9 +211,10 @@ fn plan_prefetch(
     // Every node runs one foreground prefetch and, when cold bytes exist,
     // one background stream — the pool's exact flow count, after which its
     // slot is recycled.
-    let swarm_uses = n as u32 + if cold_bytes > 0 { n as u32 } else { 0 };
+    let swarm_uses = u32_from_usize(n) + if cold_bytes > 0 { u32_from_usize(n) } else { 0 };
     let tier = if cfg.p2p { ProviderTier::CacheSwarm } else { ProviderTier::ClusterCache };
-    let provider = TransferPlanner::build(cs, "img.prefetch.swarm", tier, n as u32, swarm_uses);
+    let provider =
+        TransferPlanner::build(cs, "img.prefetch.swarm", tier, u32_from_usize(n), swarm_uses);
     let mut node_done = Vec::with_capacity(n);
     let mut background = Vec::with_capacity(n);
     let mut fetched = 0u64;

@@ -7,6 +7,7 @@
 //! view the simulator and the loaders work against; real block bytes only
 //! exist in unit tests and the blockstore micro-bench.
 
+use crate::util::cast::{bytes_from_f64, u32_from_u64};
 use crate::util::rng::Rng;
 
 /// A file inside the flattened image.
@@ -74,7 +75,7 @@ impl ImageSpec {
     ///   startup touches a small, stable subset.
     pub fn synth(seed: u64, total_bytes: u64, block_bytes: u64, hot_fraction: f64) -> ImageSpec {
         let mut rng = Rng::seeded(seed ^ 0x1111_2222_3333_4444);
-        let n_blocks = ((total_bytes + block_bytes - 1) / block_bytes) as u32;
+        let n_blocks = u32_from_u64((total_bytes + block_bytes - 1) / block_bytes);
 
         // Files: draw sizes until the image is full.
         let mut files = Vec::new();
@@ -84,9 +85,9 @@ impl ImageSpec {
         while covered < total_bytes {
             // Lognormal sizes, mean ~ tens of MB, heavy tail for the
             // multi-GB framework blobs.
-            let raw = rng.lognormal(16.0, 2.0) as u64; // median ≈ 8.9 MB
+            let raw = bytes_from_f64(rng.lognormal(16.0, 2.0)); // median ≈ 8.9 MB
             let bytes = raw.clamp(4 * 1024, 8 * 1_000_000_000).min(total_bytes - covered);
-            let nb = ((bytes + block_bytes - 1) / block_bytes).max(1) as u32;
+            let nb = u32_from_u64((bytes + block_bytes - 1) / block_bytes).max(1);
             files.push(FileEntry {
                 path: format!("/opt/image/file{fid:06}"),
                 bytes,
@@ -170,7 +171,7 @@ mod tests {
     #[test]
     fn hot_set_unique_blocks() {
         let img = paper_image();
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for &b in &img.startup_access {
             assert!(b < img.n_blocks());
             assert!(seen.insert(b), "duplicate hot block {b}");

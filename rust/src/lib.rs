@@ -26,6 +26,7 @@
 //! See `README.md` for the module map and `docs/replay.md` for the replay
 //! engine's design.
 
+pub mod analysis;
 pub mod artifact;
 pub mod ckpt;
 pub mod config;

@@ -4,7 +4,7 @@
 
 use crate::profiler::events::{EventKind, Stage, StageEvent, JOB_LEVEL};
 use crate::util::json::Json;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// One computed stage duration.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -28,7 +28,7 @@ impl DurationRow {
 pub struct DurationDb {
     pub rows: Vec<DurationRow>,
     /// GPUs requested per job (attached metadata for per-scale queries).
-    pub job_gpus: HashMap<u64, u32>,
+    pub job_gpus: BTreeMap<u64, u32>,
 }
 
 impl DurationDb {
@@ -166,6 +166,7 @@ impl DurationDb {
 /// Pairs begin/end events into duration rows.
 #[derive(Debug, Default)]
 pub struct StageAnalysisService {
+    // detlint::allow(hash-container, "begin/end pairing scratch: keyed insert/remove only, never iterated, so hash order cannot reach a result")
     open: HashMap<(u64, u32, u32, Stage), f64>,
     pub db: DurationDb,
     /// Events that ended without a begin (or doubled begins) — surfaced so

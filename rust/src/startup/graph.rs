@@ -41,6 +41,7 @@ use crate::config::OverlapMode;
 use crate::profiler::events::Stage;
 use crate::sim::{ClusterSim, NodeHandle, TaskId};
 use crate::startup::World;
+use crate::util::cast::u32_from_usize;
 
 /// How a stage's per-node tasks attach to the stage before it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -325,7 +326,7 @@ impl<'p> StageGraph<'p> {
                     // its slot recycles after the staging wave. Peers
                     // under eviction pressure drop out of the pool (they
                     // are about to evict what they would serve).
-                    let stagers = bytes_v.iter().filter(|&&b| b > 0).count() as u32;
+                    let stagers = u32_from_usize(bytes_v.iter().filter(|&&b| b > 0).count());
                     let peers = admitted_peers(n as u32, pressure, peer_seed);
                     let provider =
                         TransferPlanner::build(cs, "spec.swarm", a.tier, peers, stagers)

@@ -95,18 +95,14 @@ use crate::scheduler::{
 use crate::startup::{
     run_startup_with, StartupContext, StartupKind, StartupOutcome, World,
 };
+use crate::util::cast::{bytes_from_f64, u32_from_f64};
 use crate::util::rng::{mix64, Rng};
-use std::collections::HashMap;
+use crate::util::salts::{SALT_ADMISSION, SALT_CHURN};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 mod timeline;
-
-/// Domain-separation salts for the trace-level cache-economics decisions
-/// (`0xA272_xxxx` — the artifact/transfer family; `_0001..=_0003` live in
-/// [`crate::artifact::transfer`]).
-const SALT_CHURN: u64 = 0xA272_0004;
-const SALT_ADMISSION: u64 = 0xA272_0005;
 
 /// One job in the synthetic week.
 #[derive(Clone, Debug)]
@@ -253,8 +249,8 @@ pub fn trace_job_config(tj: &TraceJob) -> JobConfig {
     let nodes_est = (tj.gpus.max(16) + 7) / 8;
     JobConfig {
         gpus: tj.gpus,
-        image_bytes: (base.image_bytes as f64 * img_f) as u64,
-        ckpt_bytes: (base.ckpt_bytes as f64 * size_f) as u64,
+        image_bytes: bytes_from_f64(base.image_bytes as f64 * img_f),
+        ckpt_bytes: bytes_from_f64(base.ckpt_bytes as f64 * size_f),
         pp: base.pp.max(nodes_est / 4),
         image_seed: Some(0x1AA6E ^ tj.image_id.wrapping_mul(0x9E3779B97F4A7C15)),
         env_seed: Some(0x9AC5 ^ tj.image_id.wrapping_mul(0xA24BAED4963EE407)),
@@ -389,8 +385,8 @@ fn schedule_trace_with(
 /// an earlier-or-equal epoch, so each epoch's world answers its own units
 /// exactly like the global one would.
 pub struct SharedWorld {
-    images: HashMap<u64, SharedImage>,
-    envs: HashMap<u64, SharedEnv>,
+    images: BTreeMap<u64, SharedImage>,
+    envs: BTreeMap<u64, SharedEnv>,
 }
 
 struct SharedImage {
@@ -711,7 +707,7 @@ fn effective_cluster(cluster: &ClusterConfig, nodes: u32, avg_active_nodes: f64)
     let n = nodes as f64;
     let f = (cluster.fleet_service_nodes as f64 / avg_active_nodes.max(1.0)).min(1.0);
     ClusterConfig {
-        hdfs_datanodes: (((cluster.hdfs_datanodes.max(nodes * 8)) as f64 * f).round() as u32)
+        hdfs_datanodes: u32_from_f64((cluster.hdfs_datanodes.max(nodes * 8) as f64 * f).round())
             .max(1),
         cluster_cache_egress_bps: cluster.cluster_cache_egress_bps.max(n * 1.0e9) * f,
         registry_egress_bps: cluster.registry_egress_bps.max(n * 0.5e9) * f,
@@ -768,8 +764,8 @@ pub fn replay_cluster(
     // digest + hot set + hot bytes per distinct image seed; signature per
     // distinct env seed. Both are pure functions of the job config,
     // computed once.
-    let mut img_idents: HashMap<u64, (u64, Arc<Vec<u32>>, u64)> = HashMap::new();
-    let mut env_idents: HashMap<u64, u64> = HashMap::new();
+    let mut img_idents: BTreeMap<u64, (u64, Arc<Vec<u32>>, u64)> = BTreeMap::new();
+    let mut env_idents: BTreeMap<u64, u64> = BTreeMap::new();
     let mut job_digest = Vec::with_capacity(trace.len());
     let mut job_hot_bytes = Vec::with_capacity(trace.len());
     let mut job_env_sig = Vec::with_capacity(trace.len());
@@ -1006,11 +1002,11 @@ pub fn replay_cluster(
         }
         handoffs[u.epoch].note_env(u.env_sig, end);
     }
-    let img_blocks: HashMap<u64, Arc<Vec<u32>>> =
+    let img_blocks: BTreeMap<u64, Arc<Vec<u32>>> =
         img_idents.values().map(|(dg, b, _)| (*dg, Arc::clone(b))).collect();
     // First job in trace order defines an env signature's cache bytes —
     // same tie-break as the old single-world build.
-    let mut env_bytes_of: HashMap<u64, u64> = HashMap::new();
+    let mut env_bytes_of: BTreeMap<u64, u64> = BTreeMap::new();
     for j in 0..trace.len() {
         env_bytes_of.entry(job_env_sig[j]).or_insert(jobs_cfg[j].env_cache_bytes);
     }
@@ -1035,8 +1031,8 @@ pub fn replay_cluster(
         let min_start =
             idxs.iter().map(|&i| units[i].start_s).fold(f64::INFINITY, f64::min);
         let lo = contention.lower_bound(min_start);
-        let mut eff_memo: HashMap<(u32, u64), ClusterConfig> = HashMap::new();
-        let mut brown_memo: HashMap<(u64, u64), f64> = HashMap::new();
+        let mut eff_memo: BTreeMap<(u32, u64), ClusterConfig> = BTreeMap::new();
+        let mut brown_memo: BTreeMap<(u64, u64), f64> = BTreeMap::new();
         for &i in idxs {
             let u = &mut units[i];
             let end = u.start_s + u.est_s;
@@ -1106,7 +1102,7 @@ pub fn replay_cluster(
     } else {
         opts.threads
     };
-    let blocks_of: HashMap<u64, &[u32]> =
+    let blocks_of: BTreeMap<u64, &[u32]> =
         img_idents.values().map(|(d, b, _)| (*d, b.as_slice())).collect();
     let bounded = cfg.cache_capacity_bytes != u64::MAX;
     let run_unit = |u: &Unit| -> StartupOutcome {
@@ -1367,7 +1363,7 @@ mod tests {
         let total: u64 = t.iter().map(|j| j.gpus as u64).sum();
         assert!(total > 100_000, "total gpus {total}");
         // Images are shared: the whole week runs on a small image pool.
-        let images: std::collections::HashSet<u64> = t.iter().map(|j| j.image_id).collect();
+        let images: std::collections::BTreeSet<u64> = t.iter().map(|j| j.image_id).collect();
         assert!(images.len() <= 22, "distinct images {}", images.len());
         assert!(images.len() >= 10);
     }

@@ -32,8 +32,10 @@
 use crate::artifact::cache::CacheState;
 use crate::config::defaults as d;
 use crate::config::BootseerConfig;
+use crate::util::cast::bytes_from_f64;
 use crate::util::rng::mix64;
-use std::collections::HashMap;
+use crate::util::salts::SALT_CHURN;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use super::{SharedEnv, SharedImage, SharedWorld};
@@ -69,8 +71,8 @@ impl EpochTimeline {
 /// yields the same map; the replay folds them as a prefix over epochs.
 #[derive(Default, Clone)]
 pub(crate) struct EpochHandoff {
-    img_avail: HashMap<u64, f64>,
-    env_avail: HashMap<u64, f64>,
+    img_avail: BTreeMap<u64, f64>,
+    env_avail: BTreeMap<u64, f64>,
 }
 
 impl EpochHandoff {
@@ -105,8 +107,8 @@ impl EpochHandoff {
 /// of every image's block list.
 pub(crate) fn fold_worlds(
     handoffs: &[EpochHandoff],
-    img_blocks: &HashMap<u64, Arc<Vec<u32>>>,
-    env_bytes: &HashMap<u64, u64>,
+    img_blocks: &BTreeMap<u64, Arc<Vec<u32>>>,
+    env_bytes: &BTreeMap<u64, u64>,
 ) -> Vec<SharedWorld> {
     let mut acc = EpochHandoff::default();
     handoffs
@@ -246,14 +248,14 @@ pub(crate) fn seed_warm_cache(
         // Log-uniform churn in [min, min·2^doublings), a pure function of
         // (seed, job, attempt).
         let h = mix64(
-            seed ^ super::SALT_CHURN
+            seed ^ SALT_CHURN
                 ^ job_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
                 ^ (attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A),
         );
         let uf = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
         let churn =
-            (d::CACHE_CHURN_MIN_BYTES as f64 * (d::CACHE_CHURN_DOUBLINGS * uf).exp2()) as u64;
-        cache.insert_shared_artifact(mix64(h ^ super::SALT_CHURN), churn);
+            bytes_from_f64(d::CACHE_CHURN_MIN_BYTES as f64 * (d::CACHE_CHURN_DOUBLINGS * uf).exp2());
+        cache.insert_shared_artifact(mix64(h ^ SALT_CHURN), churn);
     }
     cache
 }

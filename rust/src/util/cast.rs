@@ -1,0 +1,133 @@
+//! Checked numeric conversions for accounting arithmetic.
+//!
+//! The replay's headline quantities — bytes moved, GPU-hours wasted,
+//! service-op counts — cross between `f64` (fluid-sim arithmetic), `u64`
+//! (byte ledgers) and `u32`/`usize` (counts and indexing). A bare `as`
+//! cast at those joints truncates or wraps silently, which is exactly how
+//! accounting drift ships unnoticed; detlint rule `unchecked-cast` (R5)
+//! flags bare casts in accounting statements and points here.
+//!
+//! Every helper is **bit-identical to the `as` cast it replaces** in
+//! release builds: the precondition is a `debug_assert!`, checked by
+//! `cargo test` (dev profile) and compiled out of the release replay. The
+//! raw casts below are the one blessed site — R5 skips this module.
+
+/// Byte quantity from float arithmetic, truncating toward zero exactly
+/// like `as`. Checked: finite, non-negative, and below 2^53 — the range
+/// where `f64` still resolves individual bytes (9 PB, far above any
+/// modeled artifact), so the truncation drops only the sub-byte fraction.
+#[inline]
+pub fn bytes_from_f64(x: f64) -> u64 {
+    debug_assert!(x.is_finite(), "byte quantity not finite: {x}");
+    debug_assert!(x >= 0.0, "negative byte quantity: {x}");
+    debug_assert!(x < 9_007_199_254_740_992.0, "byte quantity above f64 integer range: {x}");
+    x as u64
+}
+
+/// Count (node/op/capacity) from float arithmetic, truncating like `as`.
+/// Checked: finite, non-negative, and within `u32`.
+#[inline]
+pub fn u32_from_f64(x: f64) -> u32 {
+    debug_assert!(x.is_finite(), "count not finite: {x}");
+    debug_assert!(x >= 0.0, "negative count: {x}");
+    debug_assert!(x <= u32::MAX as f64, "count overflows u32: {x}");
+    x as u32
+}
+
+/// Widen a length/index to a `u64` ledger quantity. Lossless on every
+/// target Rust supports (`usize` ≤ 64 bits); spelled as a named helper so
+/// accounting statements carry no bare `as`.
+#[inline]
+pub fn u64_from_usize(x: usize) -> u64 {
+    x as u64
+}
+
+/// Narrow a `u64` ledger quantity to an in-memory size/index. Checked:
+/// must fit `usize` — a real guard on 32-bit targets, where a 5 GB wire
+/// length must fail loudly rather than wrap into a short allocation.
+#[inline]
+pub fn usize_from_u64(x: u64) -> usize {
+    debug_assert!(
+        u128::from(x) <= usize::MAX as u128,
+        "u64 {x} does not fit usize on this target"
+    );
+    x as usize
+}
+
+/// Narrow a `u64` count to `u32`. Checked: must fit.
+#[inline]
+pub fn u32_from_u64(x: u64) -> u32 {
+    debug_assert!(x <= u64::from(u32::MAX), "count overflows u32: {x}");
+    x as u32
+}
+
+/// Narrow a collection length to a `u32` count. Checked: must fit.
+#[inline]
+pub fn u32_from_usize(x: usize) -> u32 {
+    debug_assert!(x <= u32::MAX as usize, "length overflows u32: {x}");
+    x as u32
+}
+
+/// Widen a `u32` id/index for slice indexing. Lossless on every target
+/// Rust supports (`usize` ≥ 32 bits on all tier-1/2 platforms this
+/// builds for).
+#[inline]
+pub fn usize_from_u32(x: u32) -> usize {
+    x as usize
+}
+
+/// Config-file integer (TOML `i64`) to a byte/size quantity: negatives
+/// clamp to 0 — a negative byte count must never wrap into an effectively
+/// unlimited quantity (the `cache_capacity_bytes` bug class).
+#[inline]
+pub fn u64_from_i64_clamped(x: i64) -> u64 {
+    x.max(0) as u64
+}
+
+/// Config-file integer (TOML `i64`) to a `u32` count: clamped into
+/// `0..=u32::MAX` instead of bit-truncated.
+#[inline]
+pub fn u32_from_i64_clamped(x: i64) -> u32 {
+    x.clamp(0, i64::from(u32::MAX)) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn release_equivalence_on_happy_path() {
+        // Each helper must truncate exactly like the cast it replaces.
+        assert_eq!(bytes_from_f64(28_620_000_000.9), 28_620_000_000);
+        assert_eq!(bytes_from_f64(0.0), 0);
+        assert_eq!(u32_from_f64(65_535.7), 65_535);
+        assert_eq!(u64_from_usize(123_456), 123_456);
+        assert_eq!(usize_from_u64(1 << 40), 1usize << 40);
+        assert_eq!(u32_from_u64(4_294_967_295), u32::MAX);
+        assert_eq!(u32_from_usize(8), 8);
+        assert_eq!(usize_from_u32(u32::MAX), 4_294_967_295);
+    }
+
+    #[test]
+    fn clamped_config_conversions() {
+        assert_eq!(u64_from_i64_clamped(-1), 0);
+        assert_eq!(u64_from_i64_clamped(i64::MAX), i64::MAX as u64);
+        assert_eq!(u32_from_i64_clamped(-7), 0);
+        assert_eq!(u32_from_i64_clamped(1 << 40), u32::MAX);
+        assert_eq!(u32_from_i64_clamped(12), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative byte quantity")]
+    #[cfg(debug_assertions)]
+    fn negative_bytes_caught_in_debug() {
+        bytes_from_f64(-1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "count overflows u32")]
+    #[cfg(debug_assertions)]
+    fn u32_overflow_caught_in_debug() {
+        u32_from_u64(1 << 33);
+    }
+}

@@ -23,7 +23,7 @@ const MAX_RUN: usize = 130;
 pub fn compress(data: &[u8], _level: i32) -> Vec<u8> {
     let mut out = Vec::with_capacity(data.len() / 8 + 32);
     out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    out.extend_from_slice(&crate::util::cast::u64_from_usize(data.len()).to_le_bytes());
     let n = data.len();
     let run_at = |i: usize| -> usize {
         let b = data[i];
@@ -63,8 +63,9 @@ pub fn compress(data: &[u8], _level: i32) -> Vec<u8> {
 pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
     ensure!(data.len() >= MAGIC.len() + 8, "compressed buffer too short");
     ensure!(&data[..MAGIC.len()] == MAGIC, "bad compression magic");
-    let want =
-        u64::from_le_bytes(data[MAGIC.len()..MAGIC.len() + 8].try_into().unwrap()) as usize;
+    let want = crate::util::cast::usize_from_u64(u64::from_le_bytes(
+        data[MAGIC.len()..MAGIC.len() + 8].try_into().unwrap(),
+    ));
     // A malformed header must not drive allocation: each payload byte can
     // decode to at most MAX_RUN output bytes, so anything past that bound
     // is guaranteed to fail the final length check anyway.

@@ -1,0 +1,54 @@
+//! Shared plumbing for the in-tree CI gate binaries (`bench-gate`,
+//! `detlint`).
+//!
+//! Both gates follow the same contract: exit 0 when clean, 1 when the gate
+//! trips (a real violation the change author must address), 2 on usage or
+//! I/O errors (the gate itself could not run). Keeping the codes and the
+//! file plumbing here means the CI workflow can treat every gate binary
+//! identically.
+
+use crate::util::json;
+
+/// The gate ran and found nothing.
+pub const EXIT_OK: i32 = 0;
+/// The gate tripped: violations/findings were reported.
+pub const EXIT_VIOLATIONS: i32 = 1;
+/// The gate could not run: bad usage or unreadable inputs.
+pub const EXIT_USAGE: i32 = 2;
+
+/// Read and parse a JSON file, tagging errors with the path.
+pub fn load_json(path: &str) -> Result<json::Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    json::parse(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+/// Print `tool: msg` to stderr and exit with [`EXIT_USAGE`].
+pub fn usage_error(tool: &str, msg: &str) -> ! {
+    eprintln!("{tool}: {msg}");
+    std::process::exit(EXIT_USAGE)
+}
+
+/// Write `text` to `path`, exiting with a usage diagnostic on failure.
+pub fn write_or_exit(tool: &str, path: &str, text: &str) {
+    if let Err(e) = std::fs::write(path, text) {
+        usage_error(tool, &format!("{path}: {e}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_codes_are_distinct_and_stable() {
+        assert_eq!(EXIT_OK, 0);
+        assert_eq!(EXIT_VIOLATIONS, 1);
+        assert_eq!(EXIT_USAGE, 2);
+    }
+
+    #[test]
+    fn load_json_tags_errors_with_path() {
+        let err = load_json("/nonexistent/gate.json").unwrap_err();
+        assert!(err.starts_with("/nonexistent/gate.json: "));
+    }
+}

@@ -8,11 +8,14 @@
 
 pub mod bench;
 pub mod benchcmp;
+pub mod cast;
 pub mod compress;
+pub mod diag;
 pub mod error;
 pub mod human;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod salts;
 pub mod sha256;
 pub mod stats;

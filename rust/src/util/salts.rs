@@ -1,0 +1,112 @@
+//! Central registry of RNG domain-separation salts.
+//!
+//! Every seeded decision in the replay is a pure function of
+//! `(seed, identity, salt)`: the salt separates *domains*, so two different
+//! decision kinds keyed by the same identity (say, the crash draw and the
+//! relocation draw of the same `(job, seg, retry)`) never consume the same
+//! stream. A duplicated salt silently couples two domains — the decisions
+//! stay deterministic but stop being independent, which skews every
+//! statistic built on them. All salts therefore live here, in one table:
+//!
+//! | family | constants | domain |
+//! |---|---|---|
+//! | `0xFA0x` | `SALT_CRASH`, `SALT_RELOCATE`, `SALT_STRAGGLER`, `SALT_BROWNOUT` | fault engine draws ([`crate::faults`]) |
+//! | `0xA271_xxxx` | `SALT_IMG_HOT`, `SALT_IMG_COLD`, `SALT_ENV`, `SALT_ENV_CHUNK`, `SALT_CKPT`, `SALT_CKPT_CHUNK` | artifact ids and synthesized chunk digests ([`crate::artifact::manifest`]) |
+//! | `0xA272_0001..=3` | `SALT_SHED`, `SALT_BACKOFF`, `SALT_PEER` | transfer admission ([`crate::artifact::transfer`]) |
+//! | `0xA272_0004..=5` | `SALT_CHURN`, `SALT_ADMISSION` | trace-level cache economics ([`crate::trace`]) |
+//!
+//! Enforced twice: the [`ALL`] table's uniqueness unit test at runtime, and
+//! detlint rule `salt-registry` (R2) statically — a `SALT_*` constant
+//! declared outside this module, a salt-family literal used inline, a
+//! duplicate value, or an undocumented entry all fail the lint gate. To add
+//! a salt: pick the next free value in its family (or open a new family
+//! prefix), add a `/// doc` line naming the decision stream, and import it
+//! from here. The values are load-bearing for replay byte-identity — never
+//! renumber an existing salt.
+
+macro_rules! salt_registry {
+    ($($(#[$doc:meta])* $name:ident = $value:literal;)*) => {
+        $($(#[$doc])* pub const $name: u64 = $value;)*
+
+        /// Every registered salt as `(name, value)` — the runtime twin of
+        /// detlint rule R2: the uniqueness test below iterates this table,
+        /// and the macro keeps it in lockstep with the constants by
+        /// construction.
+        pub const ALL: &[(&str, u64)] = &[$((stringify!($name), $name)),*];
+    };
+}
+
+salt_registry! {
+    /// Fault engine: crash-hazard draw per `(job, seg, retry)`.
+    SALT_CRASH = 0xFA01;
+    /// Fault engine: warm-vs-relocated restart placement per `(job, seg, retry)`.
+    SALT_RELOCATE = 0xFA02;
+    /// Fault engine: injected-straggler draw per `(job, attempt)`.
+    SALT_STRAGGLER = 0xFA03;
+    /// Fault engine: brownout window Poisson process and per-window rack subsets.
+    SALT_BROWNOUT = 0xFA04;
+    /// Artifact id of an image's startup-hot block set.
+    SALT_IMG_HOT = 0xA271_0001;
+    /// Artifact id of an image's background cold tail.
+    SALT_IMG_COLD = 0xA271_0002;
+    /// Artifact id of an environment snapshot archive.
+    SALT_ENV = 0xA271_0003;
+    /// Synthesized chunk digests of an environment snapshot.
+    SALT_ENV_CHUNK = 0xA271_0004;
+    /// Artifact id of a checkpoint resume shard.
+    SALT_CKPT = 0xA271_0005;
+    /// Synthesized chunk digests of a checkpoint resume shard.
+    SALT_CKPT_CHUNK = 0xA271_0006;
+    /// Transfer admission: shed draw per `(tier, artifact, node, attempt)`.
+    SALT_SHED = 0xA272_0001;
+    /// Transfer admission: backoff jitter per `(artifact, node, attempt)`.
+    SALT_BACKOFF = 0xA272_0002;
+    /// Swarm peer admission under cache-eviction pressure, per peer index.
+    SALT_PEER = 0xA272_0003;
+    /// Bounded-cache churn bytes a warm restart finds on its node's disk,
+    /// per `(job, attempt)`.
+    SALT_CHURN = 0xA272_0004;
+    /// Trace-level per-`(job, attempt)` admission stream seed.
+    SALT_ADMISSION = 0xA272_0005;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The runtime twin of detlint rule R2: no two salts may share a
+    /// value, ever — a collision couples two decision domains.
+    #[test]
+    fn salts_globally_unique() {
+        for (i, &(na, va)) in ALL.iter().enumerate() {
+            for &(nb, vb) in &ALL[i + 1..] {
+                assert_ne!(va, vb, "salt collision: {na} and {nb} both {va:#x}");
+            }
+        }
+    }
+
+    /// The values are part of the replay's byte-identity contract (they
+    /// feed every seeded stream); pin the full table so a renumbering
+    /// can't slip through as a refactor.
+    #[test]
+    fn salt_values_pinned() {
+        let expect: &[(&str, u64)] = &[
+            ("SALT_CRASH", 0xFA01),
+            ("SALT_RELOCATE", 0xFA02),
+            ("SALT_STRAGGLER", 0xFA03),
+            ("SALT_BROWNOUT", 0xFA04),
+            ("SALT_IMG_HOT", 0xA271_0001),
+            ("SALT_IMG_COLD", 0xA271_0002),
+            ("SALT_ENV", 0xA271_0003),
+            ("SALT_ENV_CHUNK", 0xA271_0004),
+            ("SALT_CKPT", 0xA271_0005),
+            ("SALT_CKPT_CHUNK", 0xA271_0006),
+            ("SALT_SHED", 0xA272_0001),
+            ("SALT_BACKOFF", 0xA272_0002),
+            ("SALT_PEER", 0xA272_0003),
+            ("SALT_CHURN", 0xA272_0004),
+            ("SALT_ADMISSION", 0xA272_0005),
+        ];
+        assert_eq!(ALL, expect);
+    }
+}

@@ -102,7 +102,8 @@ impl Sha256 {
     /// Absorb more input (callable any number of times).
     pub fn update(&mut self, data: impl AsRef<[u8]>) {
         let mut data = data.as_ref();
-        self.total_bytes = self.total_bytes.wrapping_add(data.len() as u64);
+        self.total_bytes =
+            self.total_bytes.wrapping_add(crate::util::cast::u64_from_usize(data.len()));
         if self.buf_len > 0 {
             let take = (64 - self.buf_len).min(data.len());
             self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);

@@ -13,12 +13,9 @@
 //! artifact to ratchet them in.
 
 use bootseer::util::benchcmp::compare;
-use bootseer::util::json;
+use bootseer::util::diag;
 
-fn load(path: &str) -> Result<json::Json, String> {
-    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-    json::parse(&text).map_err(|e| format!("{path}: {e}"))
-}
+const TOOL: &str = "bench-gate";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -30,10 +27,7 @@ fn main() {
             tol = args
                 .get(i + 1)
                 .and_then(|s| s.parse().ok())
-                .unwrap_or_else(|| {
-                    eprintln!("bad --tol value");
-                    std::process::exit(2);
-                });
+                .unwrap_or_else(|| diag::usage_error(TOOL, "bad --tol value"));
             i += 2;
         } else {
             paths.push(args[i].clone());
@@ -41,15 +35,11 @@ fn main() {
         }
     }
     if paths.len() != 2 {
-        eprintln!("usage: bench-gate <baseline.json> <fresh.json> [--tol 0.35]");
-        std::process::exit(2);
+        diag::usage_error(TOOL, "usage: bench-gate <baseline.json> <fresh.json> [--tol 0.35]");
     }
-    let (base, fresh) = match (load(&paths[0]), load(&paths[1])) {
+    let (base, fresh) = match (diag::load_json(&paths[0]), diag::load_json(&paths[1])) {
         (Ok(b), Ok(f)) => (b, f),
-        (Err(e), _) | (_, Err(e)) => {
-            eprintln!("bench-gate: {e}");
-            std::process::exit(2);
-        }
+        (Err(e), _) | (_, Err(e)) => diag::usage_error(TOOL, &e),
     };
     let violations = compare(&base, &fresh, tol);
     if violations.is_empty() {
@@ -74,5 +64,5 @@ fn main() {
     eprintln!(
         "If this change is intentional, refresh the committed baseline from the fresh artifact."
     );
-    std::process::exit(1);
+    std::process::exit(diag::EXIT_VIOLATIONS);
 }

@@ -1,0 +1,80 @@
+//! `detlint` — determinism & accounting static-analysis gate.
+//!
+//! Usage:
+//!
+//!     detlint [--root DIR] [--format human|json] [--output PATH] [--deny]
+//!
+//! Scans the repo's own Rust sources (`rust/src`, `tools`, `benches`,
+//! `examples`) with the rule set in `bootseer::analysis` and reports
+//! findings. Exit codes follow the shared gate contract (`util::diag`):
+//! 0 clean, 1 unsuppressed findings, 2 usage/I/O error. `--deny` is the
+//! default behavior and is accepted explicitly so the CI invocation reads
+//! as what it is; `--warn` downgrades findings to a report-only run.
+//!
+//! `--output PATH` additionally writes the JSON report to a file (the CI
+//! artifact) regardless of the terminal `--format`.
+//!
+//! Rule catalog, suppression syntax, and the JSON schema: `docs/detlint.md`.
+
+use bootseer::analysis::run_tree;
+use bootseer::util::diag;
+use std::path::Path;
+
+const TOOL: &str = "detlint";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root = ".".to_string();
+    let mut format = "human".to_string();
+    let mut output: Option<String> = None;
+    let mut deny = true;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" | "--format" | "--output" => {
+                let Some(val) = args.get(i + 1) else {
+                    diag::usage_error(TOOL, &format!("{} needs a value", args[i]));
+                };
+                match args[i].as_str() {
+                    "--root" => root = val.clone(),
+                    "--format" => format = val.clone(),
+                    _ => output = Some(val.clone()),
+                }
+                i += 2;
+            }
+            "--deny" => {
+                deny = true;
+                i += 1;
+            }
+            "--warn" => {
+                deny = false;
+                i += 1;
+            }
+            other => diag::usage_error(
+                TOOL,
+                &format!(
+                    "unknown argument `{other}` \
+                     (usage: detlint [--root DIR] [--format human|json] [--output PATH] [--deny])"
+                ),
+            ),
+        }
+    }
+    if format != "human" && format != "json" {
+        diag::usage_error(TOOL, &format!("--format must be human or json, got `{format}`"));
+    }
+    let report = match run_tree(Path::new(&root)) {
+        Ok(r) => r,
+        Err(e) => diag::usage_error(TOOL, &format!("scanning {root}: {e}")),
+    };
+    if let Some(path) = &output {
+        diag::write_or_exit(TOOL, path, &report.to_json().to_pretty());
+    }
+    if format == "json" {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        print!("{}", report.render_human());
+    }
+    if deny && report.unsuppressed_count() > 0 {
+        std::process::exit(diag::EXIT_VIOLATIONS);
+    }
+}
