@@ -1,0 +1,180 @@
+//! Batched what-if evaluation microbench: K=32 candidate configurations
+//! replayed over one synthetic week through `batch_replay` (one shared
+//! replay prefix + per-effective-config evaluation) vs K independent
+//! `replay_cluster` calls. Every candidate's result is bit-compared
+//! against its standalone replay, then a quick closed-loop optimize
+//! search runs end-to-end. Emits `BENCH_optimize.json`; CI gates
+//! `batch_vs_naive_fraction` (lower is better) against
+//! `benches/baselines/`.
+//!
+//! Headline: the batched engine evaluates the 32-candidate grid for a
+//! small fraction (<=1/5) of the naive cost — the grid collapses to one
+//! prefix build plus 4 effective evaluations (speculative budgets and
+//! cache knobs are provably dead here: non-speculative modes and a
+//! fault-free trace with dedup off), and every result is byte-identical
+//! to its standalone replay.
+//!
+//!     cargo bench --bench micro_optimize
+//!     BOOTSEER_BENCH_FAST=1 cargo bench --bench micro_optimize
+
+use bootseer::config::{BootseerConfig, CachePolicy, ClusterConfig, OverlapMode};
+use bootseer::optimize::{run_optimize, OptimizeParams};
+use bootseer::trace::{batch_replay, gen_trace, replay_cluster, ReplayOptions, ReplayResult};
+use bootseer::util::bench::{figure_header, Bench};
+use bootseer::util::json::Json;
+use bootseer::util::rng::mix64;
+
+fn fold(h: u64, v: u64) -> u64 {
+    mix64(h ^ v)
+}
+
+/// Digest of a replay result: every queue wait plus all aggregate
+/// counters, bit-exact.
+fn replay_digest(r: &ReplayResult) -> u64 {
+    let mut h = 0x0100_0000_01b3u64;
+    for &w in &r.queue_waits {
+        h = fold(h, w.to_bits());
+    }
+    for v in [
+        r.startup_gpu_hours.to_bits(),
+        r.train_gpu_hours.to_bits(),
+        r.lost_train_gpu_hours.to_bits(),
+        r.fault_restarts,
+        u64::from(r.pool_gpus),
+        r.credited_bytes,
+        r.demanded_bytes,
+        r.shed_events,
+        r.shed_checks,
+        r.evicted_bytes,
+    ] {
+        h = fold(h, v);
+    }
+    h
+}
+
+/// The K=32 what-if grid: overlap x delta-resume x cache capacity x
+/// cache policy x speculative budget. Fault-free and dedup-off on
+/// purpose — the cache and budget axes are provably dead, so the batched
+/// engine should collapse the grid to 4 effective evaluations.
+fn candidate_grid() -> Vec<ReplayOptions> {
+    let mut cands = Vec::new();
+    for &overlap in &[OverlapMode::Sequential, OverlapMode::Overlapped] {
+        for &delta in &[false, true] {
+            for &capacity in &[24_000_000_000u64, 8_000_000_000] {
+                for &policy in &[CachePolicy::Lru, CachePolicy::Gdsf] {
+                    for &budget in &[4_000_000_000u64, 8_000_000_000] {
+                        cands.push(
+                            ReplayOptions::new()
+                                .with_overlap(overlap)
+                                .with_delta_resume(delta)
+                                .with_cache(capacity, policy)
+                                .with_spec_prefetch_budget(budget),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    cands
+}
+
+fn main() {
+    figure_header(
+        "micro — batched what-if evaluation",
+        "32 candidate configs replay for <=1/5 the cost of 32 independent replays, bit-identical",
+    );
+    let fast = std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1");
+    let mut b = Bench::new("micro_optimize");
+
+    let seed = 11u64;
+    let n_jobs = if fast { 16 } else { 40 };
+    let trace = gen_trace(seed, n_jobs, 7.0 * 86400.0);
+    let cluster = ClusterConfig::default();
+    let cfg = BootseerConfig::bootseer();
+    let cands = candidate_grid();
+    let k = cands.len();
+    assert_eq!(k, 32, "the headline grid is K=32");
+
+    // ---- naive: K independent full replays ----
+    let mut naive_digests = Vec::new();
+    let naive_wall = b.once(&format!("naive: {k} independent replay_cluster calls"), || {
+        naive_digests = cands
+            .iter()
+            .map(|c| replay_digest(&replay_cluster(&trace, &cluster, &cfg, seed, c)))
+            .collect();
+        naive_digests.len()
+    });
+
+    // ---- batched: one shared prefix, deduped evaluations ----
+    let mut out = None;
+    let batch_wall = b.once(&format!("batched: one batch_replay over {k} candidates"), || {
+        out = Some(batch_replay(&trace, &cluster, &cfg, seed, &cands, 0));
+        k
+    });
+    let out = out.expect("batched run");
+    let batch_digests: Vec<u64> = out.results.iter().map(replay_digest).collect();
+    assert_eq!(
+        naive_digests, batch_digests,
+        "every batched candidate must be byte-identical to its standalone replay"
+    );
+    assert_eq!(out.prefix_builds, 1, "one prefix-relevant setting → one prefix build");
+    assert_eq!(
+        out.eval_groups, 4,
+        "dead cache/budget axes must collapse the grid to overlap x delta"
+    );
+    let fraction = batch_wall / naive_wall;
+    println!(
+        "\nbatched {k} candidates: {batch_wall:.3}s vs naive {naive_wall:.3}s \
+         → {:.1}x cheaper (fraction {fraction:.3}; 1 prefix build, {} evaluations)",
+        naive_wall / batch_wall,
+        out.eval_groups
+    );
+
+    // ---- closed-loop search end-to-end (quick ladder) ----
+    let mut report = None;
+    b.once("optimize: quick successive-halving search", || {
+        report = Some(run_optimize(&OptimizeParams::quick(seed, 0)));
+        k
+    });
+    let report = report.expect("search run");
+    println!("{}", report.render());
+
+    // ---- BENCH_optimize.json (gated against benches/baselines/) ----
+    let mut batch_case = Json::obj();
+    batch_case
+        .set("k_candidates", k)
+        .set("jobs", n_jobs)
+        .set("horizon_days", 7u64)
+        .set("prefix_builds", out.prefix_builds)
+        .set("eval_groups", out.eval_groups)
+        .set("naive_wallsec", naive_wall)
+        .set("batch_wallsec", batch_wall)
+        // The gated metric (lower is better): fraction of the naive
+        // K-replay cost the batched engine needs — machine-neutral.
+        .set("batch_vs_naive_fraction", fraction);
+    let mut search_case = Json::obj();
+    search_case
+        .set("n_candidates", report.outcomes.len())
+        .set("screen_prefix_builds", report.screen_prefix_builds)
+        .set("screen_eval_groups", report.screen_eval_groups)
+        .set("survivors", report.survivors.len())
+        .set("frontier_points", report.frontier.len())
+        .set("frontier_min_wasted", report.best_wasted_fraction());
+    let mut j = Json::obj();
+    j.set("batched_evaluation", batch_case);
+    j.set("optimize_search", search_case);
+    j.set("fast", fast);
+    let path = "BENCH_optimize.json";
+    match std::fs::write(path, j.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("write {path}: {e}"),
+    }
+    // Sanity floor (the gate enforces the real <=0.20 bar via the
+    // baseline): batching must never cost more than half the naive sweep.
+    assert!(
+        fraction <= 0.5,
+        "batched evaluation too close to naive cost: {batch_wall:.3}s vs {naive_wall:.3}s"
+    );
+    assert!(!report.frontier.is_empty(), "the search must produce a frontier");
+    b.finish();
+}

@@ -1426,6 +1426,24 @@ impl ArtifactSweep {
     }
 }
 
+/// Figure "optimize frontier": the closed-loop mitigation search's Pareto
+/// frontier of wasted GPU-time fraction vs cache + prefetch byte budget
+/// (see `docs/optimize.md`). `quick` selects the small smoke-sized search
+/// instead of the canonical one; the report is deterministic for a given
+/// `(seed, quick)` at any `threads`.
+pub fn optimize_frontier(
+    seed: u64,
+    threads: usize,
+    quick: bool,
+) -> crate::optimize::OptimizeReport {
+    let params = if quick {
+        crate::optimize::OptimizeParams::quick(seed, threads)
+    } else {
+        crate::optimize::OptimizeParams::canonical(seed, threads)
+    };
+    crate::optimize::run_optimize(&params)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

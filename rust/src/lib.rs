@@ -24,7 +24,10 @@
 //! week scheduled over a finite GPU pool by [`scheduler`], then replayed
 //! startup-by-startup (in parallel, contention-aware) through [`startup`].
 //! See `README.md` for the module map and `docs/replay.md` for the replay
-//! engine's design.
+//! engine's design. On top of replay, [`trace::batch_replay`] evaluates
+//! many what-if configurations against one shared replay prefix, and
+//! [`optimize`] closes the loop with a seeded successive-halving search
+//! over the mitigation knob space (`docs/optimize.md`).
 
 pub mod analysis;
 pub mod artifact;
@@ -35,6 +38,7 @@ pub mod faults;
 pub mod figures;
 pub mod hdfs;
 pub mod image;
+pub mod optimize;
 pub mod profiler;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -4,6 +4,8 @@
 //!   figures [--out DIR]          regenerate every paper figure's data
 //!   startup --gpus N [...]       simulate one job startup, print stages
 //!   trace [--jobs N] [...]       synthesize + replay a cluster week
+//!   optimize [--seed S] [...]    closed-loop mitigation search (batched
+//!                                what-if replay → Pareto frontier)
 //!   train [--steps N] [...]      run real training over the AOT artifacts
 //!                                (requires the `pjrt` feature)
 //!   version
@@ -24,6 +26,7 @@ fn main() {
         "figures" => cmd_figures(rest),
         "startup" => cmd_startup(rest),
         "trace" => cmd_trace(rest),
+        "optimize" => cmd_optimize(rest),
         "train" => cmd_train(rest),
         "version" => {
             println!("bootseer {}", bootseer::version());
@@ -31,7 +34,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: bootseer <figures|startup|trace|train|version> [options]\n\
+                "usage: bootseer <figures|startup|trace|optimize|train|version> [options]\n\
                  \n  figures [--out DIR]            regenerate paper figures (1,3,4,5,6,7,12,13,14,16) + overlap/artifact sweeps\
                  \n  startup --gpus N [--bootseer] [--hot-update] [--overlap sequential|overlapped|speculative]\
                  \n          [--dedup] [--delta-resume] [--seed S]\
@@ -39,6 +42,8 @@ fn main() {
                  \n          [--overlap M] [--dedup] [--delta-resume] [--faults off|paper|storm|k=v,...]\
                  \n          [--no-replay] [--cache-capacity BYTES|Ng|unbounded] [--cache-policy lru|gdsf|pin]\
                  \n          [--racks R] [--spine-oversub F]\
+                 \n  optimize [--seed S] [--threads T] [--quick] [--out FILE]\
+                 \n          seeded successive-halving search over the mitigation knob space\
                  \n  train   [--steps N] [--artifacts DIR] [--seed S]   (pjrt feature)"
             );
             2
@@ -155,6 +160,45 @@ fn cmd_figures(rest: &[String]) -> i32 {
     );
     println!("-- Cache-economics sweep (capacity knee) --\n{}", fc.render());
     save("cache_econ", fc.to_json());
+    let fast = std::env::var("BOOTSEER_BENCH_FAST").ok().as_deref() == Some("1");
+    let fo = figures::optimize_frontier(figures::FAULTS_SWEEP_SEED, 0, fast);
+    println!("-- Optimize frontier (closed-loop mitigation search) --\n{}", fo.render());
+    save("optimize", fo.to_json());
+    0
+}
+
+fn cmd_optimize(rest: &[String]) -> i32 {
+    let seed: u64 = opt(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(11);
+    let threads: usize = opt(rest, "--threads").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let mut params = if flag(rest, "--quick") {
+        bootseer::optimize::OptimizeParams::quick(seed, threads)
+    } else {
+        bootseer::optimize::OptimizeParams::canonical(seed, threads)
+    };
+    if let Some(k) = opt(rest, "--survivors").and_then(|s| s.parse().ok()) {
+        params.survivors = k;
+    }
+    let n = params.space.candidates().len();
+    println!(
+        "optimize: {} candidates, screen {} jobs / {:.1} days → {} survivors at {} jobs / {:.1} days",
+        n,
+        params.screen.jobs,
+        params.screen.horizon_s / 86400.0,
+        params.survivors.clamp(1, n.max(1)),
+        params.full.jobs,
+        params.full.horizon_s / 86400.0,
+    );
+    let t0 = std::time::Instant::now();
+    let report = bootseer::optimize::run_optimize(&params);
+    println!("{}", report.render());
+    println!("search wall time: {}", human::secs(t0.elapsed().as_secs_f64()));
+    if let Some(path) = opt(rest, "--out") {
+        if let Err(e) = std::fs::write(&path, report.to_json().to_pretty()) {
+            eprintln!("write {path:?}: {e}");
+            return 1;
+        }
+        println!("frontier written to {path}");
+    }
     0
 }
 

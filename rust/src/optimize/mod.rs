@@ -1,0 +1,608 @@
+//! Closed-loop mitigation search over the BootSeer knob space
+//! (ROADMAP item 5): instead of reporting what one configuration costs,
+//! *derive* a recommendation — which combination of overlap mode,
+//! prefetch budget, checkpoint cadence, dedup/delta, cache economics and
+//! topology spends the fewest GPU-hours per byte of cache + prefetch
+//! budget.
+//!
+//! The search is a deterministic seeded successive-halving ladder over a
+//! declared [`KnobSpace`]:
+//!
+//!  1. **Screen rung** — the full Cartesian grid is evaluated at
+//!     short-trace fidelity through [`crate::trace::batch_replay`], which
+//!     shares one [`crate::trace::ReplayPrefix`] per distinct
+//!     prefix-relevant knob setting (checkpoint cadence, racks) and one
+//!     phase-2 evaluation per distinct effective config — the whole grid
+//!     costs a few dozen phase-2 replays, not `|grid|` full replays.
+//!  2. **Promotion** — candidates are ranked by screened wasted fraction
+//!     (ties broken by declaration order) and the top
+//!     [`OptimizeParams::survivors`] are promoted.
+//!  3. **Full rung** — survivors re-replay at full-week fidelity, again
+//!     batched, and the Pareto frontier of (cache + prefetch byte budget,
+//!     wasted fraction) is extracted.
+//!
+//! Every step is a pure function of `(seed, space, fidelity)`: rankings
+//! compare with `total_cmp` + index tie-breaks, the batched replay is
+//! byte-identical at any thread count, and the report's JSON carries no
+//! machine-dependent field — so the emitted frontier is reproducible
+//! bit-for-bit across `--threads` (pinned by the tests below).
+//!
+//! See `docs/optimize.md` for the knob-space declaration, the fidelity
+//! ladder, and the frontier format.
+
+use crate::config::{BootseerConfig, CachePolicy, ClusterConfig, OverlapMode};
+use crate::faults::FaultConfig;
+use crate::trace::{batch_replay, gen_trace, ReplayOptions};
+use crate::util::human;
+use crate::util::json::Json;
+
+/// The declared search space: one `Vec` per knob, the grid is the
+/// Cartesian product in declaration order (outermost axis first). Axes
+/// map one-to-one onto [`ReplayOptions`] setters, so a [`Candidate`] is
+/// exactly one options value — there is no second configuration path.
+#[derive(Clone, Debug)]
+pub struct KnobSpace {
+    /// Stage-graph overlap modes to try.
+    pub overlap: Vec<OverlapMode>,
+    /// Speculative prefetch budgets (bytes); only live under
+    /// [`OverlapMode::Speculative`] — the batched engine collapses the
+    /// dead combinations automatically.
+    pub spec_prefetch_budget_bytes: Vec<u64>,
+    /// Checkpoint cadences (seconds) — a fault-process knob, so each
+    /// distinct value builds its own replay prefix.
+    pub ckpt_interval_s: Vec<f64>,
+    /// Cross-artifact chunk dedup on/off.
+    pub dedup: Vec<bool>,
+    /// Delta checkpoint resume on/off.
+    pub delta_resume: Vec<bool>,
+    /// Per-node warm-cache capacities (bytes, finite — the byte axis of
+    /// the frontier).
+    pub cache_capacity_bytes: Vec<u64>,
+    /// Cache eviction policies.
+    pub cache_policy: Vec<CachePolicy>,
+    /// Topology rack counts (prefix-relevant).
+    pub racks: Vec<u32>,
+    /// Spine oversubscription factors (prefix-relevant).
+    pub spine_oversub: Vec<f64>,
+}
+
+impl KnobSpace {
+    /// The canonical search space: every mitigation axis the simulator
+    /// exposes, at the operating points the paper's sweeps bracket.
+    pub fn paper() -> KnobSpace {
+        KnobSpace {
+            overlap: vec![
+                OverlapMode::Sequential,
+                OverlapMode::Overlapped,
+                OverlapMode::Speculative,
+            ],
+            spec_prefetch_budget_bytes: vec![2_000_000_000, 8_000_000_000],
+            ckpt_interval_s: vec![1800.0, 3600.0],
+            dedup: vec![false, true],
+            delta_resume: vec![false, true],
+            cache_capacity_bytes: vec![8_000_000_000, 24_000_000_000],
+            cache_policy: vec![CachePolicy::Lru, CachePolicy::Gdsf],
+            racks: vec![1, 4],
+            spine_oversub: vec![1.0],
+        }
+    }
+
+    /// A small space for tests and smoke runs: 12 candidates, one
+    /// checkpoint cadence, one prefix.
+    pub fn quick() -> KnobSpace {
+        KnobSpace {
+            overlap: vec![
+                OverlapMode::Sequential,
+                OverlapMode::Overlapped,
+                OverlapMode::Speculative,
+            ],
+            spec_prefetch_budget_bytes: vec![2_000_000_000, 8_000_000_000],
+            ckpt_interval_s: vec![3600.0],
+            dedup: vec![false],
+            delta_resume: vec![false, true],
+            cache_capacity_bytes: vec![8_000_000_000],
+            cache_policy: vec![CachePolicy::Lru],
+            racks: vec![1],
+            spine_oversub: vec![1.0],
+        }
+    }
+
+    /// The full grid, in deterministic declaration order.
+    pub fn candidates(&self) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for &overlap in &self.overlap {
+            for &spec_prefetch_budget_bytes in &self.spec_prefetch_budget_bytes {
+                for &ckpt_interval_s in &self.ckpt_interval_s {
+                    for &dedup in &self.dedup {
+                        for &delta_resume in &self.delta_resume {
+                            for &cache_capacity_bytes in &self.cache_capacity_bytes {
+                                for &cache_policy in &self.cache_policy {
+                                    for &racks in &self.racks {
+                                        for &spine_oversub in &self.spine_oversub {
+                                            out.push(Candidate {
+                                                overlap,
+                                                spec_prefetch_budget_bytes,
+                                                ckpt_interval_s,
+                                                dedup,
+                                                delta_resume,
+                                                cache_capacity_bytes,
+                                                cache_policy,
+                                                racks,
+                                                spine_oversub,
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One grid point: a concrete value per knob.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub overlap: OverlapMode,
+    pub spec_prefetch_budget_bytes: u64,
+    pub ckpt_interval_s: f64,
+    pub dedup: bool,
+    pub delta_resume: bool,
+    pub cache_capacity_bytes: u64,
+    pub cache_policy: CachePolicy,
+    pub racks: u32,
+    pub spine_oversub: f64,
+}
+
+impl Candidate {
+    /// The candidate as replay options: the knobs fold into the builder,
+    /// and the checkpoint cadence overrides the search's fault preset.
+    /// This is the only candidate → replay path, for both rungs.
+    pub fn options(&self, faults: &FaultConfig) -> ReplayOptions {
+        let faults = FaultConfig { ckpt_interval_s: self.ckpt_interval_s, ..faults.clone() };
+        ReplayOptions::new()
+            .with_faults(faults)
+            .with_overlap(self.overlap)
+            .with_spec_prefetch_budget(self.spec_prefetch_budget_bytes)
+            .with_dedup(self.dedup)
+            .with_delta_resume(self.delta_resume)
+            .with_cache(self.cache_capacity_bytes, self.cache_policy)
+            .with_racks(self.racks)
+            .with_spine_oversub(self.spine_oversub)
+    }
+
+    /// The frontier's byte axis: per-node cache capacity plus the
+    /// speculative prefetch budget where it is actually spent
+    /// (non-speculative modes never prefetch, so their budget costs
+    /// nothing).
+    pub fn byte_budget(&self) -> u64 {
+        let spend = if self.overlap == OverlapMode::Speculative {
+            self.spec_prefetch_budget_bytes
+        } else {
+            0
+        };
+        self.cache_capacity_bytes.saturating_add(spend)
+    }
+
+    /// Compact human label, one token per knob.
+    pub fn label(&self) -> String {
+        format!(
+            "{} budget={} ckpt={:.0}s dedup={} delta={} cache={}/{} racks={} oversub={:.1}",
+            self.overlap.name(),
+            human::bytes(self.spec_prefetch_budget_bytes),
+            self.ckpt_interval_s,
+            self.dedup,
+            self.delta_resume,
+            human::bytes(self.cache_capacity_bytes),
+            self.cache_policy.name(),
+            self.racks,
+            self.spine_oversub,
+        )
+    }
+}
+
+/// One rung of the fidelity ladder: how much synthetic trace a
+/// candidate is evaluated against.
+#[derive(Clone, Copy, Debug)]
+pub struct Fidelity {
+    /// Jobs in the synthetic trace.
+    pub jobs: usize,
+    /// Trace horizon (seconds).
+    pub horizon_s: f64,
+}
+
+/// Everything a search run depends on. Two equal parameter sets produce
+/// byte-identical reports at any thread count.
+#[derive(Clone, Debug)]
+pub struct OptimizeParams {
+    /// Seed of both synthetic traces and every replay.
+    pub seed: u64,
+    /// Worker threads for the batched replays (0 → one per core);
+    /// never affects the report's bytes.
+    pub threads: usize,
+    /// The declared knob space.
+    pub space: KnobSpace,
+    /// Short-trace screening rung (full grid).
+    pub screen: Fidelity,
+    /// Full-week rung (survivors only).
+    pub full: Fidelity,
+    /// Grid candidates promoted from the screen rung (clamped to the
+    /// grid size).
+    pub survivors: usize,
+}
+
+impl OptimizeParams {
+    /// The canonical search: [`KnobSpace::paper`] screened on a 2-day /
+    /// 24-job trace, 8 survivors promoted to the 50-job week.
+    pub fn canonical(seed: u64, threads: usize) -> OptimizeParams {
+        OptimizeParams {
+            seed,
+            threads,
+            space: KnobSpace::paper(),
+            screen: Fidelity { jobs: 24, horizon_s: 2.0 * 86400.0 },
+            full: Fidelity { jobs: 50, horizon_s: 7.0 * 86400.0 },
+            survivors: 8,
+        }
+    }
+
+    /// Small parameters for tests and smoke runs: [`KnobSpace::quick`]
+    /// screened on a 1-day / 10-job trace, 4 survivors promoted to a
+    /// 2-day / 16-job trace.
+    pub fn quick(seed: u64, threads: usize) -> OptimizeParams {
+        OptimizeParams {
+            seed,
+            threads,
+            space: KnobSpace::quick(),
+            screen: Fidelity { jobs: 10, horizon_s: 86400.0 },
+            full: Fidelity { jobs: 16, horizon_s: 2.0 * 86400.0 },
+            survivors: 4,
+        }
+    }
+}
+
+/// Fault processes the search replays under: the cache-economics storm
+/// tier (hot crash hazard, mostly same-node restarts), so warm-restart
+/// knobs (cache capacity/policy, delta resume) have observable cost on
+/// search-sized traces. The checkpoint cadence inside is overridden per
+/// candidate.
+pub fn optimize_faults() -> FaultConfig {
+    FaultConfig { hazard_per_gpu_hour: 2.0e-3, relocate_prob: 0.2, ..FaultConfig::storm() }
+}
+
+/// One candidate's measurements across the ladder.
+#[derive(Clone, Debug)]
+pub struct CandidateOutcome {
+    pub candidate: Candidate,
+    /// Wasted fraction on the screen rung.
+    pub screen_wasted_fraction: f64,
+    /// Rank in the screen grid (0 = least waste).
+    pub screen_rank: usize,
+    /// Wasted fraction on the full rung (survivors only).
+    pub full_wasted_fraction: Option<f64>,
+    /// Startup GPU-hours on the full rung (survivors only).
+    pub full_startup_gpu_hours: Option<f64>,
+}
+
+/// The search result: every candidate's outcomes, the promotion set,
+/// and the Pareto frontier, plus the sharing telemetry of both rungs.
+#[derive(Debug)]
+pub struct OptimizeReport {
+    pub seed: u64,
+    pub screen: Fidelity,
+    pub full: Fidelity,
+    /// Per-candidate outcomes, in grid declaration order.
+    pub outcomes: Vec<CandidateOutcome>,
+    /// Candidate indices sorted by screened waste (ties by index).
+    pub ranking: Vec<usize>,
+    /// The promoted candidates: exactly the first
+    /// [`OptimizeParams::survivors`] entries of `ranking`.
+    pub survivors: Vec<usize>,
+    /// Pareto frontier over the survivors, ordered by rising byte
+    /// budget with strictly falling full-rung wasted fraction.
+    pub frontier: Vec<usize>,
+    /// Prefixes built / phase-2 evaluations run on the screen rung
+    /// (the grid cost the batched engine actually paid).
+    pub screen_prefix_builds: usize,
+    pub screen_eval_groups: usize,
+    pub full_prefix_builds: usize,
+    pub full_eval_groups: usize,
+}
+
+/// Run the seeded successive-halving search. Deterministic: the report
+/// (and its JSON) is byte-identical for equal parameters at any
+/// `threads`.
+pub fn run_optimize(params: &OptimizeParams) -> OptimizeReport {
+    let cands = params.space.candidates();
+    let cluster = ClusterConfig::default();
+    let cfg = BootseerConfig::bootseer();
+    let faults = optimize_faults();
+
+    // Rung 1: full grid at screen fidelity, one batched evaluation.
+    let screen_trace = gen_trace(params.seed, params.screen.jobs, params.screen.horizon_s);
+    let opts: Vec<ReplayOptions> = cands.iter().map(|c| c.options(&faults)).collect();
+    let screened = batch_replay(&screen_trace, &cluster, &cfg, params.seed, &opts, params.threads);
+    let screen_wasted: Vec<f64> = screened.results.iter().map(|r| r.wasted_fraction()).collect();
+
+    // Rank by screened waste; total_cmp + index keeps the order total
+    // and deterministic (simulated fractions are never NaN).
+    let mut ranking: Vec<usize> = (0..cands.len()).collect();
+    ranking.sort_by(|&a, &b| screen_wasted[a].total_cmp(&screen_wasted[b]).then(a.cmp(&b)));
+    let mut screen_rank = vec![0usize; cands.len()];
+    for (rank, &i) in ranking.iter().enumerate() {
+        screen_rank[i] = rank;
+    }
+    let k = if cands.is_empty() { 0 } else { params.survivors.clamp(1, cands.len()) };
+    let survivors: Vec<usize> = ranking[..k].to_vec();
+
+    // Rung 2: survivors at full fidelity, again batched.
+    let full_trace = gen_trace(params.seed, params.full.jobs, params.full.horizon_s);
+    let full_opts: Vec<ReplayOptions> =
+        survivors.iter().map(|&i| cands[i].options(&faults)).collect();
+    let finals = batch_replay(&full_trace, &cluster, &cfg, params.seed, &full_opts, params.threads);
+    let mut full_wasted: Vec<Option<f64>> = vec![None; cands.len()];
+    let mut full_startup: Vec<Option<f64>> = vec![None; cands.len()];
+    for (s, r) in survivors.iter().zip(finals.results.iter()) {
+        full_wasted[*s] = Some(r.wasted_fraction());
+        full_startup[*s] = Some(r.startup_gpu_hours);
+    }
+
+    // Pareto frontier over the survivors: walk by rising byte budget
+    // (ties by full-rung waste, then index) and keep every point that
+    // strictly improves on the best waste so far.
+    let mut by_budget = survivors.clone();
+    by_budget.sort_by(|&a, &b| {
+        let wa = full_wasted[a].unwrap_or(f64::INFINITY);
+        let wb = full_wasted[b].unwrap_or(f64::INFINITY);
+        cands[a].byte_budget().cmp(&cands[b].byte_budget()).then(wa.total_cmp(&wb)).then(a.cmp(&b))
+    });
+    let mut frontier = Vec::new();
+    let mut best = f64::INFINITY;
+    for &i in &by_budget {
+        let w = full_wasted[i].unwrap_or(f64::INFINITY);
+        if w < best {
+            best = w;
+            frontier.push(i);
+        }
+    }
+
+    let outcomes = cands
+        .into_iter()
+        .enumerate()
+        .map(|(i, candidate)| CandidateOutcome {
+            candidate,
+            screen_wasted_fraction: screen_wasted[i],
+            screen_rank: screen_rank[i],
+            full_wasted_fraction: full_wasted[i],
+            full_startup_gpu_hours: full_startup[i],
+        })
+        .collect();
+    OptimizeReport {
+        seed: params.seed,
+        screen: params.screen,
+        full: params.full,
+        outcomes,
+        ranking,
+        survivors,
+        frontier,
+        screen_prefix_builds: screened.prefix_builds,
+        screen_eval_groups: screened.eval_groups,
+        full_prefix_builds: finals.prefix_builds,
+        full_eval_groups: finals.eval_groups,
+    }
+}
+
+impl OptimizeReport {
+    /// The frontier as (byte budget, full-rung wasted fraction, label)
+    /// rows, rising budget / falling waste.
+    pub fn frontier_points(&self) -> Vec<(u64, f64, String)> {
+        self.frontier
+            .iter()
+            .map(|&i| {
+                let o = &self.outcomes[i];
+                (
+                    o.candidate.byte_budget(),
+                    o.full_wasted_fraction.unwrap_or(f64::INFINITY),
+                    o.candidate.label(),
+                )
+            })
+            .collect()
+    }
+
+    /// Least full-rung waste across the frontier (the recommendation's
+    /// headline number).
+    pub fn best_wasted_fraction(&self) -> f64 {
+        self.frontier_points().iter().map(|p| p.1).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Render the survivor table and the frontier.
+    pub fn render(&self) -> String {
+        let mut rows = vec![vec![
+            "rank".to_string(),
+            "candidate".to_string(),
+            "screen wasted".to_string(),
+            "week wasted".to_string(),
+            "byte budget".to_string(),
+            "frontier".to_string(),
+        ]];
+        for &i in &self.survivors {
+            let o = &self.outcomes[i];
+            rows.push(vec![
+                o.screen_rank.to_string(),
+                o.candidate.label(),
+                format!("{:.3}%", 100.0 * o.screen_wasted_fraction),
+                match o.full_wasted_fraction {
+                    Some(w) => format!("{:.3}%", 100.0 * w),
+                    None => "-".to_string(),
+                },
+                human::bytes(o.candidate.byte_budget()),
+                if self.frontier.contains(&i) { "*".to_string() } else { String::new() },
+            ]);
+        }
+        format!(
+            "{}grid: {} candidates screened as {} prefix builds + {} evaluations; \
+             {} survivors re-replayed as {} evaluations; frontier: {} points, best wasted {:.3}%\n",
+            human::table(&rows),
+            self.outcomes.len(),
+            self.screen_prefix_builds,
+            self.screen_eval_groups,
+            self.survivors.len(),
+            self.full_eval_groups,
+            self.frontier.len(),
+            100.0 * self.best_wasted_fraction(),
+        )
+    }
+
+    /// Deterministic JSON export: no wall-clock or thread-count field,
+    /// so equal searches serialize byte-identically.
+    pub fn to_json(&self) -> Json {
+        let cand_json = |i: usize| {
+            let o = &self.outcomes[i];
+            let c = &o.candidate;
+            let mut j = Json::obj();
+            j.set("label", c.label())
+                .set("overlap", c.overlap.name())
+                .set("spec_prefetch_budget_bytes", c.spec_prefetch_budget_bytes)
+                .set("ckpt_interval_s", c.ckpt_interval_s)
+                .set("dedup", c.dedup)
+                .set("delta_resume", c.delta_resume)
+                .set("cache_capacity_bytes", c.cache_capacity_bytes)
+                .set("cache_policy", c.cache_policy.name())
+                .set("racks", c.racks)
+                .set("spine_oversub", c.spine_oversub)
+                .set("byte_budget", c.byte_budget())
+                .set("screen_wasted_fraction", o.screen_wasted_fraction)
+                .set("screen_rank", o.screen_rank)
+                .set("survivor", self.survivors.contains(&i))
+                .set("frontier", self.frontier.contains(&i));
+            if let Some(w) = o.full_wasted_fraction {
+                j.set("full_wasted_fraction", w);
+            }
+            if let Some(h) = o.full_startup_gpu_hours {
+                j.set("full_startup_gpu_hours", h);
+            }
+            j
+        };
+        let candidates: Vec<Json> = (0..self.outcomes.len()).map(cand_json).collect();
+        let frontier: Vec<Json> = self
+            .frontier_points()
+            .into_iter()
+            .map(|(budget, wasted, label)| {
+                let mut j = Json::obj();
+                j.set("byte_budget", budget).set("wasted_fraction", wasted).set("label", label);
+                j
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("seed", self.seed)
+            .set("screen_jobs", self.screen.jobs)
+            .set("screen_horizon_s", self.screen.horizon_s)
+            .set("full_jobs", self.full.jobs)
+            .set("full_horizon_s", self.full.horizon_s)
+            .set("n_candidates", self.outcomes.len())
+            .set("screen_prefix_builds", self.screen_prefix_builds)
+            .set("screen_eval_groups", self.screen_eval_groups)
+            .set("full_prefix_builds", self.full_prefix_builds)
+            .set("full_eval_groups", self.full_eval_groups)
+            .set("candidates", Json::Arr(candidates))
+            .set("frontier", Json::Arr(frontier));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_declaration_ordered_and_complete() {
+        let space = KnobSpace::quick();
+        let cands = space.candidates();
+        assert_eq!(cands.len(), 12);
+        // Outermost axis varies slowest.
+        assert_eq!(cands[0].overlap, OverlapMode::Sequential);
+        assert_eq!(cands[4].overlap, OverlapMode::Overlapped);
+        assert_eq!(cands[11].overlap, OverlapMode::Speculative);
+        // Budget only spends under Speculative.
+        assert_eq!(cands[0].byte_budget(), cands[0].cache_capacity_bytes);
+        assert_eq!(
+            cands[11].byte_budget(),
+            cands[11].cache_capacity_bytes + cands[11].spec_prefetch_budget_bytes
+        );
+    }
+
+    /// Satellite pin: same seed + knob space ⇒ byte-identical frontier
+    /// JSON across thread counts, and the successive-halving survivors
+    /// are a strict subset of the short-fidelity grid ranking — exactly
+    /// its top-`survivors` prefix.
+    #[test]
+    fn optimize_is_deterministic_across_threads_and_survivors_follow_ranking() {
+        let a = run_optimize(&OptimizeParams::quick(9, 1));
+        let b = run_optimize(&OptimizeParams::quick(9, 4));
+        assert_eq!(
+            a.to_json().to_pretty(),
+            b.to_json().to_pretty(),
+            "frontier JSON must not depend on --threads"
+        );
+        // Strict subset of the grid, and exactly the ranking's head.
+        assert!(a.survivors.len() < a.outcomes.len());
+        assert_eq!(a.survivors, a.ranking[..a.survivors.len()].to_vec());
+        let worst_promoted = a.survivors.iter().map(|&i| a.outcomes[i].screen_wasted_fraction);
+        let best_dropped = a.ranking[a.survivors.len()..]
+            .iter()
+            .map(|&i| a.outcomes[i].screen_wasted_fraction)
+            .fold(f64::INFINITY, f64::min);
+        for w in worst_promoted {
+            assert!(w <= best_dropped, "a dropped candidate out-screened a survivor");
+        }
+        // Ranking is the sorted order of the screen column.
+        for w in a.ranking.windows(2) {
+            assert!(
+                a.outcomes[w[0]].screen_wasted_fraction
+                    <= a.outcomes[w[1]].screen_wasted_fraction
+            );
+        }
+    }
+
+    #[test]
+    fn frontier_is_pareto_and_survivor_only() {
+        let r = run_optimize(&OptimizeParams::quick(9, 2));
+        assert!(!r.frontier.is_empty(), "at least one frontier point");
+        for &i in &r.frontier {
+            assert!(r.survivors.contains(&i), "frontier is drawn from the survivors");
+            assert!(r.outcomes[i].full_wasted_fraction.is_some());
+        }
+        let pts = r.frontier_points();
+        for w in pts.windows(2) {
+            assert!(w[0].0 <= w[1].0, "byte budget must rise along the frontier");
+            assert!(w[1].1 < w[0].1, "waste must strictly fall along the frontier");
+        }
+        // No survivor dominates a frontier point (less-or-equal budget
+        // and strictly less waste).
+        for &f in &r.frontier {
+            for &s in &r.survivors {
+                let dominated = r.outcomes[s].candidate.byte_budget()
+                    <= r.outcomes[f].candidate.byte_budget()
+                    && r.outcomes[s].full_wasted_fraction.unwrap()
+                        < r.outcomes[f].full_wasted_fraction.unwrap();
+                assert!(!dominated, "survivor {s} dominates frontier point {f}");
+            }
+        }
+        // Survivors replay under shared prefixes: the full rung never
+        // builds more prefixes than it has survivors.
+        assert!(r.full_prefix_builds <= r.survivors.len());
+        assert!(r.full_eval_groups <= r.survivors.len());
+        assert!(!r.render().is_empty());
+    }
+
+    #[test]
+    fn report_json_parses_and_carries_the_frontier() {
+        let r = run_optimize(&OptimizeParams::quick(3, 2));
+        let text = r.to_json().to_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+        assert!(text.contains("\"frontier\""));
+        assert!(text.contains("\"screen_eval_groups\""));
+    }
+}

@@ -163,8 +163,10 @@ impl DurationDb {
     }
 }
 
-/// Pairs begin/end events into duration rows.
-#[derive(Debug, Default)]
+/// Pairs begin/end events into duration rows. `Clone` lets the batched
+/// replay ([`crate::trace::batch_replay`]) hand duplicate candidates a copy
+/// of their leader's fully-aggregated result instead of re-replaying.
+#[derive(Clone, Debug, Default)]
 pub struct StageAnalysisService {
     // detlint::allow(hash-container, "begin/end pairing scratch: keyed insert/remove only, never iterated, so hash order cannot reach a result")
     open: HashMap<(u64, u32, u32, Stage), f64>,

@@ -1,0 +1,1399 @@
+//! Batched what-if evaluation: one immutable, `Arc`-shared replay prefix
+//! per distinct [`PrefixKey`], phase-2-only evaluation per candidate
+//! config, and candidate-level dedup through [`EvalKey`].
+//!
+//! [`super::replay_cluster`] does strictly more work than a what-if sweep
+//! needs: most knob changes (overlap mode, cache economics, prefetch
+//! budgets) touch only the phase-2 startup pipeline, yet every standalone
+//! call re-runs phase-1 scheduling, the [`RackPool`] placement walk, the
+//! fault-oracle decisions, and the epoch [`SharedWorld`] fold. This
+//! module factors the engine:
+//!
+//!  1. [`build_prefix`] computes everything config-invariant once into a
+//!     [`ReplayPrefix`]: the scheduled unit list, placements, per-unit
+//!     effective clusters, epoch worlds, and warm-restart carries.
+//!  2. [`evaluate_prefix`] replays only phase 2 against a shared prefix.
+//!  3. [`batch_replay`] evaluates K candidates at once: prefixes are
+//!     memoized by [`PrefixKey`], and candidates whose *effective*
+//!     phase-2 config is provably identical ([`EvalKey`]) share a single
+//!     evaluation — each follower clones its leader's [`ReplayResult`].
+//!
+//! Everything here preserves the replay's bit-exactness contract: a
+//! batched candidate's result is byte-identical to its standalone
+//! [`super::replay_cluster`] run at any thread or epoch count (pinned by
+//! the tests below and the golden tests in the parent module).
+
+use crate::artifact::cache::CacheState;
+use crate::artifact::manifest::ArtifactManifest;
+use crate::artifact::Admission;
+use crate::ckpt::resume::retained_resume_bytes_per_node;
+use crate::config::defaults as d;
+use crate::config::{BootseerConfig, CachePolicy, ClusterConfig, ImageMode, JobConfig, OverlapMode};
+use crate::env::packages::PackageSet;
+use crate::faults::{BrownoutWindows, FaultConfig, FaultEngine};
+use crate::image::spec::ImageSpec;
+use crate::profiler::StageAnalysisService;
+use crate::scheduler::{placement_distance, RackPool};
+use crate::startup::{run_startup_with, StartupContext, StartupKind, StartupOutcome};
+use crate::util::rng::mix64;
+use crate::util::salts::SALT_ADMISSION;
+use crate::util::sha256::sha256;
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::Arc;
+
+use super::timeline;
+use super::{
+    effective_cluster, schedule_trace_with, trace_job_config, JobReplay, ReplayOptions,
+    ReplayResult, SharedWorld, TraceJob, Unit,
+};
+
+/// Bit-captured [`FaultConfig`]: every float is keyed by its exact bit
+/// pattern, so two fault configs compare equal here iff the replay could
+/// not tell them apart. Comparisons are hand-written (not derived) so the
+/// key fields are read by real code and the ordering is explicit.
+#[derive(Clone, Debug)]
+struct FaultKey {
+    hazard_per_gpu_hour: u64,
+    relocate_prob: u64,
+    straggler_prob: u64,
+    straggler_severity: u64,
+    brownouts_per_week: u64,
+    brownout_duration_s: u64,
+    brownout_capacity_factor: u64,
+    ckpt_interval_s: u64,
+    max_retries: u32,
+    registry_slots: u32,
+    cache_slots: u32,
+    shed_backoff_s: u64,
+    shed_retries: u32,
+    brownout_rack_frac: u64,
+}
+
+impl FaultKey {
+    /// Mechanical bit-capture of every fault field. The by-value
+    /// destructure is exhaustive on purpose: adding a [`FaultConfig`]
+    /// field fails compilation here until it is keyed (every fault
+    /// process shapes phase 1 or the admission plane, so the safe default
+    /// is prefix-relevant).
+    fn derive(faults: &FaultConfig) -> FaultKey {
+        let &FaultConfig {
+            hazard_per_gpu_hour,
+            relocate_prob,
+            straggler_prob,
+            straggler_severity,
+            brownouts_per_week,
+            brownout_duration_s,
+            brownout_capacity_factor,
+            ckpt_interval_s,
+            max_retries,
+            registry_slots,
+            cache_slots,
+            shed_backoff_s,
+            shed_retries,
+            brownout_rack_frac,
+        } = faults;
+        FaultKey {
+            hazard_per_gpu_hour: hazard_per_gpu_hour.to_bits(),
+            relocate_prob: relocate_prob.to_bits(),
+            straggler_prob: straggler_prob.to_bits(),
+            straggler_severity: straggler_severity.to_bits(),
+            brownouts_per_week: brownouts_per_week.to_bits(),
+            brownout_duration_s: brownout_duration_s.to_bits(),
+            brownout_capacity_factor: brownout_capacity_factor.to_bits(),
+            ckpt_interval_s: ckpt_interval_s.to_bits(),
+            max_retries,
+            registry_slots,
+            cache_slots,
+            shed_backoff_s: shed_backoff_s.to_bits(),
+            shed_retries,
+            brownout_rack_frac: brownout_rack_frac.to_bits(),
+        }
+    }
+}
+
+impl Ord for FaultKey {
+    fn cmp(&self, o: &FaultKey) -> Ordering {
+        self.hazard_per_gpu_hour
+            .cmp(&o.hazard_per_gpu_hour)
+            .then(self.relocate_prob.cmp(&o.relocate_prob))
+            .then(self.straggler_prob.cmp(&o.straggler_prob))
+            .then(self.straggler_severity.cmp(&o.straggler_severity))
+            .then(self.brownouts_per_week.cmp(&o.brownouts_per_week))
+            .then(self.brownout_duration_s.cmp(&o.brownout_duration_s))
+            .then(self.brownout_capacity_factor.cmp(&o.brownout_capacity_factor))
+            .then(self.ckpt_interval_s.cmp(&o.ckpt_interval_s))
+            .then(self.max_retries.cmp(&o.max_retries))
+            .then(self.registry_slots.cmp(&o.registry_slots))
+            .then(self.cache_slots.cmp(&o.cache_slots))
+            .then(self.shed_backoff_s.cmp(&o.shed_backoff_s))
+            .then(self.shed_retries.cmp(&o.shed_retries))
+            .then(self.brownout_rack_frac.cmp(&o.brownout_rack_frac))
+    }
+}
+
+impl PartialOrd for FaultKey {
+    fn partial_cmp(&self, o: &FaultKey) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl PartialEq for FaultKey {
+    fn eq(&self, o: &FaultKey) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+
+impl Eq for FaultKey {}
+
+/// The prefix-relevant subset of a replay's inputs: two `(seed, cluster,
+/// options)` triples with equal keys produce bit-identical
+/// [`ReplayPrefix`]es (the property test below pins this with
+/// [`ReplayPrefix::fingerprint`]). Derived mechanically by
+/// [`PrefixKey::derive`]; used as the memo key in [`batch_replay`].
+#[derive(Clone, Debug)]
+pub struct PrefixKey {
+    seed: u64,
+    pool_gpus: Option<u32>,
+    epochs: usize,
+    racks: u32,
+    spine_oversub_bits: u64,
+    faults: FaultKey,
+}
+
+impl PrefixKey {
+    /// Classify every [`ReplayOptions`] field as prefix-relevant (folded
+    /// into the key) or phase-2-only (ignored, with the reason on the
+    /// ignore arm). The destructure is exhaustive, so adding an option
+    /// forces the classification decision here at compile time. The
+    /// topology overrides are keyed through
+    /// [`ReplayOptions::resolve_cluster`] so the key shares the clamping
+    /// arithmetic with the build itself.
+    pub fn derive(seed: u64, cluster: &ClusterConfig, opts: &ReplayOptions) -> PrefixKey {
+        let ReplayOptions {
+            pool_gpus,
+            threads: _,              // execution knob: never touches the bits
+            faults,
+            epochs,
+            overlap: _,              // phase-2 stage-graph knob
+            cache_capacity: _,       // phase-2 cache-economics knob
+            cache_policy: _,         // phase-2 cache-economics knob
+            dedup: _,                // phase-2 transfer-plane knob
+            delta_resume: _,         // phase-2 knob: carries are built unconditionally
+            spec_prefetch_budget: _, // phase-2 staging knob
+            racks: _,                // folded into the resolved cluster below
+            spine_oversub: _,        // folded into the resolved cluster below
+        } = opts;
+        let resolved = opts.resolve_cluster(cluster);
+        PrefixKey {
+            seed,
+            pool_gpus: *pool_gpus,
+            epochs: *epochs,
+            racks: resolved.racks,
+            spine_oversub_bits: resolved.spine_oversub.to_bits(),
+            faults: FaultKey::derive(faults),
+        }
+    }
+}
+
+impl Ord for PrefixKey {
+    fn cmp(&self, o: &PrefixKey) -> Ordering {
+        self.seed
+            .cmp(&o.seed)
+            .then(self.pool_gpus.cmp(&o.pool_gpus))
+            .then(self.epochs.cmp(&o.epochs))
+            .then(self.racks.cmp(&o.racks))
+            .then(self.spine_oversub_bits.cmp(&o.spine_oversub_bits))
+            .then_with(|| self.faults.cmp(&o.faults))
+    }
+}
+
+impl PartialOrd for PrefixKey {
+    fn partial_cmp(&self, o: &PrefixKey) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl PartialEq for PrefixKey {
+    fn eq(&self, o: &PrefixKey) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+
+impl Eq for PrefixKey {}
+
+fn image_mode_tag(m: ImageMode) -> u8 {
+    match m {
+        ImageMode::OciFull => 0,
+        ImageMode::Lazy => 1,
+        ImageMode::RecordPrefetch => 2,
+    }
+}
+
+fn overlap_tag(m: OverlapMode) -> u8 {
+    match m {
+        OverlapMode::Sequential => 0,
+        OverlapMode::Overlapped => 1,
+        OverlapMode::Speculative => 2,
+    }
+}
+
+fn cache_policy_tag(p: CachePolicy) -> u8 {
+    match p {
+        CachePolicy::Lru => 0,
+        CachePolicy::Gdsf => 1,
+        CachePolicy::PinHotSet => 2,
+    }
+}
+
+/// The phase-2-effective identity of a resolved [`BootseerConfig`] against
+/// one prefix: two candidates with equal keys replay to byte-identical
+/// [`ReplayResult`]s, so [`batch_replay`] evaluates one of them and clones.
+///
+/// Beyond the verbatim field capture, two *provably dead* knobs are
+/// normalized away so candidate grids collapse:
+///
+/// - `spec_prefetch_budget_bytes` is only read inside the
+///   `OverlapMode::Speculative` branch of the stage graph, so under any
+///   other overlap mode it is keyed as 0.
+/// - The per-node cache capacity/policy can only reach the bits through
+///   (a) the warm-restart seed ([`timeline::seed_warm_cache`], warm units
+///   only) or (b) the dedup shared-chunk layer (`startup::graph` only
+///   mutates its run cache under `artifact_dedup`; the pipeline's
+///   `evicted_bytes` reads the context cache, which stays empty for cold
+///   units). With an unbounded cache, or with no warm unit in the prefix
+///   and dedup off, both paths are inert — the pair is keyed as
+///   `(u64::MAX, Lru)`, the unbounded default.
+#[derive(Clone, Debug)]
+pub struct EvalKey {
+    image_mode: u8,
+    p2p: bool,
+    env_cache: bool,
+    ckpt_striped: bool,
+    record_window_bits: u64,
+    prefetch_threads: u32,
+    stripe_chunk_bytes: u64,
+    stripe_width: u32,
+    overlap: u8,
+    spec_prefetch_budget_bytes: u64,
+    artifact_dedup: bool,
+    delta_resume: bool,
+    cache_capacity_bytes: u64,
+    cache_policy: u8,
+}
+
+impl EvalKey {
+    /// Key a *resolved* config (builder/CLI overrides already folded by
+    /// [`ReplayOptions::resolve`]) against a prefix with
+    /// `has_warm_units` warm restarts ([`ReplayPrefix::has_warm_units`]).
+    /// The destructure is exhaustive: a new [`BootseerConfig`] field
+    /// fails compilation here until it is keyed (phase-2 configs default
+    /// to eval-relevant; only provably dead combinations may normalize).
+    pub fn derive(cfg: &BootseerConfig, has_warm_units: bool) -> EvalKey {
+        let &BootseerConfig {
+            image_mode,
+            p2p,
+            env_cache,
+            ckpt_striped,
+            record_window_s,
+            prefetch_threads,
+            stripe_chunk_bytes,
+            stripe_width,
+            overlap,
+            spec_prefetch_budget_bytes,
+            artifact_dedup,
+            delta_resume,
+            cache_capacity_bytes,
+            cache_policy,
+        } = cfg;
+        let budget =
+            if overlap == OverlapMode::Speculative { spec_prefetch_budget_bytes } else { 0 };
+        let unbounded = cache_capacity_bytes == u64::MAX;
+        let cache_live = !unbounded && (has_warm_units || artifact_dedup);
+        let (capacity, policy) = if cache_live {
+            (cache_capacity_bytes, cache_policy)
+        } else {
+            (u64::MAX, CachePolicy::Lru)
+        };
+        EvalKey {
+            image_mode: image_mode_tag(image_mode),
+            p2p,
+            env_cache,
+            ckpt_striped,
+            record_window_bits: record_window_s.to_bits(),
+            prefetch_threads,
+            stripe_chunk_bytes,
+            stripe_width,
+            overlap: overlap_tag(overlap),
+            spec_prefetch_budget_bytes: budget,
+            artifact_dedup,
+            delta_resume,
+            cache_capacity_bytes: capacity,
+            cache_policy: cache_policy_tag(policy),
+        }
+    }
+}
+
+impl Ord for EvalKey {
+    fn cmp(&self, o: &EvalKey) -> Ordering {
+        self.image_mode
+            .cmp(&o.image_mode)
+            .then(self.p2p.cmp(&o.p2p))
+            .then(self.env_cache.cmp(&o.env_cache))
+            .then(self.ckpt_striped.cmp(&o.ckpt_striped))
+            .then(self.record_window_bits.cmp(&o.record_window_bits))
+            .then(self.prefetch_threads.cmp(&o.prefetch_threads))
+            .then(self.stripe_chunk_bytes.cmp(&o.stripe_chunk_bytes))
+            .then(self.stripe_width.cmp(&o.stripe_width))
+            .then(self.overlap.cmp(&o.overlap))
+            .then(self.spec_prefetch_budget_bytes.cmp(&o.spec_prefetch_budget_bytes))
+            .then(self.artifact_dedup.cmp(&o.artifact_dedup))
+            .then(self.delta_resume.cmp(&o.delta_resume))
+            .then(self.cache_capacity_bytes.cmp(&o.cache_capacity_bytes))
+            .then(self.cache_policy.cmp(&o.cache_policy))
+    }
+}
+
+impl PartialOrd for EvalKey {
+    fn partial_cmp(&self, o: &EvalKey) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl PartialEq for EvalKey {
+    fn eq(&self, o: &EvalKey) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+
+impl Eq for EvalKey {}
+
+/// Everything [`super::replay_cluster`] computes before the parallel
+/// phase-2 startup replay, frozen: phase-1 schedule and unit list,
+/// placements, per-unit effective clusters (brownouts and injected
+/// stragglers folded in), epoch-folded [`SharedWorld`]s, and per-job
+/// warm-restart carries. Immutable after [`build_prefix`], so any number
+/// of candidate evaluations can share one instance behind an [`Arc`].
+#[derive(Debug)]
+pub struct ReplayPrefix {
+    key: PrefixKey,
+    /// The resolved cluster (topology overrides applied).
+    cluster: ClusterConfig,
+    /// The fault processes the prefix was built under; phase 2 draws its
+    /// admission limits from here so prefix and evaluation can never
+    /// disagree about the fault model.
+    faults: FaultConfig,
+    seed: u64,
+    jobs_cfg: Vec<JobConfig>,
+    nodes_of: Vec<u32>,
+    pool_gpus: u32,
+    units: Vec<Unit>,
+    job_units: Vec<Vec<usize>>,
+    /// Epoch-major issue order (see the phase-2 comment in the parent
+    /// module): claim order never touches the bits.
+    order: Vec<usize>,
+    worlds: Vec<SharedWorld>,
+    carries: Vec<timeline::WarmCarry>,
+    img_blocks: BTreeMap<u64, Arc<Vec<u32>>>,
+    has_warm_units: bool,
+}
+
+impl ReplayPrefix {
+    /// The key this prefix was built under.
+    pub fn key(&self) -> &PrefixKey {
+        &self.key
+    }
+
+    /// The resolved cluster the prefix scheduled against.
+    pub fn cluster(&self) -> &ClusterConfig {
+        &self.cluster
+    }
+
+    /// Phase-2 units the prefix carries (full startups + hot updates).
+    pub fn n_units(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Whether any unit is a warm local restart. Feeds the
+    /// [`EvalKey::derive`] cache-liveness normalization: with no warm
+    /// unit (and dedup off) the cache knobs cannot reach the bits.
+    pub fn has_warm_units(&self) -> bool {
+        self.has_warm_units
+    }
+
+    /// Content fingerprint: SHA-256 over the full debug dump of every
+    /// frozen field, truncated to 64 bits. Two prefixes with equal
+    /// fingerprints are bit-identical in everything phase 2 can observe;
+    /// the property test uses this to prove [`PrefixKey`]-equal options
+    /// share one prefix.
+    pub fn fingerprint(&self) -> u64 {
+        let dump = format!("{self:?}");
+        let h = sha256(dump.as_bytes());
+        u64::from_be_bytes([h[0], h[1], h[2], h[3], h[4], h[5], h[6], h[7]])
+    }
+}
+
+/// The all-zero result an empty trace replays to.
+pub(super) fn empty_result() -> ReplayResult {
+    ReplayResult {
+        svc: StageAnalysisService::new(),
+        jobs: Vec::new(),
+        train_gpu_hours: 0.0,
+        startup_gpu_hours: 0.0,
+        lost_train_gpu_hours: 0.0,
+        fault_restarts: 0,
+        pool_gpus: 0,
+        queue_waits: Vec::new(),
+        credited_bytes: 0,
+        demanded_bytes: 0,
+        shed_events: 0,
+        shed_checks: 0,
+        evicted_bytes: 0,
+    }
+}
+
+/// Build the config-invariant replay prefix for `trace` under `opts`:
+/// phase 1 scheduling, the placement walk, the contention sweep, epoch
+/// partitioning and world folds, per-unit effective clusters, and the
+/// per-job warm carries. `trace` must be non-empty (callers handle the
+/// empty case with [`super::replay_cluster`]'s zero result).
+///
+/// The body is the former first half of `replay_cluster`, verbatim — the
+/// parent module's golden tests pin that the factored engine reproduces
+/// the monolithic one bit-for-bit.
+pub fn build_prefix(
+    trace: &[TraceJob],
+    cluster: &ClusterConfig,
+    seed: u64,
+    opts: &ReplayOptions,
+) -> ReplayPrefix {
+    debug_assert!(!trace.is_empty(), "empty traces have no prefix");
+    let key = PrefixKey::derive(seed, cluster, opts);
+    let resolved = opts.resolve_cluster(cluster);
+    let cluster = &resolved;
+
+    // ---- Phase 0: per-job configs ----
+    let jobs_cfg: Vec<JobConfig> = trace.iter().map(trace_job_config).collect();
+    let nodes_of: Vec<u32> = jobs_cfg.iter().map(|j| j.nodes(cluster).max(1)).collect();
+
+    // ---- Phase 1: schedule every full startup over the finite pool ----
+    // The fault engine's crash hazard interrupts segments in here; the
+    // same engine re-derives per-restart decisions (relocation, injected
+    // stragglers) below, keyed purely by identity — no shared state.
+    let sched = schedule_trace_with(trace, cluster, opts.pool_gpus, &jobs_cfg, &opts.faults, seed);
+    let fengine = FaultEngine::new(opts.faults.clone(), seed, &[]);
+
+    // ---- Image / environment identities (shared across jobs) ----
+    // digest + hot set + hot bytes per distinct image seed; signature per
+    // distinct env seed. Both are pure functions of the job config,
+    // computed once.
+    let mut img_idents: BTreeMap<u64, (u64, Arc<Vec<u32>>, u64)> = BTreeMap::new();
+    let mut env_idents: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut job_digest = Vec::with_capacity(trace.len());
+    let mut job_hot_bytes = Vec::with_capacity(trace.len());
+    let mut job_env_sig = Vec::with_capacity(trace.len());
+    for (j, tj) in trace.iter().enumerate() {
+        let job = &jobs_cfg[j];
+        let img_seed = job.image_identity_seed(tj.id);
+        let (digest, _, hot_bytes) = img_idents.entry(img_seed).or_insert_with(|| {
+            let img = ImageSpec::synth(
+                img_seed,
+                job.image_bytes,
+                job.image_block_bytes,
+                job.image_hot_fraction,
+            );
+            let hot = img.hot_bytes();
+            (img.digest, Arc::new(img.startup_access), hot)
+        });
+        job_digest.push(*digest);
+        job_hot_bytes.push(*hot_bytes);
+        let env_seed = job.env_identity_seed(tj.id);
+        let sig = *env_idents
+            .entry(env_seed)
+            .or_insert_with(|| PackageSet::synth(job, env_seed).signature());
+        job_env_sig.push(sig);
+    }
+
+    // ---- Build the unit list: every full startup + every hot update ----
+    let mut units: Vec<Unit> = Vec::new();
+    let mut job_units: Vec<Vec<usize>> = vec![Vec::new(); trace.len()];
+    for (j, tj) in trace.iter().enumerate() {
+        let est = sched.ests[j];
+        let segs = &sched.outcomes[j].segments;
+        if segs.is_empty() {
+            // Cannot happen with the pool clamp, but stay total: replay the
+            // job uncontended at its submit time.
+            job_units[j].push(units.len());
+            units.push(Unit {
+                job_idx: j,
+                attempt: 0,
+                kind: StartupKind::Full,
+                start_s: tj.submit_s,
+                est_s: est,
+                queue_s: 0.0,
+                digest: job_digest[j],
+                env_sig: job_env_sig[j],
+                eff_cluster: cluster.clone(),
+                retry: 0,
+                interrupted: false,
+                seg_len_s: est,
+                lost_train_s: 0.0,
+                warm_local: false,
+                demand: 0,
+                epoch: 0,
+                placement: None,
+                relocation_s: 0.0,
+            });
+            continue;
+        }
+        // Walk the outcome runs reconstructing (scripted segment, retry):
+        // an interrupted run is followed by its retry of the same segment.
+        let mut seg_idx = 0u64;
+        let mut retry = 0u32;
+        for (k, s) in segs.iter().enumerate() {
+            let warm_local = retry > 0 && !fengine.relocated(tj.id, seg_idx, retry);
+            job_units[j].push(units.len());
+            units.push(Unit {
+                job_idx: j,
+                attempt: k as u32,
+                kind: StartupKind::Full,
+                start_s: s.start_s,
+                est_s: est,
+                queue_s: s.queue_wait_s,
+                digest: job_digest[j],
+                env_sig: job_env_sig[j],
+                eff_cluster: cluster.clone(),
+                retry,
+                interrupted: s.interrupted,
+                seg_len_s: s.end_s - s.start_s,
+                lost_train_s: s.lost_train_s,
+                warm_local,
+                demand: 0,
+                epoch: 0,
+                placement: None,
+                relocation_s: 0.0,
+            });
+            if s.interrupted {
+                retry += 1;
+            } else {
+                seg_idx += 1;
+                retry = 0;
+            }
+        }
+        // Hot updates happen while the last segment trains; they keep the
+        // allocation (no queue) and re-run env setup + model init.
+        let last = segs[segs.len() - 1];
+        let window = (last.end_s - last.start_s - est).max(0.0);
+        for h in 0..tj.hot_updates {
+            let t = last.start_s + est + window * (h + 1) as f64 / (tj.hot_updates + 1) as f64;
+            job_units[j].push(units.len());
+            units.push(Unit {
+                job_idx: j,
+                attempt: segs.len() as u32 + h,
+                kind: StartupKind::HotUpdate,
+                start_s: t,
+                est_s: est,
+                queue_s: 0.0,
+                digest: job_digest[j],
+                env_sig: job_env_sig[j],
+                eff_cluster: cluster.clone(),
+                retry: 0,
+                interrupted: false,
+                seg_len_s: 0.0,
+                lost_train_s: 0.0,
+                warm_local: false,
+                demand: 0,
+                epoch: 0,
+                placement: None,
+                relocation_s: 0.0,
+            });
+        }
+    }
+
+    // ---- Topology-aware gang placement over the rack tree ----
+    // Phase 1 fixed every full startup's interval; a chronological walk
+    // over those segments assigns each gang racks from a shared
+    // [`RackPool`] (best-fit single rack, greedy spill across the spine
+    // otherwise). Warm restarts re-pin their previous racks; relocated
+    // restarts pay `cluster.relocation_cost_s` scaled by how many nodes
+    // moved; hot updates inherit the job's allocation. On a flat topology
+    // (`racks <= 1`) none of this runs and every placement stays `None` —
+    // byte-identical to the placement-free replay.
+    if cluster.racks > 1 {
+        let mut pool = RackPool::new(sched.pool_gpus, cluster.racks);
+        let mut full: Vec<usize> =
+            (0..units.len()).filter(|&i| units[i].kind == StartupKind::Full).collect();
+        full.sort_by(|&a, &b| {
+            units[a]
+                .start_s
+                .total_cmp(&units[b].start_s)
+                .then(units[a].job_idx.cmp(&units[b].job_idx))
+                .then(units[a].attempt.cmp(&units[b].attempt))
+        });
+        // Gangs currently holding racks, keyed by segment end.
+        let mut active: Vec<(f64, usize)> = Vec::new();
+        let mut prev_of: Vec<Option<Arc<Vec<u32>>>> = vec![None; trace.len()];
+        for &i in &full {
+            let now = units[i].start_s;
+            // Return every gang whose segment ended by `now`.
+            let mut still = Vec::with_capacity(active.len());
+            for (end, ui) in active.drain(..) {
+                if end <= now {
+                    if let Some(p) = &units[ui].placement {
+                        pool.release(p, trace[units[ui].job_idx].gpus, cluster.gpus_per_node);
+                    }
+                } else {
+                    still.push((end, ui));
+                }
+            }
+            active = still;
+            let j = units[i].job_idx;
+            let gpus = trace[j].gpus;
+            let placement = match (&prev_of[j], units[i].warm_local) {
+                (Some(prev), true) => {
+                    // The fault oracle already ruled this restart lands
+                    // back on its nodes: re-pin the previous racks.
+                    let prev = Arc::clone(prev);
+                    pool.take(&prev, gpus, cluster.gpus_per_node);
+                    prev
+                }
+                (prev, _) => {
+                    let placed = Arc::new(pool.place(gpus, cluster.gpus_per_node));
+                    if units[i].retry > 0 {
+                        if let Some(prev) = prev {
+                            let moved = placement_distance(prev, &placed) as f64;
+                            units[i].relocation_s =
+                                cluster.relocation_cost_s * moved / placed.len().max(1) as f64;
+                        }
+                    }
+                    placed
+                }
+            };
+            prev_of[j] = Some(Arc::clone(&placement));
+            units[i].placement = Some(placement);
+            active.push((units[i].start_s + units[i].seg_len_s, i));
+        }
+        for u in units.iter_mut() {
+            if u.kind == StartupKind::HotUpdate {
+                u.placement = prev_of[u.job_idx].clone();
+            }
+        }
+    }
+
+    // ---- Contention sweep: A(t) = Σ nodes of startups in flight at t ----
+    let mut pts: Vec<(f64, f64)> = Vec::with_capacity(units.len() * 2);
+    for u in &units {
+        let n = nodes_of[u.job_idx] as f64;
+        pts.push((u.start_s, n));
+        pts.push((u.start_s + u.est_s, -n));
+    }
+    let contention = timeline::ContentionTimeline::build(pts);
+
+    // ---- Epoch partition of the unit list ----
+    // Equal-width time slices over the schedule horizon; 0 auto-shards one
+    // epoch per REPLAY_EPOCH_SPAN_S (capped). Everything below folds per
+    // epoch and merges at the boundaries, so the count is a pure
+    // performance knob — the goldens pin byte-identity across epoch
+    // counts. `epochs: 1` *is* the pre-sharding replay: one partition,
+    // the original issue order, a fully folded world.
+    let horizon = units.iter().map(|u| u.start_s + u.est_s).fold(0.0f64, f64::max);
+    let n_epochs = if opts.epochs == 0 {
+        ((horizon / d::REPLAY_EPOCH_SPAN_S).ceil() as usize).clamp(1, d::REPLAY_MAX_EPOCHS)
+    } else {
+        opts.epochs
+    };
+    let tl = timeline::EpochTimeline::new(horizon, n_epochs);
+    let mut epoch_units: Vec<Vec<usize>> = vec![Vec::new(); tl.epochs];
+    for (i, u) in units.iter_mut().enumerate() {
+        u.epoch = tl.epoch_of(u.start_s);
+        epoch_units[u.epoch].push(i);
+    }
+
+    // ---- Warm-state availability: per-epoch handoff, prefix-folded ----
+    // Earliest estimated end per identity, noted in the producing unit's
+    // epoch and min-merged across epochs 0..=e into epoch e's
+    // [`SharedWorld`]. A producer whose end is visible to a query started
+    // strictly earlier (estimates are positive), so it lives in an
+    // earlier-or-equal epoch and the prefix fold answers exactly like the
+    // old global map (see timeline.rs for the argument).
+    let mut handoffs: Vec<timeline::EpochHandoff> =
+        vec![timeline::EpochHandoff::default(); tl.epochs];
+    for u in &units {
+        let end = u.start_s + u.est_s;
+        if u.kind == StartupKind::Full {
+            handoffs[u.epoch].note_image(u.digest, end);
+        }
+        handoffs[u.epoch].note_env(u.env_sig, end);
+    }
+    let img_blocks: BTreeMap<u64, Arc<Vec<u32>>> =
+        img_idents.values().map(|(dg, b, _)| (*dg, Arc::clone(b))).collect();
+    // First job in trace order defines an env signature's cache bytes —
+    // same tie-break as the old single-world build.
+    let mut env_bytes_of: BTreeMap<u64, u64> = BTreeMap::new();
+    for j in 0..trace.len() {
+        env_bytes_of.entry(job_env_sig[j]).or_insert(jobs_cfg[j].env_cache_bytes);
+    }
+    let worlds: Vec<SharedWorld> = timeline::fold_worlds(&handoffs, &img_blocks, &env_bytes_of);
+
+    // ---- Per-unit effective services + fault-injected degradation ----
+    // Brownout windows are generated once from the seed over the whole
+    // horizon; injected stragglers are keyed by (job, attempt). All of it
+    // is computed here, in the prefix, so neither thread interleaving nor
+    // the candidate config can ever observe it differently. Per-unit work
+    // amortizes per epoch: the contention-integral search skips
+    // breakpoints strictly before the epoch's earliest unit
+    // (bit-identical — see timeline.rs), and the `effective_cluster` /
+    // brownout lookups are memoized on exact-bit keys, so the round-grid's
+    // batches of identical (nodes, interval) units hit instead of
+    // recomputing.
+    let brownouts = BrownoutWindows::generate(&opts.faults, seed, horizon);
+    for idxs in &epoch_units {
+        if idxs.is_empty() {
+            continue;
+        }
+        let min_start = idxs.iter().map(|&i| units[i].start_s).fold(f64::INFINITY, f64::min);
+        let lo = contention.lower_bound(min_start);
+        let mut eff_memo: BTreeMap<(u32, u64), ClusterConfig> = BTreeMap::new();
+        let mut brown_memo: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+        for &i in idxs {
+            let u = &mut units[i];
+            let end = u.start_s + u.est_s;
+            let avg_active = (contention.integral_at_from(lo, end)
+                - contention.integral_at_from(lo, u.start_s))
+                / u.est_s.max(1e-9);
+            u.demand = avg_active.ceil().max(0.0) as u32;
+            let nodes = nodes_of[u.job_idx];
+            u.eff_cluster = eff_memo
+                .entry((nodes, avg_active.to_bits()))
+                .or_insert_with(|| effective_cluster(cluster, nodes, avg_active))
+                .clone();
+            if !brownouts.is_empty() {
+                let f = if let (true, Some(p)) = (brownouts.scoped(), &u.placement) {
+                    // Rack-scoped windows weigh in by the racks this gang
+                    // actually spans; the key is per-placement, so skip
+                    // the interval memo and compute directly.
+                    let mut racks: Vec<u32> = p.iter().copied().collect();
+                    racks.sort_unstable();
+                    racks.dedup();
+                    brownouts.capacity_scale_racks(u.start_s, end, &racks)
+                } else {
+                    *brown_memo
+                        .entry((u.start_s.to_bits(), end.to_bits()))
+                        .or_insert_with(|| brownouts.capacity_scale(u.start_s, end))
+                };
+                if f < 1.0 {
+                    u.eff_cluster.registry_egress_bps *= f;
+                    u.eff_cluster.cluster_cache_egress_bps *= f;
+                    u.eff_cluster.hdfs_datanode_egress_bps *= f;
+                }
+            }
+            if u.kind == StartupKind::Full && fengine.straggler(trace[u.job_idx].id, u.attempt) {
+                let tail = u.eff_cluster.straggler_tail_prob;
+                u.eff_cluster.straggler_tail_prob =
+                    (tail * opts.faults.straggler_severity).min(0.9);
+            }
+        }
+    }
+
+    // ---- Per-job warm-restart carry, hoisted out of the unit hot path ----
+    // The delta-shard bytes use the seed cluster: `effective_cluster`
+    // never changes `gpus_per_node`, the only cluster field the resume
+    // share depends on, so this is bit-identical to the old per-unit
+    // derivation from `eff_cluster`. The delta pair is computed
+    // unconditionally (it is a pure function of job + cluster);
+    // [`timeline::seed_warm_cache`] gates it on the *candidate's*
+    // `delta_resume`, so one prefix serves both sides of that knob.
+    let carries: Vec<timeline::WarmCarry> = (0..trace.len())
+        .map(|j| timeline::WarmCarry {
+            hot_id: ArtifactManifest::image_hot_id(job_digest[j]),
+            hot_bytes: job_hot_bytes[j],
+            env_id: ArtifactManifest::env_snapshot_id(job_env_sig[j]),
+            env_bytes: jobs_cfg[j].env_cache_bytes,
+            delta: Some((
+                ArtifactManifest::ckpt_shard_id(&jobs_cfg[j]),
+                retained_resume_bytes_per_node(&jobs_cfg[j], cluster),
+            )),
+        })
+        .collect();
+
+    // Epoch-major issue order: workers drain epoch 0's units first, then
+    // epoch 1's, and so on. Epochs *pipeline* across threads — no barrier
+    // at the boundary (the handoff fold already ran), but consecutive
+    // pulls share an epoch's world and prep locality. Each unit is still
+    // an independent pure function, so the claim order never touches the
+    // bits.
+    let order: Vec<usize> = epoch_units.iter().flatten().copied().collect();
+    let has_warm_units = units.iter().any(|u| u.warm_local);
+    ReplayPrefix {
+        key,
+        cluster: resolved,
+        faults: opts.faults.clone(),
+        seed,
+        jobs_cfg,
+        nodes_of,
+        pool_gpus: sched.pool_gpus,
+        units,
+        job_units,
+        order,
+        worlds,
+        carries,
+        img_blocks,
+        has_warm_units,
+    }
+}
+
+/// Replay one unit against the shared prefix — the phase-2 inner loop,
+/// verbatim from the monolithic engine. Pure: reads the prefix, builds a
+/// private [`crate::startup::World`] view, and returns the outcome.
+fn run_unit(
+    prefix: &ReplayPrefix,
+    trace: &[TraceJob],
+    cfg: &BootseerConfig,
+    u: &Unit,
+) -> StartupOutcome {
+    let tj = &trace[u.job_idx];
+    let job = &prefix.jobs_cfg[u.job_idx];
+    let mut world = prefix.worlds[u.epoch].world_at(u.digest, u.env_sig, u.start_s);
+    if u.warm_local {
+        // Restart on its previous nodes: the job's own prior attempt
+        // guarantees a record + cache regardless of cluster-level
+        // availability timing.
+        if !world.hotset.has_record(u.digest) {
+            if let Some(blocks) = prefix.img_blocks.get(&u.digest) {
+                world.hotset.seed_record(u.digest, blocks.iter().copied());
+            }
+        }
+        if world.envcache.lookup(u.env_sig).is_none() {
+            world.envcache.store(u.env_sig, job.env_cache_bytes);
+        }
+    }
+    let unit_seed = prefix.seed
+        ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A);
+    let (queue_s, alloc_s) = if u.kind == StartupKind::Full {
+        // A relocated restart pays its placement-distance cost in the
+        // allocation phase; `relocation_s` is 0.0 everywhere else, so
+        // the flat replay stays bit-identical.
+        (u.queue_s, d::ALLOC_BASE_S + 0.02 * prefix.nodes_of[u.job_idx] as f64 + u.relocation_s)
+    } else {
+        (0.0, 0.0)
+    };
+    // Warm restart on its previous nodes: the artifacts the failed
+    // attempt materialized are still resident — expressed as cache
+    // state, not per-subsystem byte fields, seeded from the per-job
+    // [`timeline::WarmCarry`] (hot set → pin → env snapshot → delta
+    // shard → churn, the exact pre-sharding insert order and churn
+    // arithmetic). The unbounded default with a cold start skips all
+    // of this and is byte-identical to the plain replay.
+    let bounded = cfg.cache_capacity_bytes != u64::MAX;
+    let cache = if u.warm_local {
+        timeline::seed_warm_cache(cfg, &prefix.carries[u.job_idx], prefix.seed, tj.id, u.attempt)
+    } else if bounded {
+        CacheState::with_capacity(cfg.cache_capacity_bytes, cfg.cache_policy)
+    } else {
+        CacheState::new()
+    };
+    let admission = Admission::from_faults(
+        &prefix.faults,
+        u.demand,
+        mix64(
+            prefix.seed
+                ^ SALT_ADMISSION
+                ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A),
+        ),
+    );
+    run_startup_with(
+        tj.id,
+        u.attempt,
+        &u.eff_cluster,
+        job,
+        cfg,
+        &mut world,
+        u.kind,
+        unit_seed,
+        StartupContext { queue_s, alloc_s, cache, admission, placement: u.placement.clone() },
+    )
+}
+
+/// Replay every unit once per candidate config, all candidates
+/// interleaved over one thread pool: the flattened work list is
+/// candidate-major over the prefix's epoch-major unit order, workers pull
+/// with a single atomic cursor into per-worker reusable scratch vectors,
+/// and outcomes scatter back to `slots[candidate][unit]`. Each
+/// (candidate, unit) cell is an independent pure function of the shared
+/// prefix, so claim order never touches the bits — the same argument as
+/// the single-config engine, per candidate.
+fn run_units_batch(
+    prefix: &ReplayPrefix,
+    trace: &[TraceJob],
+    cfgs: &[BootseerConfig],
+    threads: usize,
+) -> Vec<Vec<Option<StartupOutcome>>> {
+    let n_threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let n_units = prefix.order.len();
+    let total = cfgs.len() * n_units;
+    let mut slots: Vec<Vec<Option<StartupOutcome>>> =
+        cfgs.iter().map(|_| (0..n_units).map(|_| None).collect()).collect();
+    if n_threads <= 1 || total <= 1 {
+        for (li, cfg) in cfgs.iter().enumerate() {
+            for &i in &prefix.order {
+                slots[li][i] = Some(run_unit(prefix, trace, cfg, &prefix.units[i]));
+            }
+        }
+        return slots;
+    }
+    let next = AtomicUsize::new(0);
+    let collected: Vec<Vec<(usize, usize, StartupOutcome)>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n_threads);
+        for _ in 0..n_threads {
+            let next = &next;
+            handles.push(scope.spawn(move || {
+                // Per-worker scratch arena: one growing vector collects
+                // every outcome this worker produces, across candidates.
+                let mut local: Vec<(usize, usize, StartupOutcome)> = Vec::new();
+                loop {
+                    let k = next.fetch_add(1, AtomicOrdering::Relaxed);
+                    if k >= total {
+                        break;
+                    }
+                    let li = k / n_units;
+                    let i = prefix.order[k % n_units];
+                    local.push((li, i, run_unit(prefix, trace, &cfgs[li], &prefix.units[i])));
+                }
+                local
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("batch replay worker panicked")).collect()
+    });
+    for (li, i, o) in collected.into_iter().flatten() {
+        slots[li][i] = Some(o);
+    }
+    slots
+}
+
+/// Fold one candidate's unit outcomes into a [`ReplayResult`] in
+/// deterministic (job, attempt) order — the former aggregation tail of
+/// `replay_cluster`, verbatim.
+fn aggregate(
+    prefix: &ReplayPrefix,
+    trace: &[TraceJob],
+    mut slots: Vec<Option<StartupOutcome>>,
+) -> ReplayResult {
+    let mut svc = StageAnalysisService::new();
+    let mut jobs = Vec::with_capacity(trace.len());
+    let mut train_gpu_hours = 0.0;
+    let mut startup_gpu_hours = 0.0;
+    let mut lost_train_gpu_hours = 0.0;
+    let mut fault_restarts = 0u64;
+    let mut queue_waits = Vec::new();
+    let mut credited_bytes = 0u64;
+    let mut demanded_bytes = 0u64;
+    let mut shed_events = 0u64;
+    let mut shed_checks = 0u64;
+    let mut evicted_bytes = 0u64;
+    for (j, tj) in trace.iter().enumerate() {
+        svc.register_job(tj.id, tj.gpus);
+        let alloc_s = d::ALLOC_BASE_S + 0.02 * prefix.nodes_of[j] as f64;
+        let mut startup_worker_s = Vec::new();
+        let mut startup_fetched_bytes = Vec::new();
+        let mut first_total = 0.0;
+        let mut installs = Vec::new();
+        let mut last_full: Option<StartupOutcome> = None;
+        let mut job_queue_waits = Vec::new();
+        let mut starts_s = Vec::new();
+        let mut wasted_gpu_s = 0.0;
+        let mut job_fault_restarts = 0u32;
+        for &ui in &prefix.job_units[j] {
+            let u = &prefix.units[ui];
+            let o = slots[ui].take().expect("unit replayed");
+            startup_worker_s.push(o.worker_phase_s);
+            startup_fetched_bytes.push(o.fetched_bytes);
+            credited_bytes += o.credited_bytes;
+            demanded_bytes += o.demanded_bytes;
+            shed_events += o.shed_events;
+            shed_checks += o.shed_checks;
+            evicted_bytes += o.evicted_bytes;
+            if u.interrupted {
+                // The run ended at the failure instant: only the startup
+                // time actually spent before it counts as waste.
+                let charged = o.worker_phase_s.min((u.seg_len_s - alloc_s).max(0.0));
+                startup_gpu_hours += charged * tj.gpus as f64 / 3600.0;
+                wasted_gpu_s += charged * tj.gpus as f64;
+            } else {
+                startup_gpu_hours += o.gpu_seconds_wasted() / 3600.0;
+                wasted_gpu_s += o.gpu_seconds_wasted();
+            }
+            if u.lost_train_s > 0.0 {
+                lost_train_gpu_hours += u.lost_train_s * tj.gpus as f64 / 3600.0;
+                wasted_gpu_s += u.lost_train_s * tj.gpus as f64;
+            }
+            if u.kind == StartupKind::Full {
+                if u.retry > 0 {
+                    fault_restarts += 1;
+                    job_fault_restarts += 1;
+                }
+                if u.attempt == 0 {
+                    first_total = o.total_s;
+                }
+                installs = o.install_durations.clone();
+                job_queue_waits.push(u.queue_s);
+                starts_s.push(u.start_s);
+                svc.ingest_all(o.events.iter().cloned());
+                last_full = Some(o);
+            }
+        }
+        queue_waits.extend(job_queue_waits.iter().copied());
+        train_gpu_hours += tj.gpus as f64 * tj.train_hours;
+        jobs.push(JobReplay {
+            job: tj.clone(),
+            startup_worker_s,
+            startup_fetched_bytes,
+            first_total_s: first_total,
+            install_durations: installs,
+            last_full,
+            queue_waits: job_queue_waits,
+            starts_s,
+            wasted_gpu_s,
+            fault_restarts: job_fault_restarts,
+        });
+    }
+    ReplayResult {
+        svc,
+        jobs,
+        train_gpu_hours,
+        startup_gpu_hours,
+        lost_train_gpu_hours,
+        fault_restarts,
+        pool_gpus: prefix.pool_gpus,
+        queue_waits,
+        credited_bytes,
+        demanded_bytes,
+        shed_events,
+        shed_checks,
+        evicted_bytes,
+    }
+}
+
+/// Phase-2-only evaluation of one *resolved* [`BootseerConfig`] against a
+/// shared prefix. `cfg` must already have any builder/CLI overrides
+/// folded in ([`ReplayOptions::resolve`]); [`super::replay_cluster`] is
+/// exactly [`build_prefix`] + this call.
+pub fn evaluate_prefix(
+    prefix: &ReplayPrefix,
+    trace: &[TraceJob],
+    cfg: &BootseerConfig,
+    threads: usize,
+) -> ReplayResult {
+    let slots = run_units_batch(prefix, trace, std::slice::from_ref(cfg), threads)
+        .pop()
+        .expect("one slot vector per config");
+    aggregate(prefix, trace, slots)
+}
+
+/// What [`batch_replay`] returns: one result per candidate (same order),
+/// plus the sharing telemetry the bench gate and the optimizer report.
+#[derive(Debug)]
+pub struct BatchOutcome {
+    /// `results[i]` is byte-identical to
+    /// `replay_cluster(trace, cluster, cfg, seed, &candidates[i])`.
+    pub results: Vec<ReplayResult>,
+    /// Distinct [`ReplayPrefix`]es built (phase-1 schedules run).
+    pub prefix_builds: usize,
+    /// Distinct phase-2 evaluations run; `candidates.len() - eval_groups`
+    /// results were served as clones of an [`EvalKey`]-equal leader.
+    pub eval_groups: usize,
+}
+
+/// Evaluate every candidate [`ReplayOptions`] over one trace, sharing all
+/// config-invariant work:
+///
+/// - prefixes are memoized by [`PrefixKey`] — candidates that differ only
+///   in phase-2 knobs share one phase-1 schedule/placement/world build;
+/// - candidates with equal `(PrefixKey, EvalKey)` share one phase-2
+///   evaluation — followers clone the leader's [`ReplayResult`];
+/// - each prefix's distinct evaluations run interleaved over a single
+///   worker pool ([`run_units_batch`]), so `threads` bounds the whole
+///   batch rather than each candidate.
+///
+/// A candidate's own `threads` field is ignored — the `threads` parameter
+/// governs the batch (results are byte-identical either way).
+pub fn batch_replay(
+    trace: &[TraceJob],
+    cluster: &ClusterConfig,
+    cfg: &BootseerConfig,
+    seed: u64,
+    candidates: &[ReplayOptions],
+    threads: usize,
+) -> BatchOutcome {
+    if trace.is_empty() || candidates.is_empty() {
+        return BatchOutcome {
+            results: candidates.iter().map(|_| empty_result()).collect(),
+            prefix_builds: 0,
+            eval_groups: 0,
+        };
+    }
+    let mut prefixes: BTreeMap<PrefixKey, Arc<ReplayPrefix>> = BTreeMap::new();
+    let mut groups: BTreeMap<(PrefixKey, EvalKey), usize> = BTreeMap::new();
+    let mut leaders: Vec<(PrefixKey, BootseerConfig)> = Vec::new();
+    let mut member_of: Vec<usize> = Vec::with_capacity(candidates.len());
+    for opts in candidates {
+        let key = PrefixKey::derive(seed, cluster, opts);
+        let prefix = prefixes
+            .entry(key.clone())
+            .or_insert_with(|| Arc::new(build_prefix(trace, cluster, seed, opts)));
+        let (_, bc) = opts.resolve(cluster, cfg);
+        let ekey = EvalKey::derive(&bc, prefix.has_warm_units);
+        let slot = *groups.entry((key.clone(), ekey)).or_insert_with(|| {
+            leaders.push((key.clone(), bc));
+            leaders.len() - 1
+        });
+        member_of.push(slot);
+    }
+    // One interleaved phase-2 batch per prefix, covering all its leaders.
+    let mut by_prefix: BTreeMap<PrefixKey, Vec<usize>> = BTreeMap::new();
+    for (slot, (key, _)) in leaders.iter().enumerate() {
+        by_prefix.entry(key.clone()).or_default().push(slot);
+    }
+    let mut leader_results: Vec<Option<ReplayResult>> = leaders.iter().map(|_| None).collect();
+    for (key, slots) in &by_prefix {
+        let prefix = &prefixes[key];
+        let cfgs: Vec<BootseerConfig> = slots.iter().map(|&s| leaders[s].1.clone()).collect();
+        let outs = run_units_batch(prefix, trace, &cfgs, threads);
+        for (&slot, slot_outs) in slots.iter().zip(outs) {
+            leader_results[slot] = Some(aggregate(prefix, trace, slot_outs));
+        }
+    }
+    let results = member_of
+        .iter()
+        .map(|&s| leader_results[s].clone().expect("leader evaluated"))
+        .collect();
+    BatchOutcome { results, prefix_builds: prefixes.len(), eval_groups: leaders.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{gen_trace, replay_cluster};
+    use super::*;
+
+    /// Hot enough that the week actually sees warm restarts, relocations,
+    /// and shedding (mirrors the cache-economics sweep preset).
+    fn hot() -> FaultConfig {
+        FaultConfig { hazard_per_gpu_hour: 2.0e-3, relocate_prob: 0.2, ..FaultConfig::storm() }
+    }
+
+    /// Full bit-capture of a [`ReplayResult`]: every scalar, every
+    /// per-job stream. Two equal captures mean byte-identical results for
+    /// everything downstream consumers can observe.
+    fn capture(r: &ReplayResult) -> Vec<u64> {
+        let mut s = vec![
+            r.startup_gpu_hours.to_bits(),
+            r.train_gpu_hours.to_bits(),
+            r.lost_train_gpu_hours.to_bits(),
+            r.fault_restarts,
+            u64::from(r.pool_gpus),
+            r.credited_bytes,
+            r.demanded_bytes,
+            r.shed_events,
+            r.shed_checks,
+            r.evicted_bytes,
+        ];
+        for w in &r.queue_waits {
+            s.push(w.to_bits());
+        }
+        for j in &r.jobs {
+            for w in &j.startup_worker_s {
+                s.push(w.to_bits());
+            }
+            for &b in &j.startup_fetched_bytes {
+                s.push(b);
+            }
+            s.push(j.first_total_s.to_bits());
+            s.push(j.wasted_gpu_s.to_bits());
+            s.push(u64::from(j.fault_restarts));
+        }
+        s
+    }
+
+    #[test]
+    fn prefix_key_partitions_options_and_key_equal_prefixes_are_bit_identical() {
+        let t = gen_trace(11, 18, 2.0 * 86400.0);
+        let cluster = ClusterConfig::default();
+        let base = ReplayOptions::new();
+        let k0 = PrefixKey::derive(5, &cluster, &base);
+        let f0 = build_prefix(&t, &cluster, 5, &base).fingerprint();
+        let irrelevant: Vec<(&str, ReplayOptions)> = vec![
+            ("overlap", ReplayOptions::new().with_overlap(OverlapMode::Speculative)),
+            ("dedup", ReplayOptions::new().with_dedup(true)),
+            ("delta_resume", ReplayOptions::new().with_delta_resume(true)),
+            ("cache", ReplayOptions::new().with_cache(8_000_000_000, CachePolicy::Gdsf)),
+            ("budget", ReplayOptions::new().with_spec_prefetch_budget(1_000_000_000)),
+            ("threads", ReplayOptions::new().with_threads(7)),
+        ];
+        for (what, o) in &irrelevant {
+            assert_eq!(PrefixKey::derive(5, &cluster, o), k0, "{what} changed the key");
+            assert_eq!(
+                build_prefix(&t, &cluster, 5, o).fingerprint(),
+                f0,
+                "{what} changed the prefix bits"
+            );
+        }
+        let relevant: Vec<(&str, ReplayOptions)> = vec![
+            ("pool_gpus", ReplayOptions::new().with_pool_gpus(Some(4096))),
+            ("faults", ReplayOptions::new().with_faults(FaultConfig::paper())),
+            ("racks", ReplayOptions::new().with_racks(4)),
+            ("epochs", ReplayOptions::new().with_epochs(3)),
+            ("spine_oversub", ReplayOptions::new().with_spine_oversub(9.0)),
+        ];
+        for (what, o) in &relevant {
+            assert_ne!(PrefixKey::derive(5, &cluster, o), k0, "{what} must change the key");
+        }
+        assert_ne!(PrefixKey::derive(6, &cluster, &base), k0, "seed must change the key");
+    }
+
+    #[test]
+    fn eval_key_normalizes_provably_dead_knobs() {
+        let base = BootseerConfig::bootseer();
+        let with_budget = |m: OverlapMode, b: u64| BootseerConfig {
+            overlap: m,
+            spec_prefetch_budget_bytes: b,
+            ..base.clone()
+        };
+        // The budget only reaches the bits under Speculative overlap.
+        assert_eq!(
+            EvalKey::derive(&with_budget(OverlapMode::Sequential, 1), false),
+            EvalKey::derive(&with_budget(OverlapMode::Sequential, 9), false)
+        );
+        assert_ne!(
+            EvalKey::derive(&with_budget(OverlapMode::Speculative, 1), false),
+            EvalKey::derive(&with_budget(OverlapMode::Speculative, 9), false)
+        );
+        let with_cache = |cap: u64, p: CachePolicy, dedup: bool| BootseerConfig {
+            cache_capacity_bytes: cap,
+            cache_policy: p,
+            artifact_dedup: dedup,
+            ..base.clone()
+        };
+        // Cold fleet, dedup off: capacity and policy collapse to the
+        // unbounded default...
+        assert_eq!(
+            EvalKey::derive(&with_cache(3_000_000_000, CachePolicy::Gdsf, false), false),
+            EvalKey::derive(&with_cache(u64::MAX, CachePolicy::Lru, false), false)
+        );
+        // ...warm units revive them...
+        assert_ne!(
+            EvalKey::derive(&with_cache(3_000_000_000, CachePolicy::Gdsf, false), true),
+            EvalKey::derive(&with_cache(u64::MAX, CachePolicy::Lru, false), true)
+        );
+        // ...and so does dedup on its own.
+        assert_ne!(
+            EvalKey::derive(&with_cache(3_000_000_000, CachePolicy::Gdsf, true), false),
+            EvalKey::derive(&with_cache(u64::MAX, CachePolicy::Lru, true), false)
+        );
+        // An unbounded cache never keys on policy.
+        assert_eq!(
+            EvalKey::derive(&with_cache(u64::MAX, CachePolicy::Gdsf, true), true),
+            EvalKey::derive(&with_cache(u64::MAX, CachePolicy::Lru, true), true)
+        );
+    }
+
+    /// The acceptance pin: every batched candidate's result is
+    /// byte-identical to its standalone [`replay_cluster`] run, across
+    /// thread and epoch counts, over candidates chosen to exercise every
+    /// dangerous [`EvalKey`] normalization (dead budget, dead cache
+    /// knobs, warm-unit revival, dedup, topology).
+    #[test]
+    fn batched_results_byte_identical_to_standalone_across_threads_and_epochs() {
+        let t = gen_trace(9, 20, 7.0 * 86400.0);
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::bootseer();
+        let base: Vec<ReplayOptions> = vec![
+            ReplayOptions::new(),
+            ReplayOptions::new()
+                .with_overlap(OverlapMode::Speculative)
+                .with_spec_prefetch_budget(2_000_000_000),
+            ReplayOptions::new()
+                .with_overlap(OverlapMode::Sequential)
+                .with_spec_prefetch_budget(2_000_000_000),
+            ReplayOptions::new().with_faults(hot()).with_cache(3_000_000_000, CachePolicy::Lru),
+            ReplayOptions::new().with_faults(hot()).with_cache(3_000_000_000, CachePolicy::Gdsf),
+            ReplayOptions::new().with_faults(hot()).with_delta_resume(true),
+            ReplayOptions::new().with_dedup(true).with_cache(8_000_000_000, CachePolicy::Lru),
+            ReplayOptions::new().with_racks(4),
+        ];
+        // The cache-liveness normalization must actually be exercised:
+        // the hot-faults prefix carries warm units, the fault-free one
+        // none.
+        assert!(build_prefix(&t, &cluster, 7, &base[3]).has_warm_units());
+        assert!(!build_prefix(&t, &cluster, 7, &base[0]).has_warm_units());
+        for threads in [1usize, 4] {
+            for epochs in [1usize, 3] {
+                let cands: Vec<ReplayOptions> =
+                    base.iter().map(|o| o.clone().with_epochs(epochs)).collect();
+                let out = batch_replay(&t, &cluster, &cfg, 7, &cands, threads);
+                assert_eq!(out.results.len(), cands.len());
+                for (i, o) in cands.iter().enumerate() {
+                    let solo =
+                        replay_cluster(&t, &cluster, &cfg, 7, &o.clone().with_threads(threads));
+                    assert_eq!(
+                        capture(&out.results[i]),
+                        capture(&solo),
+                        "candidate {i} diverged (threads={threads} epochs={epochs})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_candidates_share_one_evaluation() {
+        let t = gen_trace(3, 16, 86400.0);
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::bootseer();
+        // Fault-free and dedup-free, so every cache knob and every
+        // Sequential-mode budget is provably dead: eight candidates
+        // collapse to two live groups over one shared prefix.
+        let cands = vec![
+            ReplayOptions::new().with_cache(8_000_000_000, CachePolicy::Lru),
+            ReplayOptions::new().with_cache(8_000_000_000, CachePolicy::Gdsf),
+            ReplayOptions::new().with_cache(24_000_000_000, CachePolicy::Lru),
+            ReplayOptions::new().with_spec_prefetch_budget(1_000_000_000),
+            ReplayOptions::new().with_spec_prefetch_budget(9_000_000_000),
+            ReplayOptions::new(),
+            ReplayOptions::new().with_overlap(OverlapMode::Overlapped),
+            ReplayOptions::new()
+                .with_overlap(OverlapMode::Overlapped)
+                .with_cache(3_000_000_000, CachePolicy::Gdsf),
+        ];
+        let out = batch_replay(&t, &cluster, &cfg, 3, &cands, 2);
+        assert_eq!(out.prefix_builds, 1, "one shared prefix");
+        assert_eq!(out.eval_groups, 2, "two live eval groups");
+        let first = capture(&out.results[0]);
+        for i in 1..6 {
+            assert_eq!(first, capture(&out.results[i]), "follower {i} != leader");
+        }
+        assert_eq!(capture(&out.results[6]), capture(&out.results[7]));
+        assert_ne!(first, capture(&out.results[6]), "overlap modes must differ");
+    }
+
+    #[test]
+    fn empty_trace_and_empty_candidates_are_total() {
+        let cluster = ClusterConfig::default();
+        let cfg = BootseerConfig::bootseer();
+        let out = batch_replay(&[], &cluster, &cfg, 1, &[ReplayOptions::new()], 2);
+        assert_eq!(out.results.len(), 1);
+        assert_eq!(out.prefix_builds, 0);
+        assert_eq!(out.eval_groups, 0);
+        assert_eq!(out.results[0].pool_gpus, 0);
+        assert!(out.results[0].jobs.is_empty());
+        let t = gen_trace(1, 4, 86400.0);
+        let none = batch_replay(&t, &cluster, &cfg, 1, &[], 2);
+        assert!(none.results.is_empty());
+        assert_eq!(none.eval_groups, 0);
+    }
+}

@@ -64,7 +64,7 @@
 //! A fifth axis — the **hierarchical topology** (`cluster.racks` /
 //! `cluster.spines` / `cluster.spine_oversub`; CLI `--racks`,
 //! `--spine-oversub`) — places every scheduled gang onto the rack tree
-//! with a chronological [`RackPool`] walk over phase 1's segments:
+//! with a chronological [`crate::scheduler::RackPool`] walk over phase 1's segments:
 //! best-fit single rack, greedy spill across the spine otherwise. Warm
 //! restarts re-pin their previous racks; relocated restarts pay
 //! `cluster.relocation_cost_s` scaled by how many nodes moved; and
@@ -77,32 +77,25 @@
 //! auto-detected threads; `bootseer trace --pool-gpus N --threads T`
 //! exposes both knobs.
 
-use crate::artifact::cache::CacheState;
-use crate::artifact::manifest::ArtifactManifest;
-use crate::artifact::Admission;
-use crate::ckpt::resume::retained_resume_bytes_per_node;
 use crate::config::defaults as d;
 use crate::config::{
     BootseerConfig, CachePolicy, ClusterConfig, JobConfig, OverlapMode, RunConfig,
 };
-use crate::env::packages::PackageSet;
-use crate::faults::{BrownoutWindows, FaultConfig, FaultEngine};
-use crate::image::spec::ImageSpec;
+use crate::faults::{FaultConfig, FaultEngine};
 use crate::profiler::StageAnalysisService;
-use crate::scheduler::{
-    placement_distance, schedule_chains_with, ChainJob, ChainOutcome, FaultOracle, RackPool,
-};
-use crate::startup::{
-    run_startup_with, StartupContext, StartupKind, StartupOutcome, World,
-};
+use crate::scheduler::{schedule_chains_with, ChainJob, ChainOutcome, FaultOracle};
+use crate::startup::{StartupKind, StartupOutcome, World};
 use crate::util::cast::{bytes_from_f64, u32_from_f64};
 use crate::util::rng::{mix64, Rng};
-use crate::util::salts::{SALT_ADMISSION, SALT_CHURN};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+mod batch;
 mod timeline;
+
+pub use batch::{
+    batch_replay, build_prefix, evaluate_prefix, BatchOutcome, EvalKey, PrefixKey, ReplayPrefix,
+};
 
 /// One job in the synthetic week.
 #[derive(Clone, Debug)]
@@ -384,11 +377,13 @@ fn schedule_trace_with(
 /// (`timeline::fold_worlds`) — every producer visible to a query lives in
 /// an earlier-or-equal epoch, so each epoch's world answers its own units
 /// exactly like the global one would.
+#[derive(Debug)]
 pub struct SharedWorld {
     images: BTreeMap<u64, SharedImage>,
     envs: BTreeMap<u64, SharedEnv>,
 }
 
+#[derive(Debug)]
 struct SharedImage {
     /// Shared via [`Arc`]: per-epoch worlds clone the map entry, not the
     /// block list.
@@ -396,6 +391,7 @@ struct SharedImage {
     available_s: f64,
 }
 
+#[derive(Debug)]
 struct SharedEnv {
     cache_bytes: u64,
     available_s: f64,
@@ -452,7 +448,10 @@ pub struct JobReplay {
 }
 
 /// Replay output: the profiler DB plus per-job summaries and the Fig-1
-/// GPU-hour split.
+/// GPU-hour split. `Clone` serves the batched replay's duplicate-candidate
+/// path ([`batch_replay`]): followers receive a copy of their leader's
+/// result instead of re-running phase 2.
+#[derive(Clone, Debug)]
 pub struct ReplayResult {
     pub svc: StageAnalysisService,
     pub jobs: Vec<JobReplay>,
@@ -546,6 +545,13 @@ pub struct ReplayOptions {
     pub cache_capacity: Option<u64>,
     /// Override `bootseer.cache_policy`; `None` keeps the config.
     pub cache_policy: Option<CachePolicy>,
+    /// Override `bootseer.artifact_dedup`; `None` keeps the config.
+    pub dedup: Option<bool>,
+    /// Override `bootseer.delta_resume`; `None` keeps the config.
+    pub delta_resume: Option<bool>,
+    /// Override `bootseer.spec_prefetch_budget_bytes`; `None` keeps the
+    /// config.
+    pub spec_prefetch_budget: Option<u64>,
     /// Override `cluster.racks` — the topology tree's rack count; `None`
     /// keeps the config. Clamped to ≥ 1.
     pub racks: Option<u32>,
@@ -607,6 +613,25 @@ impl ReplayOptions {
         self
     }
 
+    /// Override cross-artifact chunk dedup (`bootseer.artifact_dedup`).
+    pub fn with_dedup(mut self, dedup: bool) -> ReplayOptions {
+        self.dedup = Some(dedup);
+        self
+    }
+
+    /// Override delta resume (`bootseer.delta_resume`).
+    pub fn with_delta_resume(mut self, delta_resume: bool) -> ReplayOptions {
+        self.delta_resume = Some(delta_resume);
+        self
+    }
+
+    /// Override the speculative-prefetch byte budget
+    /// (`bootseer.spec_prefetch_budget_bytes`).
+    pub fn with_spec_prefetch_budget(mut self, budget_bytes: u64) -> ReplayOptions {
+        self.spec_prefetch_budget = Some(budget_bytes);
+        self
+    }
+
     /// Override the topology's rack count (CLI `--racks`).
     pub fn with_racks(mut self, racks: u32) -> ReplayOptions {
         self.racks = Some(racks);
@@ -628,13 +653,6 @@ impl ReplayOptions {
         cluster: &ClusterConfig,
         cfg: &BootseerConfig,
     ) -> (ClusterConfig, BootseerConfig) {
-        let mut cl = cluster.clone();
-        if let Some(r) = self.racks {
-            cl.racks = r.max(1);
-        }
-        if let Some(o) = self.spine_oversub {
-            cl.spine_oversub = o.max(1.0);
-        }
         let mut bc = cfg.clone();
         if let Some(m) = self.overlap {
             bc.overlap = m;
@@ -645,23 +663,38 @@ impl ReplayOptions {
         if let Some(p) = self.cache_policy {
             bc.cache_policy = p;
         }
-        (cl, bc)
+        if let Some(x) = self.dedup {
+            bc.artifact_dedup = x;
+        }
+        if let Some(x) = self.delta_resume {
+            bc.delta_resume = x;
+        }
+        if let Some(b) = self.spec_prefetch_budget {
+            bc.spec_prefetch_budget_bytes = b;
+        }
+        (self.resolve_cluster(cluster), bc)
     }
 
-    /// Pre-builder positional constructor, kept as a thin shim; new code
-    /// should chain [`ReplayOptions::new`] with the `with_*` setters.
-    #[deprecated(note = "use ReplayOptions::new() and the with_* builder setters")]
-    pub fn from_parts(
-        pool_gpus: Option<u32>,
-        threads: usize,
-        faults: FaultConfig,
-        epochs: usize,
-    ) -> ReplayOptions {
-        ReplayOptions { pool_gpus, threads, faults, epochs, ..ReplayOptions::default() }
+    /// The cluster half of [`ReplayOptions::resolve`]: apply the topology
+    /// overrides (racks, spine oversubscription) and nothing else. Split
+    /// out so [`PrefixKey::derive`] and the prefix build share the exact
+    /// clamping arithmetic with the full resolve path.
+    pub fn resolve_cluster(&self, cluster: &ClusterConfig) -> ClusterConfig {
+        let mut cl = cluster.clone();
+        if let Some(r) = self.racks {
+            cl.racks = r.max(1);
+        }
+        if let Some(o) = self.spine_oversub {
+            cl.spine_oversub = o.max(1.0);
+        }
+        cl
     }
 }
 
-/// One independent simulation unit of phase 2.
+/// One independent simulation unit of phase 2. `Debug` feeds the
+/// [`ReplayPrefix::fingerprint`] content dump — every field below is part
+/// of the prefix's identity.
+#[derive(Debug)]
 struct Unit {
     job_idx: usize,
     attempt: u32,
@@ -690,7 +723,7 @@ struct Unit {
     /// order.
     epoch: usize,
     /// Rack of each node of this startup's gang, assigned by the
-    /// chronological [`RackPool`] walk over phase 1's segments. `None` on
+    /// chronological [`crate::scheduler::RackPool`] walk over phase 1's segments. `None` on
     /// a flat topology — the placement-free (pre-topology) pipeline.
     placement: Option<Arc<Vec<u32>>>,
     /// Relocation cost a rescheduled restart pays
@@ -719,6 +752,14 @@ fn effective_cluster(cluster: &ClusterConfig, nodes: u32, avg_active_nodes: f64)
 /// scheduler-derived queue waits (phase 1) and shared-service contention
 /// across concurrently starting jobs (phase 2). See the module docs and
 /// `docs/replay.md`.
+///
+/// Since the batched-evaluation split this is a thin wrapper: the
+/// config-invariant phases (scheduling, placement, fault decisions, epoch
+/// worlds, warm carries) build a [`ReplayPrefix`] via [`build_prefix`], and
+/// [`evaluate_prefix`] runs phase 2 against it. [`batch_replay`] drives the
+/// same two calls for N candidate configs at once, sharing prefixes across
+/// candidates whose [`PrefixKey`]s coincide — byte-identical to calling
+/// this function once per candidate.
 pub fn replay_cluster(
     trace: &[TraceJob],
     cluster: &ClusterConfig,
@@ -726,593 +767,15 @@ pub fn replay_cluster(
     seed: u64,
     opts: &ReplayOptions,
 ) -> ReplayResult {
-    // Single config → replay override path: builder / CLI overrides fold
-    // into the effective configs exactly once, here.
-    let resolved = opts.resolve(cluster, cfg);
-    let (cluster, cfg) = (&resolved.0, &resolved.1);
     if trace.is_empty() {
-        return ReplayResult {
-            svc: StageAnalysisService::new(),
-            jobs: Vec::new(),
-            train_gpu_hours: 0.0,
-            startup_gpu_hours: 0.0,
-            lost_train_gpu_hours: 0.0,
-            fault_restarts: 0,
-            pool_gpus: 0,
-            queue_waits: Vec::new(),
-            credited_bytes: 0,
-            demanded_bytes: 0,
-            shed_events: 0,
-            shed_checks: 0,
-            evicted_bytes: 0,
-        };
+        return batch::empty_result();
     }
-
-    // ---- Phase 0: per-job configs ----
-    let jobs_cfg: Vec<JobConfig> = trace.iter().map(trace_job_config).collect();
-    let nodes_of: Vec<u32> = jobs_cfg.iter().map(|j| j.nodes(cluster).max(1)).collect();
-
-    // ---- Phase 1: schedule every full startup over the finite pool ----
-    // The fault engine's crash hazard interrupts segments in here; the
-    // same engine re-derives per-restart decisions (relocation, injected
-    // stragglers) below, keyed purely by identity — no shared state.
-    let sched =
-        schedule_trace_with(trace, cluster, opts.pool_gpus, &jobs_cfg, &opts.faults, seed);
-    let fengine = FaultEngine::new(opts.faults.clone(), seed, &[]);
-
-    // ---- Image / environment identities (shared across jobs) ----
-    // digest + hot set + hot bytes per distinct image seed; signature per
-    // distinct env seed. Both are pure functions of the job config,
-    // computed once.
-    let mut img_idents: BTreeMap<u64, (u64, Arc<Vec<u32>>, u64)> = BTreeMap::new();
-    let mut env_idents: BTreeMap<u64, u64> = BTreeMap::new();
-    let mut job_digest = Vec::with_capacity(trace.len());
-    let mut job_hot_bytes = Vec::with_capacity(trace.len());
-    let mut job_env_sig = Vec::with_capacity(trace.len());
-    for (j, tj) in trace.iter().enumerate() {
-        let job = &jobs_cfg[j];
-        let img_seed = job.image_identity_seed(tj.id);
-        let (digest, _, hot_bytes) = img_idents.entry(img_seed).or_insert_with(|| {
-            let img = ImageSpec::synth(
-                img_seed,
-                job.image_bytes,
-                job.image_block_bytes,
-                job.image_hot_fraction,
-            );
-            let hot = img.hot_bytes();
-            (img.digest, Arc::new(img.startup_access), hot)
-        });
-        job_digest.push(*digest);
-        job_hot_bytes.push(*hot_bytes);
-        let env_seed = job.env_identity_seed(tj.id);
-        let sig = *env_idents
-            .entry(env_seed)
-            .or_insert_with(|| PackageSet::synth(job, env_seed).signature());
-        job_env_sig.push(sig);
-    }
-
-    // ---- Build the unit list: every full startup + every hot update ----
-    let mut units: Vec<Unit> = Vec::new();
-    let mut job_units: Vec<Vec<usize>> = vec![Vec::new(); trace.len()];
-    for (j, tj) in trace.iter().enumerate() {
-        let est = sched.ests[j];
-        let segs = &sched.outcomes[j].segments;
-        if segs.is_empty() {
-            // Cannot happen with the pool clamp, but stay total: replay the
-            // job uncontended at its submit time.
-            job_units[j].push(units.len());
-            units.push(Unit {
-                job_idx: j,
-                attempt: 0,
-                kind: StartupKind::Full,
-                start_s: tj.submit_s,
-                est_s: est,
-                queue_s: 0.0,
-                digest: job_digest[j],
-                env_sig: job_env_sig[j],
-                eff_cluster: cluster.clone(),
-                retry: 0,
-                interrupted: false,
-                seg_len_s: est,
-                lost_train_s: 0.0,
-                warm_local: false,
-                demand: 0,
-                epoch: 0,
-                placement: None,
-                relocation_s: 0.0,
-            });
-            continue;
-        }
-        // Walk the outcome runs reconstructing (scripted segment, retry):
-        // an interrupted run is followed by its retry of the same segment.
-        let mut seg_idx = 0u64;
-        let mut retry = 0u32;
-        for (k, s) in segs.iter().enumerate() {
-            let warm_local = retry > 0 && !fengine.relocated(tj.id, seg_idx, retry);
-            job_units[j].push(units.len());
-            units.push(Unit {
-                job_idx: j,
-                attempt: k as u32,
-                kind: StartupKind::Full,
-                start_s: s.start_s,
-                est_s: est,
-                queue_s: s.queue_wait_s,
-                digest: job_digest[j],
-                env_sig: job_env_sig[j],
-                eff_cluster: cluster.clone(),
-                retry,
-                interrupted: s.interrupted,
-                seg_len_s: s.end_s - s.start_s,
-                lost_train_s: s.lost_train_s,
-                warm_local,
-                demand: 0,
-                epoch: 0,
-                placement: None,
-                relocation_s: 0.0,
-            });
-            if s.interrupted {
-                retry += 1;
-            } else {
-                seg_idx += 1;
-                retry = 0;
-            }
-        }
-        // Hot updates happen while the last segment trains; they keep the
-        // allocation (no queue) and re-run env setup + model init.
-        let last = segs[segs.len() - 1];
-        let window = (last.end_s - last.start_s - est).max(0.0);
-        for h in 0..tj.hot_updates {
-            let t = last.start_s + est + window * (h + 1) as f64 / (tj.hot_updates + 1) as f64;
-            job_units[j].push(units.len());
-            units.push(Unit {
-                job_idx: j,
-                attempt: segs.len() as u32 + h,
-                kind: StartupKind::HotUpdate,
-                start_s: t,
-                est_s: est,
-                queue_s: 0.0,
-                digest: job_digest[j],
-                env_sig: job_env_sig[j],
-                eff_cluster: cluster.clone(),
-                retry: 0,
-                interrupted: false,
-                seg_len_s: 0.0,
-                lost_train_s: 0.0,
-                warm_local: false,
-                demand: 0,
-                epoch: 0,
-                placement: None,
-                relocation_s: 0.0,
-            });
-        }
-    }
-
-    // ---- Topology-aware gang placement over the rack tree ----
-    // Phase 1 fixed every full startup's interval; a chronological walk
-    // over those segments assigns each gang racks from a shared
-    // [`RackPool`] (best-fit single rack, greedy spill across the spine
-    // otherwise). Warm restarts re-pin their previous racks; relocated
-    // restarts pay `cluster.relocation_cost_s` scaled by how many nodes
-    // moved; hot updates inherit the job's allocation. On a flat topology
-    // (`racks <= 1`) none of this runs and every placement stays `None` —
-    // byte-identical to the placement-free replay.
-    if cluster.racks > 1 {
-        let mut pool = RackPool::new(sched.pool_gpus, cluster.racks);
-        let mut full: Vec<usize> =
-            (0..units.len()).filter(|&i| units[i].kind == StartupKind::Full).collect();
-        full.sort_by(|&a, &b| {
-            units[a]
-                .start_s
-                .total_cmp(&units[b].start_s)
-                .then(units[a].job_idx.cmp(&units[b].job_idx))
-                .then(units[a].attempt.cmp(&units[b].attempt))
-        });
-        // Gangs currently holding racks, keyed by segment end.
-        let mut active: Vec<(f64, usize)> = Vec::new();
-        let mut prev_of: Vec<Option<Arc<Vec<u32>>>> = vec![None; trace.len()];
-        for &i in &full {
-            let now = units[i].start_s;
-            // Return every gang whose segment ended by `now`.
-            let mut still = Vec::with_capacity(active.len());
-            for (end, ui) in active.drain(..) {
-                if end <= now {
-                    if let Some(p) = &units[ui].placement {
-                        pool.release(p, trace[units[ui].job_idx].gpus, cluster.gpus_per_node);
-                    }
-                } else {
-                    still.push((end, ui));
-                }
-            }
-            active = still;
-            let j = units[i].job_idx;
-            let gpus = trace[j].gpus;
-            let placement = match (&prev_of[j], units[i].warm_local) {
-                (Some(prev), true) => {
-                    // The fault oracle already ruled this restart lands
-                    // back on its nodes: re-pin the previous racks.
-                    let prev = Arc::clone(prev);
-                    pool.take(&prev, gpus, cluster.gpus_per_node);
-                    prev
-                }
-                (prev, _) => {
-                    let placed = Arc::new(pool.place(gpus, cluster.gpus_per_node));
-                    if units[i].retry > 0 {
-                        if let Some(prev) = prev {
-                            let moved = placement_distance(prev, &placed) as f64;
-                            units[i].relocation_s =
-                                cluster.relocation_cost_s * moved / placed.len().max(1) as f64;
-                        }
-                    }
-                    placed
-                }
-            };
-            prev_of[j] = Some(Arc::clone(&placement));
-            units[i].placement = Some(placement);
-            active.push((units[i].start_s + units[i].seg_len_s, i));
-        }
-        for u in units.iter_mut() {
-            if u.kind == StartupKind::HotUpdate {
-                u.placement = prev_of[u.job_idx].clone();
-            }
-        }
-    }
-
-    // ---- Contention sweep: A(t) = Σ nodes of startups in flight at t ----
-    let mut pts: Vec<(f64, f64)> = Vec::with_capacity(units.len() * 2);
-    for u in &units {
-        let n = nodes_of[u.job_idx] as f64;
-        pts.push((u.start_s, n));
-        pts.push((u.start_s + u.est_s, -n));
-    }
-    let contention = timeline::ContentionTimeline::build(pts);
-
-    // ---- Epoch partition of the unit list ----
-    // Equal-width time slices over the schedule horizon; 0 auto-shards one
-    // epoch per REPLAY_EPOCH_SPAN_S (capped). Everything below folds per
-    // epoch and merges at the boundaries, so the count is a pure
-    // performance knob — the goldens pin byte-identity across epoch
-    // counts. `epochs: 1` *is* the pre-sharding replay: one partition,
-    // the original issue order, a fully folded world.
-    let horizon = units.iter().map(|u| u.start_s + u.est_s).fold(0.0f64, f64::max);
-    let n_epochs = if opts.epochs == 0 {
-        ((horizon / d::REPLAY_EPOCH_SPAN_S).ceil() as usize).clamp(1, d::REPLAY_MAX_EPOCHS)
-    } else {
-        opts.epochs
-    };
-    let tl = timeline::EpochTimeline::new(horizon, n_epochs);
-    let mut epoch_units: Vec<Vec<usize>> = vec![Vec::new(); tl.epochs];
-    for (i, u) in units.iter_mut().enumerate() {
-        u.epoch = tl.epoch_of(u.start_s);
-        epoch_units[u.epoch].push(i);
-    }
-
-    // ---- Warm-state availability: per-epoch handoff, prefix-folded ----
-    // Earliest estimated end per identity, noted in the producing unit's
-    // epoch and min-merged across epochs 0..=e into epoch e's
-    // [`SharedWorld`]. A producer whose end is visible to a query started
-    // strictly earlier (estimates are positive), so it lives in an
-    // earlier-or-equal epoch and the prefix fold answers exactly like the
-    // old global map (see timeline.rs for the argument).
-    let mut handoffs: Vec<timeline::EpochHandoff> =
-        vec![timeline::EpochHandoff::default(); tl.epochs];
-    for u in &units {
-        let end = u.start_s + u.est_s;
-        if u.kind == StartupKind::Full {
-            handoffs[u.epoch].note_image(u.digest, end);
-        }
-        handoffs[u.epoch].note_env(u.env_sig, end);
-    }
-    let img_blocks: BTreeMap<u64, Arc<Vec<u32>>> =
-        img_idents.values().map(|(dg, b, _)| (*dg, Arc::clone(b))).collect();
-    // First job in trace order defines an env signature's cache bytes —
-    // same tie-break as the old single-world build.
-    let mut env_bytes_of: BTreeMap<u64, u64> = BTreeMap::new();
-    for j in 0..trace.len() {
-        env_bytes_of.entry(job_env_sig[j]).or_insert(jobs_cfg[j].env_cache_bytes);
-    }
-    let worlds: Vec<SharedWorld> =
-        timeline::fold_worlds(&handoffs, &img_blocks, &env_bytes_of);
-
-    // ---- Per-unit effective services + fault-injected degradation ----
-    // Brownout windows are generated once from the seed over the whole
-    // horizon; injected stragglers are keyed by (job, attempt). All of it
-    // is computed here, before the parallel phase, so thread interleaving
-    // can never observe it differently. Per-unit work amortizes per epoch:
-    // the contention-integral search skips breakpoints strictly before the
-    // epoch's earliest unit (bit-identical — see timeline.rs), and the
-    // `effective_cluster` / brownout lookups are memoized on exact-bit
-    // keys, so the round-grid's batches of identical (nodes, interval)
-    // units hit instead of recomputing.
-    let brownouts = BrownoutWindows::generate(&opts.faults, seed, horizon);
-    for idxs in &epoch_units {
-        if idxs.is_empty() {
-            continue;
-        }
-        let min_start =
-            idxs.iter().map(|&i| units[i].start_s).fold(f64::INFINITY, f64::min);
-        let lo = contention.lower_bound(min_start);
-        let mut eff_memo: BTreeMap<(u32, u64), ClusterConfig> = BTreeMap::new();
-        let mut brown_memo: BTreeMap<(u64, u64), f64> = BTreeMap::new();
-        for &i in idxs {
-            let u = &mut units[i];
-            let end = u.start_s + u.est_s;
-            let avg_active = (contention.integral_at_from(lo, end)
-                - contention.integral_at_from(lo, u.start_s))
-                / u.est_s.max(1e-9);
-            u.demand = avg_active.ceil().max(0.0) as u32;
-            let nodes = nodes_of[u.job_idx];
-            u.eff_cluster = eff_memo
-                .entry((nodes, avg_active.to_bits()))
-                .or_insert_with(|| effective_cluster(cluster, nodes, avg_active))
-                .clone();
-            if !brownouts.is_empty() {
-                let f = if let (true, Some(p)) = (brownouts.scoped(), &u.placement) {
-                    // Rack-scoped windows weigh in by the racks this gang
-                    // actually spans; the key is per-placement, so skip
-                    // the interval memo and compute directly.
-                    let mut racks: Vec<u32> = p.iter().copied().collect();
-                    racks.sort_unstable();
-                    racks.dedup();
-                    brownouts.capacity_scale_racks(u.start_s, end, &racks)
-                } else {
-                    *brown_memo
-                        .entry((u.start_s.to_bits(), end.to_bits()))
-                        .or_insert_with(|| brownouts.capacity_scale(u.start_s, end))
-                };
-                if f < 1.0 {
-                    u.eff_cluster.registry_egress_bps *= f;
-                    u.eff_cluster.cluster_cache_egress_bps *= f;
-                    u.eff_cluster.hdfs_datanode_egress_bps *= f;
-                }
-            }
-            if u.kind == StartupKind::Full && fengine.straggler(trace[u.job_idx].id, u.attempt)
-            {
-                let tail = u.eff_cluster.straggler_tail_prob;
-                u.eff_cluster.straggler_tail_prob =
-                    (tail * opts.faults.straggler_severity).min(0.9);
-            }
-        }
-    }
-
-    // ---- Per-job warm-restart carry, hoisted out of the unit hot path ----
-    // The delta-shard bytes use the seed cluster: `effective_cluster`
-    // never changes `gpus_per_node`, the only cluster field the resume
-    // share depends on, so this is bit-identical to the old per-unit
-    // derivation from `eff_cluster`.
-    let carries: Vec<timeline::WarmCarry> = (0..trace.len())
-        .map(|j| timeline::WarmCarry {
-            hot_id: ArtifactManifest::image_hot_id(job_digest[j]),
-            hot_bytes: job_hot_bytes[j],
-            env_id: ArtifactManifest::env_snapshot_id(job_env_sig[j]),
-            env_bytes: jobs_cfg[j].env_cache_bytes,
-            delta: if cfg.delta_resume {
-                Some((
-                    ArtifactManifest::ckpt_shard_id(&jobs_cfg[j]),
-                    retained_resume_bytes_per_node(&jobs_cfg[j], cluster),
-                ))
-            } else {
-                None
-            },
-        })
-        .collect();
-
-    // ---- Phase 2: replay every unit, in parallel across threads ----
-    let n_threads = if opts.threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        opts.threads
-    };
-    let blocks_of: BTreeMap<u64, &[u32]> =
-        img_idents.values().map(|(d, b, _)| (*d, b.as_slice())).collect();
-    let bounded = cfg.cache_capacity_bytes != u64::MAX;
-    let run_unit = |u: &Unit| -> StartupOutcome {
-        let tj = &trace[u.job_idx];
-        let job = &jobs_cfg[u.job_idx];
-        let mut world = worlds[u.epoch].world_at(u.digest, u.env_sig, u.start_s);
-        if u.warm_local {
-            // Restart on its previous nodes: the job's own prior attempt
-            // guarantees a record + cache regardless of cluster-level
-            // availability timing.
-            if !world.hotset.has_record(u.digest) {
-                if let Some(blocks) = blocks_of.get(&u.digest) {
-                    world.hotset.seed_record(u.digest, blocks.iter().copied());
-                }
-            }
-            if world.envcache.lookup(u.env_sig).is_none() {
-                world.envcache.store(u.env_sig, job.env_cache_bytes);
-            }
-        }
-        let unit_seed = seed
-            ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A);
-        let (queue_s, alloc_s) = if u.kind == StartupKind::Full {
-            // A relocated restart pays its placement-distance cost in the
-            // allocation phase; `relocation_s` is 0.0 everywhere else, so
-            // the flat replay stays bit-identical.
-            (u.queue_s, d::ALLOC_BASE_S + 0.02 * nodes_of[u.job_idx] as f64 + u.relocation_s)
-        } else {
-            (0.0, 0.0)
-        };
-        // Warm restart on its previous nodes: the artifacts the failed
-        // attempt materialized are still resident — expressed as cache
-        // state, not per-subsystem byte fields, seeded from the per-job
-        // [`timeline::WarmCarry`] (hot set → pin → env snapshot → delta
-        // shard → churn, the exact pre-sharding insert order and churn
-        // arithmetic). The unbounded default with a cold start skips all
-        // of this and is byte-identical to the plain replay.
-        let cache = if u.warm_local {
-            timeline::seed_warm_cache(cfg, &carries[u.job_idx], seed, tj.id, u.attempt)
-        } else if bounded {
-            CacheState::with_capacity(cfg.cache_capacity_bytes, cfg.cache_policy)
-        } else {
-            CacheState::new()
-        };
-        let admission = Admission::from_faults(
-            &opts.faults,
-            u.demand,
-            mix64(
-                seed
-                    ^ SALT_ADMISSION
-                    ^ tj.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                    ^ (u.attempt as u64).wrapping_mul(0xA5A5_5A5A_A5A5_5A5A),
-            ),
-        );
-        run_startup_with(
-            tj.id,
-            u.attempt,
-            &u.eff_cluster,
-            job,
-            cfg,
-            &mut world,
-            u.kind,
-            unit_seed,
-            StartupContext {
-                queue_s,
-                alloc_s,
-                cache,
-                admission,
-                placement: u.placement.clone(),
-            },
-        )
-    };
-    // Epoch-major issue order: workers drain epoch 0's units first, then
-    // epoch 1's, and so on. Epochs *pipeline* across threads — no barrier
-    // at the boundary (the handoff fold already ran), but consecutive
-    // pulls share an epoch's world and prep locality. Each unit is still
-    // an independent pure function, so the claim order never touches the
-    // bits.
-    let order: Vec<usize> = epoch_units.iter().flatten().copied().collect();
-    let mut slots: Vec<Option<StartupOutcome>> = (0..units.len()).map(|_| None).collect();
-    if n_threads <= 1 || units.len() <= 1 {
-        for &i in &order {
-            slots[i] = Some(run_unit(&units[i]));
-        }
-    } else {
-        let next = AtomicUsize::new(0);
-        let collected: Vec<Vec<(usize, StartupOutcome)>> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(n_threads);
-            for _ in 0..n_threads {
-                let next = &next;
-                let order = &order;
-                let units = &units;
-                let run_unit = &run_unit;
-                handles.push(scope.spawn(move || {
-                    let mut local = Vec::new();
-                    loop {
-                        let k = next.fetch_add(1, Ordering::Relaxed);
-                        if k >= order.len() {
-                            break;
-                        }
-                        let i = order[k];
-                        local.push((i, run_unit(&units[i])));
-                    }
-                    local
-                }));
-            }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("replay worker panicked"))
-                .collect()
-        });
-        for (i, o) in collected.into_iter().flatten() {
-            slots[i] = Some(o);
-        }
-    }
-
-    // ---- Aggregate in deterministic (job, attempt) order ----
-    let mut svc = StageAnalysisService::new();
-    let mut jobs = Vec::with_capacity(trace.len());
-    let mut train_gpu_hours = 0.0;
-    let mut startup_gpu_hours = 0.0;
-    let mut lost_train_gpu_hours = 0.0;
-    let mut fault_restarts = 0u64;
-    let mut queue_waits = Vec::new();
-    let mut credited_bytes = 0u64;
-    let mut demanded_bytes = 0u64;
-    let mut shed_events = 0u64;
-    let mut shed_checks = 0u64;
-    let mut evicted_bytes = 0u64;
-    for (j, tj) in trace.iter().enumerate() {
-        svc.register_job(tj.id, tj.gpus);
-        let alloc_s = d::ALLOC_BASE_S + 0.02 * nodes_of[j] as f64;
-        let mut startup_worker_s = Vec::new();
-        let mut startup_fetched_bytes = Vec::new();
-        let mut first_total = 0.0;
-        let mut installs = Vec::new();
-        let mut last_full: Option<StartupOutcome> = None;
-        let mut job_queue_waits = Vec::new();
-        let mut starts_s = Vec::new();
-        let mut wasted_gpu_s = 0.0;
-        let mut job_fault_restarts = 0u32;
-        for &ui in &job_units[j] {
-            let u = &units[ui];
-            let o = slots[ui].take().expect("unit replayed");
-            startup_worker_s.push(o.worker_phase_s);
-            startup_fetched_bytes.push(o.fetched_bytes);
-            credited_bytes += o.credited_bytes;
-            demanded_bytes += o.demanded_bytes;
-            shed_events += o.shed_events;
-            shed_checks += o.shed_checks;
-            evicted_bytes += o.evicted_bytes;
-            if u.interrupted {
-                // The run ended at the failure instant: only the startup
-                // time actually spent before it counts as waste.
-                let charged = o.worker_phase_s.min((u.seg_len_s - alloc_s).max(0.0));
-                startup_gpu_hours += charged * tj.gpus as f64 / 3600.0;
-                wasted_gpu_s += charged * tj.gpus as f64;
-            } else {
-                startup_gpu_hours += o.gpu_seconds_wasted() / 3600.0;
-                wasted_gpu_s += o.gpu_seconds_wasted();
-            }
-            if u.lost_train_s > 0.0 {
-                lost_train_gpu_hours += u.lost_train_s * tj.gpus as f64 / 3600.0;
-                wasted_gpu_s += u.lost_train_s * tj.gpus as f64;
-            }
-            if u.kind == StartupKind::Full {
-                if u.retry > 0 {
-                    fault_restarts += 1;
-                    job_fault_restarts += 1;
-                }
-                if u.attempt == 0 {
-                    first_total = o.total_s;
-                }
-                installs = o.install_durations.clone();
-                job_queue_waits.push(u.queue_s);
-                starts_s.push(u.start_s);
-                svc.ingest_all(o.events.iter().cloned());
-                last_full = Some(o);
-            }
-        }
-        queue_waits.extend(job_queue_waits.iter().copied());
-        train_gpu_hours += tj.gpus as f64 * tj.train_hours;
-        jobs.push(JobReplay {
-            job: tj.clone(),
-            startup_worker_s,
-            startup_fetched_bytes,
-            first_total_s: first_total,
-            install_durations: installs,
-            last_full,
-            queue_waits: job_queue_waits,
-            starts_s,
-            wasted_gpu_s,
-            fault_restarts: job_fault_restarts,
-        });
-    }
-    ReplayResult {
-        svc,
-        jobs,
-        train_gpu_hours,
-        startup_gpu_hours,
-        lost_train_gpu_hours,
-        fault_restarts,
-        pool_gpus: sched.pool_gpus,
-        queue_waits,
-        credited_bytes,
-        demanded_bytes,
-        shed_events,
-        shed_checks,
-        evicted_bytes,
-    }
+    // Single config -> replay override path: builder / CLI overrides fold
+    // into the effective configs exactly once, here (the prefix build
+    // applies the same resolution to the cluster half internally).
+    let (_, cfg) = opts.resolve(cluster, cfg);
+    let prefix = build_prefix(trace, cluster, seed, opts);
+    evaluate_prefix(&prefix, trace, &cfg, opts.threads)
 }
 
 /// Replay with default options: auto-sized pool, one worker per core.
@@ -1328,6 +791,7 @@ pub fn replay(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::image::spec::ImageSpec;
     use crate::util::stats;
 
     /// [`ReplayOptions`] with explicit pool/threads/faults and the default
@@ -2448,21 +1912,13 @@ mod tests {
         assert_eq!(cl3.spine_core_bps.to_bits(), cluster.spine_core_bps.to_bits());
         assert_eq!(bc3.cache_capacity_bytes, cfg.cache_capacity_bytes);
         assert_eq!(bc3.overlap, cfg.overlap);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_from_parts_matches_the_builder() {
-        let a = ReplayOptions::from_parts(Some(64), 3, FaultConfig::off(), 7);
-        let b = ReplayOptions::new()
-            .with_pool_gpus(Some(64))
-            .with_threads(3)
-            .with_faults(FaultConfig::off())
-            .with_epochs(7);
-        assert_eq!(a.pool_gpus, b.pool_gpus);
-        assert_eq!(a.threads, b.threads);
-        assert_eq!(a.epochs, b.epochs);
-        assert!(a.racks.is_none() && b.racks.is_none());
-        assert!(a.overlap.is_none() && a.cache_capacity.is_none());
+        // The artifact-knob overrides resolve onto the config the same way.
+        let (_, bc4) = ReplayOptions::new()
+            .with_dedup(true)
+            .with_delta_resume(true)
+            .with_spec_prefetch_budget(3_000_000_000)
+            .resolve(&cluster, &cfg);
+        assert!(bc4.artifact_dedup && bc4.delta_resume);
+        assert_eq!(bc4.spec_prefetch_budget_bytes, 3_000_000_000);
     }
 }

@@ -206,6 +206,7 @@ impl ContentionTimeline {
 /// and the cluster's `gpus_per_node` — which `effective_cluster` never
 /// changes — so hoisting them from the per-unit effective cluster to the
 /// per-job seed cluster is bit-identical.
+#[derive(Debug)]
 pub(crate) struct WarmCarry {
     /// Image hot-set artifact: (manifest id, bytes).
     pub hot_id: u64,
@@ -213,8 +214,11 @@ pub(crate) struct WarmCarry {
     /// Env snapshot artifact: (manifest id, bytes).
     pub env_id: u64,
     pub env_bytes: u64,
-    /// Retained checkpoint shard `(manifest id, bytes)`; `None` when delta
-    /// resume is off.
+    /// Retained checkpoint shard `(manifest id, bytes)`. Computed
+    /// unconditionally by the prefix build (it is a pure function of the
+    /// job config and cluster, both config-invariant), so one
+    /// [`super::batch::ReplayPrefix`] serves candidates on either side of
+    /// the `delta_resume` knob; [`seed_warm_cache`] applies the gate.
     pub delta: Option<(u64, u64)>,
 }
 
@@ -241,7 +245,7 @@ pub(crate) fn seed_warm_cache(
         cache.pin_shared_artifact(carry.hot_id);
     }
     cache.insert_shared_artifact(carry.env_id, carry.env_bytes);
-    if let Some((id, bytes)) = carry.delta {
+    if let Some((id, bytes)) = carry.delta.filter(|_| cfg.delta_resume) {
         cache.insert_shared_artifact(id, bytes);
     }
     if bounded {
